@@ -1,0 +1,45 @@
+//! LUT interpolation error explorer: per-function error vs section count
+//! and the bit-exact fixed-point evaluation pipeline (Fig. 4 companion).
+//!
+//! ```bash
+//! cargo run --release --example lut_accuracy [sections]
+//! ```
+
+use sal_pim::interp::{max_abs_error, mean_abs_error, LutTable, NonLinFn};
+use sal_pim::model::fixedpoint::Q8_8;
+use sal_pim::report::Table;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let sections: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(64);
+
+    let mut t = Table::new(
+        &format!("LUT interpolation error at {sections} sections"),
+        &["function", "range", "max err", "mean err", "shift decode"],
+    );
+    for f in NonLinFn::ALL {
+        let table = LutTable::build(f, sections, Q8_8, Q8_8);
+        t.row(&[
+            f.name().into(),
+            format!("[{}, {})", table.lo, table.hi),
+            format!("{:.5}", max_abs_error(&table, 4096)),
+            format!("{:.5}", mean_abs_error(&table, 4096)),
+            format!(">> {}", table.index_shift),
+        ]);
+    }
+    t.print();
+
+    // Show the integer pipeline on a few GELU inputs.
+    let g = LutTable::build(NonLinFn::Gelu, sections, Q8_8, Q8_8);
+    println!("GELU fixed-point pipeline (x → section → W·x+B):");
+    for x in [-2.0f64, -0.5, 0.0, 0.5, 2.0] {
+        let raw = Q8_8.quantize(x);
+        let sec = g.section_of(raw);
+        let y = g.eval_raw(raw);
+        println!(
+            "  x={x:>5.2} raw={raw:>6} section={sec:>2} → y_raw={y:>6} ({:.4} vs exact {:.4})",
+            Q8_8.dequantize(y),
+            NonLinFn::Gelu.eval_exact(x)
+        );
+    }
+}

@@ -1,0 +1,34 @@
+//! Quickstart: simulate one GPT-2-medium decode iteration on SAL-PIM and
+//! compare against the GPU baseline.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use sal_pim::baseline::GpuModel;
+use sal_pim::config::SimConfig;
+use sal_pim::mapper::GenerationSim;
+use sal_pim::report::{fmt_bw, fmt_time, fmt_x};
+
+fn main() {
+    // The paper's Table 2 configuration: HBM2, P_Sub = 4, GPT-2 medium.
+    let cfg = SimConfig::paper();
+    let mut sim = GenerationSim::new(&cfg);
+
+    // One decode iteration with a 128-token KV context.
+    let stats = sim.decode_token(128);
+    let secs = stats.seconds(cfg.timing.tck_ns);
+    println!("SAL-PIM decode iteration: {}", fmt_time(secs));
+    println!(
+        "  achieved internal bandwidth: {}",
+        fmt_bw(stats.avg_internal_bandwidth(cfg.timing.tck_ns) * cfg.hbm.pseudo_channels() as f64)
+    );
+    for (phase, frac) in stats.breakdown() {
+        println!("  {:>13}: {:5.2}%", phase.name(), frac * 100.0);
+    }
+
+    // The same iteration on the calibrated Titan RTX baseline.
+    let gpu = GpuModel::titan_rtx().decode_token_time(&cfg.model, 128);
+    println!("GPU decode iteration:     {}", fmt_time(gpu));
+    println!("speedup: {}", fmt_x(gpu / secs));
+}

@@ -1,0 +1,150 @@
+"""AOT export: lower the L2 model + L1 kernels to HLO **text** artifacts.
+
+HLO text (not serialized HloModuleProto) is the interchange format: the
+image's xla_extension 0.5.1 rejects jax ≥ 0.5 protos with 64-bit
+instruction ids, while the text parser reassigns ids (see
+/opt/xla-example/README.md). Run once via ``make artifacts``; python is
+never on the request path.
+
+Artifacts written to ``--out-dir`` (default ../artifacts):
+  model_decode_ref.hlo.txt   float decode step (golden model)
+  model_decode_pim.hlo.txt   LUT/fixed-point decode step (SAL-PIM pipeline)
+  kernel_lut_gelu.hlo.txt    standalone GELU interpolation kernel
+  kernel_salu_gemv.hlo.txt   standalone S-ALU GEMV kernel
+  kernel_softmax.hlo.txt     standalone LUT softmax kernel
+  luts/<fn>_<sections>.txt   quantized slope/intercept tables
+  manifest.txt               shapes + argument order per artifact
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import luts, model
+from .kernels.lut_interp import lut_interp
+from .kernels.salu_gemv import salu_gemv
+from .kernels.softmax_lut import softmax_lut
+
+CFG = model.CFG
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # True = print_large_constants: the baked synthetic weights must
+    # survive the text round-trip (the default elides them as `{...}`,
+    # which the rust-side parser would reject or mis-load).
+    return comp.as_hlo_text(True)
+
+
+def lower_decode(pim: bool):
+    tok = jax.ShapeDtypeStruct((), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    kv = jax.ShapeDtypeStruct((CFG.n_layers, CFG.max_seq, CFG.d_model), jnp.float32)
+    fn = functools.partial(model.decode_step, pim=pim)
+    return jax.jit(fn).lower(tok, pos, kv, kv)
+
+
+def lower_kernels():
+    """Standalone L1 kernel artifacts (fixed shapes for the rust loader)."""
+    gelu_t = luts.LutTable("gelu", 64)
+    exp_t = luts.LutTable("exp", 64)
+    rec_t = luts.LutTable("recip", 64)
+
+    n = 512
+    x = jax.ShapeDtypeStruct((n,), jnp.int16)
+    table = jax.ShapeDtypeStruct((64, 2), jnp.int16)
+    gelu = jax.jit(
+        functools.partial(
+            lut_interp,
+            lo_raw=gelu_t.lo_raw,
+            index_shift=gelu_t.index_shift,
+            q_in=8,
+            q_out=8,
+            block=256,
+        )
+    ).lower(x, table)
+
+    rows, cols = 128, 128
+    gemv = jax.jit(functools.partial(salu_gemv, tile_rows=16, tile_cols=64)).lower(
+        jax.ShapeDtypeStruct((rows, cols), jnp.int16),
+        jax.ShapeDtypeStruct((cols,), jnp.int16),
+        jax.ShapeDtypeStruct((rows,), jnp.int16),
+    )
+
+    scores = jax.ShapeDtypeStruct((CFG.max_seq,), jnp.int16)
+    softmax = jax.jit(
+        functools.partial(
+            softmax_lut,
+            exp_lo_raw=exp_t.lo_raw,
+            exp_shift=exp_t.index_shift,
+            rec_lo_raw=rec_t.lo_raw,
+            rec_shift=rec_t.index_shift,
+        )
+    ).lower(scores, table, table)
+
+    return {
+        "kernel_lut_gelu": (gelu, f"x:int16[{n}] table:int16[64,2] -> int16[{n}]"),
+        "kernel_salu_gemv": (
+            gemv,
+            f"w:int16[{rows},{cols}] x:int16[{cols}] bias:int16[{rows}] -> int16[{rows}]",
+        ),
+        "kernel_softmax": (
+            softmax,
+            f"scores:int16[{CFG.max_seq}] exp:int16[64,2] rec:int16[64,2] -> int16[{CFG.max_seq}]",
+        ),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+    os.makedirs(os.path.join(out, "luts"), exist_ok=True)
+
+    manifest = []
+    kv_shape = f"f32[{CFG.n_layers},{CFG.max_seq},{CFG.d_model}]"
+    sig = (
+        f"token:i32[] pos:i32[] kv_k:{kv_shape} kv_v:{kv_shape} -> "
+        f"(logits:f32[{CFG.vocab}], kv_k:{kv_shape}, kv_v:{kv_shape})"
+    )
+    for name, pim in [("model_decode_ref", False), ("model_decode_pim", True)]:
+        text = to_hlo_text(lower_decode(pim))
+        path = os.path.join(out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"{name}: {sig}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for name, (lowered, sig_k) in lower_kernels().items():
+        text = to_hlo_text(lowered)
+        path = os.path.join(out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"{name}: {sig_k}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for fn in luts.FUNCS:
+        t = luts.LutTable(fn, 64)
+        path = os.path.join(out, "luts", f"{fn}_64.txt")
+        with open(path, "w") as f:
+            f.write(t.to_artifact_text())
+        manifest.append(f"luts/{fn}_64.txt: sections=64")
+
+    with open(os.path.join(out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {out}/manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

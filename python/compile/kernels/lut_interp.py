@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: LUT-based linear interpolation (§4.2, Fig. 9).
+
+The paper's hardware insight re-thought for the TPU memory hierarchy
+(DESIGN.md §Hardware-Adaptation): the LUT-embedded subarray's per-MAT
+column select becomes an in-VMEM gather over a ``(sections, 2)``
+slope/intercept table; the bank-level unit's bit-position decode is the
+same shift-and-clamp index computation in int32 lanes; the S-ALU
+multiply-add is a fused int32 multiply + arithmetic shift + add with
+int16 saturation.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SLOPE_FRAC = 13
+LANES = 16
+
+
+def _lut_kernel(x_ref, table_ref, o_ref, *, lo_raw, index_shift, out_shift, sections):
+    """One grid step: interpolate a block of raw int16 inputs."""
+    x = x_ref[...].astype(jnp.int32)
+    # Bank-level unit decode: shift-and-clamp section index.
+    offset = jnp.maximum(x - lo_raw, 0)
+    sec = jnp.minimum(offset >> index_shift, sections - 1)
+    # LUT-embedded subarray read: gather both entries per lane.
+    w = table_ref[...][sec, 0].astype(jnp.int32)
+    b = table_ref[...][sec, 1].astype(jnp.int32)
+    # S-ALU multiply-add with the writeback shifter (arithmetic shift).
+    prod = (w * x) >> out_shift
+    y = prod + b
+    o_ref[...] = jnp.clip(y, -32768, 32767).astype(jnp.int16)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("lo_raw", "index_shift", "q_in", "q_out", "block")
+)
+def lut_interp(x_raw, table, *, lo_raw, index_shift, q_in=8, q_out=8, block=256):
+    """Interpolate ``x_raw`` (int16[N], N multiple of ``block``) against
+    ``table`` (int16[sections, 2] of [slope Q2.13, intercept q_out])."""
+    n = x_raw.shape[0]
+    sections = table.shape[0]
+    assert n % block == 0, f"N={n} not a multiple of block={block}"
+    out_shift = SLOPE_FRAC + q_in - q_out
+    kernel = functools.partial(
+        _lut_kernel,
+        lo_raw=lo_raw,
+        index_shift=index_shift,
+        out_shift=out_shift,
+        sections=sections,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            # The whole table stays resident in VMEM for every step —
+            # the LUT-embedded subarray's row stays open across chunks.
+            pl.BlockSpec((sections, 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int16),
+        interpret=True,
+    )(x_raw, table)
+
+
+def lut_interp_for(table_obj, x_raw, block=256):
+    """Convenience wrapper taking a ``luts.LutTable``."""
+    return lut_interp(
+        jnp.asarray(x_raw, jnp.int16),
+        jnp.asarray(table_obj.table_i16(), jnp.int16),
+        lo_raw=table_obj.lo_raw,
+        index_shift=table_obj.index_shift,
+        q_in=table_obj.q_in,
+        q_out=table_obj.q_out,
+        block=block,
+    )

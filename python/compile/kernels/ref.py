@@ -1,0 +1,68 @@
+"""Pure-jnp / numpy oracles for the Pallas kernels.
+
+Each kernel has a reference here computing the same *specification* in
+plain array ops — the pytest suite asserts bit-exact (integer kernels)
+or allclose (float pipelines) agreement.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+SLOPE_FRAC = 13
+
+
+def lut_interp_ref(x_raw, table, lo_raw, index_shift, q_in=8, q_out=8):
+    """Integer reference for ``lut_interp`` (same math as luts.LutTable)."""
+    x = np.asarray(x_raw, dtype=np.int32)
+    sections = table.shape[0]
+    off = np.maximum(x - lo_raw, 0)
+    sec = np.minimum(off >> index_shift, sections - 1)
+    w = table[sec, 0].astype(np.int64)
+    b = table[sec, 1].astype(np.int64)
+    prod = (w * x.astype(np.int64)) >> (SLOPE_FRAC + q_in - q_out)
+    return np.clip(prod + b, -32768, 32767).astype(np.int16)
+
+
+def salu_gemv_ref(w, x, bias, frac_bits=8):
+    """Integer reference for ``salu_gemv``: exact 64-bit accumulation,
+    arithmetic shift, saturation."""
+    acc = w.astype(np.int64) @ x.astype(np.int64)
+    acc = np.clip(acc, -(2**31), 2**31 - 1)  # S-ALU 32-bit registers
+    y = (acc.astype(np.int64) >> frac_bits) + bias.astype(np.int64)
+    return np.clip(y, -32768, 32767).astype(np.int16)
+
+
+def softmax_lut_ref(scores, exp_table, rec_table, exp_lo, exp_shift, rec_lo, rec_shift):
+    """Integer reference for ``softmax_lut`` — mirrors the rust
+    FunctionalGpt::softmax_q213 pipeline."""
+    s = np.asarray(scores, dtype=np.int32)
+    m = int(s.max())
+    shifted = np.maximum(s - m, -32768)
+    exps = lut_interp_ref(
+        shifted.astype(np.int16), exp_table, exp_lo, exp_shift, q_in=8, q_out=13
+    ).astype(np.int64)
+    exps = np.clip(exps, 0, 32767)
+    total = max(int(exps.sum()), 1)
+
+    # Range reduction to [1, 2) in Q2.13.
+    k = total.bit_length() - 1 - 13
+    mant = total >> k if k >= 0 else total << -k
+    m_q8 = np.int16(mant >> 5)
+    recip = int(
+        lut_interp_ref(np.array([m_q8]), rec_table, rec_lo, rec_shift, q_in=8, q_out=13)[0]
+    )
+
+    prod = exps * recip
+    if k >= 0:
+        out = prod >> (13 + k)
+    else:
+        out = (prod >> 13) << (-k)
+    return np.clip(out, 0, 32767).astype(np.int16)
+
+
+def softmax_float_ref(scores_q8):
+    """Float softmax of dequantized Q8.8 scores (accuracy yardstick)."""
+    x = np.asarray(scores_q8, dtype=np.float64) / 256.0
+    e = np.exp(x - x.max())
+    return e / e.sum()

@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: S-ALU-shaped fixed-point GEMV (§3.1 / Fig. 6(b)).
+
+Grid = (row tiles = S-ALU groups, column tiles = banks). Each program
+instance streams one ``(tile_rows × tile_cols)`` weight tile — the GBL
+burst stream of one subarray group — MACs into an int32 register block
+(the S-ALU's 16 × 32-bit registers), and the column-tile grid axis plays
+the C-ALU: partial sums accumulate into the output block across banks.
+The final shift-truncate + bias is the S-ALU writeback shifter.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemv_kernel(w_ref, x_ref, acc_ref):
+    """One (row-tile, col-tile) step: acc += W_tile · x_tile (int32)."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = w_ref[...].astype(jnp.int32)
+    x = x_ref[...].astype(jnp.int32)
+    # Shared-MAC analogue: one fused reduction per register block rather
+    # than 16 scalar FMAs (DESIGN.md §Hardware-Adaptation).
+    acc_ref[...] += jnp.sum(w * x[None, :], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_rows", "tile_cols", "frac_bits"))
+def salu_gemv(w, x, bias, *, tile_rows=16, tile_cols=64, frac_bits=8):
+    """y[rows] = sat16((W·x) >> frac_bits + bias).
+
+    ``w``: int16[rows, cols] (rows % tile_rows == 0, cols % tile_cols == 0),
+    ``x``: int16[cols], ``bias``: int16[rows].
+    """
+    rows, cols = w.shape
+    assert rows % tile_rows == 0 and cols % tile_cols == 0
+    acc = pl.pallas_call(
+        _gemv_kernel,
+        grid=(rows // tile_rows, cols // tile_cols),
+        in_specs=[
+            pl.BlockSpec((tile_rows, tile_cols), lambda i, j: (i, j)),
+            pl.BlockSpec((tile_cols,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tile_rows,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), jnp.int32),
+        interpret=True,
+    )(w, x)
+    # Writeback shifter: arithmetic shift, bias add, int16 saturation.
+    y = (acc >> frac_bits) + bias.astype(jnp.int32)
+    return jnp.clip(y, -32768, 32767).astype(jnp.int16)

@@ -1,0 +1,105 @@
+"""L1 Pallas kernel: LUT-based softmax (§3.2.1 dataflow).
+
+max-subtract (S-ALU max op) → LUT exp in Q2.13 → reduce-sum (C-ALU adder
+tree) → LUT reciprocal with power-of-two range reduction (bank-level
+unit's bit-position decode) → scale. Bit-exact with
+``FunctionalGpt::softmax_q213`` in the rust functional simulator.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SLOPE_FRAC = 13
+EXP_Q_OUT = 13  # Q2.13
+RECIP_Q_OUT = 13  # Q2.13
+
+
+def _softmax_kernel(
+    s_ref,
+    exp_ref,
+    rec_ref,
+    o_ref,
+    *,
+    exp_lo_raw,
+    exp_shift,
+    rec_lo_raw,
+    rec_shift,
+    exp_sections,
+    rec_sections,
+):
+    scores = s_ref[...].astype(jnp.int32)
+    # S-ALU max op.
+    m = jnp.max(scores)
+    shifted = jnp.maximum(scores - m, -32768)
+
+    # LUT exp: Q8.8 in → Q2.13 out.
+    off = jnp.maximum(shifted - exp_lo_raw, 0)
+    sec = jnp.minimum(off >> exp_shift, exp_sections - 1)
+    w = exp_ref[...][sec, 0].astype(jnp.int32)
+    b = exp_ref[...][sec, 1].astype(jnp.int32)
+    exps = jnp.clip(((w * shifted) >> (SLOPE_FRAC + 8 - EXP_Q_OUT)) + b, 0, 32767)
+
+    # C-ALU reduce-sum (Q2.13, 32-bit).
+    total = jnp.maximum(jnp.sum(exps), 1)
+
+    # Range reduction: total = mant · 2^k with mant ∈ [1, 2) Q2.13.
+    # floor(log2) is exact here (total < 2^26 fits f32's mantissa).
+    e = jnp.floor(jnp.log2(total.astype(jnp.float32))).astype(jnp.int32)
+    k = e - 13
+    mant = jnp.where(k >= 0, total >> jnp.maximum(k, 0), total << jnp.maximum(-k, 0))
+    m_q8 = (mant >> 5).astype(jnp.int32)  # Q2.13 → Q8.8 table input
+    roff = jnp.maximum(m_q8 - rec_lo_raw, 0)
+    rsec = jnp.minimum(roff >> rec_shift, rec_sections - 1)
+    rw = rec_ref[...][rsec, 0].astype(jnp.int32)
+    rb = rec_ref[...][rsec, 1].astype(jnp.int32)
+    recip = ((rw * m_q8) >> (SLOPE_FRAC + 8 - RECIP_Q_OUT)) + rb  # Q2.13
+
+    # Scale: s_i = (exp_i × recip) >> (13 + k), matching the rust model's
+    # k ≥ 0 / k < 0 branches exactly.
+    # exps ≤ 2^15 and recip ≤ 2^14, so the product fits int32.
+    prod = exps * recip
+    pos = prod >> jnp.maximum(13 + k, 13)
+    neg = (prod >> 13) << jnp.maximum(-k, 0)
+    out = jnp.where(k >= 0, pos, neg)
+    o_ref[...] = jnp.clip(out, 0, 32767).astype(jnp.int16)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("exp_lo_raw", "exp_shift", "rec_lo_raw", "rec_shift"),
+)
+def softmax_lut(scores, exp_table, rec_table, *, exp_lo_raw, exp_shift, rec_lo_raw, rec_shift):
+    """Softmax over int16 Q8.8 ``scores`` → int16 Q2.13 weights."""
+    n = scores.shape[0]
+    kernel = functools.partial(
+        _softmax_kernel,
+        exp_lo_raw=exp_lo_raw,
+        exp_shift=exp_shift,
+        rec_lo_raw=rec_lo_raw,
+        rec_shift=rec_shift,
+        exp_sections=exp_table.shape[0],
+        rec_sections=rec_table.shape[0],
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int16),
+        interpret=True,
+    )(scores, exp_table, rec_table)
+
+
+def softmax_for(exp_t, rec_t, scores):
+    """Wrapper taking ``luts.LutTable`` objects."""
+    return softmax_lut(
+        jnp.asarray(scores, jnp.int16),
+        jnp.asarray(exp_t.table_i16(), jnp.int16),
+        jnp.asarray(rec_t.table_i16(), jnp.int16),
+        exp_lo_raw=exp_t.lo_raw,
+        exp_shift=exp_t.index_shift,
+        rec_lo_raw=rec_t.lo_raw,
+        rec_shift=rec_t.index_shift,
+    )

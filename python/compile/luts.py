@@ -1,0 +1,112 @@
+"""LUT slope/intercept table generation (python side).
+
+Bit-identical mirror of ``rust/src/interp/lut.rs``: endpoint-fit linear
+interpolation on uniform power-of-two sections, slopes stored Q2.13,
+intercepts in the function's output format, inputs decoded by a pure
+shift (the bank-level unit's column decoder).
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from .weights import quantize
+
+SLOPE_FRAC = 13
+
+# (lo, hi, q_in_frac, q_out_frac) per function — matches LutSubarrays::new.
+FUNCS = {
+    "gelu": (-8.0, 8.0, 8, 8),
+    "exp": (-16.0, 0.0, 8, 13),
+    "rsqrt": (0.0, 4.0, 8, 8),
+    "recip": (1.0, 2.0, 8, 13),
+    "tanh": (-4.0, 4.0, 8, 8),
+}
+
+RANGE_REDUCED = {"rsqrt", "recip"}
+
+
+def eval_exact(func: str, x: np.ndarray) -> np.ndarray:
+    x = np.asarray(x, dtype=np.float64)
+    if func == "gelu":
+        c = math.sqrt(2.0 / math.pi)
+        return 0.5 * x * (1.0 + np.tanh(c * (x + 0.044715 * x**3)))
+    if func == "exp":
+        return np.exp(x)
+    if func == "rsqrt":
+        return 1.0 / np.sqrt(x)
+    if func == "recip":
+        return 1.0 / x
+    if func == "tanh":
+        return np.tanh(x)
+    raise ValueError(func)
+
+
+class LutTable:
+    """Quantized slope/intercept table + decode parameters."""
+
+    def __init__(self, func: str, sections: int):
+        lo, hi, q_in, q_out = FUNCS[func]
+        assert sections & (sections - 1) == 0, "sections must be 2^k"
+        span_raw = int(round((hi - lo) * (1 << q_in)))
+        assert span_raw % sections == 0
+        per_section = span_raw // sections
+        assert per_section & (per_section - 1) == 0
+        self.func = func
+        self.sections = sections
+        self.q_in = q_in
+        self.q_out = q_out
+        self.lo = lo
+        self.hi = hi
+        self.lo_raw = int(lo * (1 << q_in))
+        self.index_shift = per_section.bit_length() - 1
+
+        width = (hi - lo) / sections
+        x0 = lo + np.arange(sections) * width
+        x1 = x0 + width
+        if func in RANGE_REDUCED:
+            floor = 0.5 * min(width, 1.0)
+            x0 = np.maximum(x0, floor)
+            x1 = np.maximum(x1, floor)
+        y0 = eval_exact(func, x0)
+        y1 = eval_exact(func, x1)
+        w = (y1 - y0) / width
+        b = y0 - w * (lo + np.arange(sections) * width)
+        self.slopes = quantize(w, SLOPE_FRAC)
+        self.intercepts = quantize(b, q_out)
+
+    def section_of(self, raw: np.ndarray) -> np.ndarray:
+        offset = np.maximum(raw.astype(np.int32) - self.lo_raw, 0)
+        return np.minimum(offset >> self.index_shift, self.sections - 1)
+
+    def eval_raw(self, raw: np.ndarray) -> np.ndarray:
+        """Bit-exact integer evaluation (mirrors LutTable::eval_raw)."""
+        raw = np.asarray(raw, dtype=np.int16)
+        s = self.section_of(raw)
+        w = self.slopes[s].astype(np.int64)
+        shift = SLOPE_FRAC + self.q_in - self.q_out
+        prod = (w * raw.astype(np.int64)) >> shift
+        y = prod + self.intercepts[s].astype(np.int64)
+        return np.clip(y, -32768, 32767).astype(np.int16)
+
+    def table_i16(self) -> np.ndarray:
+        """(sections, 2) int16 [slope, intercept] — the kernel operand."""
+        return np.stack([self.slopes, self.intercepts], axis=1)
+
+    def to_artifact_text(self) -> str:
+        head = (
+            f"# lut {self.func} sections={self.sections} q_in={self.q_in} "
+            f"q_out={self.q_out} slope_frac={SLOPE_FRAC} lo={fmt(self.lo)} hi={fmt(self.hi)}\n"
+        )
+        body = "".join(
+            f"{int(w)} {int(b)}\n" for w, b in zip(self.slopes, self.intercepts)
+        )
+        return head + body
+
+
+def fmt(x: float) -> str:
+    """Rust's `{}` float formatting for the values we use (integers print
+    without a trailing .0)."""
+    return str(int(x)) if float(x).is_integer() else repr(x)

@@ -1,0 +1,174 @@
+"""L2: the GPT-2 forward pass in JAX, calling the L1 Pallas kernels.
+
+Two pipelines over the same synthetic weights (python/compile/weights.py,
+bit-identical to the rust side):
+
+* ``decode_ref`` — pure-float decode step with exact non-linearities:
+  the golden model the rust runtime loads for cross-validation and the
+  serving example.
+* ``decode_pim`` — the SAL-PIM numerical pipeline: GELU and softmax run
+  through the LUT-interpolation Pallas kernels at 16-bit fixed point
+  (quantize → integer kernel → dequantize), mirroring what the in-memory
+  S-ALUs + LUT-embedded subarrays compute.
+
+Both are AOT-lowered by ``aot.py`` to HLO text; python never runs at
+request time.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import luts, weights
+from .kernels.lut_interp import lut_interp
+from .kernels.softmax_lut import softmax_lut
+
+CFG = weights.MiniConfig()
+
+_GELU_T = luts.LutTable("gelu", 64)
+_EXP_T = luts.LutTable("exp", 64)
+_REC_T = luts.LutTable("recip", 64)
+
+
+def params_arrays():
+    """Model parameters as a pytree of jnp arrays (f32)."""
+    p = weights.model_params(CFG)
+    return jax.tree_util.tree_map(lambda a: jnp.asarray(a, jnp.float32), p)
+
+
+def _layernorm(x, g, b):
+    mean = jnp.mean(x)
+    var = jnp.mean((x - mean) ** 2)
+    return (x - mean) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def _gelu_exact(x):
+    c = np.sqrt(2.0 / np.pi).astype(np.float32)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def _gelu_pim(x):
+    """GELU via the LUT-interpolation kernel at Q8.8."""
+    raw = jnp.clip(jnp.round(x * 256.0), -32768, 32767).astype(jnp.int16)
+    table = jnp.asarray(_GELU_T.table_i16(), jnp.int16)
+    y = lut_interp(
+        raw,
+        table,
+        lo_raw=_GELU_T.lo_raw,
+        index_shift=_GELU_T.index_shift,
+        q_in=8,
+        q_out=8,
+        block=x.shape[0],
+    )
+    return y.astype(jnp.float32) / 256.0
+
+
+def _softmax_exact(scores, mask):
+    s = jnp.where(mask, scores, -jnp.inf)
+    return jax.nn.softmax(s)
+
+
+def _softmax_pim(scores, mask):
+    """Softmax via the LUT kernel at fixed point (masked lanes → −128,
+    which the exp table maps to ~0)."""
+    s = jnp.where(mask, scores, -128.0)
+    raw = jnp.clip(jnp.round(s * 256.0), -32768, 32767).astype(jnp.int16)
+    w = softmax_lut(
+        raw,
+        jnp.asarray(_EXP_T.table_i16(), jnp.int16),
+        jnp.asarray(_REC_T.table_i16(), jnp.int16),
+        exp_lo_raw=_EXP_T.lo_raw,
+        exp_shift=_EXP_T.index_shift,
+        rec_lo_raw=_REC_T.lo_raw,
+        rec_shift=_REC_T.index_shift,
+    )
+    return w.astype(jnp.float32) / 8192.0  # Q2.13
+
+
+def _decode(params, token, pos, kv_k, kv_v, *, pim: bool):
+    """One decode step.
+
+    token: int32 scalar; pos: int32 scalar (0-based);
+    kv_k/kv_v: f32[n_layers, max_seq, d_model] caches.
+    Returns (logits f32[vocab], new_kv_k, new_kv_v).
+    """
+    d = CFG.d_model
+    dh = CFG.d_head
+    gelu = _gelu_pim if pim else _gelu_exact
+    softmax = _softmax_pim if pim else _softmax_exact
+
+    x = params["wte"][token] + params["wpe"][pos]
+    positions = jnp.arange(CFG.max_seq)
+    mask = positions <= pos
+
+    for l, lw in enumerate(params["layers"]):
+        h = _layernorm(x, lw["ln1_g"], lw["ln1_b"])
+        q = lw["wq"] @ h + lw["bq"]
+        k = lw["wk"] @ h + lw["bk"]
+        v = lw["wv"] @ h + lw["bv"]
+        kv_k = kv_k.at[l, pos].set(k)
+        kv_v = kv_v.at[l, pos].set(v)
+
+        attn = jnp.zeros(d, jnp.float32)
+        for head in range(CFG.n_heads):
+            sl = slice(head * dh, (head + 1) * dh)
+            scores = kv_k[l, :, sl] @ q[sl] / np.sqrt(dh).astype(np.float32)
+            wgt = softmax(scores, mask)
+            attn = attn.at[sl].set(wgt @ kv_v[l, :, sl])
+        x = x + lw["wo"] @ attn + lw["bo"]
+
+        h = _layernorm(x, lw["ln2_g"], lw["ln2_b"])
+        ff = gelu(lw["w1"] @ h + lw["b1"])
+        x = x + lw["w2"] @ ff + lw["b2"]
+
+    h = _layernorm(x, params["lnf_g"], params["lnf_b"])
+    logits = params["wte"] @ h  # tied LM head
+    return logits, kv_k, kv_v
+
+
+@functools.partial(jax.jit, static_argnames=("pim",))
+def decode_step(token, pos, kv_k, kv_v, *, pim=False):
+    """Jitted decode step with parameters baked as constants (the HLO
+    artifact is self-contained; rust passes only token/pos/KV)."""
+    return _decode(params_arrays(), token, pos, kv_k, kv_v, pim=pim)
+
+
+def decode_ref(token, pos, kv_k, kv_v):
+    return decode_step(token, pos, kv_k, kv_v, pim=False)
+
+
+def decode_pim(token, pos, kv_k, kv_v):
+    return decode_step(token, pos, kv_k, kv_v, pim=True)
+
+
+def empty_kv():
+    return (
+        jnp.zeros((CFG.n_layers, CFG.max_seq, CFG.d_model), jnp.float32),
+        jnp.zeros((CFG.n_layers, CFG.max_seq, CFG.d_model), jnp.float32),
+    )
+
+
+def generate(prompt, n_out, *, pim=False):
+    """Greedy generation helper (tests + artifact smoke checks)."""
+    kv_k, kv_v = empty_kv()
+    pos = 0
+    next_tok = 0
+    for t in prompt:
+        logits, kv_k, kv_v = decode_step(
+            jnp.int32(t), jnp.int32(pos), kv_k, kv_v, pim=pim
+        )
+        next_tok = int(jnp.argmax(logits))
+        pos += 1
+    out = []
+    for _ in range(n_out):
+        out.append(next_tok)
+        logits, kv_k, kv_v = decode_step(
+            jnp.int32(next_tok), jnp.int32(pos), kv_k, kv_v, pim=pim
+        )
+        next_tok = int(jnp.argmax(logits))
+        pos += 1
+    return out

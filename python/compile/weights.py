@@ -1,0 +1,126 @@
+"""Shared synthetic-weight generation (python side).
+
+Must stay bit-identical to ``rust/src/model/weights.rs``: SplitMix64
+seeded with FNV-1a of ``"{model}/{tensor}"``, uniform floats in
+``[-scale, scale]``, optional Q-format quantization with
+round-half-away-from-zero (what rust's ``f64::round`` does).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+MASK64 = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+WEIGHT_SCALE = 0.08
+EMBED_SCALE = 0.5
+
+
+def fnv1a(s: str) -> np.uint64:
+    """FNV-1a 64-bit hash of a UTF-8 string."""
+    h = np.uint64(0xCBF29CE484222325)
+    prime = np.uint64(0x100000001B3)
+    for b in s.encode("utf-8"):
+        h = np.uint64(h ^ np.uint64(b))
+        h = np.uint64((int(h) * int(prime)) & int(MASK64))
+    return h
+
+
+def splitmix64(seed: np.uint64, n: int) -> np.ndarray:
+    """First ``n`` outputs of SplitMix64 from ``seed`` (uint64 array)."""
+    out = np.empty(n, dtype=np.uint64)
+    state = int(seed)
+    for i in range(n):
+        state = (state + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+        z = state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+        out[i] = (z ^ (z >> 31)) & 0xFFFFFFFFFFFFFFFF
+    return out
+
+
+def f64_unit(raw: np.ndarray) -> np.ndarray:
+    """Rust's ``SplitMix64::f64_unit``: (x >> 11) / 2^53."""
+    return (raw >> np.uint64(11)).astype(np.float64) / float(1 << 53)
+
+
+def gen_f64(name: str, n: int, scale: float) -> np.ndarray:
+    """Uniform floats in [-scale, scale] — mirrors rust ``gen_f64``."""
+    raw = splitmix64(fnv1a(name), n)
+    return (f64_unit(raw) * 2.0 - 1.0) * scale
+
+
+def quantize(x: np.ndarray, frac_bits: int) -> np.ndarray:
+    """Q-format quantization with round-half-away-from-zero + saturation
+    (rust ``QFormat::quantize``)."""
+    scaled = np.asarray(x, dtype=np.float64) * (1 << frac_bits)
+    rounded = np.where(scaled >= 0, np.floor(scaled + 0.5), np.ceil(scaled - 0.5))
+    return np.clip(rounded, -32768, 32767).astype(np.int16)
+
+
+def dequantize(raw: np.ndarray, frac_bits: int) -> np.ndarray:
+    return np.asarray(raw, dtype=np.float64) / (1 << frac_bits)
+
+
+def gen_q(name: str, n: int, scale: float, frac_bits: int = 8) -> np.ndarray:
+    return quantize(gen_f64(name, n, scale), frac_bits)
+
+
+class MiniConfig:
+    """GPT-2 mini — must match rust ``ModelConfig::gpt2_mini``."""
+
+    name = "gpt2-mini"
+    d_model = 128
+    n_layers = 2
+    n_heads = 4
+    d_ff = 512
+    vocab = 256
+    max_seq = 128
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def layer_params(cfg: MiniConfig, l: int, frac_bits: int = 8) -> dict:
+    """One decoder layer's parameters, quantize-dequantized to the same
+    grid the rust fixed-point model sees (float values on the Q8.8
+    lattice)."""
+    d, f, name = cfg.d_model, cfg.d_ff, cfg.name
+
+    def t(tensor: str, n: int, scale: float = WEIGHT_SCALE) -> np.ndarray:
+        return dequantize(gen_q(f"{name}/{tensor}", n, scale, frac_bits), frac_bits)
+
+    return {
+        "wq": t(f"l{l}/wq", d * d).reshape(d, d),
+        "wk": t(f"l{l}/wk", d * d).reshape(d, d),
+        "wv": t(f"l{l}/wv", d * d).reshape(d, d),
+        "wo": t(f"l{l}/wo", d * d).reshape(d, d),
+        "bq": t(f"l{l}/bq", d),
+        "bk": t(f"l{l}/bk", d),
+        "bv": t(f"l{l}/bv", d),
+        "bo": t(f"l{l}/bo", d),
+        "w1": t(f"l{l}/w1", f * d).reshape(f, d),
+        "b1": t(f"l{l}/b1", f),
+        "w2": t(f"l{l}/w2", d * f).reshape(d, f),
+        "b2": t(f"l{l}/b2", d),
+        "ln1_g": np.ones(d),
+        "ln1_b": t(f"l{l}/ln1b", d),
+        "ln2_g": np.ones(d),
+        "ln2_b": t(f"l{l}/ln2b", d),
+    }
+
+
+def model_params(cfg: MiniConfig, frac_bits: int = 8) -> dict:
+    d, name = cfg.d_model, cfg.name
+
+    def t(tensor: str, n: int, scale: float) -> np.ndarray:
+        return dequantize(gen_q(f"{name}/{tensor}", n, scale, frac_bits), frac_bits)
+
+    return {
+        "wte": t("wte", cfg.vocab * d, EMBED_SCALE).reshape(cfg.vocab, d),
+        "wpe": t("wpe", cfg.max_seq * d, EMBED_SCALE).reshape(cfg.max_seq, d),
+        "layers": [layer_params(cfg, l, frac_bits) for l in range(cfg.n_layers)],
+        "lnf_g": np.ones(d),
+        "lnf_b": t("lnf_b", d, WEIGHT_SCALE),
+    }

@@ -1,0 +1,140 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+Integer kernels must match their numpy references **bit-exactly**;
+hypothesis sweeps shapes and value ranges.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import luts
+from compile.kernels import ref
+from compile.kernels.lut_interp import lut_interp_for
+from compile.kernels.salu_gemv import salu_gemv
+from compile.kernels.softmax_lut import softmax_for
+
+import jax.numpy as jnp
+
+FUNCS = list(luts.FUNCS)
+
+
+@pytest.fixture(scope="module")
+def tables():
+    return {f: luts.LutTable(f, 64) for f in FUNCS}
+
+
+class TestLutInterp:
+    @pytest.mark.parametrize("func", FUNCS)
+    def test_kernel_matches_ref_bit_exact(self, tables, func):
+        t = tables[func]
+        rs = np.random.RandomState(42)
+        x = rs.randint(-32768, 32768, size=512).astype(np.int16)
+        got = np.asarray(lut_interp_for(t, x, block=256))
+        want = ref.lut_interp_ref(
+            x, t.table_i16(), t.lo_raw, t.index_shift, q_in=t.q_in, q_out=t.q_out
+        )
+        np.testing.assert_array_equal(got, want)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        blocks=st.integers(1, 8),
+        block=st.sampled_from([16, 64, 256]),
+    )
+    def test_shape_sweep_gelu(self, seed, blocks, block):
+        t = luts.LutTable("gelu", 64)
+        rs = np.random.RandomState(seed)
+        x = rs.randint(-8000, 8000, size=blocks * block).astype(np.int16)
+        got = np.asarray(lut_interp_for(t, x, block=block))
+        want = t.eval_raw(x)
+        np.testing.assert_array_equal(got, want)
+
+    def test_gelu_accuracy_vs_float(self, tables):
+        t = tables["gelu"]
+        xs = np.linspace(-7.9, 7.9, 800)
+        raw = luts.quantize(xs, 8)
+        got = np.asarray(lut_interp_for(t, np.pad(raw, (0, 1024 - len(raw))), block=256))
+        got = got[: len(raw)].astype(np.float64) / 256.0
+        want = luts.eval_exact("gelu", raw.astype(np.float64) / 256.0)
+        assert np.abs(got - want).max() < 0.03
+
+    @pytest.mark.parametrize("sections", [16, 32, 64, 128])
+    def test_more_sections_reduce_error(self, sections):
+        t = luts.LutTable("tanh", sections)
+        xs = np.linspace(-3.9, 3.9, 512)
+        raw = luts.quantize(xs, 8)
+        got = np.asarray(lut_interp_for(t, raw, block=512)).astype(np.float64) / 256.0
+        err = np.abs(got - np.tanh(raw / 256.0)).max()
+        # Fig. 4 claim: ≥32 sections keep error at the quantization floor.
+        bound = 0.15 if sections == 16 else 0.04
+        assert err < bound, f"{sections} sections: err {err}"
+
+
+class TestSaluGemv:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        rows_t=st.integers(1, 8),
+        cols_t=st.integers(1, 4),
+    )
+    def test_matches_ref_bit_exact(self, seed, rows_t, cols_t):
+        rs = np.random.RandomState(seed)
+        rows, cols = 16 * rows_t, 64 * cols_t
+        w = rs.randint(-400, 400, size=(rows, cols)).astype(np.int16)
+        x = rs.randint(-400, 400, size=cols).astype(np.int16)
+        b = rs.randint(-200, 200, size=rows).astype(np.int16)
+        got = np.asarray(salu_gemv(jnp.asarray(w), jnp.asarray(x), jnp.asarray(b)))
+        want = ref.salu_gemv_ref(w, x, b)
+        np.testing.assert_array_equal(got, want)
+
+    def test_gemv_tracks_float(self):
+        rs = np.random.RandomState(7)
+        w = rs.uniform(-0.08, 0.08, size=(64, 128))
+        x = rs.uniform(-2, 2, size=128)
+        wq, xq = luts.quantize(w, 8), luts.quantize(x, 8)
+        bq = np.zeros(64, np.int16)
+        got = np.asarray(salu_gemv(jnp.asarray(wq), jnp.asarray(xq), jnp.asarray(bq)))
+        want = (wq.astype(np.float64) / 256) @ (xq.astype(np.float64) / 256)
+        assert np.abs(got / 256.0 - want).max() < 0.01
+
+    def test_writeback_saturates_to_int16(self):
+        # The 32-bit accumulator must not overflow (|acc| < 2^31 is a
+        # kernel precondition guaranteed by Q8.8 operand ranges — see
+        # rust QFormat::dot_raw); the int16 *writeback* does saturate.
+        w = np.full((16, 64), 2000, np.int16)
+        x = np.full(64, 2000, np.int16)   # acc = 64·4e6 = 2.56e8 < 2^31
+        b = np.zeros(16, np.int16)
+        got = np.asarray(salu_gemv(jnp.asarray(w), jnp.asarray(x), jnp.asarray(b)))
+        want = ref.salu_gemv_ref(w, x, b)
+        np.testing.assert_array_equal(got, want)
+        assert (got == 32767).all()  # (2.56e8 >> 8) exceeds int16
+
+
+class TestSoftmaxLut:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([4, 16, 64, 128]))
+    def test_matches_ref_bit_exact(self, tables, seed, n):
+        rs = np.random.RandomState(seed)
+        s = rs.randint(-3000, 2000, size=n).astype(np.int16)
+        e, r = tables["exp"], tables["recip"]
+        got = np.asarray(softmax_for(e, r, s))
+        want = ref.softmax_lut_ref(
+            s, e.table_i16(), r.table_i16(), e.lo_raw, e.index_shift, r.lo_raw, r.index_shift
+        )
+        np.testing.assert_array_equal(got, want)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_close_to_float_softmax(self, tables, seed):
+        rs = np.random.RandomState(seed)
+        s = rs.randint(-1500, 1500, size=64).astype(np.int16)
+        got = np.asarray(softmax_for(tables["exp"], tables["recip"], s)) / 8192.0
+        want = ref.softmax_float_ref(s)
+        assert np.abs(got - want).max() < 0.01
+        assert abs(got.sum() - 1.0) < 0.05
+
+    def test_uniform_scores_uniform_weights(self, tables):
+        s = np.zeros(16, np.int16)
+        got = np.asarray(softmax_for(tables["exp"], tables["recip"], s)) / 8192.0
+        np.testing.assert_allclose(got, np.full(16, 1 / 16), atol=0.01)

@@ -1,0 +1,37 @@
+//! Fig. 1 — GPU execution time for GPT-2 medium text generation by
+//! input and output size.
+//!
+//! Paper shape: total time grows linearly with output size; input size
+//! has little impact (the GPU batches input tokens efficiently).
+
+use sal_pim::baseline::GpuModel;
+use sal_pim::config::ModelConfig;
+use sal_pim::report::{fmt_time, Table};
+
+fn main() {
+    let gpu = GpuModel::titan_rtx();
+    let m = ModelConfig::gpt2_medium();
+    let mut t = Table::new(
+        "Fig. 1 — GPU (Titan RTX + FasterTransformer model) execution time",
+        &["in\\out", "1", "16", "64", "128", "256"],
+    );
+    for &n_in in &[32usize, 64, 128] {
+        let mut row = vec![n_in.to_string()];
+        for &n_out in &[1usize, 16, 64, 128, 256] {
+            row.push(fmt_time(gpu.generation_time(&m, n_in, n_out)));
+        }
+        t.row(&row);
+    }
+    t.print();
+
+    // Shape checks mirrored from the paper's description of Fig. 1.
+    let out_ratio =
+        gpu.generation_time(&m, 32, 256) / gpu.generation_time(&m, 32, 64);
+    let in_ratio =
+        gpu.generation_time(&m, 128, 64) / gpu.generation_time(&m, 32, 64);
+    println!("output 64→256 scaling: {out_ratio:.2}× (paper: ~linear, ≈4×)");
+    println!("input 32→128 scaling:  {in_ratio:.2}× (paper: 'little impact')");
+    assert!(out_ratio > 3.0 && out_ratio < 5.0);
+    assert!(in_ratio < 1.3);
+    println!("fig01 OK");
+}

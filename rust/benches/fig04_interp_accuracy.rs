@@ -1,0 +1,39 @@
+//! Fig. 4 / §2.3 — LUT-based linear-interpolation accuracy by section
+//! count (paper: accuracy is kept once sections > 32).
+
+use sal_pim::interp::{accuracy_report, min_sections_for, NonLinFn};
+use sal_pim::model::fixedpoint::Q8_8;
+use sal_pim::report::Table;
+
+fn main() {
+    let sections = [8usize, 16, 32, 64, 128, 256];
+    let rows = accuracy_report(&sections, Q8_8, Q8_8);
+    let mut t = Table::new(
+        "Fig. 4 — interpolation max abs error (rel. for rsqrt/recip)",
+        &["function", "8", "16", "32", "64", "128", "256"],
+    );
+    for f in NonLinFn::ALL {
+        let mut row = vec![f.name().to_string()];
+        for &s in &sections {
+            let r = rows
+                .iter()
+                .find(|r| r.func == f && r.sections == s)
+                .unwrap();
+            row.push(format!("{:.4}", r.max_err));
+        }
+        t.row(&row);
+    }
+    t.print();
+
+    // The paper's claim: ≥32 sections keep task accuracy. Our criterion:
+    // every function's error at 32+ sections is within a few 16-bit
+    // quantization steps.
+    for f in NonLinFn::ALL {
+        let r32 = rows.iter().find(|r| r.func == f && r.sections == 32).unwrap();
+        assert!(r32.max_err < 0.09, "{f:?} at 32 sections: {}", r32.max_err);
+        let min = min_sections_for(f, 0.09, 256, Q8_8, Q8_8).unwrap();
+        println!("{:>6}: ≤0.09 error from {min} sections", f.name());
+        assert!(min <= 32);
+    }
+    println!("fig04 OK (paper: no accuracy drop at >32 sections)");
+}

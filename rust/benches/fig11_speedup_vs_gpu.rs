@@ -1,0 +1,62 @@
+//! Fig. 11 — end-to-end speedup of SAL-PIM over the GPU for text
+//! generation by input and output size (paper: max 4.72×, avg 1.83×;
+//! speedup grows with output size and shrinks with input size).
+
+use sal_pim::baseline::GpuModel;
+use sal_pim::config::SimConfig;
+use sal_pim::mapper::GenerationSim;
+use sal_pim::report::{fmt_x, Table};
+
+fn main() {
+    let cfg = SimConfig::paper();
+    let gpu = GpuModel::titan_rtx();
+    let mut sim = GenerationSim::new(&cfg);
+    let outs = [1usize, 4, 16, 32, 64, 128, 256];
+    let ins = [32usize, 64, 128];
+
+    let mut t = Table::new(
+        "Fig. 11 — SAL-PIM speedup vs GPU (P_Sub=4)",
+        &["in\\out", "1", "4", "16", "32", "64", "128", "256"],
+    );
+    let mut all = Vec::new();
+    let mut grid = vec![vec![0.0f64; outs.len()]; ins.len()];
+    for (i, &n_in) in ins.iter().enumerate() {
+        let mut row = vec![n_in.to_string()];
+        for (j, &n_out) in outs.iter().enumerate() {
+            let pim = sim.generate(n_in, n_out).seconds(cfg.timing.tck_ns);
+            let g = gpu.generation_time(&cfg.model, n_in, n_out);
+            let s = g / pim;
+            grid[i][j] = s;
+            all.push(s);
+            row.push(fmt_x(s));
+        }
+        t.row(&row);
+    }
+    t.print();
+
+    let max = all.iter().cloned().fold(0.0f64, f64::max);
+    let avg = all.iter().sum::<f64>() / all.len() as f64;
+    println!("measured: max {} avg {}", fmt_x(max), fmt_x(avg));
+    println!("paper:    max 4.72× avg 1.83×");
+
+    // Shape assertions from the paper's discussion of Fig. 11:
+    // (a) larger outputs → larger speedup (same input size);
+    for (i, _) in ins.iter().enumerate() {
+        assert!(
+            grid[i][outs.len() - 1] > grid[i][0],
+            "speedup must grow with output size (in={})",
+            ins[i]
+        );
+    }
+    // (b) larger inputs → smaller speedup (same output size);
+    for (j, _) in outs.iter().enumerate().skip(2) {
+        assert!(
+            grid[0][j] > grid[2][j],
+            "speedup must shrink with input size (out={})",
+            outs[j]
+        );
+    }
+    // (c) SAL-PIM wins overall (avg > 1) and by single-digit factors.
+    assert!(avg > 1.0 && max < 25.0, "avg {avg} max {max}");
+    println!("fig11 OK");
+}

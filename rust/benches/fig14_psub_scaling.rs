@@ -1,0 +1,44 @@
+//! Fig. 14 — execution time and average bandwidth by subarray-level
+//! parallelism on text generation (paper: 2.11× speedup and ≈2× average
+//! bandwidth going from P_Sub=1 to P_Sub=4).
+
+use sal_pim::config::SimConfig;
+use sal_pim::mapper::GenerationSim;
+use sal_pim::report::{fmt_bw, fmt_time, fmt_x, Table};
+
+fn main() {
+    let (n_in, n_out) = (32usize, 64usize);
+    let mut t = Table::new(
+        "Fig. 14 — execution time & avg bandwidth by P_Sub (in=32, out=64)",
+        &["P_Sub", "exec time", "avg bandwidth", "speedup vs P_Sub=1"],
+    );
+    let mut times = Vec::new();
+    let mut bws = Vec::new();
+    for &p in &[1usize, 2, 4] {
+        let cfg = SimConfig::paper().with_p_sub(p);
+        let mut sim = GenerationSim::new(&cfg);
+        let r = sim.generate(n_in, n_out);
+        let secs = r.seconds(cfg.timing.tck_ns);
+        let bw = r.total().avg_internal_bandwidth(cfg.timing.tck_ns)
+            * cfg.hbm.pseudo_channels() as f64;
+        times.push(secs);
+        bws.push(bw);
+        t.row(&[
+            p.to_string(),
+            fmt_time(secs),
+            fmt_bw(bw),
+            fmt_x(times[0] / secs),
+        ]);
+    }
+    t.print();
+
+    let speedup = times[0] / times[2];
+    let bw_ratio = bws[2] / bws[0];
+    println!("P_Sub 1→4: speedup {} (paper 2.11×), bandwidth {} (paper ≈2×)",
+        fmt_x(speedup), fmt_x(bw_ratio));
+    assert!(speedup > 1.7 && speedup < 3.2, "speedup {speedup}");
+    assert!(bw_ratio > 1.7 && bw_ratio < 3.5, "bw ratio {bw_ratio}");
+    // Monotone scaling.
+    assert!(times[0] > times[1] && times[1] > times[2]);
+    println!("fig14 OK");
+}

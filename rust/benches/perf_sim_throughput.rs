@@ -1,0 +1,57 @@
+//! §Perf — simulator performance and the scheduling optimizations.
+//!
+//! Measures (a) wall-clock simulation throughput (simulated cycles per
+//! host second) and (b) the effect of the SALP row-prefetch optimization
+//! on simulated time — before/after numbers recorded in EXPERIMENTS.md
+//! §Perf.
+
+use sal_pim::config::SimConfig;
+use sal_pim::mapper::GenerationSim;
+use sal_pim::report::{fmt_time, fmt_x, Table};
+use std::time::Instant;
+
+fn main() {
+    let cfg = SimConfig::paper();
+
+    // (a) Simulator wall-clock throughput on a fresh decode iteration.
+    let wall = Instant::now();
+    let mut sim = GenerationSim::new(&cfg);
+    let st = sim.decode_token(128);
+    let host = wall.elapsed().as_secs_f64();
+    println!(
+        "simulated {} cycles in {} → {:.1} Msim-cycles/s (one decode iteration)",
+        st.cycles,
+        fmt_time(host),
+        st.cycles as f64 / host / 1e6
+    );
+
+    // Cached-path throughput over a full generation sweep.
+    let wall = Instant::now();
+    let r = sim.generate(32, 256);
+    let host = wall.elapsed().as_secs_f64();
+    println!(
+        "full generation (in=32,out=256): {} simulated in {} host time",
+        fmt_time(r.seconds(cfg.timing.tck_ns)),
+        fmt_time(host)
+    );
+
+    // (b) Conservative vs prefetch scheduling (the §Perf L3 knob).
+    let mut t = Table::new(
+        "§Perf — SALP row-prefetch scheduling",
+        &["schedule", "decode @kv=128", "generation(32,64)"],
+    );
+    let mut times = Vec::new();
+    for (name, prefetch) in [("conservative", false), ("prefetch", true)] {
+        let mut s = GenerationSim::new(&cfg);
+        s.set_prefetch(prefetch);
+        let d = s.decode_token(128).seconds(cfg.timing.tck_ns);
+        let g = s.generate(32, 64).seconds(cfg.timing.tck_ns);
+        times.push((d, g));
+        t.row(&[name.into(), fmt_time(d), fmt_time(g)]);
+    }
+    t.print();
+    let gain = times[0].1 / times[1].1;
+    println!("prefetch end-to-end gain: {}", fmt_x(gain));
+    assert!(gain > 1.0, "prefetch must not slow the device down");
+    println!("perf bench OK");
+}

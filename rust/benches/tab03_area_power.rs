@@ -1,0 +1,55 @@
+//! Table 3 — area and power of the SAL-PIM logic units (paper: 4.81 %
+//! area overhead vs conventional HBM2, 9.04 % of the power budget when
+//! every S-ALU runs MACs simultaneously).
+
+use sal_pim::config::SimConfig;
+use sal_pim::energy::{AreaModel, EnergyParams};
+use sal_pim::report::Table;
+
+fn main() {
+    let cfg = SimConfig::paper();
+    let a = AreaModel::new(&cfg);
+    let p = EnergyParams::paper();
+
+    let mut t = Table::new(
+        "Table 3 — area & power of SAL-PIM units",
+        &["unit", "area/unit (µm²)", "count/ch", "area/ch (mm²)", "power/unit (mW)"],
+    );
+    t.row(&[
+        "S-ALU".into(),
+        format!("{:.0}", a.units.salu_um2),
+        a.salus_per_channel.to_string(),
+        format!("{:.2}", a.salu_area_mm2()),
+        format!("{:.3}", p.salu_w * 1e3),
+    ]);
+    t.row(&[
+        "Bank-level unit".into(),
+        format!("{:.0}", a.units.bank_unit_um2),
+        a.bank_units_per_channel.to_string(),
+        format!("{:.2}", a.bank_unit_area_mm2()),
+        format!("{:.3}", p.bank_unit_w * 1e3),
+    ]);
+    t.row(&[
+        "C-ALU".into(),
+        format!("{:.0}", a.units.calu_um2),
+        a.calus_per_channel.to_string(),
+        format!("{:.2}", a.calu_area_mm2()),
+        format!("{:.3}", p.calu_w * 1e3),
+    ]);
+    t.print();
+
+    let overhead = a.overhead_fraction() * 100.0;
+    println!("area overhead: {overhead:.2}% (paper 4.81%, threshold 25%)");
+    assert!((overhead - 4.81).abs() < 0.2);
+
+    // All-S-ALU-active logic power vs the 60 W budget (§5.2's 9.04 %).
+    let channels = cfg.hbm.channels() as f64;
+    let logic_w = channels
+        * (a.salus_per_channel as f64 * p.salu_w
+            + a.bank_units_per_channel as f64 * p.bank_unit_w
+            + p.calu_w);
+    let frac = logic_w / p.power_budget_w * 100.0;
+    println!("peak logic power: {logic_w:.2} W = {frac:.2}% of budget (paper 9.04%)");
+    assert!((frac - 9.04).abs() < 1.5, "logic fraction {frac}");
+    println!("tab03 OK");
+}

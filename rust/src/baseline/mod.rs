@@ -1,0 +1,11 @@
+//! Comparison baselines.
+//!
+//! * [`gpu`] — the Nvidia Titan RTX + FasterTransformer analytic model,
+//!   calibrated to the paper's own Fig. 1 execution-time behaviour.
+//! * [`banklevel`] — the Newton-style bank-level PIM (§5.4 / Fig. 12).
+
+pub mod banklevel;
+pub mod gpu;
+
+pub use banklevel::BankLevelPim;
+pub use gpu::GpuModel;

@@ -1,0 +1,135 @@
+//! Minimal command-line parsing (no clap in the offline environment).
+//!
+//! Grammar: `sal-pim <command> [--flag value] [--switch] [positional…]`.
+
+use std::collections::{HashMap, HashSet};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    switches: HashSet<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("flag --{0} expects a value")]
+    MissingValue(String),
+    #[error("bad value for --{flag}: `{value}` ({why})")]
+    BadValue {
+        flag: String,
+        value: String,
+        why: String,
+    },
+}
+
+impl Args {
+    /// Parse an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Result<Self, CliError> {
+        let mut out = Args::default();
+        let mut iter = items.into_iter().peekable();
+        while let Some(item) = iter.next() {
+            if let Some(name) = item.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.insert(name.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(item);
+            } else {
+                out.positional.push(item);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Self, CliError> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// True if `--name` appeared at all (bare or with a value). A bare
+    /// switch followed by a positional argument captures it as a value —
+    /// use `--name=value`/`--name` last, or check `flag()` when the
+    /// distinction matters.
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.contains(name) || self.flags.contains_key(name)
+    }
+
+    /// Typed flag with default.
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e: T::Err| CliError::BadValue {
+                flag: name.to_string(),
+                value: v.clone(),
+                why: e.to_string(),
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn command_flags_switches_positionals() {
+        let a = parse("simulate extra1 extra2 --in 32 --out=64 --prefetch");
+        assert_eq!(a.command.as_deref(), Some("simulate"));
+        assert_eq!(a.flag("in"), Some("32"));
+        assert_eq!(a.flag("out"), Some("64"));
+        assert!(a.switch("prefetch"));
+        assert_eq!(a.positional, vec!["extra1", "extra2"]);
+        // A switch directly before a positional captures it as a value
+        // but still reads as "present".
+        let b = parse("run --prefetch pos");
+        assert!(b.switch("prefetch"));
+        assert_eq!(b.flag("prefetch"), Some("pos"));
+    }
+
+    #[test]
+    fn typed_get_with_default() {
+        let a = parse("simulate --out 128");
+        assert_eq!(a.get("out", 1usize).unwrap(), 128);
+        assert_eq!(a.get("in", 32usize).unwrap(), 32);
+        assert!(a.get::<usize>("out", 0).is_ok());
+    }
+
+    #[test]
+    fn bad_value_is_reported() {
+        let a = parse("simulate --out abc");
+        assert!(matches!(
+            a.get::<usize>("out", 0),
+            Err(CliError::BadValue { .. })
+        ));
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("bench --quiet");
+        assert!(a.switch("quiet"));
+        assert_eq!(a.flag("quiet"), None);
+    }
+}

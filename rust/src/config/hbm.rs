@@ -1,0 +1,224 @@
+//! HBM2 organization and PIM unit shapes (Table 2 of the paper).
+
+/// Physical organization of the HBM2 stack hosting SAL-PIM.
+///
+/// The paper's device (Table 2): 4 DRAM dies + 1 buffer die; 8 channels
+/// per die pair presented as 16 pseudo-channels; 16 banks per
+/// pseudo-channel; 64 subarrays per bank of 512 rows each; 1 KB rows;
+/// 512×512 MATs; 128-bit DQ per channel.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HbmConfig {
+    /// DRAM dies in the stack (buffer die excluded).
+    pub dram_dies: usize,
+    /// Channels per die.
+    pub channels_per_die: usize,
+    /// Pseudo-channels per channel (HBM2 pseudo-channel mode).
+    pub pch_per_channel: usize,
+    /// Banks per pseudo-channel.
+    pub banks_per_pch: usize,
+    /// Subarrays per bank.
+    pub subarrays_per_bank: usize,
+    /// Rows per subarray.
+    pub rows_per_subarray: usize,
+    /// Row (page) size in bytes.
+    pub row_bytes: usize,
+    /// MAT dimension (cells per local bit-line / word-line segment).
+    pub mat_dim: usize,
+    /// DQ width per channel in bits.
+    pub dq_bits: usize,
+    /// Global bit-line width per bank in bits — the S-ALU operand width.
+    /// One column access delivers `gbl_bits` to the subarray-level ALU.
+    pub gbl_bits: usize,
+    /// Total capacity in bytes.
+    pub capacity_bytes: usize,
+}
+
+impl HbmConfig {
+    /// The paper's 8 GB HBM2 stack.
+    pub fn hbm2_8gb() -> Self {
+        HbmConfig {
+            dram_dies: 4,
+            channels_per_die: 2,
+            pch_per_channel: 2,
+            banks_per_pch: 16,
+            subarrays_per_bank: 64,
+            rows_per_subarray: 512,
+            row_bytes: 1024,
+            mat_dim: 512,
+            dq_bits: 128,
+            // 256-bit GBL: 16 × 16-bit operands per column access, matching
+            // the 16-lane bank-level register / 16-MAC logical S-ALU width.
+            gbl_bits: 256,
+            capacity_bytes: 8 << 30,
+        }
+    }
+
+    /// Total independent channels in the stack.
+    pub fn channels(&self) -> usize {
+        self.dram_dies * self.channels_per_die
+    }
+
+    /// Total pseudo-channels — the unit of PIM command broadcast.
+    pub fn pseudo_channels(&self) -> usize {
+        self.channels() * self.pch_per_channel
+    }
+
+    /// Total banks in the device.
+    pub fn total_banks(&self) -> usize {
+        self.pseudo_channels() * self.banks_per_pch
+    }
+
+    /// Bytes delivered to an S-ALU per column access (GBL burst).
+    pub fn gbl_bytes_per_access(&self) -> usize {
+        self.gbl_bits / 8
+    }
+
+    /// Column accesses needed to stream one full row through the GBL.
+    pub fn cols_per_row(&self) -> usize {
+        self.row_bytes / self.gbl_bytes_per_access()
+    }
+
+    /// MATs per subarray (row_bytes × 8 bits / mat_dim columns each).
+    pub fn mats_per_subarray(&self) -> usize {
+        self.row_bytes * 8 / self.mat_dim
+    }
+
+    /// Rows per bank.
+    pub fn rows_per_bank(&self) -> usize {
+        self.subarrays_per_bank * self.rows_per_subarray
+    }
+
+    /// Bytes per bank.
+    pub fn bytes_per_bank(&self) -> usize {
+        self.rows_per_bank() * self.row_bytes
+    }
+}
+
+/// LUT-embedded subarray configuration (§4.2, Table 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LutConfig {
+    /// Number of LUT-embedded subarrays per bank (hold slope & intercept).
+    pub num_lut_subarrays: usize,
+    /// Number of linear-interpolation sections per function.
+    pub sections: usize,
+}
+
+impl LutConfig {
+    pub fn paper() -> Self {
+        LutConfig {
+            num_lut_subarrays: 4,
+            sections: 64,
+        }
+    }
+
+    /// Rows needed to store one function's table (slope + intercept,
+    /// 16-bit entries) given a row size.
+    pub fn rows_per_function(&self, row_bytes: usize) -> usize {
+        let table_bytes = self.sections * 2 * 2; // W and B, 2 bytes each
+        table_bytes.div_ceil(row_bytes)
+    }
+}
+
+/// Subarray-level ALU configuration (§4.1, Table 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SaluConfig {
+    /// Maximum S-ALUs (subarray groups) physically present per bank.
+    pub max_p_sub: usize,
+    /// Physical shared MACs per S-ALU. The S-ALU is *logically* 16 lanes
+    /// wide (one per 16-bit operand in a GBL burst); 8 physical MACs at
+    /// 2× the column cadence service all 16 lanes (§4.1 shared-MAC).
+    pub macs_per_salu: usize,
+    /// Logical lanes per S-ALU = operands per GBL burst.
+    pub lanes: usize,
+    /// Accumulator registers per S-ALU (16 × 32-bit).
+    pub regs: usize,
+    /// Register width in bits (accumulation precision).
+    pub reg_bits: usize,
+    /// MAC clock in MHz (500 MHz = 2× the 250 MHz tCCDL column cadence).
+    pub mac_clock_mhz: usize,
+}
+
+impl SaluConfig {
+    pub fn paper() -> Self {
+        SaluConfig {
+            max_p_sub: 4,
+            macs_per_salu: 8,
+            lanes: 16,
+            regs: 16,
+            reg_bits: 32,
+            mac_clock_mhz: 500,
+        }
+    }
+
+    /// MAC passes needed to consume one GBL burst: `lanes / macs`
+    /// (= 2 with the paper's shared-MAC arrangement, hidden under tCCDL).
+    pub fn passes_per_burst(&self) -> usize {
+        self.lanes.div_ceil(self.macs_per_salu)
+    }
+}
+
+/// Channel-level ALU configuration (§4.4, Table 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CaluConfig {
+    /// Channel vector registers (two of 16 × 16-bit in the paper).
+    pub vector_regs: usize,
+    /// Lanes per vector register.
+    pub lanes: usize,
+    /// Scalar registers (16-bit).
+    pub scalar_regs: usize,
+    /// Configurable adders (act as accumulator or adder tree).
+    pub adders: usize,
+}
+
+impl CaluConfig {
+    pub fn paper() -> Self {
+        CaluConfig {
+            vector_regs: 2,
+            lanes: 16,
+            scalar_regs: 2,
+            adders: 16,
+        }
+    }
+
+    /// Adder-tree depth for a reduce-sum over `lanes` values.
+    pub fn tree_depth(&self) -> usize {
+        usize::BITS as usize - (self.lanes - 1).leading_zeros() as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hbm2_counts() {
+        let h = HbmConfig::hbm2_8gb();
+        assert_eq!(h.channels(), 8);
+        assert_eq!(h.pseudo_channels(), 16);
+        assert_eq!(h.total_banks(), 256);
+        assert_eq!(h.cols_per_row(), 32);
+        assert_eq!(h.mats_per_subarray(), 16);
+        assert_eq!(h.gbl_bytes_per_access(), 32);
+        assert_eq!(h.rows_per_bank(), 32768);
+        assert_eq!(h.bytes_per_bank(), 32 << 20);
+    }
+
+    #[test]
+    fn lut_table_fits_one_row() {
+        // 64 sections × (W,B) × 2 B = 256 B ≤ 1 KB row.
+        let l = LutConfig::paper();
+        assert_eq!(l.rows_per_function(1024), 1);
+    }
+
+    #[test]
+    fn shared_mac_two_passes() {
+        let s = SaluConfig::paper();
+        assert_eq!(s.passes_per_burst(), 2);
+    }
+
+    #[test]
+    fn calu_tree_depth() {
+        let c = CaluConfig::paper();
+        assert_eq!(c.tree_depth(), 4);
+    }
+}

@@ -1,0 +1,284 @@
+//! Configuration for the SAL-PIM stack.
+//!
+//! [`SimConfig`] bundles everything Table 2 of the paper specifies — the
+//! HBM2 organization, DRAM timing parameters, LUT-embedded-subarray setup,
+//! S-ALU / bank-level-unit / C-ALU shapes — plus the transformer model
+//! shapes the workloads run ([`ModelConfig`]) and the parallelism degrees
+//! `(P_Ch, P_Ba, P_Sub)` the mapping schemes of §3.2 are parameterized by.
+//!
+//! Presets:
+//! * [`SimConfig::paper`] — the exact Table 2 configuration with GPT-2
+//!   medium (345 M parameters), used by every timing experiment.
+//! * [`SimConfig::mini`] — a scaled-down model (GPT-2 *mini*) for
+//!   functional (value-computing) runs and for cross-checking against the
+//!   PJRT golden model; the memory device config is unchanged.
+//!
+//! Configs can also be loaded from simple `key = value` files via
+//! [`parse::parse_config`] (no serde in the offline build environment).
+
+mod hbm;
+mod model;
+pub mod parse;
+mod timing;
+
+pub use hbm::{CaluConfig, HbmConfig, LutConfig, SaluConfig};
+pub use model::ModelConfig;
+pub use timing::Timing;
+
+/// Degrees of parallelism used by the §3.2 data-mapping schemes.
+///
+/// * `p_ch` — channel-level parallelism (independent weight columns/heads).
+/// * `p_ba` — bank-level parallelism within a pseudo-channel (partial sums
+///   merged by the C-ALU).
+/// * `p_sub` — subarray-level parallelism: the number of S-ALUs (subarray
+///   groups) per bank that stream weights concurrently. The paper
+///   evaluates 1, 2 and 4.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Parallelism {
+    pub p_ch: usize,
+    pub p_ba: usize,
+    pub p_sub: usize,
+}
+
+impl Parallelism {
+    /// Total number of S-ALUs across the device.
+    pub fn total_salus(&self) -> usize {
+        self.p_ch * self.p_ba * self.p_sub
+    }
+}
+
+/// Complete simulator configuration (Table 2 + workload model).
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// HBM2 organization (channels, banks, subarrays, row geometry).
+    pub hbm: HbmConfig,
+    /// DRAM timing parameters in cycles of `tck_ns`.
+    pub timing: Timing,
+    /// LUT-embedded subarray configuration.
+    pub lut: LutConfig,
+    /// Subarray-level ALU configuration.
+    pub salu: SaluConfig,
+    /// Channel-level ALU configuration.
+    pub calu: CaluConfig,
+    /// Transformer model shapes.
+    pub model: ModelConfig,
+    /// Active parallelism degrees for the mapper.
+    pub parallelism: Parallelism,
+}
+
+impl SimConfig {
+    /// The paper's Table 2 configuration with GPT-2 medium.
+    pub fn paper() -> Self {
+        let hbm = HbmConfig::hbm2_8gb();
+        let parallelism = Parallelism {
+            p_ch: hbm.pseudo_channels(),
+            p_ba: hbm.banks_per_pch,
+            p_sub: 4,
+        };
+        SimConfig {
+            hbm,
+            timing: Timing::hbm2(),
+            lut: LutConfig::paper(),
+            salu: SaluConfig::paper(),
+            calu: CaluConfig::paper(),
+            model: ModelConfig::gpt2_medium(),
+            parallelism,
+        }
+    }
+
+    /// Paper device config with a small functional-run model.
+    pub fn mini() -> Self {
+        let mut c = Self::paper();
+        c.model = ModelConfig::gpt2_mini();
+        c
+    }
+
+    /// Same as [`SimConfig::paper`] but with a different `P_Sub`
+    /// (the Fig. 14 / Fig. 15 sweep).
+    pub fn with_p_sub(mut self, p_sub: usize) -> Self {
+        assert!(
+            p_sub >= 1 && p_sub <= self.salu.max_p_sub,
+            "P_Sub {} out of range 1..={}",
+            p_sub,
+            self.salu.max_p_sub
+        );
+        self.parallelism.p_sub = p_sub;
+        self
+    }
+
+    /// Replace the workload model.
+    pub fn with_model(mut self, model: ModelConfig) -> Self {
+        self.model = model;
+        self
+    }
+
+    /// Peak internal bandwidth in bytes/sec given the active `P_Sub`
+    /// (§6.2: "a maximum of 8 TB/s when P_Sub is 4").
+    ///
+    /// Each bank-level read delivers one GBL burst (`row bytes / columns`
+    /// worth = 32 B at BL=4 × 64-bit GBL) every `tCCDL` cycles, per active
+    /// subarray group, per bank, per pseudo-channel.
+    pub fn peak_internal_bandwidth(&self) -> f64 {
+        let bytes_per_burst = self.hbm.gbl_bytes_per_access() as f64;
+        let bursts_per_sec = 1.0e9 / (self.timing.t_ccdl as f64 * self.timing.tck_ns);
+        bytes_per_burst
+            * bursts_per_sec
+            * self.parallelism.p_sub as f64
+            * self.hbm.banks_per_pch as f64
+            * self.hbm.pseudo_channels() as f64
+    }
+
+    /// Peak *external* (JEDEC pin) bandwidth of the unmodified HBM2 stack.
+    pub fn peak_external_bandwidth(&self) -> f64 {
+        // 8 channels × 128-bit DQ × 2 Gb/s/pin (1 GHz DDR).
+        let channels = self.hbm.channels() as f64;
+        let dq_bits = self.hbm.dq_bits as f64;
+        channels * dq_bits / 8.0 * 2.0e9
+    }
+
+    /// Validate internal consistency; returns a list of human-readable
+    /// problems (empty = valid).
+    pub fn validate(&self) -> Vec<String> {
+        let mut problems = Vec::new();
+        if self.parallelism.p_sub > self.salu.max_p_sub {
+            problems.push(format!(
+                "P_Sub={} exceeds configured S-ALUs per bank {}",
+                self.parallelism.p_sub, self.salu.max_p_sub
+            ));
+        }
+        if self.parallelism.p_ba > self.hbm.banks_per_pch {
+            problems.push(format!(
+                "P_Ba={} exceeds banks per pseudo-channel {}",
+                self.parallelism.p_ba, self.hbm.banks_per_pch
+            ));
+        }
+        if self.parallelism.p_ch > self.hbm.pseudo_channels() {
+            problems.push(format!(
+                "P_Ch={} exceeds pseudo-channels {}",
+                self.parallelism.p_ch,
+                self.hbm.pseudo_channels()
+            ));
+        }
+        if self.lut.sections == 0 || !self.lut.sections.is_power_of_two() {
+            problems.push(format!(
+                "LUT sections must be a power of two, got {}",
+                self.lut.sections
+            ));
+        }
+        if self.lut.num_lut_subarrays > self.hbm.subarrays_per_bank {
+            problems.push(format!(
+                "{} LUT subarrays exceed {} subarrays/bank",
+                self.lut.num_lut_subarrays, self.hbm.subarrays_per_bank
+            ));
+        }
+        if self.model.d_model % self.model.n_heads != 0 {
+            problems.push(format!(
+                "d_model {} not divisible by n_heads {}",
+                self.model.d_model, self.model.n_heads
+            ));
+        }
+        problems.extend(self.timing.validate());
+        problems
+    }
+
+    /// Number of compute (non-LUT) subarrays per S-ALU group.
+    ///
+    /// §3.1: "if the number of S-ALU is 4 in a bank, the subarray group
+    /// consists of 15 subarrays without LUT-embedded subarray".
+    pub fn subarrays_per_group(&self) -> usize {
+        (self.hbm.subarrays_per_bank - self.lut.num_lut_subarrays) / self.salu.max_p_sub
+    }
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_is_valid() {
+        let c = SimConfig::paper();
+        assert!(c.validate().is_empty(), "{:?}", c.validate());
+    }
+
+    #[test]
+    fn paper_config_matches_table2() {
+        let c = SimConfig::paper();
+        assert_eq!(c.hbm.channels(), 8);
+        assert_eq!(c.hbm.pseudo_channels(), 16);
+        assert_eq!(c.hbm.banks_per_pch, 16);
+        assert_eq!(c.hbm.subarrays_per_bank, 64);
+        assert_eq!(c.hbm.rows_per_subarray, 512);
+        assert_eq!(c.hbm.row_bytes, 1024);
+        assert_eq!(c.timing.t_rc, 45);
+        assert_eq!(c.timing.t_rcd, 16);
+        assert_eq!(c.timing.t_ras, 29);
+        assert_eq!(c.timing.t_cl, 16);
+        assert_eq!(c.timing.t_rrd, 2);
+        assert_eq!(c.timing.t_ccds, 2);
+        assert_eq!(c.timing.t_ccdl, 4);
+        assert_eq!(c.timing.bl, 4);
+        assert_eq!(c.lut.num_lut_subarrays, 4);
+        assert_eq!(c.lut.sections, 64);
+        assert_eq!(c.salu.max_p_sub, 4);
+        assert_eq!(c.salu.macs_per_salu, 8);
+        assert_eq!(c.parallelism.p_sub, 4);
+    }
+
+    #[test]
+    fn subarray_groups_match_paper_example() {
+        // §3.1: 4 S-ALUs → groups of 15 subarrays (64 - 4 LUT = 60, /4).
+        let c = SimConfig::paper();
+        assert_eq!(c.subarrays_per_group(), 15);
+    }
+
+    #[test]
+    fn peak_internal_bandwidth_is_8tbps_at_psub4() {
+        // §6.2: "an enormous bandwidth maximum of 8 TB/s when P_Sub is 4".
+        let c = SimConfig::paper();
+        let tb = c.peak_internal_bandwidth() / 1e12;
+        assert!((tb - 8.192).abs() < 0.3, "got {tb} TB/s");
+    }
+
+    #[test]
+    fn external_bandwidth_matches_hbm2() {
+        // 8ch × 128b × 2Gbps = 256 GB/s (the paper: GPU 672 GB/s is 2.63×
+        // the HBM2 maximum, i.e. ≈255 GB/s).
+        let c = SimConfig::paper();
+        let gb = c.peak_external_bandwidth() / 1e9;
+        assert!((gb - 256.0).abs() < 1.0, "got {gb} GB/s");
+    }
+
+    #[test]
+    fn p_sub_sweep_validates() {
+        for p in [1, 2, 4] {
+            let c = SimConfig::paper().with_p_sub(p);
+            assert!(c.validate().is_empty());
+            assert_eq!(c.parallelism.p_sub, p);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn p_sub_out_of_range_panics() {
+        let _ = SimConfig::paper().with_p_sub(8);
+    }
+
+    #[test]
+    fn invalid_configs_are_reported() {
+        let mut c = SimConfig::paper();
+        c.lut.sections = 63;
+        assert!(!c.validate().is_empty());
+        let mut c = SimConfig::paper();
+        c.parallelism.p_ba = 1000;
+        assert!(!c.validate().is_empty());
+        let mut c = SimConfig::paper();
+        c.model.n_heads = 7;
+        assert!(!c.validate().is_empty());
+    }
+}

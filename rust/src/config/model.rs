@@ -1,0 +1,144 @@
+//! Transformer model shape configuration.
+//!
+//! The paper evaluates GPT-2 medium (345 M parameters, d_model = 1024,
+//! 24 decoder layers). Functional (value-computing) runs use a scaled
+//! GPT-2 *mini* whose shapes match the AOT-compiled JAX artifacts.
+
+/// Shapes of a GPT-2-style decoder-only transformer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelConfig {
+    /// Human-readable name (also selects the HLO artifact set).
+    pub name: String,
+    /// Hidden dimension.
+    pub d_model: usize,
+    /// Decoder layers.
+    pub n_layers: usize,
+    /// Attention heads.
+    pub n_heads: usize,
+    /// FFN intermediate dimension (4 × d_model for GPT-2).
+    pub d_ff: usize,
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Maximum sequence length (positional table size / KV capacity).
+    pub max_seq: usize,
+    /// Parameter precision in bytes (2 = the paper's 16-bit fixed point).
+    pub param_bytes: usize,
+}
+
+impl ModelConfig {
+    /// GPT-2 medium: the paper's evaluation model.
+    pub fn gpt2_medium() -> Self {
+        ModelConfig {
+            name: "gpt2-medium".to_string(),
+            d_model: 1024,
+            n_layers: 24,
+            n_heads: 16,
+            d_ff: 4096,
+            vocab: 50257,
+            max_seq: 1024,
+            param_bytes: 2,
+        }
+    }
+
+    /// GPT-2 XL shapes (for the "larger models" discussion in §5.4/§6.2).
+    pub fn gpt2_xl() -> Self {
+        ModelConfig {
+            name: "gpt2-xl".to_string(),
+            d_model: 1600,
+            n_layers: 48,
+            n_heads: 25,
+            d_ff: 6400,
+            vocab: 50257,
+            max_seq: 1024,
+            param_bytes: 2,
+        }
+    }
+
+    /// Scaled-down model for functional runs and the PJRT golden-model
+    /// cross-check; matches `python/compile/model.py::MINI`.
+    pub fn gpt2_mini() -> Self {
+        ModelConfig {
+            name: "gpt2-mini".to_string(),
+            d_model: 128,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 512,
+            vocab: 256,
+            max_seq: 128,
+            param_bytes: 2,
+        }
+    }
+
+    /// Per-head dimension.
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Parameter count of one decoder layer (weights + biases):
+    /// QKV (3·d²+3d) + attn out (d²+d) + FFN (2·d·dff + dff + d)
+    /// + 2 layerNorms (4d).
+    pub fn params_per_layer(&self) -> usize {
+        let d = self.d_model;
+        let f = self.d_ff;
+        4 * d * d + 4 * d + 2 * d * f + f + d + 4 * d
+    }
+
+    /// Total parameters (embedding + positional + layers + final LN).
+    pub fn total_params(&self) -> usize {
+        self.vocab * self.d_model
+            + self.max_seq * self.d_model
+            + self.n_layers * self.params_per_layer()
+            + 2 * self.d_model
+    }
+
+    /// Bytes the generation stage must stream per produced token
+    /// (every decoder-layer weight once + the LM head).
+    pub fn bytes_per_token(&self, kv_len: usize) -> usize {
+        let weights = self.n_layers * self.params_per_layer() + self.vocab * self.d_model;
+        let kv = self.n_layers * 2 * kv_len * self.d_model; // K and V reads
+        (weights + kv) * self.param_bytes
+    }
+
+    /// FLOPs of a single-token decode step (2 × MACs), excluding
+    /// nonlinearities.
+    pub fn flops_per_token(&self, kv_len: usize) -> usize {
+        let d = self.d_model;
+        let per_layer = 2 * (4 * d * d + 2 * d * self.d_ff) + 2 * (2 * kv_len * d);
+        self.n_layers * per_layer + 2 * self.vocab * d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpt2_medium_param_count() {
+        // The paper says "345 million parameters".
+        let m = ModelConfig::gpt2_medium();
+        let p = m.total_params() as f64 / 1e6;
+        assert!((330.0..360.0).contains(&p), "got {p} M");
+    }
+
+    #[test]
+    fn d_head() {
+        assert_eq!(ModelConfig::gpt2_medium().d_head(), 64);
+        assert_eq!(ModelConfig::gpt2_mini().d_head(), 32);
+    }
+
+    #[test]
+    fn bytes_per_token_is_memory_bound_scale() {
+        // Decode must stream ~all weights: ≥ 2 bytes × layer params.
+        let m = ModelConfig::gpt2_medium();
+        let b = m.bytes_per_token(0);
+        assert!(b >= m.n_layers * m.params_per_layer() * 2);
+        // KV reads grow with context.
+        assert!(m.bytes_per_token(1024) > m.bytes_per_token(1));
+    }
+
+    #[test]
+    fn flops_scale_with_kv() {
+        let m = ModelConfig::gpt2_mini();
+        assert!(m.flops_per_token(64) > m.flops_per_token(1));
+    }
+}

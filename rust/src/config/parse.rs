@@ -1,0 +1,190 @@
+//! Minimal `key = value` config-file parser.
+//!
+//! The offline build environment has no serde, so sweep/override files use
+//! a flat INI-like format:
+//!
+//! ```text
+//! # comment
+//! p_sub = 4
+//! model = gpt2-medium
+//! lut.sections = 64
+//! timing.t_ccdl = 4
+//! ```
+//!
+//! Unknown keys are reported as errors so typos in experiment scripts fail
+//! loudly instead of silently running the default configuration.
+
+use super::{ModelConfig, SimConfig};
+
+/// A parse failure with line context.
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("line {line}: expected `key = value`, got `{text}`")]
+    Syntax { line: usize, text: String },
+    #[error("line {line}: unknown key `{key}`")]
+    UnknownKey { line: usize, key: String },
+    #[error("line {line}: bad value `{value}` for `{key}`: {why}")]
+    BadValue {
+        line: usize,
+        key: String,
+        value: String,
+        why: String,
+    },
+    #[error("config invalid after overrides: {0:?}")]
+    Invalid(Vec<String>),
+}
+
+fn parse_usize(line: usize, key: &str, value: &str) -> Result<usize, ConfigError> {
+    value.parse().map_err(|e| ConfigError::BadValue {
+        line,
+        key: key.to_string(),
+        value: value.to_string(),
+        why: format!("{e}"),
+    })
+}
+
+fn parse_u64(line: usize, key: &str, value: &str) -> Result<u64, ConfigError> {
+    value.parse().map_err(|e| ConfigError::BadValue {
+        line,
+        key: key.to_string(),
+        value: value.to_string(),
+        why: format!("{e}"),
+    })
+}
+
+/// Apply one `key = value` override to a config.
+pub fn apply_override(
+    cfg: &mut SimConfig,
+    line: usize,
+    key: &str,
+    value: &str,
+) -> Result<(), ConfigError> {
+    match key {
+        "p_sub" => cfg.parallelism.p_sub = parse_usize(line, key, value)?,
+        "p_ba" => cfg.parallelism.p_ba = parse_usize(line, key, value)?,
+        "p_ch" => cfg.parallelism.p_ch = parse_usize(line, key, value)?,
+        "model" => {
+            cfg.model = match value {
+                "gpt2-medium" => ModelConfig::gpt2_medium(),
+                "gpt2-xl" => ModelConfig::gpt2_xl(),
+                "gpt2-mini" => ModelConfig::gpt2_mini(),
+                other => {
+                    return Err(ConfigError::BadValue {
+                        line,
+                        key: key.to_string(),
+                        value: other.to_string(),
+                        why: "expected gpt2-medium|gpt2-xl|gpt2-mini".to_string(),
+                    })
+                }
+            }
+        }
+        "model.d_model" => cfg.model.d_model = parse_usize(line, key, value)?,
+        "model.n_layers" => cfg.model.n_layers = parse_usize(line, key, value)?,
+        "model.n_heads" => cfg.model.n_heads = parse_usize(line, key, value)?,
+        "model.d_ff" => cfg.model.d_ff = parse_usize(line, key, value)?,
+        "model.vocab" => cfg.model.vocab = parse_usize(line, key, value)?,
+        "model.max_seq" => cfg.model.max_seq = parse_usize(line, key, value)?,
+        "lut.sections" => cfg.lut.sections = parse_usize(line, key, value)?,
+        "lut.num_lut_subarrays" => cfg.lut.num_lut_subarrays = parse_usize(line, key, value)?,
+        "salu.macs_per_salu" => cfg.salu.macs_per_salu = parse_usize(line, key, value)?,
+        "salu.max_p_sub" => cfg.salu.max_p_sub = parse_usize(line, key, value)?,
+        "timing.t_rc" => cfg.timing.t_rc = parse_u64(line, key, value)?,
+        "timing.t_rcd" => cfg.timing.t_rcd = parse_u64(line, key, value)?,
+        "timing.t_ras" => cfg.timing.t_ras = parse_u64(line, key, value)?,
+        "timing.t_cl" => cfg.timing.t_cl = parse_u64(line, key, value)?,
+        "timing.t_rrd" => cfg.timing.t_rrd = parse_u64(line, key, value)?,
+        "timing.t_ccds" => cfg.timing.t_ccds = parse_u64(line, key, value)?,
+        "timing.t_ccdl" => cfg.timing.t_ccdl = parse_u64(line, key, value)?,
+        "timing.t_rp" => cfg.timing.t_rp = parse_u64(line, key, value)?,
+        "timing.t_faw" => cfg.timing.t_faw = parse_u64(line, key, value)?,
+        "timing.t_refi" => cfg.timing.t_refi = parse_u64(line, key, value)?,
+        "timing.t_rfc" => cfg.timing.t_rfc = parse_u64(line, key, value)?,
+        "timing.pim_op_setup" => cfg.timing.pim_op_setup = parse_u64(line, key, value)?,
+        _ => {
+            return Err(ConfigError::UnknownKey {
+                line,
+                key: key.to_string(),
+            })
+        }
+    }
+    Ok(())
+}
+
+/// Parse a whole config file's text on top of a base config.
+pub fn parse_config(base: SimConfig, text: &str) -> Result<SimConfig, ConfigError> {
+    let mut cfg = base;
+    for (i, raw) in text.lines().enumerate() {
+        let line_no = i + 1;
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            return Err(ConfigError::Syntax {
+                line: line_no,
+                text: raw.to_string(),
+            });
+        };
+        apply_override(&mut cfg, line_no, key.trim(), value.trim())?;
+    }
+    let problems = cfg.validate();
+    if problems.is_empty() {
+        Ok(cfg)
+    } else {
+        Err(ConfigError::Invalid(problems))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_overrides() {
+        let cfg = parse_config(
+            SimConfig::paper(),
+            "# sweep point\np_sub = 2\nlut.sections = 128\nmodel = gpt2-mini\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.parallelism.p_sub, 2);
+        assert_eq!(cfg.lut.sections, 128);
+        assert_eq!(cfg.model.name, "gpt2-mini");
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let cfg = parse_config(SimConfig::paper(), "\n\n# nothing\n  # more\n").unwrap();
+        assert_eq!(cfg.parallelism.p_sub, 4);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let err = parse_config(SimConfig::paper(), "p_subb = 4\n").unwrap_err();
+        assert!(matches!(err, ConfigError::UnknownKey { line: 1, .. }));
+    }
+
+    #[test]
+    fn bad_value_rejected() {
+        let err = parse_config(SimConfig::paper(), "p_sub = four\n").unwrap_err();
+        assert!(matches!(err, ConfigError::BadValue { .. }));
+    }
+
+    #[test]
+    fn syntax_error_rejected() {
+        let err = parse_config(SimConfig::paper(), "p_sub 4\n").unwrap_err();
+        assert!(matches!(err, ConfigError::Syntax { line: 1, .. }));
+    }
+
+    #[test]
+    fn invalid_combination_rejected() {
+        // sections must stay a power of two.
+        let err = parse_config(SimConfig::paper(), "lut.sections = 65\n").unwrap_err();
+        assert!(matches!(err, ConfigError::Invalid(_)));
+    }
+
+    #[test]
+    fn inline_comment_after_value() {
+        let cfg = parse_config(SimConfig::paper(), "p_sub = 1 # bank-level-ish\n").unwrap();
+        assert_eq!(cfg.parallelism.p_sub, 1);
+    }
+}

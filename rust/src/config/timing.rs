@@ -1,0 +1,156 @@
+//! DRAM timing parameters (Table 2 of the paper).
+//!
+//! All values are in cycles of `tck_ns` (1 ns at the paper's 1 GHz HBM2
+//! command clock), matching the paper's "Timing parameters (ns)" row:
+//! `BL = 4, tRC = 45, tRCD = 16, tRAS = 29, tCL = 16, tRRD = 2,
+//! tCCDS = 2, tCCDL = 4`.
+
+/// DRAM timing constraint set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Timing {
+    /// Command-clock period in nanoseconds.
+    pub tck_ns: f64,
+    /// Burst length (beats per column access).
+    pub bl: u64,
+    /// ACT→ACT same bank/subarray (row cycle).
+    pub t_rc: u64,
+    /// ACT→RD/WR (row-to-column delay).
+    pub t_rcd: u64,
+    /// ACT→PRE minimum (row active time).
+    pub t_ras: u64,
+    /// RD→data (CAS latency).
+    pub t_cl: u64,
+    /// ACT→ACT different bank (same pch).
+    pub t_rrd: u64,
+    /// RD→RD different bank group (short CCD).
+    pub t_ccds: u64,
+    /// RD→RD same bank (long CCD) — the PIM all-bank column cadence.
+    pub t_ccdl: u64,
+    /// PRE→ACT (row precharge); derived as tRC − tRAS for HBM2.
+    pub t_rp: u64,
+    /// Write recovery (WR data end → PRE).
+    pub t_wr: u64,
+    /// Write latency (WR command → data).
+    pub t_cwl: u64,
+    /// Four-activate window (rolling limit on ACTs per pch).
+    pub t_faw: u64,
+    /// Average refresh interval (all-bank refresh cadence).
+    pub t_refi: u64,
+    /// Refresh cycle time (bank unavailable per refresh).
+    pub t_rfc: u64,
+    /// Per-PIM-macro-op command setup/turnaround: the host memory
+    /// controller issues mode switches and operand descriptors before
+    /// each in-memory operation (FIM/AiM-style macro commands).
+    pub pim_op_setup: u64,
+}
+
+// `Timing` is `Copy` and all fields are plain cycle counts; constructing
+// it in a const context is useful for tables of sweep configurations.
+impl Timing {
+    /// The paper's HBM2 timing (Table 2), tCK = 1 ns.
+    pub fn hbm2() -> Self {
+        Timing {
+            tck_ns: 1.0,
+            bl: 4,
+            t_rc: 45,
+            t_rcd: 16,
+            t_ras: 29,
+            t_cl: 16,
+            t_rrd: 2,
+            t_ccds: 2,
+            t_ccdl: 4,
+            t_rp: 16, // tRC − tRAS
+            t_wr: 16,
+            t_cwl: 8,
+            t_faw: 16,
+            t_refi: 3900,
+            t_rfc: 260,
+            pim_op_setup: 32,
+        }
+    }
+
+    /// Fraction of time lost to refresh (tRFC every tREFI).
+    pub fn refresh_overhead(&self) -> f64 {
+        self.t_rfc as f64 / self.t_refi as f64
+    }
+
+    /// Data-burst duration in cycles (BL beats at DDR = BL/2 clock cycles).
+    pub fn burst_cycles(&self) -> u64 {
+        self.bl / 2
+    }
+
+    /// Cycles to stream `n` same-row column accesses back-to-back in
+    /// all-bank PIM mode (tCCDL cadence).
+    pub fn stream_cycles(&self, n: u64) -> u64 {
+        n * self.t_ccdl
+    }
+
+    /// Sanity checks on the constraint set.
+    pub fn validate(&self) -> Vec<String> {
+        let mut problems = Vec::new();
+        if self.t_ras + self.t_rp != self.t_rc {
+            problems.push(format!(
+                "tRAS({}) + tRP({}) != tRC({})",
+                self.t_ras, self.t_rp, self.t_rc
+            ));
+        }
+        if self.t_rcd > self.t_ras {
+            problems.push(format!(
+                "tRCD({}) > tRAS({}): row closes before first column",
+                self.t_rcd, self.t_ras
+            ));
+        }
+        if self.t_ccds > self.t_ccdl {
+            problems.push("tCCDS > tCCDL".to_string());
+        }
+        if self.bl == 0 || self.bl % 2 != 0 {
+            problems.push(format!("BL must be even and nonzero, got {}", self.bl));
+        }
+        problems
+    }
+
+    /// Convert a cycle count to nanoseconds.
+    pub fn cycles_to_ns(&self, cycles: u64) -> f64 {
+        cycles as f64 * self.tck_ns
+    }
+
+    /// Convert a cycle count to seconds.
+    pub fn cycles_to_sec(&self, cycles: u64) -> f64 {
+        self.cycles_to_ns(cycles) * 1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_timing_is_consistent() {
+        let t = Timing::hbm2();
+        assert!(t.validate().is_empty(), "{:?}", t.validate());
+    }
+
+    #[test]
+    fn stream_cadence() {
+        let t = Timing::hbm2();
+        assert_eq!(t.stream_cycles(32), 128); // a full 1 KB row, 32 cols
+        assert_eq!(t.burst_cycles(), 2);
+    }
+
+    #[test]
+    fn unit_conversions() {
+        let t = Timing::hbm2();
+        assert_eq!(t.cycles_to_ns(45), 45.0);
+        assert!((t.cycles_to_sec(1_000_000_000) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn broken_timing_detected() {
+        let mut t = Timing::hbm2();
+        t.t_rp = 10;
+        assert!(!t.validate().is_empty());
+        let mut t = Timing::hbm2();
+        t.bl = 3;
+        assert!(!t.validate().is_empty());
+    }
+}

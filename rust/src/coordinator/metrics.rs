@@ -1,0 +1,122 @@
+//! Serving metrics: latency percentiles, throughput, utilization.
+
+use super::Completion;
+
+/// Percentile of a sample set (nearest-rank; `p` in [0, 100]).
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    assert!(!samples.is_empty());
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Aggregated serving metrics for a batch of completions.
+#[derive(Debug, Clone)]
+pub struct ServeMetrics {
+    pub requests: usize,
+    pub total_tokens: usize,
+    pub makespan_s: f64,
+    pub throughput_tok_s: f64,
+    pub p50_latency_s: f64,
+    pub p95_latency_s: f64,
+    pub p50_ttft_s: f64,
+    pub p95_ttft_s: f64,
+    pub mean_queue_s: f64,
+}
+
+impl ServeMetrics {
+    pub fn from_completions(done: &[Completion]) -> Self {
+        assert!(!done.is_empty());
+        let latencies: Vec<f64> = done.iter().map(|c| c.total_latency_s()).collect();
+        let ttfts: Vec<f64> = done.iter().map(|c| c.ttft_s()).collect();
+        let total_tokens: usize = done.iter().map(|c| c.tokens_out).sum();
+        let makespan = done
+            .iter()
+            .map(|c| c.finish_s)
+            .fold(0.0f64, f64::max);
+        ServeMetrics {
+            requests: done.len(),
+            total_tokens,
+            makespan_s: makespan,
+            throughput_tok_s: if makespan > 0.0 {
+                total_tokens as f64 / makespan
+            } else {
+                0.0
+            },
+            p50_latency_s: percentile(&latencies, 50.0),
+            p95_latency_s: percentile(&latencies, 95.0),
+            p50_ttft_s: percentile(&ttfts, 50.0),
+            p95_ttft_s: percentile(&ttfts, 95.0),
+            mean_queue_s: done.iter().map(|c| c.queue_s).sum::<f64>() / done.len() as f64,
+        }
+    }
+}
+
+impl std::fmt::Display for ServeMetrics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "requests:        {}", self.requests)?;
+        writeln!(f, "tokens:          {}", self.total_tokens)?;
+        writeln!(f, "makespan:        {:.3} s", self.makespan_s)?;
+        writeln!(f, "throughput:      {:.1} tok/s", self.throughput_tok_s)?;
+        writeln!(
+            f,
+            "latency p50/p95: {:.1} / {:.1} ms",
+            self.p50_latency_s * 1e3,
+            self.p95_latency_s * 1e3
+        )?;
+        writeln!(
+            f,
+            "ttft    p50/p95: {:.1} / {:.1} ms",
+            self.p50_ttft_s * 1e3,
+            self.p95_ttft_s * 1e3
+        )?;
+        write!(f, "mean queue:      {:.1} ms", self.mean_queue_s * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn comp(id: u64, queue: f64, prefill: f64, decode: f64, tokens: usize) -> Completion {
+        Completion {
+            id,
+            prompt_len: 32,
+            tokens_out: tokens,
+            queue_s: queue,
+            prefill_s: prefill,
+            decode_s: decode,
+            finish_s: queue + prefill + decode,
+        }
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let v = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 50.0), 3.0);
+        assert_eq!(percentile(&v, 100.0), 5.0);
+    }
+
+    #[test]
+    fn metrics_aggregate() {
+        let done = vec![
+            comp(0, 0.0, 0.01, 0.1, 10),
+            comp(1, 0.05, 0.01, 0.2, 20),
+        ];
+        let m = ServeMetrics::from_completions(&done);
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.total_tokens, 30);
+        assert!(m.throughput_tok_s > 0.0);
+        assert!(m.p95_latency_s >= m.p50_latency_s);
+        assert!((m.mean_queue_s - 0.025).abs() < 1e-12);
+    }
+
+    #[test]
+    fn display_renders() {
+        let m = ServeMetrics::from_completions(&[comp(0, 0.0, 0.01, 0.1, 10)]);
+        let s = format!("{m}");
+        assert!(s.contains("throughput"));
+    }
+}

@@ -1,0 +1,277 @@
+//! The text-generation serving coordinator (L3).
+//!
+//! SAL-PIM is a serving-shaped system: requests (prompt + output budget)
+//! arrive, the device runs summarization then token-by-token generation.
+//! The coordinator owns the request queue, the scheduling policy, the
+//! device-time accounting (from the cycle-accurate simulator) and the
+//! per-request latency metrics. It also implements the paper's §6.3
+//! future-work policy — offloading the compute-bound summarization stage
+//! to a GPU while the PIM handles generation — as a first-class option.
+
+mod metrics;
+mod scheduler;
+
+pub use metrics::{percentile, ServeMetrics};
+pub use scheduler::{Policy, Scheduler};
+
+use crate::baseline::GpuModel;
+use crate::config::SimConfig;
+use crate::mapper::GenerationSim;
+
+/// A generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+    /// Arrival time in seconds (simulated wall clock).
+    pub arrival_s: f64,
+}
+
+/// A finished request with its latency breakdown.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub tokens_out: usize,
+    pub queue_s: f64,
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    pub finish_s: f64,
+}
+
+impl Completion {
+    pub fn total_latency_s(&self) -> f64 {
+        self.queue_s + self.prefill_s + self.decode_s
+    }
+
+    /// Time to first token (queue + summarization).
+    pub fn ttft_s(&self) -> f64 {
+        self.queue_s + self.prefill_s
+    }
+}
+
+/// Where the summarization stage runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefillTarget {
+    /// End-to-end on PIM (the paper's evaluated system).
+    Pim,
+    /// §6.3 heterogeneous execution: GPU prefill + PIM decode.
+    GpuOffload,
+}
+
+/// The serving coordinator: one SAL-PIM device, one queue.
+pub struct Coordinator {
+    pub cfg: SimConfig,
+    sim: GenerationSim,
+    gpu: GpuModel,
+    pub policy: Policy,
+    pub prefill_target: PrefillTarget,
+    queue: Vec<Request>,
+    next_id: u64,
+}
+
+impl Coordinator {
+    pub fn new(cfg: &SimConfig) -> Self {
+        Coordinator {
+            cfg: cfg.clone(),
+            sim: GenerationSim::new(cfg),
+            gpu: GpuModel::titan_rtx(),
+            policy: Policy::Fcfs,
+            prefill_target: PrefillTarget::Pim,
+            queue: Vec::new(),
+            next_id: 0,
+        }
+    }
+
+    pub fn with_policy(mut self, policy: Policy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_prefill_target(mut self, t: PrefillTarget) -> Self {
+        self.prefill_target = t;
+        self
+    }
+
+    /// Enqueue a request; returns its id.
+    pub fn submit(&mut self, prompt_len: usize, max_new_tokens: usize, arrival_s: f64) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push(Request {
+            id,
+            prompt_len,
+            max_new_tokens,
+            arrival_s,
+        });
+        id
+    }
+
+    /// Service time of one request's summarization stage.
+    fn prefill_time(&mut self, prompt_len: usize) -> f64 {
+        match self.prefill_target {
+            PrefillTarget::Pim => {
+                let st = self.sim.prefill(prompt_len);
+                st.seconds(self.cfg.timing.tck_ns)
+            }
+            PrefillTarget::GpuOffload => {
+                // GPU prefill + one KV transfer over the host link
+                // (PCIe-class 16 GB/s): KV bytes for the prompt.
+                let gpu = self.gpu.prefill_time(&self.cfg.model, prompt_len);
+                let kv_bytes = (2 * self.cfg.model.n_layers
+                    * prompt_len
+                    * self.cfg.model.d_model
+                    * self.cfg.model.param_bytes) as f64;
+                gpu + kv_bytes / 16e9
+            }
+        }
+    }
+
+    /// Decode-stage time for a request.
+    fn decode_time(&mut self, prompt_len: usize, n_out: usize) -> f64 {
+        let mut cycles = 0u64;
+        for i in 1..n_out {
+            let kv = prompt_len + i;
+            if kv >= self.cfg.model.max_seq {
+                break;
+            }
+            cycles += self.sim.decode_token(kv).cycles;
+        }
+        self.cfg.timing.cycles_to_sec(cycles)
+    }
+
+    /// Drain the queue, producing completions in service order.
+    pub fn run(&mut self) -> Vec<Completion> {
+        let mut pending = std::mem::take(&mut self.queue);
+        pending.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        let mut completions = Vec::with_capacity(pending.len());
+        let mut device_free_at = 0.0f64;
+        let mut waiting: Vec<Request> = Vec::new();
+        let mut arrivals = pending.into_iter().peekable();
+
+        loop {
+            // Admit everything that has arrived by the time the device
+            // frees up (or the next arrival if idle).
+            if waiting.is_empty() {
+                match arrivals.next() {
+                    Some(r) => {
+                        device_free_at = device_free_at.max(r.arrival_s);
+                        waiting.push(r);
+                    }
+                    None => break,
+                }
+            }
+            while let Some(r) = arrivals.peek() {
+                if r.arrival_s <= device_free_at {
+                    waiting.push(arrivals.next().unwrap());
+                } else {
+                    break;
+                }
+            }
+            // Pick per policy.
+            let idx = self.policy.pick(&waiting);
+            let req = waiting.swap_remove(idx);
+            let start = device_free_at.max(req.arrival_s);
+            let queue_s = start - req.arrival_s;
+            let prefill_s = self.prefill_time(req.prompt_len);
+            let decode_s = self.decode_time(req.prompt_len, req.max_new_tokens);
+            let finish = start + prefill_s + decode_s;
+            device_free_at = finish;
+            completions.push(Completion {
+                id: req.id,
+                prompt_len: req.prompt_len,
+                tokens_out: req.max_new_tokens,
+                queue_s,
+                prefill_s,
+                decode_s,
+                finish_s: finish,
+            });
+        }
+        completions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn coord() -> Coordinator {
+        Coordinator::new(&SimConfig::paper())
+    }
+
+    #[test]
+    fn single_request_completes() {
+        let mut c = coord();
+        c.submit(32, 8, 0.0);
+        let done = c.run();
+        assert_eq!(done.len(), 1);
+        let r = &done[0];
+        assert_eq!(r.queue_s, 0.0);
+        assert!(r.prefill_s > 0.0 && r.decode_s > 0.0);
+        assert!(r.ttft_s() < r.total_latency_s());
+    }
+
+    #[test]
+    fn queueing_delay_accumulates() {
+        let mut c = coord();
+        c.submit(32, 8, 0.0);
+        c.submit(32, 8, 0.0);
+        c.submit(32, 8, 0.0);
+        let done = c.run();
+        assert_eq!(done.len(), 3);
+        assert!(done[1].queue_s > 0.0);
+        assert!(done[2].queue_s > done[1].queue_s);
+    }
+
+    #[test]
+    fn idle_gaps_do_not_charge_queueing() {
+        let mut c = coord();
+        c.submit(32, 4, 0.0);
+        c.submit(32, 4, 1000.0); // arrives long after the first finishes
+        let done = c.run();
+        assert_eq!(done[1].queue_s, 0.0);
+    }
+
+    #[test]
+    fn sjf_reorders_waiting_requests() {
+        let mut c = coord().with_policy(Policy::ShortestJobFirst);
+        c.submit(32, 256, 0.0); // long job first
+        c.submit(32, 2, 1e-9); // short job arrives while long one queued?
+        // Both present at t≈0; SJF must run the short one first among the
+        // waiting set at each decision point.
+        let done = c.run();
+        let short = done.iter().find(|r| r.tokens_out == 2).unwrap();
+        let long = done.iter().find(|r| r.tokens_out == 256).unwrap();
+        // The long job was started first (it was alone), but any requests
+        // waiting together get SJF ordering; with both at t≈0 the device
+        // picks at t=0 from {long} only. So instead check explicit set:
+        let mut c2 = coord().with_policy(Policy::ShortestJobFirst);
+        c2.submit(32, 256, 0.0);
+        c2.submit(32, 2, 0.0);
+        let done2 = c2.run();
+        assert_eq!(done2[0].tokens_out, 2, "SJF must pick the short job");
+        let _ = (short, long);
+    }
+
+    #[test]
+    fn gpu_offload_prefill_is_faster_for_long_prompts() {
+        // §6.3: heterogeneous execution unlocks the summarization
+        // bottleneck.
+        let mut pim = coord();
+        pim.submit(128, 4, 0.0);
+        let pim_done = pim.run();
+
+        let mut hybrid = coord().with_prefill_target(PrefillTarget::GpuOffload);
+        hybrid.submit(128, 4, 0.0);
+        let hy_done = hybrid.run();
+
+        assert!(
+            hy_done[0].prefill_s < pim_done[0].prefill_s,
+            "hybrid {} !< pim {}",
+            hy_done[0].prefill_s,
+            pim_done[0].prefill_s
+        );
+        // Decode stays on PIM: identical.
+        assert!((hy_done[0].decode_s - pim_done[0].decode_s).abs() < 1e-12);
+    }
+}

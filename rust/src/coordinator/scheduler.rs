@@ -1,0 +1,119 @@
+//! Scheduling policies for the serving queue.
+
+use super::Request;
+
+/// Which waiting request runs next.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// First come, first served.
+    Fcfs,
+    /// Shortest total work (prompt + output budget) first.
+    ShortestJobFirst,
+    /// Shortest prompt first (minimizes time-to-first-token variance).
+    ShortestPromptFirst,
+}
+
+impl Policy {
+    /// Index of the chosen request among `waiting` (non-empty).
+    pub fn pick(&self, waiting: &[Request]) -> usize {
+        assert!(!waiting.is_empty());
+        match self {
+            Policy::Fcfs => waiting
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.arrival_s.partial_cmp(&b.1.arrival_s).unwrap())
+                .map(|(i, _)| i)
+                .unwrap(),
+            Policy::ShortestJobFirst => waiting
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, r)| r.prompt_len + r.max_new_tokens)
+                .map(|(i, _)| i)
+                .unwrap(),
+            Policy::ShortestPromptFirst => waiting
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, r)| r.prompt_len)
+                .map(|(i, _)| i)
+                .unwrap(),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Fcfs => "fcfs",
+            Policy::ShortestJobFirst => "sjf",
+            Policy::ShortestPromptFirst => "spf",
+        }
+    }
+}
+
+/// Standalone scheduler over a waiting set (used by tests and the
+/// mapping-explorer example; the coordinator embeds the same logic).
+#[derive(Debug)]
+pub struct Scheduler {
+    pub policy: Policy,
+}
+
+impl Scheduler {
+    pub fn new(policy: Policy) -> Self {
+        Scheduler { policy }
+    }
+
+    /// Order a whole batch per policy (stable for ties).
+    pub fn order(&self, mut reqs: Vec<Request>) -> Vec<Request> {
+        match self.policy {
+            Policy::Fcfs => {
+                reqs.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap())
+            }
+            Policy::ShortestJobFirst => {
+                reqs.sort_by_key(|r| r.prompt_len + r.max_new_tokens)
+            }
+            Policy::ShortestPromptFirst => reqs.sort_by_key(|r| r.prompt_len),
+        }
+        reqs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, prompt: usize, out: usize, at: f64) -> Request {
+        Request {
+            id,
+            prompt_len: prompt,
+            max_new_tokens: out,
+            arrival_s: at,
+        }
+    }
+
+    #[test]
+    fn fcfs_picks_earliest() {
+        let w = vec![req(0, 10, 10, 5.0), req(1, 1, 1, 1.0)];
+        assert_eq!(Policy::Fcfs.pick(&w), 1);
+    }
+
+    #[test]
+    fn sjf_picks_least_work() {
+        let w = vec![req(0, 10, 100, 0.0), req(1, 64, 1, 0.0)];
+        assert_eq!(Policy::ShortestJobFirst.pick(&w), 1);
+    }
+
+    #[test]
+    fn spf_picks_shortest_prompt() {
+        let w = vec![req(0, 10, 100, 0.0), req(1, 64, 1, 0.0)];
+        assert_eq!(Policy::ShortestPromptFirst.pick(&w), 0);
+    }
+
+    #[test]
+    fn order_is_policy_consistent() {
+        let reqs = vec![req(0, 8, 100, 2.0), req(1, 4, 1, 3.0), req(2, 2, 50, 1.0)];
+        let s = Scheduler::new(Policy::Fcfs);
+        let ids: Vec<u64> = s.order(reqs.clone()).iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 0, 1]);
+        let s = Scheduler::new(Policy::ShortestJobFirst);
+        let ids: Vec<u64> = s.order(reqs).iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 2, 0]);
+    }
+}

@@ -1,0 +1,149 @@
+//! Physical address decomposition.
+//!
+//! The mapper places weight matrices at *logical* GBL-burst granularity;
+//! this module translates linear burst indices into physical
+//! (pseudo-channel, bank, subarray, row, column) coordinates with the
+//! interleaving order the paper's mapping schemes assume: column fastest
+//! (stream within a row), then row within a subarray (stay in one
+//! subarray group as long as possible), then subarray, then bank, then
+//! pseudo-channel.
+
+use crate::config::HbmConfig;
+
+/// A fully-decoded DRAM location at GBL-burst granularity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PhysAddr {
+    pub pch: usize,
+    pub bank: usize,
+    pub subarray: usize,
+    pub row: usize,
+    pub col: usize,
+}
+
+/// Linear-index ⇄ physical-coordinate translation.
+#[derive(Debug, Clone)]
+pub struct AddressMapper {
+    cols_per_row: usize,
+    rows_per_subarray: usize,
+    subarrays_per_bank: usize,
+    banks_per_pch: usize,
+    pseudo_channels: usize,
+}
+
+impl AddressMapper {
+    pub fn new(hbm: &HbmConfig) -> Self {
+        AddressMapper {
+            cols_per_row: hbm.cols_per_row(),
+            rows_per_subarray: hbm.rows_per_subarray,
+            subarrays_per_bank: hbm.subarrays_per_bank,
+            banks_per_pch: hbm.banks_per_pch,
+            pseudo_channels: hbm.pseudo_channels(),
+        }
+    }
+
+    /// Total addressable bursts.
+    pub fn capacity(&self) -> usize {
+        self.cols_per_row
+            * self.rows_per_subarray
+            * self.subarrays_per_bank
+            * self.banks_per_pch
+            * self.pseudo_channels
+    }
+
+    /// Decode a linear burst index.
+    pub fn decode(&self, linear: usize) -> PhysAddr {
+        assert!(linear < self.capacity(), "address {linear} out of range");
+        let col = linear % self.cols_per_row;
+        let r = linear / self.cols_per_row;
+        let row = r % self.rows_per_subarray;
+        let r = r / self.rows_per_subarray;
+        let subarray = r % self.subarrays_per_bank;
+        let r = r / self.subarrays_per_bank;
+        let bank = r % self.banks_per_pch;
+        let pch = r / self.banks_per_pch;
+        PhysAddr {
+            pch,
+            bank,
+            subarray,
+            row,
+            col,
+        }
+    }
+
+    /// Encode physical coordinates back to the linear burst index.
+    pub fn encode(&self, a: PhysAddr) -> usize {
+        (((a.pch * self.banks_per_pch + a.bank) * self.subarrays_per_bank + a.subarray)
+            * self.rows_per_subarray
+            + a.row)
+            * self.cols_per_row
+            + a.col
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HbmConfig;
+    use crate::testutil::forall;
+
+    fn mapper() -> AddressMapper {
+        AddressMapper::new(&HbmConfig::hbm2_8gb())
+    }
+
+    #[test]
+    fn decode_zero() {
+        let a = mapper().decode(0);
+        assert_eq!(
+            a,
+            PhysAddr {
+                pch: 0,
+                bank: 0,
+                subarray: 0,
+                row: 0,
+                col: 0
+            }
+        );
+    }
+
+    #[test]
+    fn column_is_fastest_axis() {
+        let m = mapper();
+        let a = m.decode(0);
+        let b = m.decode(1);
+        assert_eq!(b.col, a.col + 1);
+        assert_eq!((b.row, b.subarray, b.bank, b.pch), (a.row, a.subarray, a.bank, a.pch));
+    }
+
+    #[test]
+    fn row_rolls_after_cols() {
+        let m = mapper();
+        let a = m.decode(m.cols_per_row);
+        assert_eq!((a.col, a.row), (0, 1));
+    }
+
+    #[test]
+    fn capacity_matches_device() {
+        // 8 GB / 32 B bursts = 256 Mi bursts.
+        assert_eq!(mapper().capacity(), (8usize << 30) / 32);
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        let m = mapper();
+        let cap = m.capacity();
+        forall(500, |g| {
+            let linear = g.usize_in(0, cap - 1);
+            let a = m.decode(linear);
+            assert_eq!(m.encode(a), linear);
+            assert!(a.col < 32 && a.row < 512 && a.subarray < 64);
+            assert!(a.bank < 16 && a.pch < 16);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_panics() {
+        let m = mapper();
+        m.decode(m.capacity());
+    }
+}

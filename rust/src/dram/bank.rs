@@ -1,0 +1,111 @@
+//! Per-bank and per-subarray timing state machines.
+//!
+//! SALP (Kim+ ISCA'12, the paper's ref. [23]) lets each subarray keep its
+//! own row open in its bit-line sense amplifiers, so the state that
+//! matters for timing lives *per subarray* (open row, last ACT/PRE
+//! timestamps) plus a small amount of *per bank* state (last column
+//! command, shared peripheral constraints).
+
+/// Timestamp type: cycle at which an event happened. `NEVER` (= i64::MIN/2)
+/// means "long enough ago that no constraint binds".
+pub type Cycle = i64;
+
+/// Sentinel for "no prior event".
+pub const NEVER: Cycle = i64::MIN / 2;
+
+/// Timing state of one subarray.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SubarrayState {
+    /// Currently open (activated) row, if any.
+    pub open_row: Option<usize>,
+    /// Cycle of the last ACT to this subarray.
+    pub last_act: Cycle,
+    /// Cycle of the last PRE to this subarray.
+    pub last_pre: Cycle,
+    /// Cycle of the last WR data completion (for tWR before PRE).
+    pub last_wr_data_end: Cycle,
+    /// Last column command streamed *by this subarray's group* in PIM
+    /// mode. SAL-PIM's subarray-level parallelism means each subarray
+    /// group owns its own GBL segment + S-ALU, so the tCCDL column
+    /// cadence applies per group, not per bank — this is exactly the
+    /// paper's P_Sub× bandwidth claim (§3.1, §6.2).
+    pub last_col: Cycle,
+}
+
+impl SubarrayState {
+    pub fn new() -> Self {
+        SubarrayState {
+            open_row: None,
+            last_act: NEVER,
+            last_pre: NEVER,
+            last_wr_data_end: NEVER,
+            last_col: NEVER,
+        }
+    }
+}
+
+impl Default for SubarrayState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Timing state of one bank (its subarrays + shared peripherals).
+#[derive(Debug, Clone)]
+pub struct BankState {
+    pub subarrays: Vec<SubarrayState>,
+    /// Last column command (RD or WR) issued to this bank — tCCDL domain.
+    pub last_col: Cycle,
+    /// Last ACT to *any* subarray of this bank (inter-subarray ACT gap).
+    pub last_act_any: Cycle,
+}
+
+impl BankState {
+    pub fn new(n_subarrays: usize) -> Self {
+        BankState {
+            subarrays: vec![SubarrayState::new(); n_subarrays],
+            last_col: NEVER,
+            last_act_any: NEVER,
+        }
+    }
+
+    /// Number of currently open subarrays (SALP concurrency).
+    pub fn open_count(&self) -> usize {
+        self.subarrays.iter().filter(|s| s.open_row.is_some()).count()
+    }
+
+    /// Is `row` of `subarray` open?
+    pub fn row_open(&self, subarray: usize, row: usize) -> bool {
+        self.subarrays[subarray].open_row == Some(row)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_bank_is_idle() {
+        let b = BankState::new(64);
+        assert_eq!(b.open_count(), 0);
+        assert!(!b.row_open(0, 0));
+        assert_eq!(b.last_col, NEVER);
+    }
+
+    #[test]
+    fn open_tracking() {
+        let mut b = BankState::new(4);
+        b.subarrays[1].open_row = Some(17);
+        b.subarrays[3].open_row = Some(2);
+        assert_eq!(b.open_count(), 2);
+        assert!(b.row_open(1, 17));
+        assert!(!b.row_open(1, 16));
+    }
+
+    #[test]
+    fn never_is_far_in_past() {
+        // NEVER + any realistic timing constant must not overflow and must
+        // stay far below cycle 0.
+        assert!(NEVER + 1_000_000 < 0);
+    }
+}

@@ -1,0 +1,144 @@
+//! DRAM command vocabulary.
+
+use std::fmt;
+
+/// Which banks a command addresses.
+///
+/// SAL-PIM (like FIM/AiM) issues most PIM work in *all-bank* mode: one
+/// command on the pseudo-channel command bus is executed by every bank in
+/// lockstep, which is what makes bank-parallel PIM scale without
+/// per-bank command bandwidth.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmdTarget {
+    /// A single bank (normal-memory mode or stragglers).
+    Bank(usize),
+    /// Every bank in the pseudo-channel simultaneously.
+    AllBanks,
+}
+
+impl CmdTarget {
+    /// Iterate over the concrete bank indices for `n_banks` total.
+    pub fn banks(&self, n_banks: usize) -> Box<dyn Iterator<Item = usize>> {
+        match *self {
+            CmdTarget::Bank(b) => Box::new(std::iter::once(b)),
+            CmdTarget::AllBanks => Box::new(0..n_banks),
+        }
+    }
+}
+
+/// One DRAM command as scheduled by the channel controller.
+///
+/// `subarray`-carrying commands exploit SALP (subarray-level parallelism,
+/// Kim+ ISCA'12): multiple subarrays of the same bank may hold open rows
+/// at once because each subarray's BLSA acts as a row cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DramCmd {
+    /// Activate `row` of `subarray` in the targeted bank(s).
+    Act {
+        target: CmdTarget,
+        subarray: usize,
+        row: usize,
+    },
+    /// Column read from an activated subarray (one GBL burst to the
+    /// S-ALU / IO). `col` indexes GBL-width units within the row.
+    Rd {
+        target: CmdTarget,
+        subarray: usize,
+        col: usize,
+    },
+    /// Column write into an activated subarray.
+    Wr {
+        target: CmdTarget,
+        subarray: usize,
+        col: usize,
+    },
+    /// Precharge one subarray's open row.
+    Pre { target: CmdTarget, subarray: usize },
+    /// Precharge every open subarray in the targeted bank(s).
+    PreAll { target: CmdTarget },
+}
+
+impl DramCmd {
+    pub fn target(&self) -> CmdTarget {
+        match *self {
+            DramCmd::Act { target, .. }
+            | DramCmd::Rd { target, .. }
+            | DramCmd::Wr { target, .. }
+            | DramCmd::Pre { target, .. }
+            | DramCmd::PreAll { target } => target,
+        }
+    }
+
+    /// Is this a column (RD/WR) command?
+    pub fn is_column(&self) -> bool {
+        matches!(self, DramCmd::Rd { .. } | DramCmd::Wr { .. })
+    }
+
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            DramCmd::Act { .. } => "ACT",
+            DramCmd::Rd { .. } => "RD",
+            DramCmd::Wr { .. } => "WR",
+            DramCmd::Pre { .. } => "PRE",
+            DramCmd::PreAll { .. } => "PREA",
+        }
+    }
+}
+
+impl fmt::Display for DramCmd {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let t = match self.target() {
+            CmdTarget::Bank(b) => format!("b{b}"),
+            CmdTarget::AllBanks => "b*".to_string(),
+        };
+        match self {
+            DramCmd::Act { subarray, row, .. } => {
+                write!(f, "ACT {t} s{subarray} r{row}")
+            }
+            DramCmd::Rd { subarray, col, .. } => write!(f, "RD  {t} s{subarray} c{col}"),
+            DramCmd::Wr { subarray, col, .. } => write!(f, "WR  {t} s{subarray} c{col}"),
+            DramCmd::Pre { subarray, .. } => write!(f, "PRE {t} s{subarray}"),
+            DramCmd::PreAll { .. } => write!(f, "PREA {t}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn target_iteration() {
+        let one: Vec<_> = CmdTarget::Bank(3).banks(16).collect();
+        assert_eq!(one, vec![3]);
+        let all: Vec<_> = CmdTarget::AllBanks.banks(4).collect();
+        assert_eq!(all, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn classification() {
+        let rd = DramCmd::Rd {
+            target: CmdTarget::AllBanks,
+            subarray: 0,
+            col: 1,
+        };
+        assert!(rd.is_column());
+        let act = DramCmd::Act {
+            target: CmdTarget::Bank(0),
+            subarray: 2,
+            row: 5,
+        };
+        assert!(!act.is_column());
+        assert_eq!(act.mnemonic(), "ACT");
+    }
+
+    #[test]
+    fn display_is_compact() {
+        let cmd = DramCmd::Act {
+            target: CmdTarget::AllBanks,
+            subarray: 7,
+            row: 100,
+        };
+        assert_eq!(format!("{cmd}"), "ACT b* s7 r100");
+    }
+}

@@ -1,0 +1,899 @@
+//! The pseudo-channel command scheduler / timing checker.
+
+use super::bank::{BankState, Cycle, NEVER};
+use super::command::{CmdTarget, DramCmd};
+use crate::config::SimConfig;
+use crate::stats::{CmdKind, Stats};
+use std::collections::VecDeque;
+
+/// Protocol violations the controller refuses to schedule around.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum TimingError {
+    #[error("bank {bank} subarray {subarray}: no open row for column access")]
+    RowNotOpen { bank: usize, subarray: usize },
+    #[error("bank {bank} subarray {subarray}: row {open} already open, ACT of {row} needs PRE")]
+    RowAlreadyOpen {
+        bank: usize,
+        subarray: usize,
+        open: usize,
+        row: usize,
+    },
+    #[error("bank {bank} subarray {subarray}: PRE with no open row")]
+    PreClosed { bank: usize, subarray: usize },
+    #[error("index out of range: bank {bank} subarray {subarray}")]
+    BadIndex { bank: usize, subarray: usize },
+}
+
+/// Cycle-accurate scheduler for one HBM2 pseudo-channel.
+///
+/// `issue` places each command at the earliest cycle satisfying all
+/// Table 2 constraints, mutating bank/subarray state. The clock only moves
+/// forward; the command bus carries one command per cycle.
+#[derive(Debug, Clone)]
+pub struct ChannelController {
+    /// Current cycle: the next cycle a command may occupy the command bus.
+    pub clock: Cycle,
+    pub banks: Vec<BankState>,
+    /// Last column command on the shared channel IO (tCCDS domain).
+    last_col_channel: Cycle,
+    /// Recent ACT-command issue cycles for the tFAW rolling window.
+    act_window: VecDeque<Cycle>,
+    // Timing parameters (cached from config as i64 for Cycle math).
+    t_rc: Cycle,
+    t_rcd: Cycle,
+    t_ras: Cycle,
+    t_rp: Cycle,
+    t_rrd: Cycle,
+    t_ccds: Cycle,
+    t_ccdl: Cycle,
+    t_wr: Cycle,
+    t_cwl: Cycle,
+    t_cl: Cycle,
+    t_faw: Cycle,
+    burst: Cycle,
+    n_banks: usize,
+    n_subarrays: usize,
+    gbl_bytes: u64,
+}
+
+impl ChannelController {
+    pub fn new(cfg: &SimConfig) -> Self {
+        let t = &cfg.timing;
+        ChannelController {
+            clock: 0,
+            banks: (0..cfg.hbm.banks_per_pch)
+                .map(|_| BankState::new(cfg.hbm.subarrays_per_bank))
+                .collect(),
+            last_col_channel: NEVER,
+            act_window: VecDeque::with_capacity(4),
+            t_rc: t.t_rc as Cycle,
+            t_rcd: t.t_rcd as Cycle,
+            t_ras: t.t_ras as Cycle,
+            t_rp: t.t_rp as Cycle,
+            t_rrd: t.t_rrd as Cycle,
+            t_ccds: t.t_ccds as Cycle,
+            t_ccdl: t.t_ccdl as Cycle,
+            t_wr: t.t_wr as Cycle,
+            t_cwl: t.t_cwl as Cycle,
+            t_cl: t.t_cl as Cycle,
+            t_faw: t.t_faw as Cycle,
+            burst: t.burst_cycles() as Cycle,
+            n_banks: cfg.hbm.banks_per_pch,
+            n_subarrays: cfg.hbm.subarrays_per_bank,
+            gbl_bytes: cfg.hbm.gbl_bytes_per_access() as u64,
+        }
+    }
+
+    /// Reset clock and all bank state (new measurement run).
+    pub fn reset(&mut self) {
+        self.clock = 0;
+        self.last_col_channel = NEVER;
+        self.act_window.clear();
+        let n_sub = self.n_subarrays;
+        for b in &mut self.banks {
+            *b = BankState::new(n_sub);
+        }
+    }
+
+    /// Allocation-free bank range for a target (§Perf L3 iteration 2:
+    /// `CmdTarget::banks` boxes an iterator; the controller hot path uses
+    /// this contiguous range instead).
+    fn bank_range(&self, target: CmdTarget) -> std::ops::Range<usize> {
+        match target {
+            CmdTarget::Bank(b) => b..b + 1,
+            CmdTarget::AllBanks => 0..self.n_banks,
+        }
+    }
+
+    fn check_index(&self, bank: usize, subarray: usize) -> Result<(), TimingError> {
+        if bank >= self.n_banks || subarray >= self.n_subarrays {
+            Err(TimingError::BadIndex { bank, subarray })
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Earliest cycle an ACT to (bank, subarray) may issue.
+    fn act_ready(&self, bank: usize, subarray: usize) -> Cycle {
+        let b = &self.banks[bank];
+        let s = &b.subarrays[subarray];
+        let mut ready = self.clock;
+        ready = ready.max(s.last_act + self.t_rc); // same-subarray row cycle
+        ready = ready.max(s.last_pre + self.t_rp); // precharge recovery
+        ready = ready.max(b.last_act_any + self.t_rrd); // SALP inter-ACT gap
+        if self.act_window.len() == 4 {
+            ready = ready.max(self.act_window[0] + self.t_faw);
+        }
+        ready
+    }
+
+    /// Earliest cycle a column command to (bank, subarray) may issue.
+    ///
+    /// Two column-timing domains exist (see `bank.rs`):
+    /// * **PIM all-bank mode** (`all_banks`): data flows over per-group
+    ///   GBL segments into S-ALUs, so tCCDL binds per *subarray group*
+    ///   and the shared channel DQ is not involved. This is the paper's
+    ///   subarray-level-parallelism bandwidth model.
+    /// * **Host mode** (single bank): the bank's column path and the
+    ///   channel DQ are shared — classic tCCDL (same bank) + tCCDS
+    ///   (channel) constraints.
+    fn col_ready(&self, bank: usize, subarray: usize, all_banks: bool) -> Cycle {
+        let b = &self.banks[bank];
+        let s = &b.subarrays[subarray];
+        let mut ready = self.clock;
+        ready = ready.max(s.last_act + self.t_rcd);
+        ready = ready.max(s.last_col + self.t_ccdl);
+        if !all_banks {
+            ready = ready.max(b.last_col + self.t_ccdl);
+            ready = ready.max(self.last_col_channel + self.t_ccds);
+        }
+        ready
+    }
+
+    /// Earliest cycle a PRE of (bank, subarray) may issue.
+    fn pre_ready(&self, bank: usize, subarray: usize) -> Cycle {
+        let b = &self.banks[bank];
+        let s = &b.subarrays[subarray];
+        let mut ready = self.clock;
+        ready = ready.max(s.last_act + self.t_ras);
+        ready = ready.max(s.last_wr_data_end + self.t_wr);
+        // A column command to this subarray still in flight must finish.
+        ready = ready.max(s.last_col + self.t_ccdl);
+        ready
+    }
+
+    /// Issue one command at the earliest legal cycle; returns that cycle.
+    pub fn issue(&mut self, cmd: DramCmd, stats: &mut Stats) -> Result<Cycle, TimingError> {
+        let target = cmd.target();
+        let bank_list = self.bank_range(target);
+        match cmd {
+            DramCmd::Act { subarray, row, .. } => {
+                for b in bank_list.clone() {
+                    self.check_index(b, subarray)?;
+                    if let Some(open) = self.banks[b].subarrays[subarray].open_row {
+                        return Err(TimingError::RowAlreadyOpen {
+                            bank: b,
+                            subarray,
+                            open,
+                            row,
+                        });
+                    }
+                }
+                let at = bank_list
+                    .clone()
+                    .map(|b| self.act_ready(b, subarray))
+                    .max()
+                    .unwrap();
+                for b in bank_list.clone() {
+                    let bank = &mut self.banks[b];
+                    bank.subarrays[subarray].open_row = Some(row);
+                    bank.subarrays[subarray].last_act = at;
+                    bank.last_act_any = at;
+                }
+                if self.act_window.len() == 4 {
+                    self.act_window.pop_front();
+                }
+                self.act_window.push_back(at);
+                stats.count_cmd(CmdKind::Act, bank_list.len() as u64);
+                self.clock = at + 1;
+                Ok(at)
+            }
+            DramCmd::Rd { subarray, .. } | DramCmd::Wr { subarray, .. } => {
+                let is_wr = matches!(cmd, DramCmd::Wr { .. });
+                let all_banks = matches!(target, CmdTarget::AllBanks);
+                for b in bank_list.clone() {
+                    self.check_index(b, subarray)?;
+                    if self.banks[b].subarrays[subarray].open_row.is_none() {
+                        return Err(TimingError::RowNotOpen { bank: b, subarray });
+                    }
+                }
+                let at = bank_list
+                    .clone()
+                    .map(|b| self.col_ready(b, subarray, all_banks))
+                    .max()
+                    .unwrap();
+                for b in bank_list.clone() {
+                    self.banks[b].last_col = at;
+                    self.banks[b].subarrays[subarray].last_col = at;
+                    if is_wr {
+                        self.banks[b].subarrays[subarray].last_wr_data_end =
+                            at + self.t_cwl + self.burst;
+                    }
+                }
+                if !all_banks {
+                    self.last_col_channel = at;
+                }
+                stats.count_cmd(
+                    if is_wr { CmdKind::Wr } else { CmdKind::Rd },
+                    bank_list.len() as u64,
+                );
+                stats.internal_bytes += self.gbl_bytes * bank_list.len() as u64;
+                self.clock = at + 1;
+                Ok(at)
+            }
+            DramCmd::Pre { subarray, .. } => {
+                for b in bank_list.clone() {
+                    self.check_index(b, subarray)?;
+                    if self.banks[b].subarrays[subarray].open_row.is_none() {
+                        return Err(TimingError::PreClosed { bank: b, subarray });
+                    }
+                }
+                let at = bank_list
+                    .clone()
+                    .map(|b| self.pre_ready(b, subarray))
+                    .max()
+                    .unwrap();
+                for b in bank_list.clone() {
+                    let s = &mut self.banks[b].subarrays[subarray];
+                    s.open_row = None;
+                    s.last_pre = at;
+                }
+                stats.count_cmd(CmdKind::Pre, bank_list.len() as u64);
+                self.clock = at + 1;
+                Ok(at)
+            }
+            DramCmd::PreAll { .. } => {
+                let mut at = self.clock;
+                let mut any = false;
+                for b in bank_list.clone() {
+                    for su in 0..self.n_subarrays {
+                        if self.banks[b].subarrays[su].open_row.is_some() {
+                            any = true;
+                            at = at.max(self.pre_ready(b, su));
+                        }
+                    }
+                }
+                if !any {
+                    // PREA of a fully-precharged target is a no-op command.
+                    let at = self.clock;
+                    self.clock = at + 1;
+                    return Ok(at);
+                }
+                let mut n = 0;
+                for b in bank_list.clone() {
+                    for su in 0..self.n_subarrays {
+                        let s = &mut self.banks[b].subarrays[su];
+                        if s.open_row.is_some() {
+                            s.open_row = None;
+                            s.last_pre = at;
+                            n += 1;
+                        }
+                    }
+                }
+                stats.count_cmd(CmdKind::Pre, n);
+                self.clock = at + 1;
+                Ok(at)
+            }
+        }
+    }
+
+    /// Burst fast path: `n` back-to-back same-row column commands
+    /// (RD if `write` is false) to an already-open row. Produces the same
+    /// final timing state as issuing them one by one (property-tested).
+    /// Returns the issue cycle of the *last* command.
+    pub fn stream_cols(
+        &mut self,
+        target: CmdTarget,
+        subarray: usize,
+        n: u64,
+        write: bool,
+        stats: &mut Stats,
+    ) -> Result<Cycle, TimingError> {
+        if n == 0 {
+            return Ok(self.clock - 1);
+        }
+        let all_banks = matches!(target, CmdTarget::AllBanks);
+        let bank_list: Vec<usize> = target.banks(self.n_banks).collect();
+        for &b in &bank_list {
+            self.check_index(b, subarray)?;
+            if self.banks[b].subarrays[subarray].open_row.is_none() {
+                return Err(TimingError::RowNotOpen { bank: b, subarray });
+            }
+        }
+        let first = bank_list
+            .iter()
+            .map(|&b| self.col_ready(b, subarray, all_banks))
+            .max()
+            .unwrap();
+        // Subsequent commands are gated only by tCCDL (>= tCCDS and the
+        // 1-cycle command bus), so they land at first + k*tCCDL.
+        let last = first + (n as Cycle - 1) * self.t_ccdl;
+        for &b in &bank_list {
+            self.banks[b].last_col = last;
+            self.banks[b].subarrays[subarray].last_col = last;
+            if write {
+                self.banks[b].subarrays[subarray].last_wr_data_end =
+                    last + self.t_cwl + self.burst;
+            }
+        }
+        if !all_banks {
+            self.last_col_channel = last;
+        }
+        stats.count_cmd(
+            if write { CmdKind::Wr } else { CmdKind::Rd },
+            n * bank_list.len() as u64,
+        );
+        stats.internal_bytes += n * self.gbl_bytes * bank_list.len() as u64;
+        self.clock = last + 1;
+        Ok(last)
+    }
+
+    /// Interleaved multi-group stream: `n_each` column commands to each of
+    /// `subarrays` (one per active S-ALU group), issued round-robin in
+    /// all-bank PIM mode. This is the §3.1 subarray-level-parallelism hot
+    /// loop: with `G` groups and per-group tCCDL cadence, the command bus
+    /// sustains up to `G / tCCDL` bursts per cycle per bank.
+    ///
+    /// Exact per-command semantics (each command individually placed at
+    /// its earliest legal cycle), implemented as a tight loop without
+    /// `DramCmd` construction. Returns the last issue cycle.
+    pub fn stream_interleaved(
+        &mut self,
+        subarrays: &[usize],
+        n_each: u64,
+        write: bool,
+        stats: &mut Stats,
+    ) -> Result<Cycle, TimingError> {
+        if subarrays.is_empty() || n_each == 0 {
+            return Ok(self.clock - 1);
+        }
+        for &su in subarrays {
+            for b in 0..self.n_banks {
+                self.check_index(b, su)?;
+                if self.banks[b].subarrays[su].open_row.is_none() {
+                    return Err(TimingError::RowNotOpen { bank: b, subarray: su });
+                }
+            }
+        }
+        // Hot-loop optimization (§Perf L3): all banks share identical
+        // per-subarray state in all-bank streams, so the scheduling loop
+        // runs on per-subarray locals and the result is committed to the
+        // bank state once at the end. Exactness vs per-command issue is
+        // property-tested (tests/prop_timing.rs).
+        // Stack-allocated locals (§Perf L3 iteration 3): this runs per
+        // 16-element chunk in LUT sweeps, so heap allocation here shows
+        // up in whole-run profiles. At most 8 concurrent streams.
+        assert!(subarrays.len() <= 8, "more than 8 interleaved streams");
+        let mut local_last_col = [0 as Cycle; 8];
+        let mut act_floor = [0 as Cycle; 8];
+        for (i, &su) in subarrays.iter().enumerate() {
+            local_last_col[i] = self.banks[0].subarrays[su].last_col;
+            act_floor[i] = self.banks[0].subarrays[su].last_act + self.t_rcd;
+        }
+        let mut clock = self.clock;
+        let mut last = clock - 1;
+        for _ in 0..n_each {
+            for (i, _) in subarrays.iter().enumerate() {
+                let at = clock
+                    .max(act_floor[i])
+                    .max(local_last_col[i] + self.t_ccdl);
+                local_last_col[i] = at;
+                clock = at + 1;
+                last = at;
+            }
+        }
+        self.clock = clock;
+        for (i, &su) in subarrays.iter().enumerate() {
+            let at = local_last_col[i];
+            for b in 0..self.n_banks {
+                self.banks[b].subarrays[su].last_col = at;
+                self.banks[b].last_col = self.banks[b].last_col.max(at);
+                if write {
+                    self.banks[b].subarrays[su].last_wr_data_end =
+                        at + self.t_cwl + self.burst;
+                }
+            }
+        }
+        let total = n_each * subarrays.len() as u64 * self.n_banks as u64;
+        stats.count_cmd(if write { CmdKind::Wr } else { CmdKind::Rd }, total);
+        stats.internal_bytes += total * self.gbl_bytes;
+        Ok(last)
+    }
+
+    /// Cycle at which the data of a column command issued at `at` is fully
+    /// transferred (read: CL + burst, write: CWL + burst).
+    pub fn data_end(&self, at: Cycle, write: bool) -> Cycle {
+        at + if write { self.t_cwl } else { self.t_cl } + self.burst
+    }
+
+    /// Convenience: ACT + stream + (optionally) PRE over one row.
+    /// Returns the cycle the last command issued.
+    pub fn row_sweep(
+        &mut self,
+        target: CmdTarget,
+        subarray: usize,
+        row: usize,
+        n_cols: u64,
+        write: bool,
+        precharge: bool,
+        stats: &mut Stats,
+    ) -> Result<Cycle, TimingError> {
+        self.issue(
+            DramCmd::Act {
+                target,
+                subarray,
+                row,
+            },
+            stats,
+        )?;
+        let mut last = self.stream_cols(target, subarray, n_cols, write, stats)?;
+        if precharge {
+            last = self.issue(DramCmd::Pre { target, subarray }, stats)?;
+        }
+        Ok(last)
+    }
+
+    /// Total open rows across all banks (diagnostics / invariant checks).
+    pub fn open_rows(&self) -> usize {
+        self.banks.iter().map(|b| b.open_count()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    fn ctl() -> (ChannelController, Stats) {
+        (ChannelController::new(&SimConfig::paper()), Stats::new())
+    }
+
+    #[test]
+    fn act_rd_pre_obeys_trcd_tras() {
+        let (mut c, mut st) = ctl();
+        let t = DramCmd::Act {
+            target: CmdTarget::Bank(0),
+            subarray: 0,
+            row: 10,
+        };
+        let act_at = c.issue(t, &mut st).unwrap();
+        assert_eq!(act_at, 0);
+        let rd_at = c
+            .issue(
+                DramCmd::Rd {
+                    target: CmdTarget::Bank(0),
+                    subarray: 0,
+                    col: 0,
+                },
+                &mut st,
+            )
+            .unwrap();
+        assert_eq!(rd_at, 16); // tRCD
+        let pre_at = c
+            .issue(
+                DramCmd::Pre {
+                    target: CmdTarget::Bank(0),
+                    subarray: 0,
+                },
+                &mut st,
+            )
+            .unwrap();
+        assert_eq!(pre_at, 29); // tRAS from ACT dominates
+    }
+
+    #[test]
+    fn rd_without_open_row_fails() {
+        let (mut c, mut st) = ctl();
+        let err = c
+            .issue(
+                DramCmd::Rd {
+                    target: CmdTarget::Bank(0),
+                    subarray: 0,
+                    col: 0,
+                },
+                &mut st,
+            )
+            .unwrap_err();
+        assert_eq!(
+            err,
+            TimingError::RowNotOpen {
+                bank: 0,
+                subarray: 0
+            }
+        );
+    }
+
+    #[test]
+    fn double_act_fails() {
+        let (mut c, mut st) = ctl();
+        let act = |row| DramCmd::Act {
+            target: CmdTarget::Bank(0),
+            subarray: 0,
+            row,
+        };
+        c.issue(act(1), &mut st).unwrap();
+        let err = c.issue(act(2), &mut st).unwrap_err();
+        assert!(matches!(err, TimingError::RowAlreadyOpen { .. }));
+    }
+
+    #[test]
+    fn same_bank_rd_cadence_is_tccdl() {
+        let (mut c, mut st) = ctl();
+        c.issue(
+            DramCmd::Act {
+                target: CmdTarget::Bank(0),
+                subarray: 0,
+                row: 0,
+            },
+            &mut st,
+        )
+        .unwrap();
+        let rd = |col| DramCmd::Rd {
+            target: CmdTarget::Bank(0),
+            subarray: 0,
+            col,
+        };
+        let a = c.issue(rd(0), &mut st).unwrap();
+        let b = c.issue(rd(1), &mut st).unwrap();
+        assert_eq!(b - a, 4); // tCCDL
+    }
+
+    #[test]
+    fn cross_bank_rd_cadence_is_tccds() {
+        let (mut c, mut st) = ctl();
+        for b in 0..2 {
+            c.issue(
+                DramCmd::Act {
+                    target: CmdTarget::Bank(b),
+                    subarray: 0,
+                    row: 0,
+                },
+                &mut st,
+            )
+            .unwrap();
+        }
+        let a = c
+            .issue(
+                DramCmd::Rd {
+                    target: CmdTarget::Bank(0),
+                    subarray: 0,
+                    col: 0,
+                },
+                &mut st,
+            )
+            .unwrap();
+        let b = c
+            .issue(
+                DramCmd::Rd {
+                    target: CmdTarget::Bank(1),
+                    subarray: 0,
+                    col: 0,
+                },
+                &mut st,
+            )
+            .unwrap();
+        assert_eq!(b - a, 2); // tCCDS, bank-interleaved
+    }
+
+    #[test]
+    fn salp_allows_two_open_subarrays() {
+        let (mut c, mut st) = ctl();
+        let a = c
+            .issue(
+                DramCmd::Act {
+                    target: CmdTarget::Bank(0),
+                    subarray: 0,
+                    row: 3,
+                },
+                &mut st,
+            )
+            .unwrap();
+        let b = c
+            .issue(
+                DramCmd::Act {
+                    target: CmdTarget::Bank(0),
+                    subarray: 1,
+                    row: 7,
+                },
+                &mut st,
+            )
+            .unwrap();
+        assert_eq!(b - a, 2); // tRRD between subarray ACTs, not tRC
+        assert_eq!(c.open_rows(), 2);
+        assert!(c.banks[0].row_open(0, 3) && c.banks[0].row_open(1, 7));
+    }
+
+    #[test]
+    fn same_subarray_reactivation_needs_trc() {
+        let (mut c, mut st) = ctl();
+        let act = |row| DramCmd::Act {
+            target: CmdTarget::Bank(0),
+            subarray: 0,
+            row,
+        };
+        let a = c.issue(act(0), &mut st).unwrap();
+        c.issue(
+            DramCmd::Pre {
+                target: CmdTarget::Bank(0),
+                subarray: 0,
+            },
+            &mut st,
+        )
+        .unwrap();
+        let b = c.issue(act(1), &mut st).unwrap();
+        assert!(b - a >= 45, "ACT->ACT gap {} < tRC", b - a);
+    }
+
+    #[test]
+    fn all_bank_act_and_stream() {
+        let (mut c, mut st) = ctl();
+        c.issue(
+            DramCmd::Act {
+                target: CmdTarget::AllBanks,
+                subarray: 0,
+                row: 0,
+            },
+            &mut st,
+        )
+        .unwrap();
+        assert_eq!(c.open_rows(), 16);
+        let last = c
+            .stream_cols(CmdTarget::AllBanks, 0, 32, false, &mut st)
+            .unwrap();
+        // first read at tRCD=16, 31 more at tCCDL: 16 + 31*4 = 140.
+        assert_eq!(last, 140);
+        assert_eq!(st.commands[&crate::stats::CmdKind::Rd], 32 * 16);
+        // 32 cols × 16 banks × 32 B
+        assert_eq!(st.internal_bytes, 32 * 16 * 32);
+    }
+
+    #[test]
+    fn stream_equals_individual_issues() {
+        // The burst fast path must match the per-command path exactly.
+        let (mut c1, mut st1) = ctl();
+        let (mut c2, mut st2) = ctl();
+        let t = CmdTarget::AllBanks;
+        for c in [&mut c1, &mut c2] {
+            let mut st = Stats::new();
+            c.issue(
+                DramCmd::Act {
+                    target: t,
+                    subarray: 2,
+                    row: 9,
+                },
+                &mut st,
+            )
+            .unwrap();
+        }
+        let last1 = c1.stream_cols(t, 2, 17, false, &mut st1).unwrap();
+        let mut last2 = 0;
+        for col in 0..17 {
+            last2 = c2
+                .issue(
+                    DramCmd::Rd {
+                        target: t,
+                        subarray: 2,
+                        col,
+                    },
+                    &mut st2,
+                )
+                .unwrap();
+        }
+        assert_eq!(last1, last2);
+        assert_eq!(st1.internal_bytes, st2.internal_bytes);
+        assert_eq!(c1.banks[0].last_col, c2.banks[0].last_col);
+    }
+
+    #[test]
+    fn interleaved_groups_multiply_bandwidth() {
+        // 4 subarray groups streaming concurrently sustain 1 cmd/cycle
+        // (tCCDL=4, G=4): the P_Sub=4 bandwidth claim.
+        let (mut c, mut st) = ctl();
+        let groups = [0usize, 16, 32, 48];
+        for (i, &su) in groups.iter().enumerate() {
+            c.issue(
+                DramCmd::Act {
+                    target: CmdTarget::AllBanks,
+                    subarray: su,
+                    row: i,
+                },
+                &mut st,
+            )
+            .unwrap();
+        }
+        let start = c.clock;
+        let last = c.stream_interleaved(&groups, 32, false, &mut st).unwrap();
+        // 128 commands at ~1/cycle once the pipeline fills.
+        let span = last - start + 1;
+        assert!(span <= 140, "span {span} too slow for interleaved streams");
+        assert!(span >= 128, "span {span} beats the command bus");
+    }
+
+    #[test]
+    fn interleaved_single_group_matches_stream_cols() {
+        let (mut c1, mut st1) = ctl();
+        let (mut c2, mut st2) = ctl();
+        for c in [&mut c1, &mut c2] {
+            let mut st = Stats::new();
+            c.issue(
+                DramCmd::Act {
+                    target: CmdTarget::AllBanks,
+                    subarray: 5,
+                    row: 0,
+                },
+                &mut st,
+            )
+            .unwrap();
+        }
+        let a = c1.stream_interleaved(&[5], 20, false, &mut st1).unwrap();
+        let b = c2
+            .stream_cols(CmdTarget::AllBanks, 5, 20, false, &mut st2)
+            .unwrap();
+        assert_eq!(a, b);
+        assert_eq!(st1.internal_bytes, st2.internal_bytes);
+    }
+
+    #[test]
+    fn interleaved_equals_per_command_issue() {
+        // The tight loop must match issuing individual DramCmd::Rd
+        // round-robin across groups.
+        let (mut c1, mut st1) = ctl();
+        let (mut c2, mut st2) = ctl();
+        let groups = [2usize, 10, 33];
+        for c in [&mut c1, &mut c2] {
+            let mut st = Stats::new();
+            for (i, &su) in groups.iter().enumerate() {
+                c.issue(
+                    DramCmd::Act {
+                        target: CmdTarget::AllBanks,
+                        subarray: su,
+                        row: i,
+                    },
+                    &mut st,
+                )
+                .unwrap();
+            }
+        }
+        let a = c1.stream_interleaved(&groups, 9, false, &mut st1).unwrap();
+        let mut b = 0;
+        for col in 0..9 {
+            for &su in &groups {
+                b = c2
+                    .issue(
+                        DramCmd::Rd {
+                            target: CmdTarget::AllBanks,
+                            subarray: su,
+                            col,
+                        },
+                        &mut st2,
+                    )
+                    .unwrap();
+            }
+        }
+        assert_eq!(a, b);
+        assert_eq!(st1.internal_bytes, st2.internal_bytes);
+        assert_eq!(c1.clock, c2.clock);
+    }
+
+    #[test]
+    fn write_then_pre_waits_twr() {
+        let (mut c, mut st) = ctl();
+        c.issue(
+            DramCmd::Act {
+                target: CmdTarget::Bank(0),
+                subarray: 0,
+                row: 0,
+            },
+            &mut st,
+        )
+        .unwrap();
+        let wr_at = c
+            .issue(
+                DramCmd::Wr {
+                    target: CmdTarget::Bank(0),
+                    subarray: 0,
+                    col: 0,
+                },
+                &mut st,
+            )
+            .unwrap();
+        let pre_at = c
+            .issue(
+                DramCmd::Pre {
+                    target: CmdTarget::Bank(0),
+                    subarray: 0,
+                },
+                &mut st,
+            )
+            .unwrap();
+        // PRE >= WR + tCWL + burst + tWR = wr_at + 8 + 2 + 16
+        assert!(pre_at >= wr_at + 26, "pre {pre_at} wr {wr_at}");
+    }
+
+    #[test]
+    fn preall_closes_everything() {
+        let (mut c, mut st) = ctl();
+        for su in 0..3 {
+            c.issue(
+                DramCmd::Act {
+                    target: CmdTarget::AllBanks,
+                    subarray: su,
+                    row: su,
+                },
+                &mut st,
+            )
+            .unwrap();
+        }
+        assert_eq!(c.open_rows(), 48);
+        c.issue(
+            DramCmd::PreAll {
+                target: CmdTarget::AllBanks,
+            },
+            &mut st,
+        )
+        .unwrap();
+        assert_eq!(c.open_rows(), 0);
+    }
+
+    #[test]
+    fn preall_on_idle_is_noop() {
+        let (mut c, mut st) = ctl();
+        let at = c
+            .issue(
+                DramCmd::PreAll {
+                    target: CmdTarget::AllBanks,
+                },
+                &mut st,
+            )
+            .unwrap();
+        assert_eq!(at, 0);
+        assert!(st.commands.get(&crate::stats::CmdKind::Pre).is_none());
+    }
+
+    #[test]
+    fn row_sweep_composes() {
+        let (mut c, mut st) = ctl();
+        let last = c
+            .row_sweep(CmdTarget::AllBanks, 0, 5, 32, false, true, &mut st)
+            .unwrap();
+        // ACT@0, RD@16..140, PRE at >= last_col + tCCDL = 144
+        assert_eq!(last, 144);
+        assert_eq!(c.open_rows(), 0);
+    }
+
+    #[test]
+    fn reset_restores_fresh_state() {
+        let (mut c, mut st) = ctl();
+        c.row_sweep(CmdTarget::AllBanks, 0, 5, 8, false, false, &mut st)
+            .unwrap();
+        c.reset();
+        assert_eq!(c.clock, 0);
+        assert_eq!(c.open_rows(), 0);
+    }
+
+    #[test]
+    fn bad_index_rejected() {
+        let (mut c, mut st) = ctl();
+        let err = c
+            .issue(
+                DramCmd::Act {
+                    target: CmdTarget::Bank(99),
+                    subarray: 0,
+                    row: 0,
+                },
+                &mut st,
+            )
+            .unwrap_err();
+        assert!(matches!(err, TimingError::BadIndex { .. }));
+    }
+}

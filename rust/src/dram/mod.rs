@@ -1,0 +1,30 @@
+//! Command-level cycle-accurate HBM2 timing model.
+//!
+//! This is the substrate the SAL-PIM engine ([`crate::pim`]) drives. It
+//! models one HBM2 *pseudo-channel* — the unit at which PIM commands are
+//! broadcast to all 16 banks in lockstep (as in FIM/AiM "all-bank mode") —
+//! with per-bank and per-subarray state machines and the Table 2 timing
+//! constraints. Channels run identical command streams in the paper's
+//! mapping (weights are sharded so every channel does the same amount of
+//! work), so device time = pseudo-channel time and the simulator only
+//! steps one controller per distinct stream.
+//!
+//! Two execution paths produce identical timing:
+//!
+//! * the **per-command path** ([`ChannelController::issue`]) checks every
+//!   constraint for every command — the reference semantics;
+//! * the **burst fast path** ([`ChannelController::stream_row`]) advances
+//!   the clock in closed form for long same-row column streams — the
+//!   production path for full-model runs.
+//!
+//! `tests/prop_timing.rs` proves the two paths agree on random workloads.
+
+mod address;
+mod bank;
+mod command;
+mod controller;
+
+pub use address::{AddressMapper, PhysAddr};
+pub use bank::{BankState, SubarrayState};
+pub use command::{CmdTarget, DramCmd};
+pub use controller::{ChannelController, TimingError};

@@ -1,0 +1,131 @@
+//! Area model (§5.2, Table 3).
+//!
+//! Unit areas come from the paper's TSMC 28-nm Design Compiler synthesis,
+//! scaled ×3.6 to 20-nm DRAM technology (the paper doubles the ~1.8×
+//! logic-vs-DRAM factor to be conservative). Table 3 reports the
+//! *post-scaling* values; we reproduce both the raw-synthesis view and
+//! the Table 3 arithmetic.
+
+use crate::config::SimConfig;
+
+/// Conservative 28-nm-logic → 20-nm-DRAM area scaling (§5.2).
+pub const DRAM_SCALE: f64 = 3.6;
+
+/// Unit areas in µm² (Table 3 values, already DRAM-scaled).
+#[derive(Debug, Clone, Copy)]
+pub struct UnitAreas {
+    pub salu_um2: f64,
+    pub bank_unit_um2: f64,
+    pub calu_um2: f64,
+    /// Conventional HBM2 area per channel (mm²).
+    pub hbm2_channel_mm2: f64,
+}
+
+impl UnitAreas {
+    /// The paper's Table 3 numbers.
+    pub fn paper() -> Self {
+        UnitAreas {
+            salu_um2: 18_744.0,
+            bank_unit_um2: 4_847.0,
+            calu_um2: 19_126.0,
+            hbm2_channel_mm2: 53.15,
+        }
+    }
+
+    /// The implied pre-scaling 28-nm synthesis areas.
+    pub fn raw_28nm(&self) -> (f64, f64, f64) {
+        (
+            self.salu_um2 / DRAM_SCALE,
+            self.bank_unit_um2 / DRAM_SCALE,
+            self.calu_um2 / DRAM_SCALE,
+        )
+    }
+}
+
+/// Whole-device area accounting.
+#[derive(Debug, Clone)]
+pub struct AreaModel {
+    pub units: UnitAreas,
+    pub salus_per_channel: usize,
+    pub bank_units_per_channel: usize,
+    pub calus_per_channel: usize,
+}
+
+impl AreaModel {
+    /// Build for a configuration (Table 3 uses P_Sub = 4 ⇒ 64 S-ALUs per
+    /// pseudo-channel pair = 128 per channel).
+    pub fn new(cfg: &SimConfig) -> Self {
+        let banks_per_channel = cfg.hbm.banks_per_pch * cfg.hbm.pch_per_channel;
+        AreaModel {
+            units: UnitAreas::paper(),
+            salus_per_channel: banks_per_channel * cfg.salu.max_p_sub,
+            bank_units_per_channel: banks_per_channel,
+            calus_per_channel: 1,
+        }
+    }
+
+    /// Area per channel added by each unit type (mm²).
+    pub fn salu_area_mm2(&self) -> f64 {
+        self.units.salu_um2 * self.salus_per_channel as f64 / 1e6
+    }
+
+    pub fn bank_unit_area_mm2(&self) -> f64 {
+        self.units.bank_unit_um2 * self.bank_units_per_channel as f64 / 1e6
+    }
+
+    pub fn calu_area_mm2(&self) -> f64 {
+        self.units.calu_um2 * self.calus_per_channel as f64 / 1e6
+    }
+
+    /// Total added area per channel (mm²).
+    pub fn total_added_mm2(&self) -> f64 {
+        self.salu_area_mm2() + self.bank_unit_area_mm2() + self.calu_area_mm2()
+    }
+
+    /// Area overhead vs conventional HBM2 (the paper's 4.81 %).
+    pub fn overhead_fraction(&self) -> f64 {
+        self.total_added_mm2() / self.units.hbm2_channel_mm2
+    }
+
+    /// The previous work's acceptability threshold (§5.2, [13]).
+    pub const OVERHEAD_THRESHOLD: f64 = 0.25;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_area_per_channel() {
+        let a = AreaModel::new(&SimConfig::paper());
+        assert_eq!(a.salus_per_channel, 128);
+        assert!((a.salu_area_mm2() - 2.40).abs() < 0.01, "{}", a.salu_area_mm2());
+        assert!((a.bank_unit_area_mm2() - 0.16).abs() < 0.01);
+        assert!((a.calu_area_mm2() - 0.02).abs() < 0.005);
+    }
+
+    #[test]
+    fn overhead_matches_paper_4_81_percent() {
+        let a = AreaModel::new(&SimConfig::paper());
+        let pct = a.overhead_fraction() * 100.0;
+        assert!((pct - 4.81).abs() < 0.15, "overhead {pct}%");
+        assert!(a.overhead_fraction() < AreaModel::OVERHEAD_THRESHOLD);
+    }
+
+    #[test]
+    fn raw_synthesis_areas_scale_back() {
+        let u = UnitAreas::paper();
+        let (s, b, c) = u.raw_28nm();
+        assert!((s * DRAM_SCALE - u.salu_um2).abs() < 1e-6);
+        assert!(b < u.bank_unit_um2 && c < u.calu_um2);
+    }
+
+    #[test]
+    fn fewer_salus_reduce_overhead() {
+        let mut cfg = SimConfig::paper();
+        cfg.salu.max_p_sub = 1;
+        let a1 = AreaModel::new(&cfg);
+        let a4 = AreaModel::new(&SimConfig::paper());
+        assert!(a1.overhead_fraction() < a4.overhead_fraction());
+    }
+}

@@ -1,0 +1,7 @@
+//! Area and energy/power models (Table 3 & Fig. 15).
+
+pub mod area;
+pub mod power;
+
+pub use area::AreaModel;
+pub use power::{EnergyParams, PowerReport};

@@ -1,0 +1,148 @@
+//! Interpolation accuracy analysis (Fig. 4 and the §2.3 claim that ≥32
+//! sections lose no task accuracy).
+
+use super::lut::{LutTable, NonLinFn};
+use crate::model::fixedpoint::QFormat;
+
+/// Maximum absolute interpolation error of `table` against the exact
+/// function, sampled at `samples` points across the evaluation range.
+pub fn max_abs_error(table: &LutTable, samples: usize) -> f64 {
+    sample_errors(table, samples)
+        .into_iter()
+        .fold(0.0f64, f64::max)
+}
+
+/// Mean absolute interpolation error.
+pub fn mean_abs_error(table: &LutTable, samples: usize) -> f64 {
+    let errs = sample_errors(table, samples);
+    errs.iter().sum::<f64>() / errs.len() as f64
+}
+
+fn sample_errors(table: &LutTable, samples: usize) -> Vec<f64> {
+    assert!(samples >= 2);
+    // For range-reduced functions sample a wide positive range (multiple
+    // octaves around the mantissa table) and measure *relative* error —
+    // the hardware shifts the table output by the input's octave, so
+    // absolute error scales with the output magnitude. Direct functions
+    // use absolute error over the table range.
+    let relative = table.func.range_reduced();
+    let (lo, hi) = if relative {
+        (0.05f64, 32.0f64)
+    } else {
+        (table.lo, table.hi)
+    };
+    (0..samples)
+        .map(|i| {
+            let x = lo + (hi - lo) * i as f64 / (samples - 1) as f64;
+            let want = table.func.eval_exact(x);
+            let err = (table.eval(x) - want).abs();
+            if relative {
+                err / want.abs().max(1e-12)
+            } else {
+                err
+            }
+        })
+        .collect()
+}
+
+/// Smallest power-of-two section count in `[4, max_sections]` whose max
+/// abs error is below `tol` (the Fig. 4 "how many sections do we need"
+/// question). Returns `None` if even `max_sections` misses the tolerance.
+pub fn min_sections_for(
+    func: NonLinFn,
+    tol: f64,
+    max_sections: usize,
+    q_in: QFormat,
+    q_out: QFormat,
+) -> Option<usize> {
+    let mut sections = 4;
+    while sections <= max_sections {
+        let t = LutTable::build(func, sections, q_in, q_out);
+        if max_abs_error(&t, 4096) < tol {
+            return Some(sections);
+        }
+        sections *= 2;
+    }
+    None
+}
+
+/// One row of the Fig. 4 accuracy report.
+#[derive(Debug, Clone)]
+pub struct AccuracyRow {
+    pub func: NonLinFn,
+    pub sections: usize,
+    pub max_err: f64,
+    pub mean_err: f64,
+}
+
+/// Error table for every function × section count (the Fig. 4 sweep).
+pub fn accuracy_report(
+    section_counts: &[usize],
+    q_in: QFormat,
+    q_out: QFormat,
+) -> Vec<AccuracyRow> {
+    let mut rows = Vec::new();
+    for &func in &NonLinFn::ALL {
+        for &sections in section_counts {
+            let t = LutTable::build(func, sections, q_in, q_out);
+            rows.push(AccuracyRow {
+                func,
+                sections,
+                max_err: max_abs_error(&t, 4096),
+                mean_err: mean_abs_error(&t, 4096),
+            });
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::fixedpoint::Q8_8;
+
+    #[test]
+    fn error_shrinks_with_sections() {
+        for func in [NonLinFn::Gelu, NonLinFn::Exp, NonLinFn::Tanh] {
+            let coarse = LutTable::build(func, 8, Q8_8, Q8_8);
+            let fine = LutTable::build(func, 128, Q8_8, Q8_8);
+            assert!(
+                max_abs_error(&fine, 2048) <= max_abs_error(&coarse, 2048),
+                "{func:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn paper_claim_32_sections_suffice() {
+        // §2.3: "the accuracy was kept when the number of sections was
+        // larger than 32" — at 32+ sections every function's max error is
+        // within a few quantization steps of the 16-bit representation.
+        for func in NonLinFn::ALL {
+            let t = LutTable::build(func, 32, Q8_8, Q8_8);
+            let err = max_abs_error(&t, 4096);
+            assert!(err < 0.09, "{func:?} err at 32 sections: {err}");
+        }
+    }
+
+    #[test]
+    fn min_sections_finds_crossover() {
+        let s = min_sections_for(NonLinFn::Gelu, 0.05, 256, Q8_8, Q8_8);
+        assert!(s.is_some());
+        assert!(s.unwrap() <= 64);
+    }
+
+    #[test]
+    fn min_sections_none_for_impossible_tol() {
+        // Tolerance below the quantization floor can never be met.
+        let s = min_sections_for(NonLinFn::Gelu, 1e-9, 64, Q8_8, Q8_8);
+        assert!(s.is_none());
+    }
+
+    #[test]
+    fn report_covers_all_functions() {
+        let rows = accuracy_report(&[16, 64], Q8_8, Q8_8);
+        assert_eq!(rows.len(), NonLinFn::ALL.len() * 2);
+        assert!(rows.iter().all(|r| r.max_err >= r.mean_err));
+    }
+}

@@ -1,0 +1,369 @@
+//! Slope/intercept table generation and bit-exact evaluation.
+
+use crate::model::fixedpoint::QFormat;
+
+/// Fixed-point format of stored slopes (Q2.13: slopes of all supported
+/// functions fall in (−4, 4)).
+pub const SLOPE_FRAC: u32 = 13;
+
+/// The non-linear functions SAL-PIM interpolates (§5.1: "linear
+/// interpolation with 64 sections on GELU, exp, sqrt, and reciprocal").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NonLinFn {
+    /// GELU activation (FFN). Direct table over [-8, 8).
+    Gelu,
+    /// exp(x) for x ≤ 0 (softmax after max-subtraction). Table over [-16, 0).
+    Exp,
+    /// 1/√x (layerNorm). Range-reduced: table over mantissa [1, 4).
+    Rsqrt,
+    /// 1/x (softmax normalization). Range-reduced: table over [1, 2).
+    Recip,
+    /// tanh(x). Direct table over [-4, 4). (Used by the GELU-exact
+    /// ablation and kept for parity with MVP-style LUT units.)
+    Tanh,
+}
+
+impl NonLinFn {
+    pub const ALL: [NonLinFn; 5] = [
+        NonLinFn::Gelu,
+        NonLinFn::Exp,
+        NonLinFn::Rsqrt,
+        NonLinFn::Recip,
+        NonLinFn::Tanh,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            NonLinFn::Gelu => "gelu",
+            NonLinFn::Exp => "exp",
+            NonLinFn::Rsqrt => "rsqrt",
+            NonLinFn::Recip => "recip",
+            NonLinFn::Tanh => "tanh",
+        }
+    }
+
+    /// Ground-truth function value.
+    pub fn eval_exact(&self, x: f64) -> f64 {
+        match self {
+            NonLinFn::Gelu => {
+                // GPT-2's tanh-approximation GELU (what FasterTransformer
+                // computes, and what the paper's "complex functions (tanh
+                // and sqrt)" refers to).
+                0.5 * x
+                    * (1.0 + ((2.0 / std::f64::consts::PI).sqrt() * (x + 0.044715 * x.powi(3))).tanh())
+            }
+            NonLinFn::Exp => x.exp(),
+            NonLinFn::Rsqrt => 1.0 / x.sqrt(),
+            NonLinFn::Recip => 1.0 / x,
+            NonLinFn::Tanh => x.tanh(),
+        }
+    }
+
+    /// Direct-table input range `[lo, hi)`. For range-reduced functions
+    /// this is the mantissa range.
+    pub fn table_range(&self) -> (f64, f64) {
+        match self {
+            NonLinFn::Gelu => (-8.0, 8.0),
+            NonLinFn::Exp => (-16.0, 0.0),
+            // Mantissa lives in [1, 4); the table is decoded over [0, 4)
+            // so the raw span stays a power of two (the bank-level unit's
+            // shift decode requires it). Sections below 1.0 are never hit.
+            NonLinFn::Rsqrt => (0.0, 4.0),
+            NonLinFn::Recip => (1.0, 2.0),
+            NonLinFn::Tanh => (-4.0, 4.0),
+        }
+    }
+
+    /// Does evaluation range-reduce the input by a power of two first
+    /// (the bank-level unit's bit-position decode, §4.3)?
+    pub fn range_reduced(&self) -> bool {
+        matches!(self, NonLinFn::Rsqrt | NonLinFn::Recip)
+    }
+}
+
+/// A quantized slope/intercept table plus the decode parameters — the
+/// exact contents of a LUT-embedded subarray for one function.
+#[derive(Debug, Clone)]
+pub struct LutTable {
+    pub func: NonLinFn,
+    pub sections: usize,
+    /// Raw Q2.13 slopes, one per section.
+    pub slopes: Vec<i16>,
+    /// Raw intercepts in `q_out`, one per section.
+    pub intercepts: Vec<i16>,
+    /// Input fixed-point format.
+    pub q_in: QFormat,
+    /// Output fixed-point format.
+    pub q_out: QFormat,
+    /// Table range in input units.
+    pub lo: f64,
+    pub hi: f64,
+    /// Right-shift that maps (raw − lo_raw) to a section index — the
+    /// bank-level unit's bit-position shifter. Exact because ranges and
+    /// section counts are powers of two.
+    pub index_shift: u32,
+    /// `lo` quantized into `q_in` raw units.
+    pub lo_raw: i32,
+}
+
+impl LutTable {
+    /// Build the table: endpoint-fit linear interpolation on uniform
+    /// sections, quantized to the storage formats.
+    ///
+    /// Panics if the raw span is not `sections × 2^k` (the hardware
+    /// decode needs a pure shift) — all provided ranges/section counts
+    /// satisfy this.
+    pub fn build(func: NonLinFn, sections: usize, q_in: QFormat, q_out: QFormat) -> Self {
+        assert!(sections.is_power_of_two(), "sections must be 2^k");
+        let (lo, hi) = func.table_range();
+        let span_raw = ((hi - lo) * q_in.scale()) as i64;
+        assert!(
+            span_raw > 0 && span_raw % sections as i64 == 0,
+            "range {lo}..{hi} not divisible into {sections} raw sections"
+        );
+        let per_section = (span_raw / sections as i64) as u64;
+        assert!(
+            per_section.is_power_of_two(),
+            "section width {per_section} raw units is not a power of two"
+        );
+        let index_shift = per_section.trailing_zeros();
+
+        let width = (hi - lo) / sections as f64;
+        let q_slope = QFormat { frac_bits: SLOPE_FRAC };
+        let mut slopes = Vec::with_capacity(sections);
+        let mut intercepts = Vec::with_capacity(sections);
+        for s in 0..sections {
+            let x0 = lo + s as f64 * width;
+            let x1 = x0 + width;
+            // Range-reduced functions never see inputs below their
+            // mantissa floor (1.0); keep unused low sections finite.
+            let floor = if func.range_reduced() { 0.5 * width.min(1.0) } else { f64::NEG_INFINITY };
+            let y0 = func.eval_exact(x0.max(floor));
+            let y1 = func.eval_exact(x1.max(floor));
+            let w = (y1 - y0) / width;
+            let b = y0 - w * x0;
+            slopes.push(q_slope.quantize(w));
+            intercepts.push(q_out.quantize(b));
+        }
+        LutTable {
+            func,
+            sections,
+            slopes,
+            intercepts,
+            q_in,
+            q_out,
+            lo,
+            hi,
+            index_shift,
+            lo_raw: (lo * q_in.scale()) as i32,
+        }
+    }
+
+    /// Decode a raw input into its section index — the column-select /
+    /// LUT-select generation of the bank-level unit (clamps into range,
+    /// which the paper's masking of out-of-range inputs also does).
+    pub fn section_of(&self, raw: i16) -> usize {
+        let offset = (raw as i32 - self.lo_raw).max(0);
+        ((offset >> self.index_shift) as usize).min(self.sections - 1)
+    }
+
+    /// Bit-exact fixed-point evaluation of one element — the S-ALU
+    /// multiply-add: `(W[s]·x) >> shift + B[s]`, saturated.
+    pub fn eval_raw(&self, raw: i16) -> i16 {
+        let s = self.section_of(raw);
+        let w = self.slopes[s] as i64;
+        // Product has SLOPE_FRAC + q_in.frac fractional bits; shift down
+        // to q_out.frac (arithmetic shift, like the writeback shifter).
+        let shift = SLOPE_FRAC + self.q_in.frac_bits - self.q_out.frac_bits;
+        let prod = (w * raw as i64) >> shift;
+        let y = prod + self.intercepts[s] as i64;
+        y.clamp(i16::MIN as i64, i16::MAX as i64) as i16
+    }
+
+    /// Evaluate through the full pipeline in float domain:
+    /// quantize → (optional range reduction) → table → dequantize.
+    pub fn eval(&self, x: f64) -> f64 {
+        match self.func {
+            NonLinFn::Rsqrt => {
+                if x <= 0.0 {
+                    return self.q_out.max_value(); // hardware clamp
+                }
+                // x = m · 4^k with m ∈ [1,4): rsqrt(x) = rsqrt(m) · 2^−k.
+                let mut m = x;
+                let mut k: i32 = 0;
+                while m >= 4.0 {
+                    m /= 4.0;
+                    k += 1;
+                }
+                while m < 1.0 {
+                    m *= 4.0;
+                    k -= 1;
+                }
+                let base = self.q_out.dequantize(self.eval_raw(self.q_in.quantize(m)));
+                base * 2f64.powi(-k)
+            }
+            NonLinFn::Recip => {
+                if x <= 0.0 {
+                    return self.q_out.max_value();
+                }
+                // x = m · 2^k with m ∈ [1,2): 1/x = (1/m) · 2^−k.
+                let mut m = x;
+                let mut k: i32 = 0;
+                while m >= 2.0 {
+                    m /= 2.0;
+                    k += 1;
+                }
+                while m < 1.0 {
+                    m *= 2.0;
+                    k -= 1;
+                }
+                let base = self.q_out.dequantize(self.eval_raw(self.q_in.quantize(m)));
+                base * 2f64.powi(-k)
+            }
+            _ => {
+                // Direct functions: clamp into table range (edge sections
+                // extrapolate flat/linear exactly as the hardware decode
+                // clamps the section index).
+                let xc = x.clamp(self.lo, self.hi - self.q_in.epsilon());
+                self.q_out.dequantize(self.eval_raw(self.q_in.quantize(xc)))
+            }
+        }
+    }
+
+    /// Evaluate a whole raw vector (one LUT-embedded-subarray sweep).
+    pub fn eval_raw_vec(&self, raw: &[i16]) -> Vec<i16> {
+        raw.iter().map(|&r| self.eval_raw(r)).collect()
+    }
+
+    /// Serialize to the artifact text format shared with the Pallas
+    /// kernel (`artifacts/luts/<fn>_<sections>.txt`): header line, then
+    /// one `slope intercept` raw pair per line.
+    pub fn to_artifact_text(&self) -> String {
+        let mut s = format!(
+            "# lut {} sections={} q_in={} q_out={} slope_frac={} lo={} hi={}\n",
+            self.func.name(),
+            self.sections,
+            self.q_in.frac_bits,
+            self.q_out.frac_bits,
+            SLOPE_FRAC,
+            self.lo,
+            self.hi
+        );
+        for i in 0..self.sections {
+            s.push_str(&format!("{} {}\n", self.slopes[i], self.intercepts[i]));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::fixedpoint::{Q8_8};
+
+    fn table(f: NonLinFn, sections: usize) -> LutTable {
+        LutTable::build(f, sections, Q8_8, Q8_8)
+    }
+
+    #[test]
+    fn all_functions_build_at_paper_sections() {
+        for f in NonLinFn::ALL {
+            let t = table(f, 64);
+            assert_eq!(t.slopes.len(), 64);
+            assert_eq!(t.intercepts.len(), 64);
+        }
+    }
+
+    #[test]
+    fn section_decode_covers_range() {
+        let t = table(NonLinFn::Gelu, 64);
+        assert_eq!(t.section_of(t.q_in.quantize(-8.0)), 0);
+        assert_eq!(t.section_of(t.q_in.quantize(7.99)), 63);
+        // Out-of-range clamps.
+        assert_eq!(t.section_of(i16::MIN), 0);
+        assert_eq!(t.section_of(i16::MAX), 63);
+    }
+
+    #[test]
+    fn gelu_64_sections_is_accurate() {
+        let t = table(NonLinFn::Gelu, 64);
+        let mut max_err: f64 = 0.0;
+        let mut x = -8.0;
+        while x < 8.0 {
+            max_err = max_err.max((t.eval(x) - NonLinFn::Gelu.eval_exact(x)).abs());
+            x += 0.01;
+        }
+        // Two quantization steps + interpolation error.
+        assert!(max_err < 0.03, "gelu max err {max_err}");
+    }
+
+    #[test]
+    fn exp_table_accurate_in_softmax_range() {
+        let t = table(NonLinFn::Exp, 64);
+        let mut x = -16.0;
+        while x < 0.0 {
+            let err = (t.eval(x) - x.exp()).abs();
+            assert!(err < 0.05, "exp({x}) err {err}");
+            x += 0.01;
+        }
+    }
+
+    #[test]
+    fn rsqrt_range_reduction_tracks_exact() {
+        let t = table(NonLinFn::Rsqrt, 64);
+        for x in [0.01f64, 0.1, 0.5, 1.0, 2.0, 7.3, 64.0, 300.0] {
+            let got = t.eval(x);
+            let want = 1.0 / x.sqrt();
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.05, "rsqrt({x}): got {got} want {want}");
+        }
+    }
+
+    #[test]
+    fn recip_range_reduction_tracks_exact() {
+        let t = table(NonLinFn::Recip, 64);
+        for x in [0.02f64, 0.3, 1.0, 1.5, 4.0, 100.0] {
+            let got = t.eval(x);
+            let want = 1.0 / x;
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.05, "recip({x}): got {got} want {want}");
+        }
+    }
+
+    #[test]
+    fn eval_raw_is_pure_integer_pipeline() {
+        // Same raw input → same raw output, and matches eval() for direct
+        // in-range values.
+        let t = table(NonLinFn::Tanh, 64);
+        let raw = t.q_in.quantize(0.7);
+        assert_eq!(t.eval_raw(raw), t.eval_raw(raw));
+        let via_eval = t.eval(0.7);
+        let via_raw = t.q_out.dequantize(t.eval_raw(raw));
+        assert_eq!(via_eval, via_raw);
+    }
+
+    #[test]
+    fn artifact_text_roundtrips_shape() {
+        let t = table(NonLinFn::Exp, 32);
+        let text = t.to_artifact_text();
+        assert!(text.starts_with("# lut exp sections=32"));
+        assert_eq!(text.lines().count(), 33);
+    }
+
+    #[test]
+    fn more_sections_never_hurt_much() {
+        // Monotone-ish improvement: 128 sections ≤ error of 16 sections.
+        let coarse = table(NonLinFn::Gelu, 16);
+        let fine = table(NonLinFn::Gelu, 128);
+        let err = |t: &LutTable| {
+            let mut e: f64 = 0.0;
+            let mut x = -8.0;
+            while x < 8.0 {
+                e += (t.eval(x) - NonLinFn::Gelu.eval_exact(x)).abs();
+                x += 0.05;
+            }
+            e
+        };
+        assert!(err(&fine) < err(&coarse));
+    }
+}

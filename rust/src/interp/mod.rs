@@ -1,0 +1,21 @@
+//! LUT-based linear interpolation (§2.3, §4.2, Fig. 4).
+//!
+//! Non-linear functions (GELU, exp, reciprocal square root, reciprocal)
+//! are approximated as `f(x) ≈ W[s]·x + B[s]` where `s` is the uniform
+//! section of `x` within a calibrated range. The slope/intercept tables
+//! live in LUT-embedded subarrays; the bank-level unit decodes `x` into
+//! column/LUT-select signals (a shift-and-clamp on the fixed-point raw
+//! value), and the S-ALU performs the multiply-add.
+//!
+//! [`LutTable`] is the *bit-exact* model of that pipeline: tables are
+//! quantized to the 16-bit formats the DRAM cells store, the index decode
+//! mirrors the bank-level unit's bit-position shifter, and evaluation uses
+//! the same fixed-point multiply-add as the S-ALU. The same tables are
+//! exported for the Pallas kernel (`make artifacts` writes
+//! `artifacts/luts/*.txt`) so L1 and L3 interpolate identically.
+
+mod accuracy;
+mod lut;
+
+pub use accuracy::{accuracy_report, max_abs_error, mean_abs_error, min_sections_for};
+pub use lut::{LutTable, NonLinFn};

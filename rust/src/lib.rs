@@ -1,0 +1,44 @@
+//! # SAL-PIM
+//!
+//! A from-scratch reproduction of **SAL-PIM: A Subarray-level
+//! Processing-in-Memory Architecture with LUT-based Linear Interpolation for
+//! Transformer-based Text Generation** (Han, Cho, Kim & Kim, KAIST 2024).
+//!
+//! The crate contains the whole evaluated stack:
+//!
+//! * a command-level cycle-accurate **HBM2 + PIM timing simulator**
+//!   ([`dram`], [`pim`]) with subarray-level parallelism (SALP), S-ALUs,
+//!   bank-level units, C-ALUs and LUT-embedded subarrays,
+//! * the paper's **data-mapping schemes** compiling GPT operators into PIM
+//!   command streams ([`mapper`]),
+//! * the **GPT-2 operator graph** and a bit-exact 16-bit fixed-point
+//!   functional model ([`model`]),
+//! * **LUT-based linear interpolation** table generation and accuracy
+//!   analysis ([`interp`]),
+//! * the **GPU roofline** and **bank-level PIM** baselines ([`baseline`]),
+//! * **area / energy / power models** seeded with the paper's published
+//!   constants ([`energy`]),
+//! * a **PJRT runtime** that loads the AOT-compiled JAX/Pallas artifacts as
+//!   the float golden model ([`runtime`]),
+//! * a text-generation **serving coordinator** ([`coordinator`]),
+//! * reporting/CLI/test utilities ([`report`], [`cli`], [`testutil`]).
+//!
+//! See `DESIGN.md` for the architecture and the per-experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod baseline;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dram;
+pub mod energy;
+pub mod interp;
+pub mod mapper;
+pub mod model;
+pub mod pim;
+pub mod report;
+pub mod runtime;
+pub mod stats;
+pub mod testutil;
+
+pub use config::SimConfig;

@@ -1,0 +1,241 @@
+//! SAL-PIM command-line interface.
+//!
+//! ```text
+//! sal-pim config   [--preset paper|mini] [--file overrides.cfg]
+//! sal-pim simulate --in 32 --out 64 [--p-sub 4] [--prefetch]
+//! sal-pim sweep    [--p-sub 4]                 # the Fig. 11 grid
+//! sal-pim breakdown [--kv 128]                 # decode phase breakdown
+//! sal-pim power    [--out 32]                  # Fig. 15 power report
+//! sal-pim area                                 # Table 3 arithmetic
+//! sal-pim serve    --requests 16 [--policy fcfs|sjf|spf] [--offload]
+//! ```
+
+use sal_pim::baseline::GpuModel;
+use sal_pim::cli::Args;
+use sal_pim::config::{parse::parse_config, SimConfig};
+use sal_pim::coordinator::{Coordinator, Policy, PrefillTarget, ServeMetrics};
+use sal_pim::energy::{AreaModel, EnergyParams, PowerReport};
+use sal_pim::mapper::GenerationSim;
+use sal_pim::report::{fmt_bw, fmt_time, fmt_x, Table};
+use sal_pim::testutil::SplitMix64;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn load_config(args: &Args) -> anyhow::Result<SimConfig> {
+    let mut cfg = match args.flag("preset").unwrap_or("paper") {
+        "paper" => SimConfig::paper(),
+        "mini" => SimConfig::mini(),
+        other => anyhow::bail!("unknown preset `{other}` (paper|mini)"),
+    };
+    if let Some(path) = args.flag("file") {
+        let text = std::fs::read_to_string(path)?;
+        cfg = parse_config(cfg, &text)?;
+    }
+    let p_sub = args.get("p-sub", cfg.parallelism.p_sub)?;
+    Ok(cfg.with_p_sub(p_sub))
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_deref() {
+        Some("config") => cmd_config(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("breakdown") => cmd_breakdown(&args),
+        Some("power") => cmd_power(&args),
+        Some("area") => cmd_area(&args),
+        Some("serve") => cmd_serve(&args),
+        Some(other) => anyhow::bail!("unknown command `{other}` — see --help in the README"),
+        None => {
+            println!("usage: sal-pim <config|simulate|sweep|breakdown|power|area|serve> [flags]");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_config(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    println!("{cfg:#?}");
+    println!(
+        "peak internal bandwidth: {}",
+        fmt_bw(cfg.peak_internal_bandwidth())
+    );
+    println!(
+        "peak external bandwidth: {}",
+        fmt_bw(cfg.peak_external_bandwidth())
+    );
+    let problems = cfg.validate();
+    if problems.is_empty() {
+        println!("config OK");
+    } else {
+        for p in problems {
+            println!("PROBLEM: {p}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let n_in = args.get("in", 32usize)?;
+    let n_out = args.get("out", 64usize)?;
+    let mut sim = GenerationSim::new(&cfg);
+    sim.set_prefetch(args.switch("prefetch"));
+    let r = sim.generate(n_in, n_out);
+    let tck = cfg.timing.tck_ns;
+    let gpu = GpuModel::titan_rtx().generation_time(&cfg.model, n_in, n_out);
+    println!(
+        "SAL-PIM  in={n_in} out={n_out} P_Sub={}",
+        cfg.parallelism.p_sub
+    );
+    println!("  prefill: {}", fmt_time(r.prefill.seconds(tck)));
+    println!(
+        "  decode:  {} ({:.1} tok/s)",
+        fmt_time(r.decode.seconds(tck)),
+        r.decode_tokens_per_sec(tck)
+    );
+    println!("  total:   {}", fmt_time(r.seconds(tck)));
+    println!(
+        "  avg internal bandwidth: {}",
+        fmt_bw(r.total().avg_internal_bandwidth(tck) * cfg.hbm.pseudo_channels() as f64)
+    );
+    println!("  GPU baseline: {}", fmt_time(gpu));
+    println!("  speedup vs GPU: {}", fmt_x(gpu / r.seconds(tck)));
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let gpu = GpuModel::titan_rtx();
+    let mut sim = GenerationSim::new(&cfg);
+    let mut t = Table::new(
+        "Fig. 11 — speedup of SAL-PIM vs GPU",
+        &["in", "out", "pim", "gpu", "speedup"],
+    );
+    let mut speedups = Vec::new();
+    for &n_in in &[32usize, 64, 128] {
+        for &n_out in &[1usize, 4, 16, 32, 64, 128, 256] {
+            let pim = sim.generate(n_in, n_out).seconds(cfg.timing.tck_ns);
+            let g = gpu.generation_time(&cfg.model, n_in, n_out);
+            speedups.push(g / pim);
+            t.row(&[
+                n_in.to_string(),
+                n_out.to_string(),
+                fmt_time(pim),
+                fmt_time(g),
+                fmt_x(g / pim),
+            ]);
+        }
+    }
+    t.print();
+    let max = speedups.iter().cloned().fold(0.0f64, f64::max);
+    let avg = speedups.iter().sum::<f64>() / speedups.len() as f64;
+    println!("max speedup {} | avg speedup {} (paper: 4.72× / 1.83×)", fmt_x(max), fmt_x(avg));
+    Ok(())
+}
+
+fn cmd_breakdown(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let kv = args.get("kv", 128usize)?;
+    let mut sim = GenerationSim::new(&cfg);
+    let st = sim.decode_token(kv);
+    println!(
+        "decode iteration @ kv={kv}, P_Sub={}: {}",
+        cfg.parallelism.p_sub,
+        fmt_time(st.seconds(cfg.timing.tck_ns))
+    );
+    for (phase, frac) in st.breakdown() {
+        println!("  {:>13}: {:5.2}%", phase.name(), frac * 100.0);
+    }
+    Ok(())
+}
+
+fn cmd_power(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let n_out = args.get("out", 32usize)?;
+    let mut t = Table::new(
+        "Fig. 15 — power by subarray-level parallelism",
+        &["P_Sub", "avg W", "vs 60 W budget"],
+    );
+    for p_sub in [1usize, 2, 4] {
+        let c = cfg.clone().with_p_sub(p_sub);
+        let mut sim = GenerationSim::new(&c);
+        let r = sim.generate(32, n_out);
+        let rep = PowerReport::from_stats(&c, &EnergyParams::paper(), &r.total());
+        t.row(&[
+            p_sub.to_string(),
+            format!("{:.1}", rep.avg_power_w()),
+            format!("{:.0}%", rep.budget_fraction() * 100.0),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_area(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let a = AreaModel::new(&cfg);
+    let mut t = Table::new(
+        "Table 3 — area per channel",
+        &["unit", "count", "area (mm²)"],
+    );
+    t.row(&[
+        "S-ALU".into(),
+        a.salus_per_channel.to_string(),
+        format!("{:.2}", a.salu_area_mm2()),
+    ]);
+    t.row(&[
+        "Bank-level unit".into(),
+        a.bank_units_per_channel.to_string(),
+        format!("{:.2}", a.bank_unit_area_mm2()),
+    ]);
+    t.row(&[
+        "C-ALU".into(),
+        a.calus_per_channel.to_string(),
+        format!("{:.2}", a.calu_area_mm2()),
+    ]);
+    t.print();
+    println!(
+        "overhead vs HBM2 channel: {:.2}% (paper: 4.81%, threshold 25%)",
+        a.overhead_fraction() * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let n = args.get("requests", 16usize)?;
+    let policy = match args.flag("policy").unwrap_or("fcfs") {
+        "fcfs" => Policy::Fcfs,
+        "sjf" => Policy::ShortestJobFirst,
+        "spf" => Policy::ShortestPromptFirst,
+        other => anyhow::bail!("unknown policy `{other}`"),
+    };
+    let mut coord = Coordinator::new(&cfg).with_policy(policy);
+    if args.switch("offload") {
+        coord = coord.with_prefill_target(PrefillTarget::GpuOffload);
+    }
+    // Synthetic arrival process (deterministic seed): prompt 16–128,
+    // output 8–128, Poisson-ish arrivals.
+    let mut rng = SplitMix64::new(args.get("seed", 42u64)?);
+    let mut at = 0.0;
+    for _ in 0..n {
+        let prompt = 16 + (rng.below(8) * 16) as usize;
+        let out = 8 << rng.below(5) as usize;
+        at += rng.f64_unit() * 0.05;
+        coord.submit(prompt, out, at);
+    }
+    let done = coord.run();
+    let m = ServeMetrics::from_completions(&done);
+    println!(
+        "policy={} offload={}\n{m}",
+        policy.name(),
+        args.switch("offload")
+    );
+    Ok(())
+}

@@ -1,0 +1,214 @@
+//! Fig. 6(b): matrix-vector mapping.
+//!
+//! Matrix rows → `P_Ch × P_Sub` (channels, then S-ALU groups; a group's
+//! 16 register lanes hold 16 output rows), matrix columns → `P_Ba`
+//! (partial sums merged by the C-ALU). Weight layout per group: a GBL
+//! burst carries 16 consecutive rows' coefficients for one column, so
+//! the bank register's broadcast feeding method accumulates 16 outputs
+//! per MAC pass.
+
+use crate::config::SimConfig;
+use crate::pim::MacroOp;
+use crate::stats::Phase;
+
+/// Geometry of a GEMV tile, exposed for tests and the mapping explorer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemvGeometry {
+    /// Output rows owned by one pseudo-channel.
+    pub rows_per_pch: usize,
+    /// S-ALU groups that actually receive work (≤ P_Sub: a 16-row
+    /// output chunk is the minimum unit of subarray parallelism).
+    pub groups: usize,
+    /// 16-row output chunks per active S-ALU group.
+    pub chunks_per_group: usize,
+    /// Weight columns owned by one bank (+1 burst slot for the bias).
+    pub cols_per_bank: usize,
+    /// Total weight bursts per active S-ALU group.
+    pub bursts_per_group: u64,
+}
+
+/// Compute the Fig. 6(b) tile geometry.
+pub fn gemv_geometry(cfg: &SimConfig, rows: usize, cols: usize) -> GemvGeometry {
+    let p = cfg.parallelism;
+    let rows_per_pch = rows.div_ceil(p.p_ch);
+    let chunks_total = rows_per_pch.div_ceil(16).max(1);
+    let groups = p.p_sub.min(chunks_total);
+    let chunks_per_group = chunks_total.div_ceil(groups);
+    let cols_per_bank = cols.div_ceil(p.p_ba);
+    // +1 column slot per chunk for the bias burst.
+    let bursts_per_group = chunks_per_group as u64 * (cols_per_bank as u64 + 1);
+    GemvGeometry {
+        rows_per_pch,
+        groups,
+        chunks_per_group,
+        cols_per_bank,
+        bursts_per_group,
+    }
+}
+
+/// Lower a GEMV (decode path).
+pub fn map_gemv(cfg: &SimConfig, rows: usize, cols: usize, phase: Phase) -> Vec<MacroOp> {
+    let p = cfg.parallelism;
+    let g = gemv_geometry(cfg, rows, cols);
+    let cols_per_row = cfg.hbm.cols_per_row() as u64;
+    let rows_per_group = g.bursts_per_group.div_ceil(cols_per_row).max(1);
+    let mut ops = vec![MacroOp::WeightStream {
+        groups: g.groups,
+        rows_per_group,
+        cols_per_row: cols_per_row.min(g.bursts_per_group.max(1)),
+        // One register lane feeds 16 bursts; the unit reloads every 16.
+        reload_every: 16,
+        phase,
+    }];
+    // Merge the per-bank partials: every 16-row output chunk accumulates
+    // P_Ba banks in the C-ALU.
+    ops.push(MacroOp::CaluAccumulate {
+        chunks: g.rows_per_pch.div_ceil(16) as u64,
+        banks: p.p_ba,
+        phase: Phase::DataMovement,
+    });
+    // Write the merged output back, replicated into the banks, so it is
+    // in place as the next operator's input (Fig. 6(a) seamlessness).
+    ops.push(MacroOp::Broadcast {
+        bursts_per_bank: (g.rows_per_pch.div_ceil(16)) as u64,
+        phase: Phase::DataMovement,
+    });
+    ops
+}
+
+/// Lower a batched GEMV (summarization stage): same weight stream, but
+/// the element-wise feeding method services `batch` token vectors per
+/// burst, making the stream MAC-rate-bound instead of tCCDL-bound.
+pub fn map_gemm(
+    cfg: &SimConfig,
+    rows: usize,
+    cols: usize,
+    batch: usize,
+    phase: Phase,
+) -> Vec<MacroOp> {
+    assert!(batch >= 1 && batch <= 16);
+    let p = cfg.parallelism;
+    let g = gemv_geometry(cfg, rows, cols);
+    let cols_per_row = cfg.hbm.cols_per_row() as u64;
+    let rows_per_group = g.bursts_per_group.div_ceil(cols_per_row).max(1);
+    let stream_cols = cols_per_row.min(g.bursts_per_group.max(1));
+    // MAC passes per burst: 16 lanes × batch / (macs × 2 passes/cycle).
+    // At batch = 16 this is 16 cycles per burst vs tCCDL = 4: the §6.3
+    // "summarization is compute-bound on PIM" effect.
+    let macs_per_cycle = 2 * cfg.salu.macs_per_salu as u64;
+    let stall = (16 * batch as u64).div_ceil(macs_per_cycle);
+    let mut ops = Vec::new();
+    // Model the compute-bound stream as a weight stream plus explicit
+    // per-burst stalls (Sync) — the engine orders them equivalently in
+    // total time because the stream is steady-state.
+    ops.push(MacroOp::WeightStream {
+        groups: g.groups,
+        rows_per_group,
+        cols_per_row: stream_cols,
+        reload_every: 16,
+        phase,
+    });
+    let bursts = g.groups as u64 * rows_per_group * stream_cols;
+    let t_ccdl = cfg.timing.t_ccdl;
+    let stream_cycles_per_burst = (t_ccdl / p.p_sub as u64).max(1);
+    if stall > stream_cycles_per_burst {
+        ops.push(MacroOp::Sync {
+            cycles: bursts * (stall - stream_cycles_per_burst),
+            phase,
+        });
+    }
+    // Outputs: batch × rows_per_pch values to merge and broadcast.
+    ops.push(MacroOp::CaluAccumulate {
+        chunks: (batch * g.rows_per_pch).div_ceil(16) as u64,
+        banks: p.p_ba,
+        phase: Phase::DataMovement,
+    });
+    ops.push(MacroOp::Broadcast {
+        bursts_per_bank: (batch * g.rows_per_pch).div_ceil(16) as u64,
+        phase: Phase::DataMovement,
+    });
+    ops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::PimEngine;
+
+    #[test]
+    fn geometry_paper_gemv() {
+        // 1024×1024 at (16, 16, 4): 64 rows/pch, 1 chunk/group, 64+1
+        // bursts/group.
+        let cfg = SimConfig::paper();
+        let g = gemv_geometry(&cfg, 1024, 1024);
+        assert_eq!(g.rows_per_pch, 64);
+        assert_eq!(g.chunks_per_group, 1);
+        assert_eq!(g.cols_per_bank, 64);
+        assert_eq!(g.bursts_per_group, 65);
+    }
+
+    #[test]
+    fn geometry_ffn_and_lm_head() {
+        let cfg = SimConfig::paper();
+        let ffn1 = gemv_geometry(&cfg, 4096, 1024);
+        assert_eq!(ffn1.chunks_per_group, 4);
+        let lm = gemv_geometry(&cfg, 50257, 1024);
+        assert_eq!(lm.rows_per_pch, 3142); // ceil(50257/16)
+        assert_eq!(lm.chunks_per_group, 50);
+    }
+
+    #[test]
+    fn weight_traffic_covers_matrix() {
+        // Device-wide bursts × 32 B ≥ rows×cols×2 B.
+        let cfg = SimConfig::paper();
+        for (r, c) in [(1024, 1024), (4096, 1024), (1024, 4096), (50257, 1024)] {
+            let g = gemv_geometry(&cfg, r, c);
+            let device_bytes = g.bursts_per_group as usize
+                * cfg.parallelism.p_sub
+                * cfg.parallelism.p_ba
+                * cfg.parallelism.p_ch
+                * 32;
+            assert!(device_bytes >= r * c * 2, "({r},{c}): {device_bytes}");
+            assert!(device_bytes < r * c * 2 * 2, "({r},{c}) over-reads");
+        }
+    }
+
+    #[test]
+    fn gemm_slower_than_gemv_per_weight_pass_but_wins_per_token() {
+        let cfg = SimConfig::paper();
+        let run = |ops: &[MacroOp]| {
+            let mut e = PimEngine::new(&cfg);
+            e.execute(ops).unwrap().cycles
+        };
+        let gemv = run(&map_gemv(&cfg, 1024, 1024, Phase::Mha));
+        let gemm16 = run(&map_gemm(&cfg, 1024, 1024, 16, Phase::Mha));
+        // One batched pass costs more than one GEMV...
+        assert!(gemm16 > gemv, "gemm {gemm16} !> gemv {gemv}");
+        // ...but 16 tokens per pass beat 16 GEMV passes.
+        assert!(
+            gemm16 < gemv * 16,
+            "gemm {gemm16} !< 16×gemv {}",
+            gemv * 16
+        );
+    }
+
+    #[test]
+    fn gemv_includes_merge_and_writeback() {
+        let cfg = SimConfig::paper();
+        let ops = map_gemv(&cfg, 1024, 1024, Phase::Ffn);
+        assert!(ops
+            .iter()
+            .any(|o| matches!(o, MacroOp::CaluAccumulate { .. })));
+        assert!(ops.iter().any(|o| matches!(o, MacroOp::Broadcast { .. })));
+    }
+
+    #[test]
+    fn p_sub_1_runs_one_group() {
+        let cfg = SimConfig::paper().with_p_sub(1);
+        let ops = map_gemv(&cfg, 1024, 1024, Phase::Ffn);
+        match ops[0] {
+            MacroOp::WeightStream { groups, .. } => assert_eq!(groups, 1),
+            _ => panic!("first op must be the weight stream"),
+        }
+    }
+}

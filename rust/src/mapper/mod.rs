@@ -1,0 +1,117 @@
+//! The §3.2 data-mapping schemes: compiling GPT operators into PIM
+//! macro-op streams.
+//!
+//! Mapping parameters are `(P_Ch, P_Ba, P_Sub)`:
+//! * matrix-vector operations (Fig. 6(b)): matrix **rows** split over
+//!   channels and S-ALU groups, **columns** over banks, partial sums
+//!   merged by the C-ALU;
+//! * multi-head operations: **heads** on channels; K/V tokens
+//!   sequentially concatenated across banks (no concat data movement);
+//!   the two accumulation directions (Fig. 6(c)/(d)) + the two input
+//!   feeding methods eliminate all transposes;
+//! * non-linear functions (Fig. 6(a)): tiled to match the producer /
+//!   consumer layout so no reshapes are needed.
+
+mod gemv;
+mod multihead;
+mod nonlinear;
+mod sim;
+
+pub use gemv::{gemv_geometry, map_gemm, map_gemv, GemvGeometry};
+pub use multihead::{map_kv_append, map_qk, map_sv};
+pub use nonlinear::{map_embed, map_gelu, map_layernorm, map_residual, map_sample, map_softmax};
+pub use sim::{GenerationResult, GenerationSim};
+
+use crate::config::SimConfig;
+use crate::model::GptOp;
+use crate::pim::MacroOp;
+
+/// Lower one GPT operator into its macro-op stream.
+pub fn map_op(cfg: &SimConfig, op: &GptOp) -> Vec<MacroOp> {
+    match *op {
+        GptOp::Embed { d } => map_embed(cfg, d),
+        GptOp::LayerNorm { d } => map_layernorm(cfg, d),
+        GptOp::Gemv { rows, cols, phase } => map_gemv(cfg, rows, cols, phase),
+        GptOp::Gemm {
+            rows,
+            cols,
+            batch,
+            phase,
+        } => map_gemm(cfg, rows, cols, batch, phase),
+        GptOp::KvAppend { d } => map_kv_append(cfg, d),
+        GptOp::QkMultiHead {
+            heads,
+            d_head,
+            kv_len,
+        } => map_qk(cfg, heads, d_head, kv_len),
+        GptOp::Softmax { heads, kv_len } => map_softmax(cfg, heads, kv_len),
+        GptOp::SvMultiHead {
+            heads,
+            d_head,
+            kv_len,
+        } => map_sv(cfg, heads, d_head, kv_len),
+        GptOp::Gelu { d } => map_gelu(cfg, d),
+        GptOp::Residual { d } => map_residual(cfg, d),
+        GptOp::Sample { vocab } => map_sample(cfg, vocab),
+    }
+}
+
+/// Lower a whole operator sequence.
+pub fn map_ops(cfg: &SimConfig, ops: &[GptOp]) -> Vec<MacroOp> {
+    ops.iter().flat_map(|op| map_op(cfg, op)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gpt2;
+    use crate::stats::Phase;
+
+    #[test]
+    fn every_op_lowers_nonempty() {
+        let cfg = SimConfig::paper();
+        let ops = gpt2::decode_ops(&cfg.model, 8);
+        for op in &ops {
+            let mops = map_op(&cfg, op);
+            assert!(!mops.is_empty(), "{op:?} lowered to nothing");
+        }
+    }
+
+    #[test]
+    fn decode_stream_reads_all_weight_traffic() {
+        // The macro-op read traffic of one decode iteration must cover
+        // the model's weight bytes (per pseudo-channel share).
+        let cfg = SimConfig::paper();
+        let ops = gpt2::decode_ops(&cfg.model, 1);
+        let mops = map_ops(&cfg, &ops);
+        let bursts_per_bank: u64 = mops.iter().map(|m| m.read_bursts_per_bank()).sum();
+        let bytes_device = bursts_per_bank
+            * 32
+            * (cfg.hbm.banks_per_pch * cfg.hbm.pseudo_channels()) as u64;
+        let weight_bytes: usize = ops.iter().map(|o| o.weight_bytes()).sum();
+        assert!(
+            bytes_device as f64 >= weight_bytes as f64,
+            "device reads {bytes_device} < weights {weight_bytes}"
+        );
+        // ...but not wildly more (≤ 1.5×: overheads from rounding,
+        // rereads of intermediates, LUT fetches).
+        assert!(
+            (bytes_device as f64) < weight_bytes as f64 * 1.5,
+            "device reads {bytes_device} ≫ weights {weight_bytes}"
+        );
+    }
+
+    #[test]
+    fn phases_flow_through() {
+        let cfg = SimConfig::paper();
+        let mops = map_op(
+            &cfg,
+            &GptOp::Gemv {
+                rows: 1024,
+                cols: 1024,
+                phase: Phase::Ffn,
+            },
+        );
+        assert!(mops.iter().any(|m| m.phase() == Phase::Ffn));
+    }
+}

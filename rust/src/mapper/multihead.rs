@@ -1,0 +1,169 @@
+//! Fig. 6(c)/(d): multi-head operation mappings.
+//!
+//! Heads map to channels ("the heads are divided on each channel",
+//! §3.2.1); K/V token vectors are **sequentially concatenated across
+//! banks**, which makes KV-append a plain write (no concat movement).
+//! Q×Kᵀ accumulates across banks (Fig. 6(d), element-wise feeding);
+//! S×V accumulates in the S-ALU registers over each bank's tokens
+//! (Fig. 6(c), broadcast feeding) — the two directions are what remove
+//! the transpose.
+
+use crate::config::SimConfig;
+use crate::pim::MacroOp;
+use crate::stats::Phase;
+
+/// Heads per pseudo-channel.
+pub fn heads_per_pch(cfg: &SimConfig, heads: usize) -> usize {
+    heads.div_ceil(cfg.parallelism.p_ch)
+}
+
+/// KV tokens held by one bank.
+pub fn tokens_per_bank(cfg: &SimConfig, kv_len: usize) -> usize {
+    kv_len.div_ceil(cfg.parallelism.p_ba)
+}
+
+/// Append the current token's K and V head-slices to the banks.
+pub fn map_kv_append(cfg: &SimConfig, d: usize) -> Vec<MacroOp> {
+    let p = cfg.parallelism;
+    // Per pseudo-channel: this channel's heads' K and V slices.
+    let values = 2 * d.div_ceil(p.p_ch);
+    vec![MacroOp::Broadcast {
+        bursts_per_bank: values.div_ceil(16) as u64,
+        phase: Phase::Mha,
+    }]
+}
+
+/// Q×Kᵀ: stream each bank's K tokens past the S-ALUs with Q in the
+/// bank register (element-wise feeding), then C-ALU lane-reduce each
+/// score (Fig. 6(d) bank-direction accumulation).
+pub fn map_qk(cfg: &SimConfig, heads: usize, d_head: usize, kv_len: usize) -> Vec<MacroOp> {
+    let p = cfg.parallelism;
+    let h_pch = heads_per_pch(cfg, heads);
+    let t_bank = tokens_per_bank(cfg, kv_len);
+    let bursts_per_token = (d_head * 2).div_ceil(32) as u64;
+    // Tokens of a bank are split across the S-ALU groups.
+    let bursts_per_group =
+        (h_pch as u64 * t_bank as u64 * bursts_per_token).div_ceil(p.p_sub as u64);
+    let cols_per_row = cfg.hbm.cols_per_row() as u64;
+    let mut ops = vec![MacroOp::WeightStream {
+        groups: p.p_sub,
+        rows_per_group: bursts_per_group.div_ceil(cols_per_row).max(1),
+        cols_per_row: cols_per_row.min(bursts_per_group.max(1)),
+        reload_every: 16, // Q register chunk per 16 bursts
+        phase: Phase::Mha,
+    }];
+    // One C-ALU lane-reduce per score (kv_len × heads per channel).
+    ops.push(MacroOp::CaluReduce {
+        chunks: (h_pch * kv_len) as u64,
+        banks: 1,
+        phase: Phase::Mha,
+    });
+    // Scores written back tiled over the banks for softmax (Fig. 6(a)).
+    ops.push(MacroOp::Broadcast {
+        bursts_per_bank: (h_pch * kv_len).div_ceil(16) as u64,
+        phase: Phase::DataMovement,
+    });
+    ops
+}
+
+/// S×V: stream each bank's V tokens with the attention weights broadcast
+/// from the bank register (one lane per token), accumulating out[d_head]
+/// in the S-ALU registers (Fig. 6(c) subarray-direction accumulation).
+pub fn map_sv(cfg: &SimConfig, heads: usize, d_head: usize, kv_len: usize) -> Vec<MacroOp> {
+    let p = cfg.parallelism;
+    let h_pch = heads_per_pch(cfg, heads);
+    let t_bank = tokens_per_bank(cfg, kv_len);
+    let bursts_per_token = (d_head * 2).div_ceil(32) as u64;
+    let bursts_per_group =
+        (h_pch as u64 * t_bank as u64 * bursts_per_token).div_ceil(p.p_sub as u64);
+    let cols_per_row = cfg.hbm.cols_per_row() as u64;
+    let mut ops = vec![MacroOp::WeightStream {
+        groups: p.p_sub,
+        rows_per_group: bursts_per_group.div_ceil(cols_per_row).max(1),
+        cols_per_row: cols_per_row.min(bursts_per_group.max(1)),
+        // One s-lane serves one token (= bursts_per_token bursts); the
+        // register holds 16 tokens' weights.
+        reload_every: 16 * bursts_per_token,
+        phase: Phase::Mha,
+    }];
+    // Merge per-bank partial outputs: d_head lanes per head.
+    ops.push(MacroOp::CaluAccumulate {
+        chunks: (h_pch * d_head).div_ceil(16) as u64,
+        banks: p.p_ba,
+        phase: Phase::DataMovement,
+    });
+    // Heads live on different channels: reassemble the full attention
+    // output and re-broadcast it for the output projection (§3.2.1 "the
+    // output of the MHA is reshaped into a single channel ... then
+    // broadcasted across all channels").
+    ops.push(MacroOp::ChannelReshape {
+        bytes: (heads * d_head * 2) as u64,
+        phase: Phase::DataMovement,
+    });
+    ops.push(MacroOp::Broadcast {
+        bursts_per_bank: (heads * d_head).div_ceil(16) as u64,
+        phase: Phase::DataMovement,
+    });
+    ops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::PimEngine;
+
+    #[test]
+    fn paper_head_alignment() {
+        // GPT-2 medium: 16 heads on 16 pseudo-channels → exactly 1 each.
+        let cfg = SimConfig::paper();
+        assert_eq!(heads_per_pch(&cfg, 16), 1);
+        assert_eq!(tokens_per_bank(&cfg, 128), 8);
+    }
+
+    #[test]
+    fn qk_cost_grows_with_kv() {
+        let cfg = SimConfig::paper();
+        let run = |kv| {
+            let mut e = PimEngine::new(&cfg);
+            e.execute(&map_qk(&cfg, 16, 64, kv)).unwrap().cycles
+        };
+        let short = run(16);
+        let long = run(1024);
+        assert!(long > short * 4, "long={long} short={short}");
+    }
+
+    #[test]
+    fn sv_includes_reshape_and_broadcast() {
+        let cfg = SimConfig::paper();
+        let ops = map_sv(&cfg, 16, 64, 64);
+        assert!(ops
+            .iter()
+            .any(|o| matches!(o, MacroOp::ChannelReshape { .. })));
+        assert!(ops.iter().any(|o| matches!(o, MacroOp::Broadcast { .. })));
+    }
+
+    #[test]
+    fn kv_append_writes_both_k_and_v() {
+        let cfg = SimConfig::paper();
+        let ops = map_kv_append(&cfg, 1024);
+        match ops[0] {
+            MacroOp::Broadcast { bursts_per_bank, .. } => {
+                // 2 × 1024/16 values / 16 per burst = 8.
+                assert_eq!(bursts_per_bank, 8);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn kv_traffic_matches_stored_bytes() {
+        // QK must read ≥ the K bytes of this channel's heads.
+        let cfg = SimConfig::paper();
+        let kv = 256;
+        let ops = map_qk(&cfg, 16, 64, kv);
+        let read_bursts: u64 = ops.iter().map(|o| o.read_bursts_per_bank()).sum();
+        let device_bytes = read_bursts * 32 * (16 * 16) as u64;
+        let k_bytes = (16 * 64 * kv * 2) as u64;
+        assert!(device_bytes >= k_bytes, "{device_bytes} < {k_bytes}");
+    }
+}

@@ -1,0 +1,253 @@
+//! Fig. 6(a): non-linear-function and element-wise mappings.
+//!
+//! Vectors are tiled across banks in exactly the producer's output
+//! layout (and duplicated across channels when the consumer is a
+//! matrix-vector operation), so no data movement separates a non-linear
+//! function from its neighbors.
+
+use crate::config::SimConfig;
+use crate::pim::{LutMethod, MacroOp};
+use crate::stats::Phase;
+
+fn elems_per_bank(cfg: &SimConfig, n: usize) -> u64 {
+    n.div_ceil(cfg.parallelism.p_ba) as u64
+}
+
+/// Token embedding + positional add (one row read + element-wise add).
+pub fn map_embed(cfg: &SimConfig, d: usize) -> Vec<MacroOp> {
+    vec![
+        MacroOp::Elementwise {
+            elems_per_bank: elems_per_bank(cfg, d),
+            n_operands: 2,
+            phase: Phase::Embedding,
+        },
+        // Replicate the embedded vector into every bank as GEMV input.
+        MacroOp::Broadcast {
+            bursts_per_bank: d.div_ceil(16) as u64,
+            phase: Phase::Embedding,
+        },
+    ]
+}
+
+/// layerNorm: two S-ALU+C-ALU reductions (mean, variance), an rsqrt via
+/// LUT, then the affine pass (§3.2.1 dataflow).
+pub fn map_layernorm(cfg: &SimConfig, d: usize) -> Vec<MacroOp> {
+    let e = elems_per_bank(cfg, d);
+    let banks = cfg.parallelism.p_ba;
+    let nl = Phase::NonLinear;
+    vec![
+        // Local Σx in the S-ALUs, merged by the C-ALU tree.
+        MacroOp::Elementwise {
+            elems_per_bank: e,
+            n_operands: 1,
+            phase: nl,
+        },
+        MacroOp::CaluReduce {
+            chunks: 1,
+            banks,
+            phase: nl,
+        },
+        // Local Σ(x−μ)² then merge.
+        MacroOp::Elementwise {
+            elems_per_bank: e,
+            n_operands: 1,
+            phase: nl,
+        },
+        MacroOp::CaluReduce {
+            chunks: 1,
+            banks,
+            phase: nl,
+        },
+        // 1/σ via the rsqrt table (scalar — one 16-lane sweep).
+        MacroOp::LutSweep {
+            elems_per_bank: 16,
+            method: LutMethod::Embedded,
+            sections: cfg.lut.sections,
+            phase: nl,
+        },
+        // (x−μ)·(1/σ)·γ + β.
+        MacroOp::Elementwise {
+            elems_per_bank: e,
+            n_operands: 3,
+            phase: nl,
+        },
+    ]
+}
+
+/// Softmax over per-head score vectors (§3.2.1): max, LUT exp,
+/// reduce-sum, LUT reciprocal, scale.
+pub fn map_softmax(cfg: &SimConfig, heads: usize, kv_len: usize) -> Vec<MacroOp> {
+    let h_pch = heads.div_ceil(cfg.parallelism.p_ch);
+    let e = elems_per_bank(cfg, h_pch * kv_len);
+    let banks = cfg.parallelism.p_ba;
+    let nl = Phase::NonLinear;
+    vec![
+        // Per-bank max (S-ALU max op), merged per head by the C-ALU.
+        MacroOp::Elementwise {
+            elems_per_bank: e,
+            n_operands: 1,
+            phase: nl,
+        },
+        MacroOp::CaluReduce {
+            chunks: h_pch as u64,
+            banks,
+            phase: nl,
+        },
+        // exp(x − max) through the LUT-embedded subarray.
+        MacroOp::LutSweep {
+            elems_per_bank: e,
+            method: LutMethod::Embedded,
+            sections: cfg.lut.sections,
+            phase: nl,
+        },
+        // Σ exp merged per head.
+        MacroOp::Elementwise {
+            elems_per_bank: e,
+            n_operands: 1,
+            phase: nl,
+        },
+        MacroOp::CaluReduce {
+            chunks: h_pch as u64,
+            banks,
+            phase: nl,
+        },
+        // Reciprocal of the sum (scalar sweep per head).
+        MacroOp::LutSweep {
+            elems_per_bank: 16 * h_pch as u64,
+            method: LutMethod::Embedded,
+            sections: cfg.lut.sections,
+            phase: nl,
+        },
+        // Scale every exponential by 1/Σ.
+        MacroOp::Elementwise {
+            elems_per_bank: e,
+            n_operands: 1,
+            phase: nl,
+        },
+    ]
+}
+
+/// GELU over the FFN intermediate vector via the LUT-embedded subarray,
+/// with the configured method (Embedded unless an ablation overrides).
+pub fn map_gelu(cfg: &SimConfig, d: usize) -> Vec<MacroOp> {
+    map_gelu_with(cfg, d, LutMethod::Embedded)
+}
+
+/// GELU with an explicit LUT access method (the Fig. 13 ablation).
+pub fn map_gelu_with(cfg: &SimConfig, d: usize, method: LutMethod) -> Vec<MacroOp> {
+    vec![MacroOp::LutSweep {
+        elems_per_bank: elems_per_bank(cfg, d),
+        method,
+        sections: cfg.lut.sections,
+        phase: Phase::NonLinear,
+    }]
+}
+
+/// Residual addition of two resident vectors.
+pub fn map_residual(cfg: &SimConfig, d: usize) -> Vec<MacroOp> {
+    vec![MacroOp::Elementwise {
+        elems_per_bank: elems_per_bank(cfg, d),
+        n_operands: 2,
+        phase: Phase::Residual,
+    }]
+}
+
+/// Greedy sampling: per-bank max over the logit tile, C-ALU merge,
+/// cross-channel argmax on the buffer die, next-token sync.
+pub fn map_sample(cfg: &SimConfig, vocab: usize) -> Vec<MacroOp> {
+    let per_pch = vocab.div_ceil(cfg.parallelism.p_ch);
+    vec![
+        MacroOp::Elementwise {
+            elems_per_bank: elems_per_bank(cfg, per_pch),
+            n_operands: 1,
+            phase: Phase::LmHead,
+        },
+        MacroOp::CaluReduce {
+            chunks: 1,
+            banks: cfg.parallelism.p_ba,
+            phase: Phase::LmHead,
+        },
+        // Per-channel (max, index) pairs to the buffer die + final pick.
+        MacroOp::ChannelReshape {
+            bytes: (cfg.parallelism.p_ch * 4) as u64,
+            phase: Phase::LmHead,
+        },
+        // Token-id broadcast and PIM command-mode turnaround.
+        MacroOp::Sync {
+            cycles: 100,
+            phase: Phase::LmHead,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::PimEngine;
+
+    #[test]
+    fn layernorm_has_two_reductions_and_rsqrt() {
+        let cfg = SimConfig::paper();
+        let ops = map_layernorm(&cfg, 1024);
+        let reduces = ops
+            .iter()
+            .filter(|o| matches!(o, MacroOp::CaluReduce { .. }))
+            .count();
+        assert_eq!(reduces, 2);
+        assert!(ops.iter().any(|o| matches!(o, MacroOp::LutSweep { .. })));
+    }
+
+    #[test]
+    fn softmax_cost_scales_with_kv() {
+        let cfg = SimConfig::paper();
+        let run = |kv| {
+            let mut e = PimEngine::new(&cfg);
+            e.execute(&map_softmax(&cfg, 16, kv)).unwrap().cycles
+        };
+        assert!(run(1024) > run(32));
+    }
+
+    #[test]
+    fn gelu_is_one_lut_sweep() {
+        let cfg = SimConfig::paper();
+        let ops = map_gelu(&cfg, 4096);
+        assert_eq!(ops.len(), 1);
+        match ops[0] {
+            MacroOp::LutSweep {
+                elems_per_bank,
+                method,
+                ..
+            } => {
+                assert_eq!(elems_per_bank, 256); // 4096 / 16 banks
+                assert_eq!(method, LutMethod::Embedded);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn nonlinear_ops_are_cheap_vs_gemv() {
+        // The point of the architecture: LUT-based nonlinears must not
+        // dominate a decode layer.
+        let cfg = SimConfig::paper();
+        let run = |ops: &[MacroOp]| {
+            let mut e = PimEngine::new(&cfg);
+            e.execute(ops).unwrap().cycles
+        };
+        let gelu = run(&map_gelu(&cfg, 4096));
+        let gemv = run(&crate::mapper::map_gemv(
+            &cfg,
+            4096,
+            1024,
+            crate::stats::Phase::Ffn,
+        ));
+        assert!(gelu < gemv, "gelu {gelu} !< ffn gemv {gemv}");
+    }
+
+    #[test]
+    fn sample_ends_with_sync() {
+        let cfg = SimConfig::paper();
+        let ops = map_sample(&cfg, 50257);
+        assert!(matches!(ops.last(), Some(MacroOp::Sync { .. })));
+    }
+}

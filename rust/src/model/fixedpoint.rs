@@ -1,0 +1,204 @@
+//! 16-bit fixed-point arithmetic (§4.1).
+//!
+//! SAL-PIM computes in 16-bit fixed point with 32-bit accumulation
+//! registers; results are shift-truncated back to 16 bits on writeback
+//! ("the results are shifted and truncated by fraction bit using
+//! shifters"). This module is the single source of truth for that
+//! arithmetic — the functional simulator, the LUT generator and the
+//! Pallas kernels (via the same Q-format constants exported to
+//! `python/compile/kernels`) all use it, so L1 and L3 agree bit-exactly.
+
+/// A Q-format descriptor: `frac_bits` fractional bits in an i16.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QFormat {
+    pub frac_bits: u32,
+}
+
+/// The default activation/weight format used throughout: Q8.8
+/// (range ±128, resolution 1/256) — enough for layer activations after
+/// layerNorm and for the interpolation tables' slopes/intercepts.
+pub const Q8_8: QFormat = QFormat { frac_bits: 8 };
+
+/// Wider-range format used for logits / pre-softmax scores (Q12.4).
+pub const Q12_4: QFormat = QFormat { frac_bits: 4 };
+
+/// High-resolution unit-interval format for softmax exponentials (Q2.13).
+pub const Q2_13: QFormat = QFormat { frac_bits: 13 };
+
+/// Unit-interval format for softmax reciprocals (Q0.15): 1/Σexp ∈ (0, 1].
+pub const Q0_15: QFormat = QFormat { frac_bits: 15 };
+
+impl QFormat {
+    /// Scale factor 2^frac_bits.
+    pub fn scale(&self) -> f64 {
+        (1i64 << self.frac_bits) as f64
+    }
+
+    /// Smallest representable step.
+    pub fn epsilon(&self) -> f64 {
+        1.0 / self.scale()
+    }
+
+    /// Largest representable value.
+    pub fn max_value(&self) -> f64 {
+        i16::MAX as f64 / self.scale()
+    }
+
+    /// Quantize an f64 to the raw i16 representation (round-to-nearest,
+    /// saturating — the hardware's clamp on writeback).
+    pub fn quantize(&self, x: f64) -> i16 {
+        let v = (x * self.scale()).round();
+        v.clamp(i16::MIN as f64, i16::MAX as f64) as i16
+    }
+
+    /// Dequantize a raw i16 back to f64.
+    pub fn dequantize(&self, raw: i16) -> f64 {
+        raw as f64 / self.scale()
+    }
+
+    /// Multiply two raw values into a raw 32-bit product with
+    /// 2×frac_bits fractional bits (what the MAC array produces).
+    pub fn mul_raw(&self, a: i16, b: i16) -> i32 {
+        a as i32 * b as i32
+    }
+
+    /// Shift-truncate a 32-bit accumulator (2×frac_bits) back to a 16-bit
+    /// value in this format — the S-ALU writeback shifter. Arithmetic
+    /// right shift (truncation toward −∞, as a hardware shifter does),
+    /// then saturation.
+    pub fn writeback(&self, acc: i32) -> i16 {
+        let shifted = acc >> self.frac_bits;
+        shifted.clamp(i16::MIN as i32, i16::MAX as i32) as i16
+    }
+
+    /// Fixed-point multiply with writeback: `(a*b) >> frac`, saturated.
+    pub fn mul(&self, a: i16, b: i16) -> i16 {
+        self.writeback(self.mul_raw(a, b))
+    }
+
+    /// Saturating add in the 16-bit domain (element-wise S-ALU add).
+    pub fn add(&self, a: i16, b: i16) -> i16 {
+        (a as i32 + b as i32).clamp(i16::MIN as i32, i16::MAX as i32) as i16
+    }
+
+    /// Dot product of raw slices into a 32-bit accumulator (no
+    /// intermediate truncation — the S-ALU accumulates at 32 bits).
+    /// Saturates the accumulator like the register file would wrap;
+    /// we saturate because GPT-2 activations never approach ±2^31 in
+    /// Q8.8×Q8.8 with d ≤ 4096 terms.
+    pub fn dot_raw(&self, a: &[i16], b: &[i16]) -> i32 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc: i64 = 0;
+        for (&x, &w) in a.iter().zip(b.iter()) {
+            acc += x as i64 * w as i64;
+        }
+        acc.clamp(i32::MIN as i64, i32::MAX as i64) as i32
+    }
+
+    /// Full fixed-point GEMV row: dot + writeback (+ optional bias raw).
+    pub fn gemv_row(&self, x: &[i16], w_row: &[i16], bias: i16) -> i16 {
+        let acc = self.dot_raw(x, w_row);
+        self.add(self.writeback(acc), bias)
+    }
+
+    /// Quantize a float slice.
+    pub fn quantize_vec(&self, xs: &[f64]) -> Vec<i16> {
+        xs.iter().map(|&x| self.quantize(x)).collect()
+    }
+
+    /// Dequantize a raw slice.
+    pub fn dequantize_vec(&self, raw: &[i16]) -> Vec<f64> {
+        raw.iter().map(|&r| self.dequantize(r)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::forall;
+
+    #[test]
+    fn quantize_roundtrip_small_error() {
+        let q = Q8_8;
+        for x in [-3.5, -0.004, 0.0, 0.2, 1.0, 100.25] {
+            let err = (q.dequantize(q.quantize(x)) - x).abs();
+            assert!(err <= q.epsilon() / 2.0 + 1e-12, "x={x} err={err}");
+        }
+    }
+
+    #[test]
+    fn quantize_saturates() {
+        let q = Q8_8;
+        assert_eq!(q.quantize(1e9), i16::MAX);
+        assert_eq!(q.quantize(-1e9), i16::MIN);
+    }
+
+    #[test]
+    fn mul_matches_float() {
+        let q = Q8_8;
+        let a = q.quantize(1.5);
+        let b = q.quantize(-2.25);
+        let p = q.dequantize(q.mul(a, b));
+        assert!((p - (-3.375)).abs() < 0.01, "got {p}");
+    }
+
+    #[test]
+    fn writeback_truncates_toward_neg_inf() {
+        let q = Q8_8;
+        // -1 raw (tiny negative) >> 8 = -1, not 0: hardware shifters
+        // truncate toward −∞.
+        assert_eq!(q.writeback(-1), -1);
+        assert_eq!(q.writeback(255), 0);
+        assert_eq!(q.writeback(256), 1);
+    }
+
+    #[test]
+    fn writeback_saturates() {
+        let q = Q8_8;
+        assert_eq!(q.writeback(i32::MAX), i16::MAX);
+        assert_eq!(q.writeback(i32::MIN), i16::MIN);
+    }
+
+    #[test]
+    fn dot_matches_float_within_quantization() {
+        let q = Q8_8;
+        forall(200, |g| {
+            let n = g.usize_in(1, 64);
+            let xs: Vec<f64> = (0..n).map(|_| g.f64_in(-2.0, 2.0)).collect();
+            let ws: Vec<f64> = (0..n).map(|_| g.f64_in(-2.0, 2.0)).collect();
+            let xq = q.quantize_vec(&xs);
+            let wq = q.quantize_vec(&ws);
+            let fx = q.dequantize(q.writeback(q.dot_raw(&xq, &wq)));
+            let fl: f64 = xs.iter().zip(&ws).map(|(a, b)| a * b).sum();
+            // Error bound: n products each with ~eps relative error + final
+            // truncation.
+            let bound = (n as f64 + 2.0) * 2.0 * 2.0 * q.epsilon();
+            assert!((fx - fl).abs() <= bound, "n={n} fx={fx} fl={fl}");
+        });
+    }
+
+    #[test]
+    fn add_saturates() {
+        let q = Q8_8;
+        assert_eq!(q.add(i16::MAX, 1), i16::MAX);
+        assert_eq!(q.add(i16::MIN, -1), i16::MIN);
+        assert_eq!(q.add(100, -30), 70);
+    }
+
+    #[test]
+    fn gemv_row_includes_bias() {
+        let q = Q8_8;
+        let x = q.quantize_vec(&[1.0, 2.0]);
+        let w = q.quantize_vec(&[3.0, 4.0]);
+        let b = q.quantize(0.5);
+        let y = q.dequantize(q.gemv_row(&x, &w, b));
+        assert!((y - 11.5).abs() < 0.05, "got {y}");
+    }
+
+    #[test]
+    fn formats_differ() {
+        assert_eq!(Q8_8.scale(), 256.0);
+        assert_eq!(Q12_4.scale(), 16.0);
+        assert!(Q12_4.max_value() > Q8_8.max_value());
+    }
+}

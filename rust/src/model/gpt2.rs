@@ -1,0 +1,258 @@
+//! GPT-2 operator-graph construction (Fig. 2 structure).
+//!
+//! Builds the exact operator sequence SAL-PIM executes end-to-end: the
+//! embedding layer, 24 identical decoder layers (layerNorm → MHA →
+//! residual → layerNorm → FFN → residual) and the LM head.
+
+use super::ops::GptOp;
+use crate::config::ModelConfig;
+use crate::stats::Phase;
+
+/// Operator sequence of one decode iteration (generation stage) with
+/// `kv_len` tokens already in the KV store (including this one).
+pub fn decode_ops(m: &ModelConfig, kv_len: usize) -> Vec<GptOp> {
+    assert!(kv_len >= 1, "kv_len includes the current token");
+    let d = m.d_model;
+    let mut ops = vec![GptOp::Embed { d }];
+    for _ in 0..m.n_layers {
+        ops.extend_from_slice(&layer_ops(m, kv_len, 1));
+    }
+    // Final layerNorm + LM head + sampling.
+    ops.push(GptOp::LayerNorm { d });
+    ops.push(GptOp::Gemv {
+        rows: m.vocab,
+        cols: d,
+        phase: Phase::LmHead,
+    });
+    ops.push(GptOp::Sample { vocab: m.vocab });
+    ops
+}
+
+/// Operator sequence of the summarization (prefill) stage over `n_in`
+/// input tokens. Tokens are processed in batches of up to 16 (the
+/// element-wise feeding width); attention inside a batch sees the KV
+/// store grown to the batch's end position (a conservative bound for the
+/// causal mask).
+pub fn prefill_ops(m: &ModelConfig, n_in: usize) -> Vec<GptOp> {
+    assert!(n_in >= 1);
+    let d = m.d_model;
+    let mut ops = Vec::new();
+    let mut done = 0;
+    while done < n_in {
+        let batch = (n_in - done).min(16);
+        let kv_end = done + batch;
+        ops.push(GptOp::Embed { d });
+        for _ in 0..m.n_layers {
+            ops.extend_from_slice(&batch_layer_ops(m, kv_end, batch));
+        }
+        done += batch;
+    }
+    // The summarization stage emits one token: final LN + LM head once.
+    ops.push(GptOp::LayerNorm { d });
+    ops.push(GptOp::Gemv {
+        rows: m.vocab,
+        cols: d,
+        phase: Phase::LmHead,
+    });
+    ops.push(GptOp::Sample { vocab: m.vocab });
+    ops
+}
+
+/// One decoder layer for a single token (decode path).
+fn layer_ops(m: &ModelConfig, kv_len: usize, _batch: usize) -> Vec<GptOp> {
+    let d = m.d_model;
+    vec![
+        GptOp::LayerNorm { d },
+        // Q, K, V projections.
+        GptOp::Gemv {
+            rows: d,
+            cols: d,
+            phase: Phase::Mha,
+        },
+        GptOp::Gemv {
+            rows: d,
+            cols: d,
+            phase: Phase::Mha,
+        },
+        GptOp::Gemv {
+            rows: d,
+            cols: d,
+            phase: Phase::Mha,
+        },
+        GptOp::KvAppend { d },
+        GptOp::QkMultiHead {
+            heads: m.n_heads,
+            d_head: m.d_head(),
+            kv_len,
+        },
+        GptOp::Softmax {
+            heads: m.n_heads,
+            kv_len,
+        },
+        GptOp::SvMultiHead {
+            heads: m.n_heads,
+            d_head: m.d_head(),
+            kv_len,
+        },
+        // Output projection + residual.
+        GptOp::Gemv {
+            rows: d,
+            cols: d,
+            phase: Phase::Mha,
+        },
+        GptOp::Residual { d },
+        GptOp::LayerNorm { d },
+        // FFN.
+        GptOp::Gemv {
+            rows: m.d_ff,
+            cols: d,
+            phase: Phase::Ffn,
+        },
+        GptOp::Gelu { d: m.d_ff },
+        GptOp::Gemv {
+            rows: d,
+            cols: m.d_ff,
+            phase: Phase::Ffn,
+        },
+        GptOp::Residual { d },
+    ]
+}
+
+/// One decoder layer for a `batch`-token prefill step.
+fn batch_layer_ops(m: &ModelConfig, kv_end: usize, batch: usize) -> Vec<GptOp> {
+    let d = m.d_model;
+    let mut ops = vec![GptOp::LayerNorm { d: d * batch }];
+    for _ in 0..3 {
+        ops.push(GptOp::Gemm {
+            rows: d,
+            cols: d,
+            batch,
+            phase: Phase::Mha,
+        });
+    }
+    ops.push(GptOp::KvAppend { d: d * batch });
+    // Per-token attention against the causal prefix (bounded by kv_end).
+    for _ in 0..batch {
+        ops.push(GptOp::QkMultiHead {
+            heads: m.n_heads,
+            d_head: m.d_head(),
+            kv_len: kv_end,
+        });
+        ops.push(GptOp::Softmax {
+            heads: m.n_heads,
+            kv_len: kv_end,
+        });
+        ops.push(GptOp::SvMultiHead {
+            heads: m.n_heads,
+            d_head: m.d_head(),
+            kv_len: kv_end,
+        });
+    }
+    ops.push(GptOp::Gemm {
+        rows: d,
+        cols: d,
+        batch,
+        phase: Phase::Mha,
+    });
+    ops.push(GptOp::Residual { d: d * batch });
+    ops.push(GptOp::LayerNorm { d: d * batch });
+    ops.push(GptOp::Gemm {
+        rows: m.d_ff,
+        cols: d,
+        batch,
+        phase: Phase::Ffn,
+    });
+    ops.push(GptOp::Gelu { d: m.d_ff * batch });
+    ops.push(GptOp::Gemm {
+        rows: d,
+        cols: m.d_ff,
+        batch,
+        phase: Phase::Ffn,
+    });
+    ops.push(GptOp::Residual { d: d * batch });
+    ops
+}
+
+/// Total weight bytes streamed by a decode iteration — must equal the
+/// model's per-token traffic (invariant test).
+pub fn decode_weight_bytes(m: &ModelConfig, kv_len: usize) -> usize {
+    decode_ops(m, kv_len).iter().map(|o| o.weight_bytes()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    #[test]
+    fn decode_op_counts() {
+        let m = ModelConfig::gpt2_medium();
+        let ops = decode_ops(&m, 10);
+        // 1 embed + 24 × 15 layer ops + LN + LM head + sample.
+        assert_eq!(ops.len(), 1 + 24 * 15 + 3);
+        assert!(matches!(ops[0], GptOp::Embed { .. }));
+        assert!(matches!(ops.last(), Some(GptOp::Sample { .. })));
+    }
+
+    #[test]
+    fn decode_streams_all_weights() {
+        // A decode iteration must stream every decoder weight + LM head:
+        // 4d² + 2·d·dff per layer (+biases) + vocab·d.
+        let m = ModelConfig::gpt2_medium();
+        let bytes = decode_weight_bytes(&m, 1);
+        let d = m.d_model;
+        let min_expected = 2 * (m.n_layers * (4 * d * d + 2 * d * m.d_ff) + m.vocab * d);
+        assert!(bytes >= min_expected, "{bytes} < {min_expected}");
+        // Within 2 % (biases + KV reads at kv=1).
+        assert!((bytes as f64) < min_expected as f64 * 1.02);
+    }
+
+    #[test]
+    fn kv_reads_grow_with_context() {
+        let m = ModelConfig::gpt2_medium();
+        assert!(decode_weight_bytes(&m, 1024) > decode_weight_bytes(&m, 1));
+    }
+
+    #[test]
+    fn prefill_batches_by_16() {
+        let m = ModelConfig::gpt2_medium();
+        let ops32 = prefill_ops(&m, 32);
+        let embeds = ops32
+            .iter()
+            .filter(|o| matches!(o, GptOp::Embed { .. }))
+            .count();
+        assert_eq!(embeds, 2); // two batches of 16
+
+        let ops33 = prefill_ops(&m, 33);
+        let embeds33 = ops33
+            .iter()
+            .filter(|o| matches!(o, GptOp::Embed { .. }))
+            .count();
+        assert_eq!(embeds33, 3); // 16 + 16 + 1
+    }
+
+    #[test]
+    fn prefill_reuses_weights_via_gemm() {
+        let m = ModelConfig::gpt2_medium();
+        let ops = prefill_ops(&m, 32);
+        // Prefill must not contain plain decode GEMVs for the layers
+        // (only the final LM head GEMV).
+        let gemvs = ops
+            .iter()
+            .filter(|o| matches!(o, GptOp::Gemv { .. }))
+            .count();
+        assert_eq!(gemvs, 1);
+        let gemms = ops
+            .iter()
+            .filter(|o| matches!(o, GptOp::Gemm { .. }))
+            .count();
+        assert_eq!(gemms, 2 * 24 * 6); // 2 batches × 24 layers × 6 GEMMs
+    }
+
+    #[test]
+    fn mini_model_graph_builds() {
+        let m = ModelConfig::gpt2_mini();
+        let ops = decode_ops(&m, 4);
+        assert_eq!(ops.len(), 1 + 2 * 15 + 3);
+    }
+}

@@ -1,0 +1,12 @@
+//! GPT-2 model layer: operator IR, graph construction, fixed-point
+//! arithmetic, synthetic weights and the functional (value-computing)
+//! executors.
+
+pub mod fixedpoint;
+pub mod functional;
+pub mod gpt2;
+pub mod ops;
+pub mod weights;
+
+pub use functional::{FloatGpt, FunctionalGpt};
+pub use ops::GptOp;

@@ -1,0 +1,132 @@
+//! The GPT operator IR the mapper consumes.
+//!
+//! One [`GptOp`] is a logical model operator (§2.1's decomposition into
+//! matrix-vector, multi-head and non-linear computations); the mapper
+//! lowers each into PIM macro-ops under the §3.2 data-mapping schemes.
+
+use crate::stats::Phase;
+
+/// A logical GPT operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GptOp {
+    /// Token + positional embedding lookup/add (decode: one token).
+    Embed { d: usize },
+    /// Layer normalization over a d-vector (mean, σ, rsqrt, affine).
+    LayerNorm { d: usize },
+    /// y[rows] = W[rows × cols] · x[cols] + b — the GEMV workhorse.
+    Gemv {
+        rows: usize,
+        cols: usize,
+        phase: Phase,
+    },
+    /// Batched GEMV (summarization stage): `batch ≤ 16` token vectors
+    /// share one weight stream via the element-wise feeding method
+    /// (weights read once per batch, MAC-rate bound).
+    Gemm {
+        rows: usize,
+        cols: usize,
+        batch: usize,
+        phase: Phase,
+    },
+    /// Append this token's K,V vectors to the per-bank concatenated
+    /// KV store (§3.2's sequential bank mapping).
+    KvAppend { d: usize },
+    /// scores[kv_len] = Q · Kᵀ per head (Fig. 6(d) direction).
+    QkMultiHead {
+        heads: usize,
+        d_head: usize,
+        kv_len: usize,
+    },
+    /// Softmax over per-head score vectors: max-subtract, LUT exp,
+    /// reduce-sum, LUT reciprocal, scale.
+    Softmax { heads: usize, kv_len: usize },
+    /// out[d_head] = Σ_t s[t] · V[t] per head (Fig. 6(c) direction).
+    SvMultiHead {
+        heads: usize,
+        d_head: usize,
+        kv_len: usize,
+    },
+    /// GELU activation over a d-vector via LUT interpolation.
+    Gelu { d: usize },
+    /// Residual addition of two d-vectors.
+    Residual { d: usize },
+    /// Greedy sampling: argmax over the logit vector.
+    Sample { vocab: usize },
+}
+
+impl GptOp {
+    /// Phase attribution for breakdown reporting.
+    pub fn phase(&self) -> Phase {
+        match self {
+            GptOp::Embed { .. } => Phase::Embedding,
+            GptOp::LayerNorm { .. } | GptOp::Softmax { .. } | GptOp::Gelu { .. } => {
+                Phase::NonLinear
+            }
+            GptOp::Gemv { phase, .. } | GptOp::Gemm { phase, .. } => *phase,
+            GptOp::QkMultiHead { .. } | GptOp::SvMultiHead { .. } | GptOp::KvAppend { .. } => {
+                Phase::Mha
+            }
+            GptOp::Residual { .. } => Phase::Residual,
+            GptOp::Sample { .. } => Phase::LmHead,
+        }
+    }
+
+    /// Weight bytes this operator streams (16-bit parameters), for
+    /// traffic invariants.
+    pub fn weight_bytes(&self) -> usize {
+        match *self {
+            GptOp::Gemv { rows, cols, .. } => (rows * cols + rows) * 2,
+            GptOp::Gemm { rows, cols, .. } => (rows * cols + rows) * 2,
+            GptOp::QkMultiHead {
+                heads,
+                d_head,
+                kv_len,
+            } => heads * d_head * kv_len * 2,
+            GptOp::SvMultiHead {
+                heads,
+                d_head,
+                kv_len,
+            } => heads * d_head * kv_len * 2,
+            _ => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_assigned() {
+        assert_eq!(GptOp::Gelu { d: 4096 }.phase(), Phase::NonLinear);
+        assert_eq!(
+            GptOp::Gemv {
+                rows: 1,
+                cols: 1,
+                phase: Phase::Ffn
+            }
+            .phase(),
+            Phase::Ffn
+        );
+        assert_eq!(
+            GptOp::QkMultiHead {
+                heads: 16,
+                d_head: 64,
+                kv_len: 10
+            }
+            .phase(),
+            Phase::Mha
+        );
+    }
+
+    #[test]
+    fn weight_bytes_counts_bias() {
+        let op = GptOp::Gemv {
+            rows: 4,
+            cols: 8,
+            phase: Phase::Ffn,
+        };
+        assert_eq!(op.weight_bytes(), (32 + 4) * 2);
+        assert_eq!(GptOp::Residual { d: 100 }.weight_bytes(), 0);
+    }
+}

@@ -1,0 +1,138 @@
+//! Functional model of the bank-level unit (§4.3, Fig. 8).
+//!
+//! Holds the 16 × 16-bit bank-level register, implements the two input
+//! feeding methods (element-wise vs broadcast, §4.3), and the decoding
+//! units that turn register data into column-select / LUT-select signals
+//! for LUT-embedded subarrays.
+
+use super::salu::LANES;
+use crate::interp::LutTable;
+
+/// How the bank-level register feeds the S-ALU MACs (§4.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeedMode {
+    /// Each register lane feeds its own MAC (element-wise computations
+    /// and the Q×Kᵀ direction that avoids transposition).
+    ElementWise,
+    /// One register lane is broadcast to all MACs (GEMV accumulation).
+    Broadcast(usize),
+}
+
+/// The bank-level unit: register + decoders.
+#[derive(Debug, Clone)]
+pub struct BankUnit {
+    pub register: [i16; LANES],
+}
+
+impl BankUnit {
+    pub fn new() -> Self {
+        BankUnit {
+            register: [0; LANES],
+        }
+    }
+
+    /// Load 16 input values (from the C-ALU broadcast path or memory).
+    pub fn load(&mut self, data: &[i16]) {
+        for (i, &v) in data.iter().take(LANES).enumerate() {
+            self.register[i] = v;
+        }
+        for i in data.len()..LANES {
+            self.register[i] = 0;
+        }
+    }
+
+    /// Produce the S-ALU's second operand under a feeding mode.
+    pub fn feed(&self, mode: FeedMode) -> [i16; LANES] {
+        match mode {
+            FeedMode::ElementWise => self.register,
+            FeedMode::Broadcast(lane) => [self.register[lane % LANES]; LANES],
+        }
+    }
+
+    /// The column decoder (16 × 5-to-32 in Table 2): decode each register
+    /// lane into the column-select signal for its MAT — i.e. each value's
+    /// interpolation section. This is what makes 16 *different* LUT
+    /// entries arrive in one RD.
+    pub fn decode_sections(&self, table: &LutTable) -> [usize; LANES] {
+        let mut out = [0usize; LANES];
+        for i in 0..LANES {
+            out[i] = table.section_of(self.register[i]);
+        }
+        out
+    }
+
+    /// The sub-sel decoder (16 × 1-to-2 in Table 2): which LUT-embedded
+    /// subarray holds each lane's section when one row cannot store the
+    /// whole table. Returns (subarray_index, section_within_subarray).
+    pub fn decode_lut_select(
+        &self,
+        table: &LutTable,
+        sections_per_subarray: usize,
+    ) -> [(usize, usize); LANES] {
+        let sections = self.decode_sections(table);
+        let mut out = [(0usize, 0usize); LANES];
+        for i in 0..LANES {
+            out[i] = (
+                sections[i] / sections_per_subarray,
+                sections[i] % sections_per_subarray,
+            );
+        }
+        out
+    }
+}
+
+impl Default for BankUnit {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp::NonLinFn;
+    use crate::model::fixedpoint::Q8_8;
+
+    #[test]
+    fn load_pads_with_zero() {
+        let mut u = BankUnit::new();
+        u.load(&[1, 2, 3]);
+        assert_eq!(u.register[0], 1);
+        assert_eq!(u.register[2], 3);
+        assert_eq!(u.register[3], 0);
+        assert_eq!(u.register[15], 0);
+    }
+
+    #[test]
+    fn broadcast_feed_replicates_lane() {
+        let mut u = BankUnit::new();
+        u.load(&[10, 20, 30]);
+        assert_eq!(u.feed(FeedMode::Broadcast(1)), [20; LANES]);
+        assert_eq!(u.feed(FeedMode::ElementWise)[2], 30);
+    }
+
+    #[test]
+    fn section_decode_matches_table() {
+        let t = LutTable::build(NonLinFn::Gelu, 64, Q8_8, Q8_8);
+        let mut u = BankUnit::new();
+        let xs: Vec<i16> = (-8..8).map(|i| Q8_8.quantize(i as f64 + 0.5)).collect();
+        u.load(&xs);
+        let secs = u.decode_sections(&t);
+        for (i, &raw) in xs.iter().enumerate() {
+            assert_eq!(secs[i], t.section_of(raw));
+        }
+        // Sections must be strictly increasing for increasing inputs here.
+        assert!(secs.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn lut_select_splits_across_subarrays() {
+        let t = LutTable::build(NonLinFn::Gelu, 64, Q8_8, Q8_8);
+        let mut u = BankUnit::new();
+        u.load(&[Q8_8.quantize(-7.9), Q8_8.quantize(7.9)]);
+        let sel = u.decode_lut_select(&t, 32); // table split over 2 subarrays
+        assert_eq!(sel[0].0, 0); // low section → first LUT subarray
+        assert_eq!(sel[1].0, 1); // high section → second LUT subarray
+        assert!(sel[0].1 < 32 && sel[1].1 < 32);
+    }
+}

@@ -1,0 +1,159 @@
+//! Functional model of the channel-level ALU (§4.4, Fig. 10).
+//!
+//! Two 16-lane vector registers, two 16-bit scalar registers, and sixteen
+//! configurable adders acting either as a per-lane accumulator or as an
+//! adder tree (reduce-sum). Accumulation happens at 32-bit precision in
+//! the model (the hardware accumulates 16-bit lanes with carry retention
+//! across the two vector registers; 32-bit is the bit-growth-safe
+//! equivalent the paper's register pairing provides).
+
+use super::salu::LANES;
+
+/// The C-ALU of one channel.
+#[derive(Debug, Clone)]
+pub struct Calu {
+    /// Vector accumulator (the paired channel vector registers).
+    pub vreg: [i32; LANES],
+    /// Scalar result registers.
+    pub sreg: [i32; 2],
+}
+
+impl Calu {
+    pub fn new() -> Self {
+        Calu {
+            vreg: [0; LANES],
+            sreg: [0; 2],
+        }
+    }
+
+    /// Clear the vector accumulator.
+    pub fn clear(&mut self) {
+        self.vreg = [0; LANES];
+    }
+
+    /// Accumulator mode: add one bank's 16-lane partial into the vector
+    /// register.
+    pub fn accumulate(&mut self, partial: &[i32; LANES]) {
+        for i in 0..LANES {
+            self.vreg[i] = self.vreg[i].saturating_add(partial[i]);
+        }
+    }
+
+    /// Accumulate a 16-bit lane vector (memory-sourced partials).
+    pub fn accumulate_i16(&mut self, partial: &[i16; LANES]) {
+        for i in 0..LANES {
+            self.vreg[i] = self.vreg[i].saturating_add(partial[i] as i32);
+        }
+    }
+
+    /// Adder-tree mode: reduce-sum the vector register into scalar
+    /// register `which`, returning the sum.
+    pub fn reduce_sum(&mut self, which: usize) -> i32 {
+        // Pairwise tree, exactly as 16 adders in 4 levels would compute.
+        let mut level: Vec<i64> = self.vreg.iter().map(|&v| v as i64).collect();
+        while level.len() > 1 {
+            level = level
+                .chunks(2)
+                .map(|p| p[0] + if p.len() > 1 { p[1] } else { 0 })
+                .collect();
+        }
+        let sum = level[0].clamp(i32::MIN as i64, i32::MAX as i64) as i32;
+        self.sreg[which % 2] = sum;
+        sum
+    }
+
+    /// Max-reduce (used when merging per-bank maxima for softmax).
+    pub fn reduce_max(&mut self, which: usize) -> i32 {
+        let m = *self.vreg.iter().max().unwrap();
+        self.sreg[which % 2] = m;
+        m
+    }
+
+    /// Broadcast value: what gets written back to all banks.
+    pub fn broadcast(&self, which: usize) -> i32 {
+        self.sreg[which % 2]
+    }
+
+    /// Current vector register shifted-truncated to 16-bit lanes (the
+    /// writeback to memory after accumulation, `shift` fraction bits).
+    pub fn vreg_writeback(&self, shift: u32) -> [i16; LANES] {
+        let mut out = [0i16; LANES];
+        for i in 0..LANES {
+            out[i] = (self.vreg[i] >> shift).clamp(i16::MIN as i32, i16::MAX as i32) as i16;
+        }
+        out
+    }
+}
+
+impl Default for Calu {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::forall;
+
+    #[test]
+    fn accumulate_then_reduce() {
+        let mut c = Calu::new();
+        c.accumulate(&[1; LANES]);
+        c.accumulate(&[2; LANES]);
+        assert_eq!(c.vreg[0], 3);
+        assert_eq!(c.reduce_sum(0), 48);
+        assert_eq!(c.broadcast(0), 48);
+    }
+
+    #[test]
+    fn tree_reduce_equals_linear_sum() {
+        forall(300, |g| {
+            let mut c = Calu::new();
+            let vals: Vec<i32> = (0..LANES).map(|_| g.i32_in(-100_000, 100_000)).collect();
+            for i in 0..LANES {
+                c.vreg[i] = vals[i];
+            }
+            let tree = c.reduce_sum(1);
+            let linear: i64 = vals.iter().map(|&v| v as i64).sum();
+            assert_eq!(tree as i64, linear);
+        });
+    }
+
+    #[test]
+    fn reduce_max_finds_maximum() {
+        let mut c = Calu::new();
+        c.vreg[3] = 999;
+        c.vreg[9] = -5;
+        assert_eq!(c.reduce_max(0), 999);
+    }
+
+    #[test]
+    fn accumulate_saturates() {
+        let mut c = Calu::new();
+        c.accumulate(&[i32::MAX; LANES]);
+        c.accumulate(&[i32::MAX; LANES]);
+        assert_eq!(c.vreg[0], i32::MAX);
+    }
+
+    #[test]
+    fn writeback_shifts_and_clamps() {
+        let mut c = Calu::new();
+        c.vreg[0] = 512;
+        c.vreg[1] = i32::MAX;
+        let wb = c.vreg_writeback(8);
+        assert_eq!(wb[0], 2);
+        assert_eq!(wb[1], i16::MAX);
+    }
+
+    #[test]
+    fn scalar_registers_independent() {
+        let mut c = Calu::new();
+        c.vreg = [1; LANES];
+        c.reduce_sum(0);
+        c.vreg = [2; LANES];
+        c.reduce_sum(1);
+        assert_eq!(c.broadcast(0), 16);
+        assert_eq!(c.broadcast(1), 32);
+    }
+}

@@ -1,0 +1,705 @@
+//! The PIM timing engine: lowers macro-ops to DRAM command sequences on
+//! the cycle-accurate controller.
+//!
+//! One engine simulates one pseudo-channel; the paper's mapping gives all
+//! pseudo-channels identical command streams (weights are sharded evenly,
+//! §3.2), so the engine's clock *is* device time.
+//!
+//! Two scheduling policies exist for weight streams:
+//! * conservative (default): ACT → stream → PRE strictly in order, the
+//!   row-transition latency is exposed;
+//! * `opt_prefetch`: the next row's ACT is issued to the group's
+//!   alternate subarray *while the current row streams* (SALP
+//!   double-buffering), hiding tRCD — the §Perf optimization.
+
+use super::isa::{LutMethod, MacroOp};
+use crate::config::SimConfig;
+use crate::dram::{ChannelController, CmdTarget, DramCmd, TimingError};
+use crate::stats::{CmdKind, Stats};
+
+/// Timing engine for one pseudo-channel.
+pub struct PimEngine {
+    pub cfg: SimConfig,
+    pub ctl: ChannelController,
+    /// Enable SALP row-prefetch double-buffering in weight streams.
+    pub opt_prefetch: bool,
+    /// First subarray of each S-ALU group.
+    group_base: Vec<usize>,
+    /// LUT-embedded subarrays holding slopes (W) and intercepts (B).
+    lut_w_su: usize,
+    lut_b_su: usize,
+    /// Second pair of LUT subarrays (the paper provisions four; the
+    /// Select fallback alternates pairs to dodge tCCDL serialization).
+    lut_w2_su: usize,
+    lut_b2_su: usize,
+    /// Scratch subarrays for intermediate vectors (io / elementwise).
+    io_su: [usize; 4],
+    /// Row cursor per subarray (synthetic placement for timing runs).
+    row_cursor: Vec<usize>,
+    rows_per_subarray: usize,
+}
+
+impl PimEngine {
+    pub fn new(cfg: &SimConfig) -> Self {
+        let gs = cfg.subarrays_per_group();
+        assert!(gs >= 6, "subarray group too small: {gs}");
+        let n_su = cfg.hbm.subarrays_per_bank;
+        let n_lut = cfg.lut.num_lut_subarrays;
+        let group_base: Vec<usize> = (0..cfg.salu.max_p_sub).map(|g| g * gs).collect();
+        PimEngine {
+            ctl: ChannelController::new(cfg),
+            opt_prefetch: false,
+            group_base,
+            lut_w_su: n_su - n_lut,
+            lut_b_su: n_su - n_lut + 1,
+            lut_w2_su: n_su - n_lut + 2.min(n_lut - 1),
+            lut_b2_su: n_su - n_lut + 3.min(n_lut - 1),
+            // Scratch vectors live at the top of group 0's range so they
+            // never collide with the double-buffer subarrays (base, base+1).
+            io_su: [gs - 1, gs - 2, gs - 3, gs - 4],
+            row_cursor: vec![0; n_su],
+            rows_per_subarray: cfg.hbm.rows_per_subarray,
+            cfg: cfg.clone(),
+        }
+    }
+
+    /// Reset timing state between measurement runs.
+    pub fn reset(&mut self) {
+        self.ctl.reset();
+        self.row_cursor.iter_mut().for_each(|r| *r = 0);
+    }
+
+    fn next_row(&mut self, su: usize) -> usize {
+        let r = self.row_cursor[su];
+        self.row_cursor[su] = (r + 1) % self.rows_per_subarray;
+        r
+    }
+
+    /// Execute a macro-op stream; per-op cycles are attributed to the
+    /// op's phase. Returns the accumulated statistics (cycles = total
+    /// elapsed pseudo-channel time including final data drain).
+    pub fn execute(&mut self, ops: &[MacroOp]) -> Result<Stats, TimingError> {
+        let mut stats = Stats::new();
+        let setup = self.cfg.timing.pim_op_setup as i64;
+        for op in ops {
+            let before = self.ctl.clock;
+            // FIM/AiM-style macro-command setup: the host controller
+            // issues mode switches + operand descriptors per PIM op.
+            self.ctl.clock += setup;
+            self.exec_op(*op, &mut stats)?;
+            let delta = (self.ctl.clock - before).max(0) as u64;
+            stats.add_phase_cycles(op.phase(), delta);
+        }
+        // Drain: the last column command's data is still in flight.
+        let drain = (self.cfg.timing.t_cl + self.cfg.timing.burst_cycles()) as u64;
+        if let Some(op) = ops.last() {
+            stats.add_phase_cycles(op.phase(), drain);
+        }
+        // Refresh: tRFC stolen every tREFI, amortized over the run and
+        // attributed to data movement.
+        let refresh = (stats.cycles as f64 * self.cfg.timing.refresh_overhead()) as u64;
+        if refresh > 0 {
+            self.ctl.clock += refresh as i64;
+            stats.add_phase_cycles(crate::stats::Phase::DataMovement, refresh);
+        }
+        Ok(stats)
+    }
+
+    fn exec_op(&mut self, op: MacroOp, stats: &mut Stats) -> Result<(), TimingError> {
+        match op {
+            MacroOp::WeightStream {
+                groups,
+                rows_per_group,
+                cols_per_row,
+                reload_every,
+                ..
+            } => self.weight_stream(groups, rows_per_group, cols_per_row, reload_every, stats),
+            MacroOp::LutSweep {
+                elems_per_bank,
+                method,
+                sections,
+                ..
+            } => self.lut_sweep(elems_per_bank, method, sections, stats),
+            MacroOp::CaluAccumulate { chunks, banks, .. } => {
+                self.calu_transfer(chunks, banks, false, stats);
+                Ok(())
+            }
+            MacroOp::CaluReduce { chunks, banks, .. } => {
+                self.calu_transfer(chunks, banks, true, stats);
+                Ok(())
+            }
+            MacroOp::Broadcast { bursts_per_bank, .. } => self.broadcast(bursts_per_bank, stats),
+            MacroOp::Elementwise {
+                elems_per_bank,
+                n_operands,
+                ..
+            } => self.elementwise(elems_per_bank, n_operands, stats),
+            MacroOp::ChannelReshape { bytes, .. } => {
+                // One 32 B flit per cycle over the buffer-die interconnect
+                // plus a fixed hop latency.
+                let cycles = bytes.div_ceil(32) + 20;
+                self.ctl.clock += cycles as i64;
+                stats.external_bytes += bytes;
+                Ok(())
+            }
+            MacroOp::Sync { cycles, .. } => {
+                self.ctl.clock += cycles as i64;
+                Ok(())
+            }
+        }
+    }
+
+    /// §3.1 hot loop: `groups` S-ALU groups stream weight rows in
+    /// lockstep, MACs hidden under the column cadence.
+    fn weight_stream(
+        &mut self,
+        groups: usize,
+        rows_per_group: u64,
+        cols_per_row: u64,
+        reload_every: u64,
+        stats: &mut Stats,
+    ) -> Result<(), TimingError> {
+        assert!(groups >= 1 && groups <= self.group_base.len());
+        assert!(cols_per_row <= self.cfg.hbm.cols_per_row() as u64);
+        let all = CmdTarget::AllBanks;
+        // Conservative path double-buffers two subarrays per group; the
+        // prefetch path triple-buffers so the prefetched ACT's target was
+        // precharged two rows ago (no tRP stall on the command).
+        let bufs = if self.opt_prefetch { 3 } else { 2 };
+        let su_of = |engine: &Self, g: usize, r: u64| -> usize {
+            engine.group_base[g] + (r % bufs) as usize
+        };
+        // Activate row 0 of every group.
+        for g in 0..groups {
+            let su = su_of(self, g, 0);
+            let row = self.next_row(su);
+            self.ctl.issue(
+                DramCmd::Act {
+                    target: all,
+                    subarray: su,
+                    row,
+                },
+                stats,
+            )?;
+        }
+        for r in 0..rows_per_group {
+            let sus: Vec<usize> = (0..groups).map(|g| su_of(self, g, r)).collect();
+            if self.opt_prefetch && r + 1 < rows_per_group {
+                // Issue next row's ACTs before streaming: tRCD hides
+                // under the current stream (different subarray).
+                for g in 0..groups {
+                    let su = su_of(self, g, r + 1);
+                    let row = self.next_row(su);
+                    self.ctl.issue(
+                        DramCmd::Act {
+                            target: all,
+                            subarray: su,
+                            row,
+                        },
+                        stats,
+                    )?;
+                }
+            }
+            // Stream the row, stalling one bus slot per input-register
+            // reload (the bank-level unit fetches the next 16 input
+            // values from the C-ALU broadcast path).
+            if reload_every == 0 || reload_every >= cols_per_row {
+                self.ctl.stream_interleaved(&sus, cols_per_row, false, stats)?;
+                if reload_every != 0 {
+                    stats.count_cmd(CmdKind::PimOp, 1);
+                    self.ctl.clock += 1;
+                }
+            } else {
+                let mut done = 0;
+                while done < cols_per_row {
+                    let seg = reload_every.min(cols_per_row - done);
+                    stats.count_cmd(CmdKind::PimOp, 1);
+                    self.ctl.clock += 1; // register-load command slot
+                    self.ctl.stream_interleaved(&sus, seg, false, stats)?;
+                    done += seg;
+                }
+            }
+            // Close the streamed row; activate the next one (conservative
+            // path only — prefetch already activated it).
+            for (g, &su) in sus.iter().enumerate() {
+                self.ctl.issue(
+                    DramCmd::Pre {
+                        target: all,
+                        subarray: su,
+                    },
+                    stats,
+                )?;
+                if !self.opt_prefetch && r + 1 < rows_per_group {
+                    let nsu = su_of(self, g, r + 1);
+                    let row = self.next_row(nsu);
+                    self.ctl.issue(
+                        DramCmd::Act {
+                            target: all,
+                            subarray: nsu,
+                            row,
+                        },
+                        stats,
+                    )?;
+                }
+            }
+        }
+        // MAC micro-ops executed: one per lane per burst.
+        let bursts = groups as u64 * rows_per_group * cols_per_row;
+        stats.count_cmd(CmdKind::PimOp, bursts * self.cfg.salu.lanes as u64);
+        Ok(())
+    }
+
+    /// Fig. 9 LUT-embedded-subarray sweep (or the Fig. 13 fallbacks).
+    fn lut_sweep(
+        &mut self,
+        elems_per_bank: u64,
+        method: LutMethod,
+        sections: usize,
+        stats: &mut Stats,
+    ) -> Result<(), TimingError> {
+        if elems_per_bank == 0 {
+            return Ok(());
+        }
+        let all = CmdTarget::AllBanks;
+        let lanes = 16u64;
+        let elems_per_row = (self.cfg.hbm.row_bytes / 2) as u64; // 16-bit elems
+        let mut remaining = elems_per_bank;
+        while remaining > 0 {
+            let batch = remaining.min(elems_per_row);
+            remaining -= batch;
+            let chunks = batch.div_ceil(lanes);
+            let (src, dst) = (self.io_su[0], self.io_su[1]);
+            // ACT source, destination, W and B rows (Fig. 9 step 1); the
+            // Select fallback additionally opens the second LUT pair.
+            let mut act_list = vec![src, dst, self.lut_w_su, self.lut_b_su];
+            if method == LutMethod::Select {
+                for su in [self.lut_w2_su, self.lut_b2_su] {
+                    if !act_list.contains(&su) {
+                        act_list.push(su);
+                    }
+                }
+            }
+            for &su in &act_list {
+                let row = self.next_row(su);
+                self.ctl.issue(
+                    DramCmd::Act {
+                        target: all,
+                        subarray: su,
+                        row,
+                    },
+                    stats,
+                )?;
+            }
+            match method {
+                LutMethod::Embedded => {
+                    // Per 16-element chunk: RD src / RD W / RD B / WR dst.
+                    // Four distinct subarrays → the bus sustains one
+                    // command per cycle with tCCDL satisfied per subarray.
+                    for c in 0..chunks {
+                        self.ctl.stream_interleaved(
+                            &[src, self.lut_w_su, self.lut_b_su],
+                            1,
+                            false,
+                            stats,
+                        )?;
+                        let _ = c;
+                        self.ctl.stream_interleaved(&[dst], 1, true, stats)?;
+                    }
+                    stats.count_cmd(CmdKind::PimOp, chunks * lanes);
+                }
+                LutMethod::Select => {
+                    // Decode each element and fetch its W/B individually;
+                    // consecutive elements' sections land in alternating
+                    // LUT subarray pairs, so reads pipeline at bus rate.
+                    for _ in 0..chunks {
+                        self.ctl.stream_interleaved(&[src], 1, false, stats)?;
+                        for e in 0..lanes {
+                            let (w, b) = if e % 2 == 0 {
+                                (self.lut_w_su, self.lut_b_su)
+                            } else {
+                                (self.lut_w2_su, self.lut_b2_su)
+                            };
+                            self.ctl.stream_interleaved(&[w, b], 1, false, stats)?;
+                        }
+                        self.ctl.stream_interleaved(&[dst], 1, true, stats)?;
+                    }
+                    stats.count_cmd(CmdKind::PimOp, chunks * lanes);
+                }
+                LutMethod::Scan => {
+                    // Stream the whole W/B region past the register for
+                    // every chunk; the S-ALU compare/select of 16 lanes ×
+                    // 16 scanned entries per burst is MAC-rate-bound.
+                    let region_bursts = 2 * (sections as u64).div_ceil(lanes);
+                    let compare_cycles_per_burst =
+                        (lanes * lanes) / (2 * self.cfg.salu.macs_per_salu as u64);
+                    for _ in 0..chunks {
+                        self.ctl.stream_interleaved(&[src], 1, false, stats)?;
+                        for _ in 0..region_bursts {
+                            self.ctl.stream_interleaved(
+                                &[self.lut_w_su, self.lut_b_su],
+                                1,
+                                false,
+                                stats,
+                            )?;
+                            // Compute-bound select stalls the stream.
+                            self.ctl.clock += compare_cycles_per_burst as i64;
+                        }
+                        self.ctl.stream_interleaved(&[dst], 1, true, stats)?;
+                    }
+                    stats.count_cmd(CmdKind::PimOp, chunks * lanes * sections as u64);
+                }
+            }
+            // Fig. 9 step 4: precharge everything we opened.
+            for &su in &act_list {
+                self.ctl.issue(
+                    DramCmd::Pre {
+                        target: all,
+                        subarray: su,
+                    },
+                    stats,
+                )?;
+            }
+        }
+        Ok(())
+    }
+
+    /// S-ALU-register → TSV → C-ALU transfers: `chunks` 16-lane chunks
+    /// from each of `banks` banks, accumulated (or reduce-summed) by the
+    /// configurable adders. Transfers ride the shared channel IO at the
+    /// tCCDS cadence; the adder tree is pipelined behind it.
+    fn calu_transfer(&mut self, chunks: u64, banks: usize, reduce: bool, stats: &mut Stats) {
+        let t_ccds = self.cfg.timing.t_ccds as i64;
+        let n = chunks * banks as u64;
+        self.ctl.clock += n as i64 * t_ccds;
+        if reduce {
+            // Adder-tree latency + scalar broadcast command.
+            self.ctl.clock += self.cfg.calu.tree_depth() as i64 + 1;
+        } else {
+            // Accumulator writeback latency (pipelined; pay once).
+            self.ctl.clock += 1;
+        }
+        stats.count_cmd(CmdKind::CaluOp, n);
+        stats.external_bytes += n * 32;
+    }
+
+    /// All-bank WR stream of input/intermediate data into every bank.
+    fn broadcast(&mut self, bursts_per_bank: u64, stats: &mut Stats) -> Result<(), TimingError> {
+        let all = CmdTarget::AllBanks;
+        let cols = self.cfg.hbm.cols_per_row() as u64;
+        let mut remaining = bursts_per_bank;
+        while remaining > 0 {
+            let batch = remaining.min(cols);
+            remaining -= batch;
+            let su = self.io_su[2];
+            let row = self.next_row(su);
+            self.ctl.issue(
+                DramCmd::Act {
+                    target: all,
+                    subarray: su,
+                    row,
+                },
+                stats,
+            )?;
+            self.ctl.stream_cols(all, su, batch, true, stats)?;
+            self.ctl.issue(
+                DramCmd::Pre {
+                    target: all,
+                    subarray: su,
+                },
+                stats,
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Element-wise S-ALU pass: `n_operands` reads + one write per
+    /// 16-lane chunk, on distinct scratch subarrays.
+    fn elementwise(
+        &mut self,
+        elems_per_bank: u64,
+        n_operands: u32,
+        stats: &mut Stats,
+    ) -> Result<(), TimingError> {
+        if elems_per_bank == 0 {
+            return Ok(());
+        }
+        let all = CmdTarget::AllBanks;
+        let lanes = 16u64;
+        let n_ops = (n_operands as usize).clamp(1, 3);
+        let elems_per_row = (self.cfg.hbm.row_bytes / 2) as u64;
+        let mut remaining = elems_per_bank;
+        while remaining > 0 {
+            let batch = remaining.min(elems_per_row);
+            remaining -= batch;
+            let chunks = batch.div_ceil(lanes);
+            let reads: Vec<usize> = self.io_su[..n_ops].to_vec();
+            let dst = self.io_su[3];
+            for &su in reads.iter().chain(std::iter::once(&dst)) {
+                let row = self.next_row(su);
+                self.ctl.issue(
+                    DramCmd::Act {
+                        target: all,
+                        subarray: su,
+                        row,
+                    },
+                    stats,
+                )?;
+            }
+            for _ in 0..chunks {
+                self.ctl.stream_interleaved(&reads, 1, false, stats)?;
+                self.ctl.stream_interleaved(&[dst], 1, true, stats)?;
+            }
+            stats.count_cmd(CmdKind::PimOp, chunks * lanes);
+            for &su in reads.iter().chain(std::iter::once(&dst)) {
+                self.ctl.issue(
+                    DramCmd::Pre {
+                        target: all,
+                        subarray: su,
+                    },
+                    stats,
+                )?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::Phase;
+
+    fn engine() -> PimEngine {
+        PimEngine::new(&SimConfig::paper())
+    }
+
+    fn ws(groups: usize, rows: u64, cols: u64) -> MacroOp {
+        MacroOp::WeightStream {
+            groups,
+            rows_per_group: rows,
+            cols_per_row: cols,
+            reload_every: 0,
+            phase: Phase::Ffn,
+        }
+    }
+
+    #[test]
+    fn weight_stream_basic_cycle_count() {
+        let mut e = engine();
+        let st = e.execute(&[ws(4, 2, 32)]).unwrap();
+        // 4 groups × 2 rows × 32 cols = 256 bursts; bus-bound ≈ 1/cycle
+        // plus ACT/PRE/tRCD overheads.
+        assert!(st.cycles >= 256, "cycles {}", st.cycles);
+        assert!(st.cycles < 500, "cycles {}", st.cycles);
+        assert_eq!(st.commands[&CmdKind::Rd], 256 * 16);
+        // 256 bursts × 16 banks × 32 B
+        assert_eq!(st.internal_bytes, 256 * 16 * 32);
+    }
+
+    #[test]
+    fn psub_scaling_speeds_up_streams() {
+        // Same total bursts, 4 groups vs 1 group: ≈4× faster (§6.2).
+        let mut e4 = engine();
+        let t4 = e4.execute(&[ws(4, 8, 32)]).unwrap().cycles;
+        let mut e1 = engine();
+        let t1 = e1.execute(&[ws(1, 32, 32)]).unwrap().cycles;
+        let ratio = t1 as f64 / t4 as f64;
+        assert!(ratio > 3.0 && ratio < 4.5, "ratio {ratio}");
+    }
+
+    #[test]
+    fn prefetch_hides_row_transitions() {
+        let op = ws(4, 16, 32);
+        let mut cons = engine();
+        let t_cons = cons.execute(&[op]).unwrap().cycles;
+        let mut pre = engine();
+        pre.opt_prefetch = true;
+        let t_pre = pre.execute(&[op]).unwrap().cycles;
+        assert!(t_pre < t_cons, "prefetch {t_pre} !< conservative {t_cons}");
+    }
+
+    #[test]
+    fn achieved_bandwidth_near_peak_at_psub4() {
+        // A long 4-group stream should achieve ≳70 % of the 8 TB/s peak
+        // even on the conservative schedule.
+        let cfg = SimConfig::paper();
+        let mut e = engine();
+        let st = e.execute(&[ws(4, 64, 32)]).unwrap();
+        // Engine simulates one pseudo-channel; scale traffic to device.
+        let device_bytes = st.internal_bytes * cfg.hbm.pseudo_channels() as u64;
+        let bw = device_bytes as f64 / st.seconds(cfg.timing.tck_ns);
+        let peak = cfg.peak_internal_bandwidth();
+        assert!(bw / peak > 0.7, "bw {:.2} TB/s vs peak {:.2} TB/s", bw / 1e12, peak / 1e12);
+        assert!(bw <= peak * 1.001);
+    }
+
+    #[test]
+    fn lut_methods_rank_as_fig13() {
+        let n = 1024; // elements per bank
+        let run = |method| {
+            let mut e = engine();
+            e.execute(&[MacroOp::LutSweep {
+                elems_per_bank: n,
+                method,
+                sections: 64,
+                phase: Phase::NonLinear,
+            }])
+            .unwrap()
+            .cycles
+        };
+        let emb = run(LutMethod::Embedded);
+        let sel = run(LutMethod::Select);
+        let scan = run(LutMethod::Scan);
+        assert!(emb < sel && sel < scan, "emb={emb} sel={sel} scan={scan}");
+        // Fig. 13: LUT-embedded wins over the best alternative at large
+        // sizes (paper: 3.57×; our Select model lands somewhat higher
+        // because each element pays two serialized LUT fetches).
+        let ratio = sel as f64 / emb as f64;
+        assert!(ratio > 2.5 && ratio < 10.0, "select/embedded = {ratio}");
+    }
+
+    #[test]
+    fn lut_sweep_counts_pim_ops() {
+        let mut e = engine();
+        let st = e
+            .execute(&[MacroOp::LutSweep {
+                elems_per_bank: 256,
+                method: LutMethod::Embedded,
+                sections: 64,
+                phase: Phase::NonLinear,
+            }])
+            .unwrap();
+        assert_eq!(st.commands[&CmdKind::PimOp], 256);
+        assert!(st.commands[&CmdKind::Wr] > 0);
+    }
+
+    #[test]
+    fn calu_costs_scale_with_chunks_and_banks() {
+        let mut e = engine();
+        let small = e
+            .execute(&[MacroOp::CaluAccumulate {
+                chunks: 4,
+                banks: 16,
+                phase: Phase::DataMovement,
+            }])
+            .unwrap()
+            .cycles;
+        let mut e2 = engine();
+        let big = e2
+            .execute(&[MacroOp::CaluAccumulate {
+                chunks: 16,
+                banks: 16,
+                phase: Phase::DataMovement,
+            }])
+            .unwrap()
+            .cycles;
+        assert!(big > small * 2, "big={big} small={small}");
+    }
+
+    #[test]
+    fn broadcast_spans_rows() {
+        let mut e = engine();
+        // 64 bursts = 2 rows worth of broadcast.
+        let st = e
+            .execute(&[MacroOp::Broadcast {
+                bursts_per_bank: 64,
+                phase: Phase::DataMovement,
+            }])
+            .unwrap();
+        assert_eq!(st.commands[&CmdKind::Wr], 64 * 16);
+        assert_eq!(st.commands[&CmdKind::Act], 2 * 16);
+    }
+
+    #[test]
+    fn elementwise_residual_costs_two_reads() {
+        let mut e1 = engine();
+        let one = e1
+            .execute(&[MacroOp::Elementwise {
+                elems_per_bank: 512,
+                n_operands: 1,
+                phase: Phase::Residual,
+            }])
+            .unwrap()
+            .cycles;
+        let mut e2 = engine();
+        let two = e2
+            .execute(&[MacroOp::Elementwise {
+                elems_per_bank: 512,
+                n_operands: 2,
+                phase: Phase::Residual,
+            }])
+            .unwrap()
+            .cycles;
+        assert!(two > one, "two={two} one={one}");
+    }
+
+    #[test]
+    fn phase_attribution_covers_all_cycles() {
+        let mut e = engine();
+        let ops = [
+            ws(4, 2, 32),
+            MacroOp::LutSweep {
+                elems_per_bank: 64,
+                method: LutMethod::Embedded,
+                sections: 64,
+                phase: Phase::NonLinear,
+            },
+            MacroOp::CaluReduce {
+                chunks: 1,
+                banks: 16,
+                phase: Phase::DataMovement,
+            },
+        ];
+        let st = e.execute(&ops).unwrap();
+        let sum: u64 = st.phase_cycles.values().sum();
+        assert_eq!(sum, st.cycles);
+        assert!(st.phase_cycles.contains_key(&Phase::Ffn));
+        assert!(st.phase_cycles.contains_key(&Phase::NonLinear));
+    }
+
+    #[test]
+    fn reload_stalls_add_bus_slots() {
+        let mut a = engine();
+        let no_reload = a.execute(&[ws(4, 4, 32)]).unwrap().cycles;
+        let mut b = engine();
+        let with_reload = b
+            .execute(&[MacroOp::WeightStream {
+                groups: 4,
+                rows_per_group: 4,
+                cols_per_row: 32,
+                reload_every: 8,
+                phase: Phase::Ffn,
+            }])
+            .unwrap()
+            .cycles;
+        assert!(with_reload > no_reload);
+    }
+
+    #[test]
+    fn reset_allows_reuse() {
+        let mut e = engine();
+        let a = e.execute(&[ws(2, 2, 16)]).unwrap().cycles;
+        e.reset();
+        let b = e.execute(&[ws(2, 2, 16)]).unwrap().cycles;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sync_and_reshape_advance_clock() {
+        let mut e = engine();
+        let st = e
+            .execute(&[
+                MacroOp::Sync {
+                    cycles: 100,
+                    phase: Phase::DataMovement,
+                },
+                MacroOp::ChannelReshape {
+                    bytes: 2048,
+                    phase: Phase::DataMovement,
+                },
+            ])
+            .unwrap();
+        assert!(st.cycles >= 100 + 64 + 20);
+        assert_eq!(st.external_bytes, 2048);
+    }
+}

@@ -1,0 +1,257 @@
+//! The PIM macro-op instruction set.
+//!
+//! The mapper (§3.2 data-mapping schemes) compiles GPT operators into
+//! streams of these macro-ops; the engine lowers each macro-op into
+//! concrete DRAM command sequences on the cycle-accurate controller.
+//! A macro-op describes *per-pseudo-channel* work — all pseudo-channels
+//! execute identical streams in the paper's mapping, so one stream is
+//! simulated and it represents device time.
+
+use crate::stats::Phase;
+use std::fmt;
+
+/// How a LUT lookup is realized in DRAM (§6.1, Fig. 13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LutMethod {
+    /// The paper's LUT-embedded subarray: per-MAT column-select signals
+    /// let one RD fetch 16 different sections' entries (Fig. 9 flow).
+    Embedded,
+    /// Case 1 "Scan": read the whole slope/intercept region for every
+    /// register-full of data and select matches on the fly.
+    Scan,
+    /// Case 2 "Select": decode each element's address and fetch its
+    /// slope/intercept one element at a time.
+    Select,
+}
+
+impl LutMethod {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LutMethod::Embedded => "lut-embedded",
+            LutMethod::Scan => "scan",
+            LutMethod::Select => "select",
+        }
+    }
+}
+
+/// One macro-op of per-pseudo-channel PIM work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MacroOp {
+    /// Multi-group weight-streaming MAC — the §3.1 GEMV/attention hot
+    /// loop. Each of `groups` S-ALU subarray groups sweeps
+    /// `rows_per_group` DRAM rows of `cols_per_row` GBL bursts,
+    /// interleaved on the command bus, with MACs hidden under tCCDL.
+    /// The bank-level register is re-loaded with fresh input every
+    /// `reload_every` bursts (0 = never, e.g. attention score streams).
+    WeightStream {
+        groups: usize,
+        rows_per_group: u64,
+        cols_per_row: u64,
+        reload_every: u64,
+        phase: Phase,
+    },
+    /// LUT-based linear interpolation over `elems_per_bank` values in
+    /// every bank (Fig. 9): ACT source/dest/W/B rows, then per 16-element
+    /// chunk RD src / RD W / RD B / WR dst, S-ALU multiply-add hidden.
+    LutSweep {
+        elems_per_bank: u64,
+        method: LutMethod,
+        sections: usize,
+        phase: Phase,
+    },
+    /// C-ALU accumulation of per-bank partial sums: `chunks` 16-lane
+    /// chunks, each merged across `banks` banks (§4.4).
+    CaluAccumulate {
+        chunks: u64,
+        banks: usize,
+        phase: Phase,
+    },
+    /// C-ALU reduce-sum of per-bank 16-lane partials into one scalar
+    /// (layerNorm mean/σ, softmax denominator), then scalar broadcast.
+    CaluReduce {
+        chunks: u64,
+        banks: usize,
+        phase: Phase,
+    },
+    /// Broadcast `bursts_per_bank` GBL bursts of input/intermediate data
+    /// into every bank (all-bank WR stream).
+    Broadcast {
+        bursts_per_bank: u64,
+        phase: Phase,
+    },
+    /// Element-wise S-ALU pass over `elems_per_bank` values per bank with
+    /// `n_operands` memory operands (residual add = 2, scale = 1, …).
+    Elementwise {
+        elems_per_bank: u64,
+        n_operands: u32,
+        phase: Phase,
+    },
+    /// Move `bytes` across the buffer-die interconnect (inter-channel
+    /// reshape of the MHA output, §3.2.1).
+    ChannelReshape { bytes: u64, phase: Phase },
+    /// Fixed-cost synchronization / command-mode switch.
+    Sync { cycles: u64, phase: Phase },
+}
+
+impl MacroOp {
+    pub fn phase(&self) -> Phase {
+        match *self {
+            MacroOp::WeightStream { phase, .. }
+            | MacroOp::LutSweep { phase, .. }
+            | MacroOp::CaluAccumulate { phase, .. }
+            | MacroOp::CaluReduce { phase, .. }
+            | MacroOp::Broadcast { phase, .. }
+            | MacroOp::Elementwise { phase, .. }
+            | MacroOp::ChannelReshape { phase, .. }
+            | MacroOp::Sync { phase, .. } => phase,
+        }
+    }
+
+    /// Total GBL bursts this op reads from memory per bank (for quick
+    /// traffic estimates and mapper invariant checks).
+    pub fn read_bursts_per_bank(&self) -> u64 {
+        match *self {
+            MacroOp::WeightStream {
+                groups,
+                rows_per_group,
+                cols_per_row,
+                ..
+            } => groups as u64 * rows_per_group * cols_per_row,
+            MacroOp::LutSweep {
+                elems_per_bank,
+                method,
+                sections,
+                ..
+            } => {
+                let chunks = elems_per_bank.div_ceil(16);
+                match method {
+                    LutMethod::Embedded => chunks * 3, // src + W + B
+                    LutMethod::Select => chunks + 2 * elems_per_bank,
+                    LutMethod::Scan => chunks * (1 + 2 * sections as u64 / 16),
+                }
+            }
+            MacroOp::Elementwise {
+                elems_per_bank,
+                n_operands,
+                ..
+            } => elems_per_bank.div_ceil(16) * n_operands as u64,
+            _ => 0,
+        }
+    }
+}
+
+impl fmt::Display for MacroOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            MacroOp::WeightStream {
+                groups,
+                rows_per_group,
+                cols_per_row,
+                reload_every,
+                phase,
+            } => write!(
+                f,
+                "WSTREAM g={groups} rows={rows_per_group} cols={cols_per_row} reload={reload_every} [{}]",
+                phase.name()
+            ),
+            MacroOp::LutSweep {
+                elems_per_bank,
+                method,
+                sections,
+                phase,
+            } => write!(
+                f,
+                "LUT {} n={elems_per_bank} sec={sections} [{}]",
+                method.name(),
+                phase.name()
+            ),
+            MacroOp::CaluAccumulate { chunks, banks, phase } => {
+                write!(f, "CACC chunks={chunks} banks={banks} [{}]", phase.name())
+            }
+            MacroOp::CaluReduce { chunks, banks, phase } => {
+                write!(f, "CRED chunks={chunks} banks={banks} [{}]", phase.name())
+            }
+            MacroOp::Broadcast { bursts_per_bank, phase } => {
+                write!(f, "BCAST bursts={bursts_per_bank} [{}]", phase.name())
+            }
+            MacroOp::Elementwise {
+                elems_per_bank,
+                n_operands,
+                phase,
+            } => write!(
+                f,
+                "EW n={elems_per_bank} ops={n_operands} [{}]",
+                phase.name()
+            ),
+            MacroOp::ChannelReshape { bytes, phase } => {
+                write!(f, "RESHAPE bytes={bytes} [{}]", phase.name())
+            }
+            MacroOp::Sync { cycles, phase } => write!(f, "SYNC {cycles} [{}]", phase.name()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_extractable() {
+        let op = MacroOp::WeightStream {
+            groups: 4,
+            rows_per_group: 2,
+            cols_per_row: 32,
+            reload_every: 16,
+            phase: Phase::Ffn,
+        };
+        assert_eq!(op.phase(), Phase::Ffn);
+    }
+
+    #[test]
+    fn read_burst_accounting() {
+        let ws = MacroOp::WeightStream {
+            groups: 4,
+            rows_per_group: 2,
+            cols_per_row: 32,
+            reload_every: 0,
+            phase: Phase::Mha,
+        };
+        assert_eq!(ws.read_bursts_per_bank(), 256);
+
+        let lut = MacroOp::LutSweep {
+            elems_per_bank: 256,
+            method: LutMethod::Embedded,
+            sections: 64,
+            phase: Phase::NonLinear,
+        };
+        assert_eq!(lut.read_bursts_per_bank(), 16 * 3);
+
+        let sel = MacroOp::LutSweep {
+            elems_per_bank: 256,
+            method: LutMethod::Select,
+            sections: 64,
+            phase: Phase::NonLinear,
+        };
+        assert!(sel.read_bursts_per_bank() > lut.read_bursts_per_bank());
+
+        // Scan reads the whole table region per chunk (more than
+        // Embedded) but its real cost is the compute-bound select in the
+        // S-ALU, modeled by the engine, not by read traffic.
+        let scan = MacroOp::LutSweep {
+            elems_per_bank: 256,
+            method: LutMethod::Scan,
+            sections: 64,
+            phase: Phase::NonLinear,
+        };
+        assert!(scan.read_bursts_per_bank() > lut.read_bursts_per_bank());
+    }
+
+    #[test]
+    fn display_roundtrip_mentions_phase() {
+        let op = MacroOp::Sync {
+            cycles: 10,
+            phase: Phase::DataMovement,
+        };
+        assert!(format!("{op}").contains("data_movement"));
+    }
+}

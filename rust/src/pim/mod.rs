@@ -1,0 +1,21 @@
+//! The SAL-PIM processing-in-memory layer.
+//!
+//! * [`isa`] — the macro-op instruction set the mapper emits and the
+//!   engine executes (weight streams, LUT sweeps, C-ALU merges, …).
+//! * [`engine`] — the timing engine: executes macro-op streams against the
+//!   cycle-accurate [`crate::dram::ChannelController`].
+//! * [`salu`] — functional model of the subarray-level ALU (§4.1).
+//! * [`bank_unit`] — functional model of the bank-level unit (§4.3).
+//! * [`calu`] — functional model of the channel-level ALU (§4.4).
+//! * [`lut_subarray`] — the LUT-embedded subarray (§4.2) including the
+//!   Fig. 13 alternative access methods (Scan / Select).
+
+pub mod bank_unit;
+pub mod calu;
+pub mod engine;
+pub mod isa;
+pub mod lut_subarray;
+pub mod salu;
+
+pub use engine::PimEngine;
+pub use isa::{LutMethod, MacroOp};

@@ -1,0 +1,180 @@
+//! Functional model of the subarray-level ALU (§4.1, Fig. 7).
+//!
+//! 16 logical lanes (one per 16-bit operand in a GBL burst), 16 × 32-bit
+//! accumulation registers, a writeback shifter, and four operations:
+//! element-wise add, element-wise multiply, MAC, and max. The physical
+//! implementation shares 8 MACs at 2× clock (§4.1) — functionally
+//! invisible, so the model is 16 lanes wide.
+
+use crate::model::fixedpoint::QFormat;
+
+/// Number of logical lanes (operands per GBL burst).
+pub const LANES: usize = 16;
+
+/// The S-ALU operation set (table in Fig. 7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SaluOp {
+    /// regs[i] = a[i] + b[i] (element-wise add).
+    EwAdd,
+    /// regs[i] = a[i] × b[i] (element-wise multiply, shift-truncated).
+    EwMul,
+    /// regs[i] += a[i] × b[i] (multiply-accumulate at 32-bit).
+    Mac,
+    /// regs[i] = max(regs[i], a[i]) (softmax max-subtraction support).
+    Max,
+}
+
+/// One S-ALU: 16 lanes of 32-bit accumulators.
+#[derive(Debug, Clone)]
+pub struct Salu {
+    pub regs: [i32; LANES],
+    pub q: QFormat,
+}
+
+impl Salu {
+    pub fn new(q: QFormat) -> Self {
+        Salu {
+            regs: [0; LANES],
+            q,
+        }
+    }
+
+    /// Clear the accumulators (start of a new output tile).
+    pub fn clear(&mut self) {
+        self.regs = [0; LANES];
+    }
+
+    /// Preload accumulators for max-reduction (−∞ in the raw domain).
+    pub fn clear_for_max(&mut self) {
+        self.regs = [i16::MIN as i32; LANES];
+    }
+
+    /// Execute one operation over a 16-lane memory operand `a` and (for
+    /// two-operand ops) broadcast-or-elementwise operand `b`.
+    pub fn exec(&mut self, op: SaluOp, a: &[i16; LANES], b: &[i16; LANES]) {
+        match op {
+            SaluOp::EwAdd => {
+                for i in 0..LANES {
+                    self.regs[i] = a[i] as i32 + b[i] as i32;
+                }
+            }
+            SaluOp::EwMul => {
+                for i in 0..LANES {
+                    self.regs[i] = self.q.mul_raw(a[i], b[i]) >> self.q.frac_bits;
+                }
+            }
+            SaluOp::Mac => {
+                for i in 0..LANES {
+                    self.regs[i] =
+                        self.regs[i].saturating_add(self.q.mul_raw(a[i], b[i]));
+                }
+            }
+            SaluOp::Max => {
+                for i in 0..LANES {
+                    self.regs[i] = self.regs[i].max(a[i] as i32);
+                }
+            }
+        }
+    }
+
+    /// MAC with a broadcast scalar operand (the bank-level unit's
+    /// single-data feeding method, §4.3): regs[i] += a[i] × x.
+    pub fn mac_broadcast(&mut self, a: &[i16; LANES], x: i16) {
+        for i in 0..LANES {
+            self.regs[i] = self.regs[i].saturating_add(self.q.mul_raw(a[i], x));
+        }
+    }
+
+    /// Writeback: shift-truncate the 32-bit accumulators to 16-bit
+    /// (Fig. 7's right shifters + tri-state buffer onto the GBLs).
+    pub fn writeback(&self) -> [i16; LANES] {
+        let mut out = [0i16; LANES];
+        for i in 0..LANES {
+            out[i] = self.q.writeback(self.regs[i]);
+        }
+        out
+    }
+
+    /// Writeback without the fraction shift (for accumulations of already
+    /// shifted values, e.g. element-wise results).
+    pub fn writeback_raw(&self) -> [i16; LANES] {
+        let mut out = [0i16; LANES];
+        for i in 0..LANES {
+            out[i] = self.regs[i].clamp(i16::MIN as i32, i16::MAX as i32) as i16;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::fixedpoint::Q8_8;
+
+    fn arr(v: &[f64]) -> [i16; LANES] {
+        let mut out = [0i16; LANES];
+        for (i, &x) in v.iter().enumerate() {
+            out[i] = Q8_8.quantize(x);
+        }
+        out
+    }
+
+    #[test]
+    fn mac_accumulates_dot_product() {
+        let mut s = Salu::new(Q8_8);
+        // Lane 0 accumulates 1·2 + 3·4 = 14.
+        s.exec(SaluOp::Mac, &arr(&[1.0]), &arr(&[2.0]));
+        s.exec(SaluOp::Mac, &arr(&[3.0]), &arr(&[4.0]));
+        let out = s.writeback();
+        assert!((Q8_8.dequantize(out[0]) - 14.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn mac_broadcast_matches_elementwise_mac() {
+        let mut a = Salu::new(Q8_8);
+        let mut b = Salu::new(Q8_8);
+        let w = arr(&[0.5, -1.0, 2.0, 0.25]);
+        let x = Q8_8.quantize(1.5);
+        a.mac_broadcast(&w, x);
+        b.exec(SaluOp::Mac, &w, &[x; LANES]);
+        assert_eq!(a.regs, b.regs);
+    }
+
+    #[test]
+    fn ew_add_and_mul() {
+        let mut s = Salu::new(Q8_8);
+        s.exec(SaluOp::EwAdd, &arr(&[1.5]), &arr(&[2.5]));
+        assert!((Q8_8.dequantize(s.writeback_raw()[0]) - 4.0).abs() < 0.01);
+        s.exec(SaluOp::EwMul, &arr(&[1.5]), &arr(&[2.0]));
+        assert!((Q8_8.dequantize(s.writeback_raw()[0]) - 3.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn max_tracks_running_maximum() {
+        let mut s = Salu::new(Q8_8);
+        s.clear_for_max();
+        s.exec(SaluOp::Max, &arr(&[-3.0]), &[0; LANES]);
+        s.exec(SaluOp::Max, &arr(&[7.0]), &[0; LANES]);
+        s.exec(SaluOp::Max, &arr(&[2.0]), &[0; LANES]);
+        assert!((Q8_8.dequantize(s.writeback_raw()[0]) - 7.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn accumulator_saturates_instead_of_wrapping() {
+        let mut s = Salu::new(Q8_8);
+        let big = [i16::MAX; LANES];
+        for _ in 0..100_000 {
+            s.exec(SaluOp::Mac, &big, &big);
+        }
+        assert_eq!(s.regs[0], i32::MAX);
+        assert_eq!(s.writeback()[0], i16::MAX);
+    }
+
+    #[test]
+    fn clear_resets_state() {
+        let mut s = Salu::new(Q8_8);
+        s.exec(SaluOp::Mac, &arr(&[1.0]), &arr(&[1.0]));
+        s.clear();
+        assert_eq!(s.regs, [0; LANES]);
+    }
+}

@@ -1,0 +1,131 @@
+//! Table/figure formatting for the bench harness and CLI.
+//!
+//! Every paper artifact is regenerated as a plain-text table whose rows
+//! mirror what the paper reports; these helpers keep the formatting
+//! uniform across benches.
+
+use std::fmt::Write as _;
+
+/// A simple fixed-width text table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Column widths sized to content.
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Render as an aligned text table (also valid Markdown).
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        let _ = writeln!(out, "## {}", self.title);
+        let line = |cells: &[String], w: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(s, " {:<width$} |", c, width = w[i]);
+            }
+            s
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &w));
+        let mut sep = String::from("|");
+        for width in &w {
+            let _ = write!(sep, "{}|", "-".repeat(width + 2));
+        }
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &w));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Format seconds with an appropriate unit.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.1} µs", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+/// Format bytes/sec as GB/s / TB/s.
+pub fn fmt_bw(bps: f64) -> String {
+    if bps >= 1e12 {
+        format!("{:.2} TB/s", bps / 1e12)
+    } else {
+        format!("{:.1} GB/s", bps / 1e9)
+    }
+}
+
+/// Format a ratio as `N.NN×`.
+pub fn fmt_x(r: f64) -> String {
+    format!("{r:.2}×")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned_markdown() {
+        let mut t = Table::new("Fig. X", &["in", "out", "speedup"]);
+        t.row(&["32".into(), "128".into(), "4.72×".into()]);
+        t.row(&["128".into(), "1".into(), "0.80×".into()]);
+        let r = t.render();
+        assert!(r.contains("## Fig. X"));
+        assert!(r.lines().count() == 5);
+        assert!(r.contains("| 32 "));
+        assert!(r.contains("|----"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fmt_time(0.0025), "2.500 ms");
+        assert_eq!(fmt_time(1.5), "1.500 s");
+        assert_eq!(fmt_time(3.3e-5), "33.0 µs");
+        assert_eq!(fmt_bw(8.19e12), "8.19 TB/s");
+        assert_eq!(fmt_bw(672e9), "672.0 GB/s");
+        assert_eq!(fmt_x(4.7234), "4.72×");
+    }
+}

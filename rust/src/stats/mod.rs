@@ -1,0 +1,219 @@
+//! Simulation statistics: cycle accounting, command counts, bandwidth and
+//! per-phase execution-time breakdowns (the raw material for Fig. 3,
+//! Fig. 14 and EXPERIMENTS.md).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Execution phases attributed in breakdowns (paper Fig. 3 categories).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Phase {
+    /// Token/positional embedding lookups & adds.
+    Embedding,
+    /// Multi-head attention (QKV gen, QKᵀ, softmax matmuls, output proj).
+    Mha,
+    /// Feed-forward network GEMVs.
+    Ffn,
+    /// Non-linear functions (softmax exp/recip, GELU, layerNorm rsqrt).
+    NonLinear,
+    /// Residual adds and misc element-wise work.
+    Residual,
+    /// LM head / logits.
+    LmHead,
+    /// Inter-level data movement (bank↔C-ALU↔broadcast).
+    DataMovement,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 7] = [
+        Phase::Embedding,
+        Phase::Mha,
+        Phase::Ffn,
+        Phase::NonLinear,
+        Phase::Residual,
+        Phase::LmHead,
+        Phase::DataMovement,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Embedding => "embedding",
+            Phase::Mha => "mha",
+            Phase::Ffn => "ffn",
+            Phase::NonLinear => "nonlinear",
+            Phase::Residual => "residual",
+            Phase::LmHead => "lm_head",
+            Phase::DataMovement => "data_movement",
+        }
+    }
+}
+
+/// DRAM command kinds counted by the simulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum CmdKind {
+    Act,
+    Pre,
+    Rd,
+    Wr,
+    /// PIM compute micro-ops executed alongside RD streams.
+    PimOp,
+    /// C-ALU operations (accumulate / reduce-sum / broadcast).
+    CaluOp,
+}
+
+/// Aggregated counters for one simulation run.
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    /// Total simulated cycles (per-channel clock, lockstep channels).
+    pub cycles: u64,
+    /// Cycles attributed per phase.
+    pub phase_cycles: BTreeMap<Phase, u64>,
+    /// Command counts per kind (summed over all banks/channels).
+    pub commands: BTreeMap<CmdKind, u64>,
+    /// Bytes streamed through GBLs into S-ALUs (internal traffic).
+    pub internal_bytes: u64,
+    /// Bytes moved over the buffer-die interconnect / to host.
+    pub external_bytes: u64,
+    /// Row activations (for energy).
+    pub activations: u64,
+    /// Simulated tokens produced (generation stage).
+    pub tokens_generated: u64,
+}
+
+impl Stats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_phase_cycles(&mut self, phase: Phase, cycles: u64) {
+        *self.phase_cycles.entry(phase).or_insert(0) += cycles;
+        self.cycles += cycles;
+    }
+
+    pub fn count_cmd(&mut self, kind: CmdKind, n: u64) {
+        *self.commands.entry(kind).or_insert(0) += n;
+        if kind == CmdKind::Act {
+            self.activations += n;
+        }
+    }
+
+    /// Merge another run's counters into this one (e.g. per-token stats).
+    pub fn merge(&mut self, other: &Stats) {
+        self.cycles += other.cycles;
+        for (p, c) in &other.phase_cycles {
+            *self.phase_cycles.entry(*p).or_insert(0) += c;
+        }
+        for (k, c) in &other.commands {
+            *self.commands.entry(*k).or_insert(0) += c;
+        }
+        self.internal_bytes += other.internal_bytes;
+        self.external_bytes += other.external_bytes;
+        self.activations += other.activations;
+        self.tokens_generated += other.tokens_generated;
+    }
+
+    /// Wall-clock seconds at a given tCK.
+    pub fn seconds(&self, tck_ns: f64) -> f64 {
+        self.cycles as f64 * tck_ns * 1e-9
+    }
+
+    /// Average achieved internal bandwidth in bytes/sec.
+    pub fn avg_internal_bandwidth(&self, tck_ns: f64) -> f64 {
+        let s = self.seconds(tck_ns);
+        if s == 0.0 {
+            0.0
+        } else {
+            self.internal_bytes as f64 / s
+        }
+    }
+
+    /// Fraction of total cycles attributed to `phase`.
+    pub fn phase_fraction(&self, phase: Phase) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        *self.phase_cycles.get(&phase).unwrap_or(&0) as f64 / self.cycles as f64
+    }
+
+    /// Breakdown as (phase, fraction) sorted by descending share.
+    pub fn breakdown(&self) -> Vec<(Phase, f64)> {
+        let mut v: Vec<_> = Phase::ALL
+            .iter()
+            .map(|p| (*p, self.phase_fraction(*p)))
+            .filter(|(_, f)| *f > 0.0)
+            .collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+}
+
+impl fmt::Display for Stats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "cycles: {}", self.cycles)?;
+        writeln!(f, "tokens: {}", self.tokens_generated)?;
+        writeln!(
+            f,
+            "internal bytes: {} ({:.1} MB)",
+            self.internal_bytes,
+            self.internal_bytes as f64 / 1e6
+        )?;
+        for (p, frac) in self.breakdown() {
+            writeln!(f, "  {:>13}: {:5.2}%", p.name(), frac * 100.0)?;
+        }
+        for (k, c) in &self.commands {
+            writeln!(f, "  {:?}: {}", k, c)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_accounting_sums() {
+        let mut s = Stats::new();
+        s.add_phase_cycles(Phase::Mha, 50);
+        s.add_phase_cycles(Phase::Ffn, 30);
+        s.add_phase_cycles(Phase::NonLinear, 20);
+        assert_eq!(s.cycles, 100);
+        assert!((s.phase_fraction(Phase::Mha) - 0.5).abs() < 1e-12);
+        let bd = s.breakdown();
+        assert_eq!(bd[0].0, Phase::Mha);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = Stats::new();
+        a.add_phase_cycles(Phase::Ffn, 10);
+        a.count_cmd(CmdKind::Act, 3);
+        a.internal_bytes = 100;
+        let mut b = Stats::new();
+        b.add_phase_cycles(Phase::Ffn, 5);
+        b.count_cmd(CmdKind::Act, 2);
+        b.internal_bytes = 50;
+        a.merge(&b);
+        assert_eq!(a.cycles, 15);
+        assert_eq!(a.commands[&CmdKind::Act], 5);
+        assert_eq!(a.activations, 5);
+        assert_eq!(a.internal_bytes, 150);
+    }
+
+    #[test]
+    fn bandwidth_math() {
+        let mut s = Stats::new();
+        s.cycles = 1_000_000_000; // 1 s at 1 GHz
+        s.internal_bytes = 8_000_000_000_000; // 8 TB
+        let bw = s.avg_internal_bandwidth(1.0);
+        assert!((bw - 8e12).abs() / 8e12 < 1e-9);
+    }
+
+    #[test]
+    fn empty_stats_safe() {
+        let s = Stats::new();
+        assert_eq!(s.avg_internal_bandwidth(1.0), 0.0);
+        assert_eq!(s.phase_fraction(Phase::Mha), 0.0);
+        assert!(s.breakdown().is_empty());
+    }
+}

@@ -1,0 +1,177 @@
+//! Value generators for the mini property-testing harness.
+
+use super::SplitMix64;
+
+/// A generation context handed to property closures.
+///
+/// Every drawn value is recorded so the runner can replay and shrink a
+/// failing case: shrinking works on the *choice sequence* (à la Hypothesis)
+/// — each recorded draw is independently shrunk toward zero and the
+/// property re-run with the smaller sequence.
+pub struct Gen {
+    rng: SplitMix64,
+    /// Choice log for the current run (raw u64 draws).
+    pub(crate) log: Vec<u64>,
+    /// When replaying a shrunk sequence, draws come from here first.
+    pub(crate) replay: Vec<u64>,
+    pub(crate) replay_pos: usize,
+}
+
+impl Gen {
+    pub(crate) fn new(seed: u64) -> Self {
+        Gen {
+            rng: SplitMix64::new(seed),
+            log: Vec::new(),
+            replay: Vec::new(),
+            replay_pos: 0,
+        }
+    }
+
+    pub(crate) fn replaying(seed: u64, replay: Vec<u64>) -> Self {
+        Gen {
+            rng: SplitMix64::new(seed),
+            log: Vec::new(),
+            replay,
+            replay_pos: 0,
+        }
+    }
+
+    fn draw(&mut self) -> u64 {
+        let v = if self.replay_pos < self.replay.len() {
+            let v = self.replay[self.replay_pos];
+            self.replay_pos += 1;
+            v
+        } else {
+            self.rng.next_u64()
+        };
+        self.log.push(v);
+        v
+    }
+
+    /// Uniform usize in `[lo, hi]` (inclusive).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let span = (hi - lo) as u64 + 1;
+        lo + (self.draw() % span) as usize
+    }
+
+    /// Uniform u64 in `[lo, hi]` (inclusive).
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        let span = (hi - lo).wrapping_add(1);
+        if span == 0 {
+            return self.draw();
+        }
+        lo + self.draw() % span
+    }
+
+    /// Uniform i64 in `[lo, hi]` (inclusive).
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let span = (hi as i128 - lo as i128 + 1) as u64;
+        lo.wrapping_add((self.draw() % span) as i64)
+    }
+
+    /// Uniform i32 in `[lo, hi]` (inclusive).
+    pub fn i32_in(&mut self, lo: i32, hi: i32) -> i32 {
+        self.i64_in(lo as i64, hi as i64) as i32
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let unit = (self.draw() >> 11) as f64 / (1u64 << 53) as f64;
+        lo + unit * (hi - lo)
+    }
+
+    /// Coin flip.
+    pub fn bool(&mut self) -> bool {
+        self.draw() & 1 == 1
+    }
+
+    /// One element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        assert!(!items.is_empty());
+        let i = self.usize_in(0, items.len() - 1);
+        &items[i]
+    }
+
+    /// A vector of `len ∈ [min_len, max_len]` values drawn by `f`.
+    pub fn vec_of<T>(
+        &mut self,
+        min_len: usize,
+        max_len: usize,
+        mut f: impl FnMut(&mut Gen) -> T,
+    ) -> Vec<T> {
+        let len = self.usize_in(min_len, max_len);
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// A vector of i32 fixed-point raw values in ±`mag`.
+    pub fn vec_i32(&mut self, min_len: usize, max_len: usize, mag: i32) -> Vec<i32> {
+        self.vec_of(min_len, max_len, |g| g.i32_in(-mag, mag))
+    }
+
+    /// Power of two in `[lo, hi]` (both must be powers of two).
+    pub fn pow2_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo.is_power_of_two() && hi.is_power_of_two() && lo <= hi);
+        let lo_log = lo.trailing_zeros();
+        let hi_log = hi.trailing_zeros();
+        1 << self.u64_in(lo_log as u64, hi_log as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_are_inclusive() {
+        let mut g = Gen::new(1);
+        let mut saw_lo = false;
+        let mut saw_hi = false;
+        for _ in 0..2000 {
+            let v = g.usize_in(3, 5);
+            assert!((3..=5).contains(&v));
+            saw_lo |= v == 3;
+            saw_hi |= v == 5;
+        }
+        assert!(saw_lo && saw_hi);
+    }
+
+    #[test]
+    fn i64_handles_negative_ranges() {
+        let mut g = Gen::new(2);
+        for _ in 0..1000 {
+            let v = g.i64_in(-10, -3);
+            assert!((-10..=-3).contains(&v));
+        }
+    }
+
+    #[test]
+    fn replay_reproduces_values() {
+        let mut g = Gen::new(5);
+        let a: Vec<usize> = (0..10).map(|_| g.usize_in(0, 1_000_000)).collect();
+        let log = g.log.clone();
+        let mut g2 = Gen::replaying(5, log);
+        let b: Vec<usize> = (0..10).map(|_| g2.usize_in(0, 1_000_000)).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pow2_in_is_power_of_two() {
+        let mut g = Gen::new(9);
+        for _ in 0..100 {
+            let v = g.pow2_in(1, 64);
+            assert!(v.is_power_of_two() && (1..=64).contains(&v));
+        }
+    }
+
+    #[test]
+    fn vec_of_respects_length_bounds() {
+        let mut g = Gen::new(4);
+        for _ in 0..100 {
+            let v = g.vec_of(2, 7, |g| g.bool());
+            assert!((2..=7).contains(&v.len()));
+        }
+    }
+}

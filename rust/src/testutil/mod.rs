@@ -1,0 +1,101 @@
+//! Minimal property-based-testing harness.
+//!
+//! The offline build environment has no `proptest`, so this module supplies
+//! the subset the test suite needs: a deterministic PRNG, value generators,
+//! and a `forall` runner with integer/vector shrinking. Failures print the
+//! seed and the shrunk counterexample.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't inherit the xla rpath in this
+//! // environment; the same property runs in unit tests below.)
+//! use sal_pim::testutil::{forall, Gen};
+//! forall(100, |g| {
+//!     let x = g.usize_in(0, 1000);
+//!     assert!(x <= 1000);
+//! });
+//! ```
+
+mod gen;
+mod runner;
+
+pub use gen::Gen;
+pub use runner::{forall, forall_seeded};
+
+/// SplitMix64: tiny, high-quality 64-bit PRNG (public-domain algorithm).
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, bound)`; `bound` must be nonzero.
+    pub fn below(&mut self, bound: u64) -> u64 {
+        // Rejection sampling to avoid modulo bias.
+        assert!(bound > 0);
+        let zone = u64::MAX - (u64::MAX % bound);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % bound;
+            }
+        }
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64_unit(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut r = SplitMix64::new(7);
+        for _ in 0..10_000 {
+            assert!(r.below(13) < 13);
+        }
+    }
+
+    #[test]
+    fn f64_unit_in_range() {
+        let mut r = SplitMix64::new(3);
+        for _ in 0..10_000 {
+            let v = r.f64_unit();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn below_covers_all_residues() {
+        let mut r = SplitMix64::new(11);
+        let mut seen = [false; 8];
+        for _ in 0..1000 {
+            seen[r.below(8) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,159 @@
+//! The `forall` property runner with choice-sequence shrinking.
+
+use super::gen::Gen;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Run `prop` against `cases` random inputs. On failure, shrink the choice
+/// sequence and panic with the seed + shrunk case for reproduction.
+///
+/// The seed is derived from the `SALPIM_TEST_SEED` env var if set, so a CI
+/// failure can be replayed exactly: `SALPIM_TEST_SEED=1234 cargo test ...`.
+pub fn forall(cases: usize, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    let seed = std::env::var("SALPIM_TEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5A1_917);
+    forall_seeded(seed, cases, prop);
+}
+
+/// [`forall`] with an explicit base seed.
+pub fn forall_seeded(
+    base_seed: u64,
+    cases: usize,
+    prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe,
+) {
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen::new(seed);
+        let outcome = catch_unwind(AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(payload) = outcome {
+            let log = g.log.clone();
+            let shrunk = shrink(seed, &log, &prop);
+            let msg = panic_message(payload.as_ref());
+            panic!(
+                "property failed (seed={seed}, case={case}/{cases}):\n  {msg}\n  \
+                 original draws: {log:?}\n  shrunk draws:   {shrunk:?}\n  \
+                 replay with SALPIM_TEST_SEED={base_seed}"
+            );
+        }
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".to_string()
+    }
+}
+
+/// Does the property still fail when replaying `draws`?
+fn fails(seed: u64, draws: &[u64], prop: &(impl Fn(&mut Gen) + std::panic::RefUnwindSafe)) -> bool {
+    let mut g = Gen::replaying(seed, draws.to_vec());
+    catch_unwind(AssertUnwindSafe(|| prop(&mut g))).is_err()
+}
+
+/// Greedy choice-sequence shrinking: repeatedly try halving / zeroing /
+/// decrementing individual draws and truncating the tail, keeping any
+/// variant that still fails. Bounded effort; returns the smallest failing
+/// sequence found.
+fn shrink(
+    seed: u64,
+    draws: &[u64],
+    prop: &(impl Fn(&mut Gen) + std::panic::RefUnwindSafe),
+) -> Vec<u64> {
+    let mut best = draws.to_vec();
+    let mut budget = 2000usize;
+    let mut improved = true;
+    while improved && budget > 0 {
+        improved = false;
+        // Try truncating the tail (later draws often unused).
+        let mut t = best.clone();
+        while t.len() > 1 && budget > 0 {
+            t.pop();
+            budget -= 1;
+            if fails(seed, &t, prop) {
+                best = t.clone();
+                improved = true;
+            } else {
+                break;
+            }
+        }
+        // Try shrinking each position.
+        for i in 0..best.len() {
+            if budget == 0 {
+                break;
+            }
+            let original = best[i];
+            for candidate in [0, original / 2, original.saturating_sub(1)] {
+                if candidate == original {
+                    continue;
+                }
+                let mut v = best.clone();
+                v[i] = candidate;
+                budget = budget.saturating_sub(1);
+                if fails(seed, &v, prop) {
+                    best = v;
+                    improved = true;
+                    break;
+                }
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(200, |g| {
+            let a = g.usize_in(0, 100);
+            let b = g.usize_in(0, 100);
+            assert!(a + b <= 200);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_and_shrinks() {
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            forall_seeded(1, 500, |g| {
+                let x = g.usize_in(0, 1000);
+                assert!(x < 900, "x too big: {x}");
+            });
+        }));
+        let err = result.expect_err("property should fail");
+        let msg = panic_message(err.as_ref());
+        assert!(msg.contains("property failed"), "{msg}");
+        assert!(msg.contains("shrunk draws"), "{msg}");
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        // Fails iff draw >= 500; the shrunk first draw should be the
+        // smallest failing value the greedy passes find (≤ original).
+        let prop = |g: &mut Gen| {
+            let x = g.u64_in(0, 1023);
+            assert!(x < 500);
+        };
+        // Find a failing seed first.
+        let mut seed = 0;
+        let mut draws = Vec::new();
+        for s in 0..100 {
+            let mut g = Gen::new(s);
+            if catch_unwind(AssertUnwindSafe(|| prop(&mut g))).is_err() {
+                seed = s;
+                draws = g.log.clone();
+                break;
+            }
+        }
+        assert!(!draws.is_empty(), "no failing seed found");
+        let shrunk = shrink(seed, &draws, &prop);
+        assert!(shrunk[0] % 1024 >= 500);
+        assert!(shrunk[0] <= draws[0]);
+    }
+}

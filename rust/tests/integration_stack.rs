@@ -1,0 +1,161 @@
+//! Cross-module integration tests: mapper → engine → stats invariants,
+//! functional-vs-float fidelity, LUT artifact parity with the python
+//! build path, and coordinator conservation properties.
+
+use sal_pim::config::SimConfig;
+use sal_pim::coordinator::{Coordinator, Policy};
+use sal_pim::interp::{LutTable, NonLinFn};
+use sal_pim::mapper::GenerationSim;
+use sal_pim::model::fixedpoint::{Q2_13, Q8_8};
+use sal_pim::model::gpt2;
+use sal_pim::stats::Phase;
+use sal_pim::testutil::forall;
+
+#[test]
+fn decode_traffic_conservation() {
+    // Internal bytes measured by the engine must be ≥ the model's weight
+    // bytes (per-pch share) for every KV length — nothing is skipped.
+    let cfg = SimConfig::paper();
+    let mut sim = GenerationSim::new(&cfg);
+    for kv in [1usize, 64, 512, 1000] {
+        let st = sim.decode_token(kv);
+        let device_bytes = st.internal_bytes * cfg.hbm.pseudo_channels() as u64;
+        let weight_bytes = gpt2::decode_weight_bytes(&cfg.model, kv) as u64;
+        assert!(
+            device_bytes >= weight_bytes,
+            "kv={kv}: device {device_bytes} < weights {weight_bytes}"
+        );
+        assert!(
+            device_bytes < weight_bytes * 2,
+            "kv={kv}: device reads {device_bytes} ≫ weights {weight_bytes}"
+        );
+    }
+}
+
+#[test]
+fn decode_cycles_monotone_in_kv_and_psub() {
+    let mut sims: Vec<GenerationSim> = [1usize, 2, 4]
+        .iter()
+        .map(|&p| GenerationSim::new(&SimConfig::paper().with_p_sub(p)))
+        .collect();
+    let mut prev_by_p = [u64::MAX; 3];
+    for kv in [8usize, 64, 256, 768] {
+        let mut prev_kv = 0;
+        for (i, sim) in sims.iter_mut().enumerate() {
+            let c = sim.decode_token(kv).cycles;
+            // More parallelism is never slower.
+            assert!(c <= prev_by_p[i.min(2)] || kv > 8, "psub order broken");
+            if i > 0 {
+                assert!(c <= prev_kv, "P_Sub={} slower than P_Sub smaller", 1 << i);
+            }
+            prev_kv = c;
+            if kv == 8 {
+                prev_by_p[i] = c;
+            }
+        }
+    }
+}
+
+#[test]
+fn random_model_shapes_simulate_cleanly() {
+    // Fuzz the mapper+engine over random transformer shapes: no panics,
+    // no timing violations, sane traffic.
+    forall(25, |g| {
+        let mut cfg = SimConfig::paper();
+        cfg.model.d_model = 64 * g.usize_in(1, 32); // 64..2048
+        cfg.model.n_heads = [4usize, 8, 16][g.usize_in(0, 2)];
+        while cfg.model.d_model % cfg.model.n_heads != 0 {
+            cfg.model.n_heads /= 2;
+        }
+        cfg.model.d_ff = cfg.model.d_model * 4;
+        cfg.model.n_layers = g.usize_in(1, 6);
+        cfg.model.vocab = 1024;
+        let kv = g.usize_in(1, 256);
+        let mut sim = GenerationSim::new(&cfg);
+        let st = sim.decode_token(kv);
+        assert!(st.cycles > 0);
+        assert!(st.internal_bytes > 0);
+        let sum: u64 = st.phase_cycles.values().sum();
+        assert_eq!(sum, st.cycles, "phase attribution leak");
+    });
+}
+
+#[test]
+fn lut_artifact_parity_with_python() {
+    // `make artifacts` writes the python-generated tables; the rust
+    // tables must be bit-identical (shared spec, both sides).
+    let dir = sal_pim::runtime::default_artifacts_dir().join("luts");
+    if !dir.exists() {
+        eprintln!("SKIP: lut artifacts not built");
+        return;
+    }
+    for f in NonLinFn::ALL {
+        let path = dir.join(format!("{}_64.txt", f.name()));
+        let text = std::fs::read_to_string(&path).expect("lut artifact");
+        let q_out = match f {
+            NonLinFn::Exp | NonLinFn::Recip => Q2_13,
+            _ => Q8_8,
+        };
+        let table = LutTable::build(f, 64, Q8_8, q_out);
+        assert_eq!(
+            text,
+            table.to_artifact_text(),
+            "python vs rust LUT mismatch for {}",
+            f.name()
+        );
+    }
+}
+
+#[test]
+fn coordinator_conserves_and_orders_time() {
+    let cfg = SimConfig::paper();
+    forall(10, |g| {
+        let mut coord = Coordinator::new(&cfg).with_policy(Policy::Fcfs);
+        let n = g.usize_in(1, 8);
+        let mut arrival = 0.0;
+        for _ in 0..n {
+            arrival += g.f64_in(0.0, 0.2);
+            coord.submit(16 * g.usize_in(1, 8), 1 << g.usize_in(0, 6), arrival);
+        }
+        let done = coord.run();
+        assert_eq!(done.len(), n);
+        // Device never runs two requests at once: finishes are ordered
+        // and gaps between service intervals are non-negative.
+        let mut last_finish = 0.0f64;
+        for c in &done {
+            let start = c.finish_s - c.prefill_s - c.decode_s;
+            assert!(start + 1e-12 >= last_finish, "overlapping service");
+            assert!(c.queue_s >= 0.0 && c.prefill_s > 0.0);
+            last_finish = c.finish_s;
+        }
+    });
+}
+
+#[test]
+fn prefill_plus_decode_equals_generation() {
+    // GenerationSim must compose exactly from its parts.
+    let cfg = SimConfig::paper();
+    let mut sim = GenerationSim::new(&cfg);
+    let r = sim.generate(32, 16);
+    let prefill = sim.prefill(32);
+    let decode_sum: u64 = (1..16).map(|i| sim.decode_token(32 + i).cycles).sum();
+    assert_eq!(r.prefill.cycles, prefill.cycles);
+    assert_eq!(r.decode.cycles, decode_sum);
+}
+
+#[test]
+fn breakdown_has_expected_structure() {
+    // §6.2: matrix ops ≈ 60 % of decode; nonlinear visible but minor
+    // after LUT acceleration; data movement non-trivial (C-ALU merges).
+    let cfg = SimConfig::paper();
+    let mut sim = GenerationSim::new(&cfg);
+    let st = sim.decode_token(256);
+    let matrix = st.phase_fraction(Phase::Mha)
+        + st.phase_fraction(Phase::Ffn)
+        + st.phase_fraction(Phase::LmHead);
+    let nl = st.phase_fraction(Phase::NonLinear);
+    let dm = st.phase_fraction(Phase::DataMovement);
+    assert!(matrix > 0.40 && matrix < 0.85, "matrix {matrix}");
+    assert!(nl > 0.01 && nl < 0.30, "nonlinear {nl}");
+    assert!(dm > 0.05 && dm < 0.45, "data movement {dm}");
+}

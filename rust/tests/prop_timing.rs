@@ -1,0 +1,215 @@
+//! Property tests over the DRAM timing model: the burst fast path must
+//! match per-command issue exactly, and protocol invariants must hold on
+//! random command sequences.
+
+use sal_pim::config::SimConfig;
+use sal_pim::dram::{ChannelController, CmdTarget, DramCmd};
+use sal_pim::stats::Stats;
+use sal_pim::testutil::forall;
+
+#[test]
+fn stream_cols_equals_per_command_on_random_workloads() {
+    let cfg = SimConfig::paper();
+    forall(150, |g| {
+        let su = g.usize_in(0, 63);
+        let row = g.usize_in(0, 511);
+        let n = g.u64_in(1, 32);
+        let write = g.bool();
+        let target = if g.bool() {
+            CmdTarget::AllBanks
+        } else {
+            CmdTarget::Bank(g.usize_in(0, 15))
+        };
+
+        let mut a = ChannelController::new(&cfg);
+        let mut b = ChannelController::new(&cfg);
+        let mut sa = Stats::new();
+        let mut sb = Stats::new();
+        for (c, st) in [(&mut a, &mut sa), (&mut b, &mut sb)] {
+            c.issue(
+                DramCmd::Act {
+                    target,
+                    subarray: su,
+                    row,
+                },
+                st,
+            )
+            .unwrap();
+        }
+        let last_a = a.stream_cols(target, su, n, write, &mut sa).unwrap();
+        let mut last_b = 0;
+        for col in 0..n {
+            let cmd = if write {
+                DramCmd::Wr {
+                    target,
+                    subarray: su,
+                    col: col as usize,
+                }
+            } else {
+                DramCmd::Rd {
+                    target,
+                    subarray: su,
+                    col: col as usize,
+                }
+            };
+            last_b = b.issue(cmd, &mut sb).unwrap();
+        }
+        assert_eq!(last_a, last_b, "fast path diverged (n={n}, write={write})");
+        assert_eq!(sa.internal_bytes, sb.internal_bytes);
+        assert_eq!(sa.commands, sb.commands);
+        // Follow-up PRE must land at the same cycle in both worlds.
+        let pa = a
+            .issue(DramCmd::Pre { target, subarray: su }, &mut sa)
+            .unwrap();
+        let pb = b
+            .issue(DramCmd::Pre { target, subarray: su }, &mut sb)
+            .unwrap();
+        assert_eq!(pa, pb);
+    });
+}
+
+#[test]
+fn interleaved_stream_equals_round_robin_issue() {
+    let cfg = SimConfig::paper();
+    forall(100, |g| {
+        let n_groups = g.usize_in(1, 4);
+        let sus: Vec<usize> = (0..n_groups).map(|i| i * 15).collect();
+        let n = g.u64_in(1, 24);
+
+        let mut a = ChannelController::new(&cfg);
+        let mut b = ChannelController::new(&cfg);
+        let mut sa = Stats::new();
+        let mut sb = Stats::new();
+        for (c, st) in [(&mut a, &mut sa), (&mut b, &mut sb)] {
+            for (i, &su) in sus.iter().enumerate() {
+                c.issue(
+                    DramCmd::Act {
+                        target: CmdTarget::AllBanks,
+                        subarray: su,
+                        row: i,
+                    },
+                    st,
+                )
+                .unwrap();
+            }
+        }
+        let last_a = a.stream_interleaved(&sus, n, false, &mut sa).unwrap();
+        let mut last_b = 0;
+        for col in 0..n {
+            for &su in &sus {
+                last_b = b
+                    .issue(
+                        DramCmd::Rd {
+                            target: CmdTarget::AllBanks,
+                            subarray: su,
+                            col: col as usize,
+                        },
+                        &mut sb,
+                    )
+                    .unwrap();
+            }
+        }
+        assert_eq!(last_a, last_b);
+        assert_eq!(a.clock, b.clock);
+        assert_eq!(sa.internal_bytes, sb.internal_bytes);
+    });
+}
+
+#[test]
+fn protocol_invariants_on_random_sequences() {
+    let cfg = SimConfig::paper();
+    let t = cfg.timing;
+    forall(120, |g| {
+        let mut c = ChannelController::new(&cfg);
+        let mut st = Stats::new();
+        // Track per-(bank,subarray) ACT times to re-check tRC externally.
+        let mut last_act = std::collections::HashMap::new();
+        let mut last_cycle = -1i64;
+        for _ in 0..g.usize_in(5, 40) {
+            let su = g.usize_in(0, 7);
+            let bank = g.usize_in(0, 3);
+            let target = CmdTarget::Bank(bank);
+            let open = c.banks[bank].subarrays[su].open_row.is_some();
+            let at = if !open {
+                let row = g.usize_in(0, 511);
+                let at = c
+                    .issue(
+                        DramCmd::Act {
+                            target,
+                            subarray: su,
+                            row,
+                        },
+                        &mut st,
+                    )
+                    .unwrap();
+                if let Some(prev) = last_act.insert((bank, su), at) {
+                    assert!(
+                        at - prev >= t.t_rc as i64,
+                        "tRC violated: {} then {}",
+                        prev,
+                        at
+                    );
+                }
+                at
+            } else if g.bool() {
+                c.issue(
+                    DramCmd::Rd {
+                        target,
+                        subarray: su,
+                        col: g.usize_in(0, 31),
+                    },
+                    &mut st,
+                )
+                .unwrap()
+            } else {
+                c.issue(DramCmd::Pre { target, subarray: su }, &mut st)
+                    .unwrap()
+            };
+            assert!(at > last_cycle, "command bus collision");
+            last_cycle = at;
+        }
+    });
+}
+
+#[test]
+fn act_to_column_always_waits_trcd() {
+    let cfg = SimConfig::paper();
+    forall(80, |g| {
+        let mut c = ChannelController::new(&cfg);
+        let mut st = Stats::new();
+        // Random warm-up traffic on other subarrays.
+        for i in 0..g.usize_in(0, 5) {
+            let su = 10 + i;
+            c.issue(
+                DramCmd::Act {
+                    target: CmdTarget::AllBanks,
+                    subarray: su,
+                    row: i,
+                },
+                &mut st,
+            )
+            .unwrap();
+        }
+        let act_at = c
+            .issue(
+                DramCmd::Act {
+                    target: CmdTarget::AllBanks,
+                    subarray: 0,
+                    row: 1,
+                },
+                &mut st,
+            )
+            .unwrap();
+        let rd_at = c
+            .issue(
+                DramCmd::Rd {
+                    target: CmdTarget::AllBanks,
+                    subarray: 0,
+                    col: 0,
+                },
+                &mut st,
+            )
+            .unwrap();
+        assert!(rd_at - act_at >= cfg.timing.t_rcd as i64);
+    });
+}
