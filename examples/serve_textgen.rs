@@ -1,37 +1,41 @@
-//! End-to-end serving driver: the full three-layer stack on a real small
-//! workload.
+//! End-to-end serving driver: the full stack on a real small workload.
 //!
-//! * loads the AOT-compiled GPT-2-mini HLO artifacts (JAX L2 + Pallas L1,
-//!   built once by `make artifacts`) through the PJRT runtime — Python is
-//!   not involved at run time;
-//! * decodes every request's tokens through BOTH the float golden model
-//!   (PJRT) and the bit-exact fixed-point functional pipeline (the
-//!   S-ALU/LUT path), cross-checking them token by token;
-//! * runs the request batch through the serving coordinator, attributing
-//!   cycle-accurate SAL-PIM latency (GPT-2-medium timing) per request;
-//! * reports per-request latency, throughput, and speedup vs the GPU
-//!   baseline. Results are recorded in EXPERIMENTS.md.
+//! * (with `--features pjrt` and `make artifacts`) decodes every
+//!   request's tokens through BOTH the float golden model (PJRT) and the
+//!   bit-exact fixed-point functional pipeline (the S-ALU/LUT path),
+//!   cross-checking them token by token;
+//! * draws ONE request mix ([`RequestMix`]) and serves it through three
+//!   engines side by side — the sequential coordinator, the
+//!   continuous-batching engine and a 4-device cluster — plus the GPU
+//!   baseline, all consuming the identical workload by construction;
+//! * reports throughput, latency percentiles and speedups.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example serve_textgen
+//! cargo run --release --example serve_textgen
+//! make artifacts && cargo run --release --features pjrt --example serve_textgen
 //! ```
 
 use sal_pim::baseline::GpuModel;
 use sal_pim::config::SimConfig;
 use sal_pim::coordinator::{Coordinator, Policy, ServeMetrics};
-use sal_pim::model::FunctionalGpt;
-use sal_pim::report::{fmt_time, fmt_x, Table};
-use sal_pim::runtime::{artifacts_available, default_artifacts_dir, GoldenGpt, Runtime};
-use sal_pim::testutil::SplitMix64;
+use sal_pim::report::{fmt_pct, fmt_time, fmt_x, Table};
+use sal_pim::serve::workload::{requests_from_items, ArrivalPattern};
+use sal_pim::serve::{Cluster, DeviceEngine, Routing};
+use sal_pim::testutil::{MixItem, RequestMix};
 
-fn main() -> anyhow::Result<()> {
+/// Float-golden (PJRT) vs fixed-point cross-check — needs the `pjrt`
+/// feature and `make artifacts`.
+#[cfg(feature = "pjrt")]
+fn golden_crosscheck() -> anyhow::Result<()> {
+    use sal_pim::model::FunctionalGpt;
+    use sal_pim::runtime::{artifacts_available, default_artifacts_dir, GoldenGpt, Runtime};
+    use sal_pim::testutil::SplitMix64;
+
     let dir = default_artifacts_dir();
     anyhow::ensure!(
         artifacts_available(&dir),
         "artifacts missing — run `make artifacts` first"
     );
-
-    // ---- Functional path: real tokens through PJRT + fixed point ----
     let rt = Runtime::new()?;
     let mut golden = GoldenGpt::load(&rt, &dir, false)?;
     let mut fixed = FunctionalGpt::new(&SimConfig::mini());
@@ -66,58 +70,106 @@ fn main() -> anyhow::Result<()> {
         );
     }
     let agreement = agree as f64 / total as f64;
-    println!("token agreement (float vs fixed-point PIM): {:.1}%", agreement * 100.0);
-    anyhow::ensure!(agreement > 0.8, "pipelines diverged: {agreement}");
-
-    // ---- Timing path: the same request mix on the cycle-accurate ----
-    // ---- GPT-2-medium device, FCFS vs SJF vs GPU baseline.        ----
-    println!("\n== cycle-accurate serving (GPT-2 medium timing) ==");
-    let cfg = SimConfig::paper();
-    let mut table = Table::new(
-        "serving policies (16 requests, arrivals over ~0.4 s)",
-        &["policy", "throughput", "p50 latency", "p95 latency", "p95 TTFT"],
+    println!(
+        "token agreement (float vs fixed-point PIM): {:.1}%",
+        agreement * 100.0
     );
-    let mut makespans = Vec::new();
+    anyhow::ensure!(agreement > 0.8, "pipelines diverged: {agreement}");
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    #[cfg(feature = "pjrt")]
+    golden_crosscheck()?;
+    #[cfg(not(feature = "pjrt"))]
+    println!("(pjrt feature disabled — skipping the float golden cross-check)");
+
+    // ---- Timing path: ONE request mix served by every engine.       ----
+    // The mix is drawn once as data, so the coordinator, the batching
+    // engine, the cluster and the GPU baseline consume the identical
+    // workload — no RNG-stream-alignment tricks.
+    println!("\n== cycle-accurate serving (GPT-2 medium timing, 16 requests) ==");
+    let cfg = SimConfig::paper();
+    let items: Vec<MixItem> = RequestMix::paper(42).take(16);
+    let pattern = ArrivalPattern::Jittered { scale_s: 0.05 };
+
+    let mut table = Table::new(
+        "serving engines on the shared 16-request mix (arrivals over ~0.4 s)",
+        &["engine", "throughput", "p50 latency", "p95 latency", "p95 TTFT"],
+    );
+    let mut seq_metrics = None;
+
     for policy in [Policy::Fcfs, Policy::ShortestJobFirst] {
         let mut coord = Coordinator::new(&cfg).with_policy(policy);
-        let mut rng = SplitMix64::new(42);
-        let mut at = 0.0;
-        for _ in 0..16 {
-            let prompt = 16 + (rng.below(8) * 16) as usize;
-            let out = 8 << rng.below(5) as usize;
-            at += rng.f64_unit() * 0.05;
-            coord.submit(prompt, out, at);
+        for r in requests_from_items(&items, pattern, 8) {
+            coord.submit_request(r);
         }
-        let done = coord.run();
-        let m = ServeMetrics::from_completions(&done);
-        makespans.push((m.makespan_s, m.total_tokens));
+        let m = ServeMetrics::from_completions(&coord.run());
         table.row(&[
-            policy.name().into(),
+            format!("sequential {}", policy.name()),
             format!("{:.1} tok/s", m.throughput_tok_s),
             fmt_time(m.p50_latency_s),
             fmt_time(m.p95_latency_s),
             fmt_time(m.p95_ttft_s),
         ]);
+        if policy == Policy::Fcfs {
+            seq_metrics = Some(m);
+        }
     }
+
+    let mut engine = DeviceEngine::new(&cfg, 8);
+    for r in requests_from_items(&items, pattern, 8) {
+        engine.submit(r);
+    }
+    let batch_m = ServeMetrics::from_completions(&engine.run());
+    let rep = engine.report();
+    table.row(&[
+        "continuous batch×8".into(),
+        format!("{:.1} tok/s", batch_m.throughput_tok_s),
+        fmt_time(batch_m.p50_latency_s),
+        fmt_time(batch_m.p95_latency_s),
+        fmt_time(batch_m.p95_ttft_s),
+    ]);
+
+    let mut cluster = Cluster::new(&cfg, 4, 8, Routing::RoundRobin);
+    for r in requests_from_items(&items, pattern, 8) {
+        cluster.submit(r);
+    }
+    let cluster_m = ServeMetrics::from_completions(&cluster.run());
+    table.row(&[
+        "cluster 4×batch8".into(),
+        format!("{:.1} tok/s", cluster_m.throughput_tok_s),
+        fmt_time(cluster_m.p50_latency_s),
+        fmt_time(cluster_m.p95_latency_s),
+        fmt_time(cluster_m.p95_ttft_s),
+    ]);
     table.print();
 
-    // GPU baseline on the same workload (sequential FCFS service).
-    let gpu = GpuModel::titan_rtx();
-    let mut rng = SplitMix64::new(42);
-    let mut gpu_time = 0.0;
-    for _ in 0..16 {
-        let prompt = 16 + (rng.below(8) * 16) as usize;
-        let out = 8 << rng.below(5) as usize;
-        let _jitter = rng.f64_unit(); // keep the RNG stream aligned
-        gpu_time += gpu.generation_time(&cfg.model, prompt, out);
-    }
-    let (pim_makespan, tokens) = makespans[0];
     println!(
-        "GPU serial service time: {} | SAL-PIM makespan: {} | speedup {}",
-        fmt_time(gpu_time),
-        fmt_time(pim_makespan),
-        fmt_x(gpu_time / pim_makespan)
+        "batching engine: kv peak util {} | max batch seen {}",
+        fmt_pct(rep.kv_peak_utilization),
+        rep.max_batch_seen
     );
-    println!("served {tokens} tokens end-to-end — all layers composed (L1 Pallas → L2 JAX → PJRT → L3 coordinator)");
+
+    // GPU baseline on the same workload (sequential FCFS service) —
+    // identical mix, by construction.
+    let gpu = GpuModel::titan_rtx();
+    let gpu_time: f64 = items
+        .iter()
+        .map(|it| gpu.generation_time(&cfg.model, it.prompt_len, it.max_new_tokens))
+        .sum();
+    let seq = seq_metrics.expect("fcfs row recorded");
+    println!(
+        "GPU serial service time: {} | sequential PIM makespan: {} (speedup {}) | batched: {} (speedup {})",
+        fmt_time(gpu_time),
+        fmt_time(seq.makespan_s),
+        fmt_x(gpu_time / seq.makespan_s),
+        fmt_time(batch_m.makespan_s),
+        fmt_x(gpu_time / batch_m.makespan_s)
+    );
+    println!(
+        "served {} tokens per engine — sequential vs continuous batching vs 4-device cluster",
+        seq.total_tokens
+    );
     Ok(())
 }

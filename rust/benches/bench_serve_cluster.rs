@@ -1,0 +1,119 @@
+//! Cluster serving bench: continuous batching vs sequential service, and
+//! multi-device scaling at saturating load — the numbers behind the
+//! EXPERIMENTS.md "serving" section.
+//!
+//! Asserts the acceptance bars:
+//! * continuous batching on one device beats sequential FCFS on the same
+//!   16-request mix (strictly higher tok/s over makespan);
+//! * a 4-device cluster scales ≥ 2.5× over one device at saturating load.
+
+use sal_pim::config::SimConfig;
+use sal_pim::coordinator::Coordinator;
+use sal_pim::report::{fmt_pct, fmt_time, fmt_x, Table};
+use sal_pim::serve::sweep::{latency_vs_load, SweepConfig};
+use sal_pim::serve::workload::{requests_from_items, ArrivalPattern};
+use sal_pim::serve::{Cluster, DeviceEngine, Routing, ServeMetrics};
+use sal_pim::testutil::RequestMix;
+
+fn main() {
+    let cfg = SimConfig::paper();
+
+    // ---- (a) Continuous batching vs sequential on one device. ----
+    let items = RequestMix::paper(42).take(16);
+    let reqs = requests_from_items(&items, ArrivalPattern::AtOnce, 8);
+
+    let mut coord = Coordinator::new(&cfg);
+    for r in reqs.clone() {
+        coord.submit_request(r);
+    }
+    let seq = ServeMetrics::from_completions(&coord.run());
+
+    let mut eng = DeviceEngine::new(&cfg, 8);
+    for r in reqs.clone() {
+        eng.submit(r);
+    }
+    let bat = ServeMetrics::from_completions(&eng.run());
+    let rep = eng.report();
+
+    let mut t = Table::new(
+        "continuous batching vs sequential (1 device, 16-request mix at t=0)",
+        &["engine", "tok/s", "makespan", "p50 lat", "p95 lat", "p95 TTFT"],
+    );
+    for (name, m) in [("sequential fcfs", &seq), ("continuous batch×8", &bat)] {
+        t.row(&[
+            name.into(),
+            format!("{:.1}", m.throughput_tok_s),
+            fmt_time(m.makespan_s),
+            fmt_time(m.p50_latency_s),
+            fmt_time(m.p95_latency_s),
+            fmt_time(m.p95_ttft_s),
+        ]);
+    }
+    t.print();
+    println!(
+        "batching gain: {} | kv peak util {} | max batch {} | decode steps {}",
+        fmt_x(bat.throughput_tok_s / seq.throughput_tok_s),
+        fmt_pct(rep.kv_peak_utilization),
+        rep.max_batch_seen,
+        rep.decode_steps
+    );
+    assert_eq!(seq.total_tokens, bat.total_tokens, "token conservation");
+    assert!(
+        bat.throughput_tok_s > seq.throughput_tok_s,
+        "continuous batching must beat sequential FCFS"
+    );
+
+    // ---- (b) Cluster scaling at saturating load. ----
+    let items = RequestMix::paper(7).take(64);
+    let sat = requests_from_items(&items, ArrivalPattern::AtOnce, 8);
+    let mut t = Table::new(
+        "cluster scaling (batch 8/device, 64-request mix at t=0, round-robin)",
+        &["devices", "tok/s", "makespan", "scaling"],
+    );
+    let mut base = 0.0;
+    let mut last = 0.0;
+    for devices in [1usize, 2, 4] {
+        let mut cluster = Cluster::new(&cfg, devices, 8, Routing::RoundRobin);
+        for r in sat.clone() {
+            cluster.submit(r);
+        }
+        let m = ServeMetrics::from_completions(&cluster.run());
+        if devices == 1 {
+            base = m.throughput_tok_s;
+        }
+        last = m.throughput_tok_s;
+        t.row(&[
+            devices.to_string(),
+            format!("{:.1}", m.throughput_tok_s),
+            fmt_time(m.makespan_s),
+            fmt_x(m.throughput_tok_s / base),
+        ]);
+    }
+    t.print();
+    let scaling = last / base;
+    assert!(
+        scaling >= 2.5,
+        "4-device scaling {scaling:.2}× < 2.5× at saturating load"
+    );
+
+    // ---- (c) Latency vs offered load (Poisson, 4-device cluster). ----
+    let sc = SweepConfig::default();
+    let loads = [50.0, 200.0, 1000.0];
+    let pts = latency_vs_load(&cfg, &sc, &loads);
+    let mut t = Table::new(
+        "latency vs offered load (4 devices × batch 8, 64 Poisson requests)",
+        &["offered req/s", "tok/s", "p50 lat", "p95 lat", "p95 TTFT", "rejected"],
+    );
+    for p in &pts {
+        t.row(&[
+            format!("{:.0}", p.offered_rps),
+            format!("{:.1}", p.metrics.throughput_tok_s),
+            fmt_time(p.metrics.p50_latency_s),
+            fmt_time(p.metrics.p95_latency_s),
+            fmt_time(p.metrics.p95_ttft_s),
+            p.rejected.to_string(),
+        ]);
+    }
+    t.print();
+    println!("serve cluster bench OK");
+}

@@ -88,6 +88,16 @@ impl HbmConfig {
         self.subarrays_per_bank * self.rows_per_subarray
     }
 
+    /// Bytes per subarray (the KV-cache allocation granule).
+    pub fn subarray_bytes(&self) -> usize {
+        self.rows_per_subarray * self.row_bytes
+    }
+
+    /// Total subarrays across the device.
+    pub fn total_subarrays(&self) -> usize {
+        self.total_banks() * self.subarrays_per_bank
+    }
+
     /// Bytes per bank.
     pub fn bytes_per_bank(&self) -> usize {
         self.rows_per_bank() * self.row_bytes
@@ -201,6 +211,8 @@ mod tests {
         assert_eq!(h.gbl_bytes_per_access(), 32);
         assert_eq!(h.rows_per_bank(), 32768);
         assert_eq!(h.bytes_per_bank(), 32 << 20);
+        assert_eq!(h.subarray_bytes(), 512 << 10);
+        assert_eq!(h.total_subarrays(), 16384);
     }
 
     #[test]

@@ -99,6 +99,12 @@ impl ModelConfig {
         (weights + kv) * self.param_bytes
     }
 
+    /// Bytes of KV-cache state one token pins for the request's lifetime
+    /// (K and V vectors across every layer).
+    pub fn kv_bytes_per_token(&self) -> usize {
+        2 * self.n_layers * self.d_model * self.param_bytes
+    }
+
     /// FLOPs of a single-token decode step (2 × MACs), excluding
     /// nonlinearities.
     pub fn flops_per_token(&self, kv_len: usize) -> usize {
@@ -134,6 +140,13 @@ mod tests {
         assert!(b >= m.n_layers * m.params_per_layer() * 2);
         // KV reads grow with context.
         assert!(m.bytes_per_token(1024) > m.bytes_per_token(1));
+    }
+
+    #[test]
+    fn kv_bytes_per_token_matches_shapes() {
+        // GPT-2 medium: 2 × 24 layers × 1024 dims × 2 B = 96 KB/token.
+        assert_eq!(ModelConfig::gpt2_medium().kv_bytes_per_token(), 98304);
+        assert_eq!(ModelConfig::gpt2_mini().kv_bytes_per_token(), 1024);
     }
 
     #[test]

@@ -7,49 +7,18 @@
 //! per-request latency metrics. It also implements the paper's §6.3
 //! future-work policy — offloading the compute-bound summarization stage
 //! to a GPU while the PIM handles generation — as a first-class option.
+//!
+//! This is the *sequential* single-device path: one request runs to
+//! completion before the next starts. The request/completion/policy/
+//! metric vocabulary lives in [`crate::serve`] (shared with the
+//! continuous-batching cluster engine) and is re-exported here for
+//! compatibility.
 
-mod metrics;
-mod scheduler;
-
-pub use metrics::{percentile, ServeMetrics};
-pub use scheduler::{Policy, Scheduler};
+pub use crate::serve::{percentile, Completion, Policy, Request, Scheduler, ServeMetrics};
 
 use crate::baseline::GpuModel;
 use crate::config::SimConfig;
 use crate::mapper::GenerationSim;
-
-/// A generation request.
-#[derive(Debug, Clone)]
-pub struct Request {
-    pub id: u64,
-    pub prompt_len: usize,
-    pub max_new_tokens: usize,
-    /// Arrival time in seconds (simulated wall clock).
-    pub arrival_s: f64,
-}
-
-/// A finished request with its latency breakdown.
-#[derive(Debug, Clone)]
-pub struct Completion {
-    pub id: u64,
-    pub prompt_len: usize,
-    pub tokens_out: usize,
-    pub queue_s: f64,
-    pub prefill_s: f64,
-    pub decode_s: f64,
-    pub finish_s: f64,
-}
-
-impl Completion {
-    pub fn total_latency_s(&self) -> f64 {
-        self.queue_s + self.prefill_s + self.decode_s
-    }
-
-    /// Time to first token (queue + summarization).
-    pub fn ttft_s(&self) -> f64 {
-        self.queue_s + self.prefill_s
-    }
-}
 
 /// Where the summarization stage runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -103,8 +72,15 @@ impl Coordinator {
             prompt_len,
             max_new_tokens,
             arrival_s,
+            session: id,
         });
         id
+    }
+
+    /// Enqueue a pre-built request (shared-workload experiments).
+    pub fn submit_request(&mut self, req: Request) {
+        self.next_id = self.next_id.max(req.id + 1);
+        self.queue.push(req);
     }
 
     /// Service time of one request's summarization stage.
@@ -127,17 +103,20 @@ impl Coordinator {
         }
     }
 
-    /// Decode-stage time for a request.
-    fn decode_time(&mut self, prompt_len: usize, n_out: usize) -> f64 {
+    /// Decode-stage time for a request, plus the decode iterations
+    /// actually simulated (`max_seq` truncation stops early).
+    fn decode_time(&mut self, prompt_len: usize, n_out: usize) -> (f64, usize) {
         let mut cycles = 0u64;
+        let mut iters = 0usize;
         for i in 1..n_out {
             let kv = prompt_len + i;
             if kv >= self.cfg.model.max_seq {
                 break;
             }
             cycles += self.sim.decode_token(kv).cycles;
+            iters += 1;
         }
-        self.cfg.timing.cycles_to_sec(cycles)
+        (self.cfg.timing.cycles_to_sec(cycles), iters)
     }
 
     /// Drain the queue, producing completions in service order.
@@ -174,17 +153,21 @@ impl Coordinator {
             let start = device_free_at.max(req.arrival_s);
             let queue_s = start - req.arrival_s;
             let prefill_s = self.prefill_time(req.prompt_len);
-            let decode_s = self.decode_time(req.prompt_len, req.max_new_tokens);
+            let (decode_s, decode_iters) = self.decode_time(req.prompt_len, req.max_new_tokens);
             let finish = start + prefill_s + decode_s;
             device_free_at = finish;
             completions.push(Completion {
                 id: req.id,
                 prompt_len: req.prompt_len,
                 tokens_out: req.max_new_tokens,
+                // Prefill emits the first token, then the simulated
+                // decode iterations.
+                tokens_simulated: 1 + decode_iters,
                 queue_s,
                 prefill_s,
                 decode_s,
                 finish_s: finish,
+                device: 0,
             });
         }
         completions
@@ -230,6 +213,23 @@ mod tests {
         c.submit(32, 4, 1000.0); // arrives long after the first finishes
         let done = c.run();
         assert_eq!(done[1].queue_s, 0.0);
+    }
+
+    #[test]
+    fn submitted_requests_flow_like_submitted_tuples() {
+        let mut c = coord();
+        c.submit_request(Request {
+            id: 9,
+            prompt_len: 32,
+            max_new_tokens: 4,
+            arrival_s: 0.0,
+            session: 3,
+        });
+        let done = c.run();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 9);
+        // Auto-ids continue past explicit ones.
+        assert_eq!(c.submit(32, 4, 1.0), 10);
     }
 
     #[test]

@@ -21,6 +21,8 @@
 //! * a **PJRT runtime** that loads the AOT-compiled JAX/Pallas artifacts as
 //!   the float golden model ([`runtime`]),
 //! * a text-generation **serving coordinator** ([`coordinator`]),
+//! * a **cluster serving engine** — continuous batching, subarray-aware
+//!   KV-cache accounting and multi-device routing ([`serve`]),
 //! * reporting/CLI/test utilities ([`report`], [`cli`], [`testutil`]).
 //!
 //! See `DESIGN.md` for the architecture and the per-experiment index, and
@@ -38,6 +40,7 @@ pub mod model;
 pub mod pim;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod stats;
 pub mod testutil;
 

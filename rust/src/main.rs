@@ -8,7 +8,21 @@
 //! sal-pim power    [--out 32]                  # Fig. 15 power report
 //! sal-pim area                                 # Table 3 arithmetic
 //! sal-pim serve    --requests 16 [--policy fcfs|sjf|spf] [--offload]
+//!                  [--engine seq|batch|cluster] [--devices 4] [--batch 8]
+//!                  [--route rr|ll|affinity] [--rate 200] [--burst 4]
+//!                  [--sweep] [--seed 42]
 //! ```
+//!
+//! `serve` modes:
+//! * `--engine seq` (default) — the paper-faithful sequential coordinator;
+//! * `--engine batch` — continuous batching on one device (KV-admission
+//!   controlled, batched decode steps);
+//! * `--engine cluster` — `--devices` N batching devices behind a router
+//!   (`--route` round-robin / least-loaded / session-affinity);
+//! * `--rate` R switches arrivals to open-loop Poisson at R req/s
+//!   (`--burst` B makes them bursts of B); without it the legacy jittered
+//!   mix is used;
+//! * `--sweep` — the latency-vs-offered-load curve at 3 loads.
 
 use sal_pim::baseline::GpuModel;
 use sal_pim::cli::Args;
@@ -16,8 +30,11 @@ use sal_pim::config::{parse::parse_config, SimConfig};
 use sal_pim::coordinator::{Coordinator, Policy, PrefillTarget, ServeMetrics};
 use sal_pim::energy::{AreaModel, EnergyParams, PowerReport};
 use sal_pim::mapper::GenerationSim;
-use sal_pim::report::{fmt_bw, fmt_time, fmt_x, Table};
-use sal_pim::testutil::SplitMix64;
+use sal_pim::report::{fmt_bw, fmt_pct, fmt_time, fmt_x, Table};
+use sal_pim::serve::sweep::{latency_vs_load, SweepConfig};
+use sal_pim::serve::workload::{requests_from_items, ArrivalPattern};
+use sal_pim::serve::{Cluster, DeviceEngine, Routing};
+use sal_pim::testutil::RequestMix;
 
 fn main() {
     if let Err(e) = run() {
@@ -53,6 +70,19 @@ fn run() -> anyhow::Result<()> {
         Some(other) => anyhow::bail!("unknown command `{other}` — see --help in the README"),
         None => {
             println!("usage: sal-pim <config|simulate|sweep|breakdown|power|area|serve> [flags]");
+            println!();
+            println!("serve flags:");
+            println!("  --requests N       request count (default 16)");
+            println!("  --policy P         fcfs|sjf|spf (default fcfs)");
+            println!("  --engine E         seq|batch|cluster (default seq)");
+            println!("  --devices N        cluster size (default 4)");
+            println!("  --batch M          continuous-batching slots per device (default 8)");
+            println!("  --route R          rr|ll|affinity (default rr)");
+            println!("  --rate R           open-loop Poisson arrivals at R req/s");
+            println!("  --burst B          make Poisson arrivals bursts of B");
+            println!("  --offload          GPU prefill offload (seq engine only)");
+            println!("  --sweep            latency-vs-offered-load curve (3 loads)");
+            println!("  --seed S           workload seed (default 42)");
             Ok(())
         }
     }
@@ -210,32 +240,148 @@ fn cmd_area(args: &Args) -> anyhow::Result<()> {
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let cfg = load_config(args)?;
     let n = args.get("requests", 16usize)?;
+    let seed = args.get("seed", 42u64)?;
     let policy = match args.flag("policy").unwrap_or("fcfs") {
         "fcfs" => Policy::Fcfs,
         "sjf" => Policy::ShortestJobFirst,
         "spf" => Policy::ShortestPromptFirst,
         other => anyhow::bail!("unknown policy `{other}`"),
     };
-    let mut coord = Coordinator::new(&cfg).with_policy(policy);
-    if args.switch("offload") {
-        coord = coord.with_prefill_target(PrefillTarget::GpuOffload);
+    let routing = match args.flag("route").unwrap_or("rr") {
+        "rr" => Routing::RoundRobin,
+        "ll" => Routing::LeastLoaded,
+        "affinity" => Routing::SessionAffinity,
+        other => anyhow::bail!("unknown route `{other}` (rr|ll|affinity)"),
+    };
+    let devices = args.get("devices", 4usize)?;
+    let max_batch = args.get("batch", 8usize)?;
+
+    if args.switch("sweep") {
+        // Honor an explicit --requests; default to a load big enough to
+        // actually saturate the cluster.
+        let sweep_requests = if args.flag("requests").is_some() { n } else { 64 };
+        let sc = SweepConfig {
+            devices,
+            max_batch,
+            routing,
+            policy,
+            requests: sweep_requests,
+            seed,
+            ..SweepConfig::default()
+        };
+        let loads = [50.0, 200.0, 1000.0];
+        let pts = latency_vs_load(&cfg, &sc, &loads);
+        let mut t = Table::new(
+            &format!(
+                "latency vs offered load ({} devices × batch {}, {}, {} requests)",
+                sc.devices,
+                sc.max_batch,
+                routing.name(),
+                sc.requests
+            ),
+            &["offered req/s", "tok/s", "p50 lat", "p95 lat", "p95 TTFT", "rejected"],
+        );
+        for p in &pts {
+            t.row(&[
+                format!("{:.0}", p.offered_rps),
+                format!("{:.1}", p.metrics.throughput_tok_s),
+                fmt_time(p.metrics.p50_latency_s),
+                fmt_time(p.metrics.p95_latency_s),
+                fmt_time(p.metrics.p95_ttft_s),
+                p.rejected.to_string(),
+            ]);
+        }
+        t.print();
+        return Ok(());
     }
-    // Synthetic arrival process (deterministic seed): prompt 16–128,
-    // output 8–128, Poisson-ish arrivals.
-    let mut rng = SplitMix64::new(args.get("seed", 42u64)?);
-    let mut at = 0.0;
-    for _ in 0..n {
-        let prompt = 16 + (rng.below(8) * 16) as usize;
-        let out = 8 << rng.below(5) as usize;
-        at += rng.f64_unit() * 0.05;
-        coord.submit(prompt, out, at);
+
+    // The shared request mix: every engine sees the identical workload.
+    let items = RequestMix::paper(seed).take(n);
+    let pattern = match args.flag("rate") {
+        Some(_) => {
+            let rate = args.get("rate", 200.0f64)?;
+            anyhow::ensure!(rate > 0.0, "--rate must be positive");
+            match args.flag("burst") {
+                Some(_) => ArrivalPattern::Bursty {
+                    rate_rps: rate,
+                    burst: args.get("burst", 4usize)?,
+                },
+                None => ArrivalPattern::Poisson { rate_rps: rate },
+            }
+        }
+        None => ArrivalPattern::Jittered { scale_s: 0.05 },
+    };
+    let requests = requests_from_items(&items, pattern, 8);
+
+    match args.flag("engine").unwrap_or("seq") {
+        "seq" => {
+            let mut coord = Coordinator::new(&cfg).with_policy(policy);
+            if args.switch("offload") {
+                coord = coord.with_prefill_target(PrefillTarget::GpuOffload);
+            }
+            for r in requests {
+                coord.submit_request(r);
+            }
+            let m = ServeMetrics::from_completions(&coord.run());
+            println!(
+                "engine=seq policy={} offload={} arrivals={}\n{m}",
+                policy.name(),
+                args.switch("offload"),
+                pattern.name()
+            );
+        }
+        "batch" => {
+            let mut eng = DeviceEngine::new(&cfg, max_batch).with_policy(policy);
+            for r in requests {
+                eng.submit(r);
+            }
+            let m = ServeMetrics::from_completions(&eng.run());
+            let rep = eng.report();
+            println!(
+                "engine=batch policy={} batch={} arrivals={}\n{m}",
+                policy.name(),
+                max_batch,
+                pattern.name()
+            );
+            println!(
+                "kv peak util:    {} | max batch seen: {} | rejected: {}",
+                fmt_pct(rep.kv_peak_utilization),
+                rep.max_batch_seen,
+                rep.rejected
+            );
+        }
+        "cluster" => {
+            let mut cluster = Cluster::new(&cfg, devices, max_batch, routing).with_policy(policy);
+            for r in requests {
+                cluster.submit(r);
+            }
+            let done = cluster.run();
+            let m = ServeMetrics::from_completions(&done);
+            println!(
+                "engine=cluster devices={} batch={} route={} arrivals={}\n{m}",
+                devices,
+                max_batch,
+                routing.name(),
+                pattern.name()
+            );
+            let mut t = Table::new(
+                "per-device",
+                &["device", "requests", "tok/s", "p95 lat", "kv peak util"],
+            );
+            let per = cluster.per_device_metrics(&done);
+            let reps = cluster.per_device_reports();
+            for (i, (pm, rep)) in per.iter().zip(&reps).enumerate() {
+                t.row(&[
+                    i.to_string(),
+                    pm.requests.to_string(),
+                    format!("{:.1}", pm.throughput_tok_s),
+                    fmt_time(pm.p95_latency_s),
+                    fmt_pct(rep.kv_peak_utilization),
+                ]);
+            }
+            t.print();
+        }
+        other => anyhow::bail!("unknown engine `{other}` (seq|batch|cluster)"),
     }
-    let done = coord.run();
-    let m = ServeMetrics::from_completions(&done);
-    println!(
-        "policy={} offload={}\n{m}",
-        policy.name(),
-        args.switch("offload")
-    );
     Ok(())
 }

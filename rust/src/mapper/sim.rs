@@ -10,8 +10,94 @@ use super::map_ops;
 use crate::config::SimConfig;
 use crate::model::gpt2;
 use crate::pim::PimEngine;
-use crate::stats::Stats;
+use crate::stats::{CmdKind, Phase, Stats};
 use std::collections::HashMap;
+
+/// Phases of a decode iteration that stream *model weights*: one batched
+/// step pays them once because every request in the batch consumes the
+/// same weight rows as they cross the S-ALUs.
+const WEIGHT_SHARED_PHASES: [Phase; 5] = [
+    Phase::Embedding,
+    Phase::Ffn,
+    Phase::LmHead,
+    Phase::Residual,
+    Phase::DataMovement,
+];
+
+/// Phases charged per batched request: the KV streams live in different
+/// subarray rows per request, and the nonlinear (softmax/LUT) work is
+/// per-request state — neither amortizes across a batch.
+const PER_REQUEST_PHASES: [Phase; 2] = [Phase::Mha, Phase::NonLinear];
+
+/// Traffic counters pre-scaled by one group's share of an iteration.
+#[derive(Debug, Clone, Default)]
+struct ScaledTraffic {
+    internal_bytes: u64,
+    external_bytes: u64,
+    activations: u64,
+    commands: Vec<(CmdKind, u64)>,
+}
+
+impl ScaledTraffic {
+    fn from_stats(src: &Stats, frac: f64) -> Self {
+        let scale = |v: u64| (v as f64 * frac).round() as u64;
+        ScaledTraffic {
+            internal_bytes: scale(src.internal_bytes),
+            external_bytes: scale(src.external_bytes),
+            activations: scale(src.activations),
+            commands: src.commands.iter().map(|(k, c)| (*k, scale(*c))).collect(),
+        }
+    }
+
+    fn add_into(&self, dst: &mut Stats) {
+        dst.internal_bytes += self.internal_bytes;
+        dst.external_bytes += self.external_bytes;
+        dst.activations += self.activations;
+        for (k, c) in &self.commands {
+            *dst.commands.entry(*k).or_insert(0) += c;
+        }
+    }
+}
+
+/// Precomputed batching terms for one KV length: phase cycles split into
+/// the weight-shared and per-request groups, traffic counters pre-scaled
+/// by each group's share. Cached per kv so the serving engine's hot loop
+/// never re-clones full [`Stats`].
+#[derive(Debug, Clone)]
+struct BatchTerms {
+    shared_phases: [(Phase, u64); 5],
+    per_req_phases: [(Phase, u64); 2],
+    shared_traffic: ScaledTraffic,
+    per_req_traffic: ScaledTraffic,
+}
+
+impl BatchTerms {
+    fn from_stats(st: &Stats) -> Self {
+        let grab = |p: Phase| st.phase_cycles.get(&p).copied().unwrap_or(0);
+        let shared_phases = WEIGHT_SHARED_PHASES.map(|p| (p, grab(p)));
+        let per_req_phases = PER_REQUEST_PHASES.map(|p| (p, grab(p)));
+        let shared: u64 = shared_phases.iter().map(|(_, c)| *c).sum();
+        let per_req: u64 = per_req_phases.iter().map(|(_, c)| *c).sum();
+        let (shared_frac, per_req_frac) = if st.cycles == 0 {
+            (0.0, 0.0)
+        } else {
+            (
+                shared as f64 / st.cycles as f64,
+                per_req as f64 / st.cycles as f64,
+            )
+        };
+        BatchTerms {
+            shared_phases,
+            per_req_phases,
+            shared_traffic: ScaledTraffic::from_stats(st, shared_frac),
+            per_req_traffic: ScaledTraffic::from_stats(st, per_req_frac),
+        }
+    }
+
+    fn shared_cycles(&self) -> u64 {
+        self.shared_phases.iter().map(|(_, c)| *c).sum()
+    }
+}
 
 /// Result of one simulated generation run.
 #[derive(Debug, Clone)]
@@ -53,6 +139,7 @@ pub struct GenerationSim {
     engine: PimEngine,
     decode_cache: HashMap<usize, Stats>,
     prefill_cache: HashMap<usize, Stats>,
+    batch_cache: HashMap<usize, BatchTerms>,
 }
 
 impl GenerationSim {
@@ -62,6 +149,7 @@ impl GenerationSim {
             engine: PimEngine::new(cfg),
             decode_cache: HashMap::new(),
             prefill_cache: HashMap::new(),
+            batch_cache: HashMap::new(),
         }
     }
 
@@ -71,6 +159,7 @@ impl GenerationSim {
             self.engine.opt_prefetch = on;
             self.decode_cache.clear();
             self.prefill_cache.clear();
+            self.batch_cache.clear();
         }
     }
 
@@ -100,6 +189,50 @@ impl GenerationSim {
         stats.tokens_generated = 1; // summarization emits the first token
         self.prefill_cache.insert(n_in, stats.clone());
         stats
+    }
+
+    /// Timing of one *batched* decode step: every entry of `kv_lens` is
+    /// one in-flight request producing its next token in the same step.
+    ///
+    /// The weight-streaming phases are charged once at the cost of the
+    /// most expensive request (banks broadcast each weight row to all
+    /// per-request accumulators), while the KV-bound attention and the
+    /// per-request nonlinear work accumulate across the batch — see
+    /// [`WEIGHT_SHARED_PHASES`] / [`PER_REQUEST_PHASES`]. A batch of one
+    /// degenerates to [`GenerationSim::decode_token`] exactly.
+    pub fn decode_batch_step(&mut self, kv_lens: &[usize]) -> Stats {
+        assert!(!kv_lens.is_empty(), "empty decode batch");
+        for &kv in kv_lens {
+            if !self.batch_cache.contains_key(&kv) {
+                let st = self.decode_token(kv);
+                self.batch_cache.insert(kv, BatchTerms::from_stats(&st));
+            }
+        }
+        let lead = kv_lens
+            .iter()
+            .map(|kv| &self.batch_cache[kv])
+            .max_by_key(|t| t.shared_cycles())
+            .unwrap();
+        let mut out = Stats::new();
+        // Shared weight stream: the lead request's weight-phase cycles.
+        for (p, c) in lead.shared_phases.iter().copied() {
+            if c > 0 {
+                out.add_phase_cycles(p, c);
+            }
+        }
+        lead.shared_traffic.add_into(&mut out);
+        // Per-request KV + nonlinear work.
+        for kv in kv_lens {
+            let t = &self.batch_cache[kv];
+            for (p, c) in t.per_req_phases.iter().copied() {
+                if c > 0 {
+                    out.add_phase_cycles(p, c);
+                }
+            }
+            t.per_req_traffic.add_into(&mut out);
+        }
+        out.tokens_generated = kv_lens.len() as u64;
+        out
     }
 
     /// Full text generation: `n_in` prompt tokens, `n_out` output tokens
@@ -200,6 +333,37 @@ mod tests {
             + st.phase_fraction(Phase::Ffn)
             + st.phase_fraction(Phase::LmHead);
         assert!(matrix > 0.4, "matrix fraction {matrix}");
+    }
+
+    #[test]
+    fn batch_of_one_equals_decode_token() {
+        let mut sim = GenerationSim::new(&SimConfig::paper());
+        let single = sim.decode_token(64);
+        let batch = sim.decode_batch_step(&[64]);
+        assert_eq!(batch.cycles, single.cycles);
+        assert_eq!(batch.tokens_generated, 1);
+    }
+
+    #[test]
+    fn batched_step_amortizes_weight_stream() {
+        let mut sim = GenerationSim::new(&SimConfig::paper());
+        let kvs = [64usize, 96, 128, 160];
+        let batch = sim.decode_batch_step(&kvs);
+        let individual: u64 = kvs.iter().map(|&kv| sim.decode_token(kv).cycles).sum();
+        let slowest = kvs.iter().map(|&kv| sim.decode_token(kv).cycles).max().unwrap();
+        // Cheaper than sequential service, never faster than the
+        // slowest member alone.
+        assert!(batch.cycles < individual, "{} !< {individual}", batch.cycles);
+        assert!(batch.cycles >= slowest, "{} < slowest {slowest}", batch.cycles);
+        assert_eq!(batch.tokens_generated, 4);
+    }
+
+    #[test]
+    fn batched_step_grows_with_batch_size() {
+        let mut sim = GenerationSim::new(&SimConfig::paper());
+        let b2 = sim.decode_batch_step(&[64, 64]).cycles;
+        let b8 = sim.decode_batch_step(&[64; 8]).cycles;
+        assert!(b8 > b2, "per-request attention must accumulate");
     }
 
     #[test]

@@ -96,6 +96,11 @@ pub fn fmt_x(r: f64) -> String {
     format!("{r:.2}×")
 }
 
+/// Format a fraction as a percentage (`0.073` → `7.3%`).
+pub fn fmt_pct(frac: f64) -> String {
+    format!("{:.1}%", frac * 100.0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -127,5 +132,7 @@ mod tests {
         assert_eq!(fmt_bw(8.19e12), "8.19 TB/s");
         assert_eq!(fmt_bw(672e9), "672.0 GB/s");
         assert_eq!(fmt_x(4.7234), "4.72×");
+        assert_eq!(fmt_pct(0.0731), "7.3%");
+        assert_eq!(fmt_pct(1.0), "100.0%");
     }
 }

@@ -1,0 +1,201 @@
+//! A cluster of SAL-PIM devices behind a router.
+//!
+//! Scaling past one 8 GB stack means sharding traffic across devices
+//! (each holds a full weight replica, as in PIM-GPT-style multi-device
+//! serving). The cluster owns N [`DeviceEngine`]s with per-device queues
+//! and routes at submit time — routing is deterministic for a fixed
+//! submission order, so whole-cluster runs replay exactly under a fixed
+//! workload seed.
+
+use super::engine::{DeviceEngine, EngineReport};
+use super::metrics::ServeMetrics;
+use super::policy::Policy;
+use super::types::{Completion, Request};
+use crate::config::SimConfig;
+
+/// How requests are assigned to devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Routing {
+    /// Strict rotation over devices.
+    RoundRobin,
+    /// Device with the least estimated queued work (tokens) at submit.
+    LeastLoaded,
+    /// `session % devices` — keeps a session's requests (and their KV
+    /// reuse) on one device.
+    SessionAffinity,
+}
+
+impl Routing {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Routing::RoundRobin => "round-robin",
+            Routing::LeastLoaded => "least-loaded",
+            Routing::SessionAffinity => "session-affinity",
+        }
+    }
+}
+
+/// N devices + router.
+pub struct Cluster {
+    devices: Vec<DeviceEngine>,
+    pub routing: Routing,
+    rr_next: usize,
+    /// Submit-time assignment trace (request id → device), for tests and
+    /// routing diagnostics.
+    assignments: Vec<(u64, usize)>,
+}
+
+impl Cluster {
+    pub fn new(cfg: &SimConfig, n_devices: usize, max_batch: usize, routing: Routing) -> Self {
+        assert!(n_devices >= 1);
+        let devices = (0..n_devices)
+            .map(|i| {
+                let mut d = DeviceEngine::new(cfg, max_batch);
+                d.device_index = i;
+                d
+            })
+            .collect();
+        Cluster {
+            devices,
+            routing,
+            rr_next: 0,
+            assignments: Vec::new(),
+        }
+    }
+
+    pub fn with_policy(mut self, policy: Policy) -> Self {
+        for d in &mut self.devices {
+            d.policy = policy;
+        }
+        self
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Route one request to a device queue; returns the device index.
+    pub fn submit(&mut self, req: Request) -> usize {
+        let n = self.devices.len();
+        let dev = match self.routing {
+            Routing::RoundRobin => {
+                let d = self.rr_next % n;
+                self.rr_next = (self.rr_next + 1) % n;
+                d
+            }
+            Routing::LeastLoaded => {
+                // Ties break toward the lowest index — deterministic.
+                (0..n)
+                    .min_by_key(|&i| (self.devices[i].queued_tokens(), i))
+                    .unwrap()
+            }
+            Routing::SessionAffinity => (req.session as usize) % n,
+        };
+        self.assignments.push((req.id, dev));
+        self.devices[dev].submit(req);
+        dev
+    }
+
+    /// Run every device queue to completion; completions merged in finish
+    /// order across the cluster.
+    pub fn run(&mut self) -> Vec<Completion> {
+        let mut all: Vec<Completion> = Vec::new();
+        for d in &mut self.devices {
+            all.extend(d.run());
+        }
+        all.sort_by(|a, b| a.finish_s.partial_cmp(&b.finish_s).unwrap());
+        all
+    }
+
+    /// Per-device serving metrics for the last run.
+    pub fn per_device_metrics(&self, done: &[Completion]) -> Vec<ServeMetrics> {
+        (0..self.devices.len())
+            .map(|i| {
+                let mine: Vec<Completion> =
+                    done.iter().filter(|c| c.device == i).cloned().collect();
+                ServeMetrics::from_completions(&mine)
+            })
+            .collect()
+    }
+
+    pub fn per_device_reports(&self) -> Vec<EngineReport> {
+        self.devices.iter().map(|d| d.report()).collect()
+    }
+
+    /// Submit-time (request id, device) assignment trace.
+    pub fn assignments(&self) -> &[(u64, usize)] {
+        &self.assignments
+    }
+
+    /// Total requests rejected across devices (KV windows that can never
+    /// fit).
+    pub fn rejected(&self) -> usize {
+        self.devices.iter().map(|d| d.rejected().len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, session: u64, at: f64) -> Request {
+        Request {
+            id,
+            prompt_len: 16,
+            max_new_tokens: 8,
+            arrival_s: at,
+            session,
+        }
+    }
+
+    #[test]
+    fn round_robin_rotates() {
+        let mut c = Cluster::new(&SimConfig::paper(), 3, 4, Routing::RoundRobin);
+        let devs: Vec<usize> = (0..6).map(|i| c.submit(req(i, i, 0.0))).collect();
+        assert_eq!(devs, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn session_affinity_is_sticky() {
+        let mut c = Cluster::new(&SimConfig::paper(), 4, 4, Routing::SessionAffinity);
+        let a = c.submit(req(0, 7, 0.0));
+        let b = c.submit(req(1, 7, 0.1));
+        let other = c.submit(req(2, 8, 0.2));
+        assert_eq!(a, b, "same session, same device");
+        assert_ne!(a, other);
+    }
+
+    #[test]
+    fn least_loaded_spreads_uneven_work() {
+        let mut c = Cluster::new(&SimConfig::paper(), 2, 4, Routing::LeastLoaded);
+        let mut big = req(0, 0, 0.0);
+        big.max_new_tokens = 128;
+        let d0 = c.submit(big);
+        // The next two small requests should both avoid the loaded device.
+        let d1 = c.submit(req(1, 1, 0.0));
+        let d2 = c.submit(req(2, 2, 0.0));
+        assert_ne!(d0, d1);
+        assert_eq!(d1, d2, "second device stays lighter than the big job");
+    }
+
+    #[test]
+    fn cluster_serves_everything_once() {
+        let cfg = SimConfig::paper();
+        let mut c = Cluster::new(&cfg, 2, 4, Routing::RoundRobin);
+        for i in 0..6 {
+            c.submit(req(i, i, 0.0));
+        }
+        let done = c.run();
+        assert_eq!(done.len(), 6);
+        let mut ids: Vec<u64> = done.iter().map(|c| c.id).collect();
+        ids.sort();
+        assert_eq!(ids, (0..6).collect::<Vec<u64>>());
+        // Finish order is globally sorted.
+        for w in done.windows(2) {
+            assert!(w[0].finish_s <= w[1].finish_s);
+        }
+        let per = c.per_device_metrics(&done);
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[0].requests + per[1].requests, 6);
+    }
+}

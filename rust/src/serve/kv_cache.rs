@@ -1,0 +1,209 @@
+//! Subarray-aware KV-cache capacity accounting for one SAL-PIM device.
+//!
+//! SAL-PIM keeps the KV cache resident in DRAM next to the weights
+//! (§3.2's KV mapping streams K/V rows through the S-ALUs like weight
+//! rows). A device therefore has a *hard* KV budget: whatever subarrays
+//! are left after the model weights and the LUT-embedded subarrays are
+//! placed. The manager allocates that budget to requests in whole
+//! subarrays — a request's K/V rows must be contiguous within a subarray
+//! group for the streaming schedule to hit them with open-row accesses,
+//! so capacity is consumed at subarray granularity even when a request's
+//! token window fills one only partially.
+//!
+//! [`KvCacheManager::try_admit`] reserves the full window (prompt +
+//! output budget) up front — the paper's device has no KV eviction path,
+//! so admission control is the only defence against mid-generation
+//! overflow. Slots free on completion via [`KvCacheManager::release`].
+
+use crate::config::SimConfig;
+
+/// A granted KV reservation (returned by [`KvCacheManager::try_admit`];
+/// hand it back with [`KvCacheManager::release`]).
+#[derive(Debug)]
+pub struct KvLease {
+    /// Request id the lease belongs to (for diagnostics).
+    pub request_id: u64,
+    /// Token window reserved.
+    pub tokens: usize,
+    /// Whole subarrays consumed by the reservation.
+    pub subarrays: usize,
+}
+
+/// Tracks the KV subarray pool of one device.
+#[derive(Debug)]
+pub struct KvCacheManager {
+    /// Bytes of K+V state per token (2 × layers × d_model × param bytes).
+    kv_bytes_per_token: usize,
+    /// Bytes per subarray (rows × row size).
+    subarray_bytes: usize,
+    /// Subarrays in the device's KV region.
+    total_subarrays: usize,
+    free_subarrays: usize,
+    /// Live admissions (sum of leased tokens, for reporting).
+    reserved_tokens: usize,
+    admitted: usize,
+    peak_used_subarrays: usize,
+}
+
+impl KvCacheManager {
+    /// KV region derived from the device config: total subarrays minus
+    /// the LUT-embedded subarrays minus what the model weights occupy.
+    pub fn for_device(cfg: &SimConfig) -> Self {
+        let subarray_bytes = cfg.hbm.subarray_bytes();
+        let total = cfg.hbm.total_subarrays();
+        let lut = cfg.hbm.total_banks() * cfg.lut.num_lut_subarrays;
+        let weight_bytes = cfg.model.total_params() * cfg.model.param_bytes;
+        let weight_subarrays = weight_bytes.div_ceil(subarray_bytes);
+        let kv_subarrays = total.saturating_sub(lut + weight_subarrays);
+        Self::with_kv_subarrays(cfg, kv_subarrays)
+    }
+
+    /// Manager over an explicit KV-region size (tests and what-if sweeps).
+    pub fn with_kv_subarrays(cfg: &SimConfig, kv_subarrays: usize) -> Self {
+        KvCacheManager {
+            kv_bytes_per_token: cfg.model.kv_bytes_per_token(),
+            subarray_bytes: cfg.hbm.subarray_bytes(),
+            total_subarrays: kv_subarrays,
+            free_subarrays: kv_subarrays,
+            reserved_tokens: 0,
+            admitted: 0,
+            peak_used_subarrays: 0,
+        }
+    }
+
+    /// Whole subarrays a `tokens`-wide KV window occupies.
+    pub fn subarrays_for(&self, tokens: usize) -> usize {
+        (tokens * self.kv_bytes_per_token).div_ceil(self.subarray_bytes)
+    }
+
+    /// Token capacity if the region were filled by one giant request.
+    pub fn capacity_tokens(&self) -> usize {
+        self.total_subarrays * self.subarray_bytes / self.kv_bytes_per_token
+    }
+
+    /// Could the request ever be admitted (even on an idle device)?
+    pub fn fits_ever(&self, tokens: usize) -> bool {
+        self.subarrays_for(tokens) <= self.total_subarrays
+    }
+
+    /// Try to reserve a `tokens`-wide window; `None` when the region is
+    /// exhausted (the caller should retry after a completion frees slots).
+    pub fn try_admit(&mut self, request_id: u64, tokens: usize) -> Option<KvLease> {
+        let need = self.subarrays_for(tokens);
+        if need > self.free_subarrays {
+            return None;
+        }
+        self.free_subarrays -= need;
+        self.reserved_tokens += tokens;
+        self.admitted += 1;
+        self.peak_used_subarrays = self.peak_used_subarrays.max(self.used_subarrays());
+        Some(KvLease {
+            request_id,
+            tokens,
+            subarrays: need,
+        })
+    }
+
+    /// Return a lease's subarrays to the pool.
+    pub fn release(&mut self, lease: KvLease) {
+        debug_assert!(self.used_subarrays() >= lease.subarrays, "double release");
+        self.free_subarrays = (self.free_subarrays + lease.subarrays).min(self.total_subarrays);
+        self.reserved_tokens = self.reserved_tokens.saturating_sub(lease.tokens);
+        self.admitted = self.admitted.saturating_sub(1);
+    }
+
+    pub fn total_subarrays(&self) -> usize {
+        self.total_subarrays
+    }
+
+    pub fn used_subarrays(&self) -> usize {
+        self.total_subarrays - self.free_subarrays
+    }
+
+    /// Live admissions.
+    pub fn admitted(&self) -> usize {
+        self.admitted
+    }
+
+    /// Tokens currently reserved.
+    pub fn reserved_tokens(&self) -> usize {
+        self.reserved_tokens
+    }
+
+    /// Fraction of the KV region in use right now.
+    pub fn utilization(&self) -> f64 {
+        if self.total_subarrays == 0 {
+            return 0.0;
+        }
+        self.used_subarrays() as f64 / self.total_subarrays as f64
+    }
+
+    /// High-water utilization over the manager's lifetime.
+    pub fn peak_utilization(&self) -> f64 {
+        if self.total_subarrays == 0 {
+            return 0.0;
+        }
+        self.peak_used_subarrays as f64 / self.total_subarrays as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_device_has_room_for_many_contexts() {
+        // GPT-2 medium: ~96 KB of KV per token; after weights + LUT
+        // subarrays an 8 GB stack still holds tens of thousands of
+        // tokens of KV state.
+        let kv = KvCacheManager::for_device(&SimConfig::paper());
+        assert!(kv.total_subarrays() > 1000, "{}", kv.total_subarrays());
+        assert!(kv.capacity_tokens() > 10_000, "{}", kv.capacity_tokens());
+    }
+
+    #[test]
+    fn admit_and_release_round_trip() {
+        let cfg = SimConfig::paper();
+        let mut kv = KvCacheManager::with_kv_subarrays(&cfg, 8);
+        let cap = kv.capacity_tokens();
+        assert!(cap > 0);
+        let lease = kv.try_admit(1, 10).expect("small request fits");
+        assert!(kv.used_subarrays() >= 1);
+        assert_eq!(kv.admitted(), 1);
+        assert!(kv.utilization() > 0.0);
+        kv.release(lease);
+        assert_eq!(kv.used_subarrays(), 0);
+        assert_eq!(kv.reserved_tokens(), 0);
+        assert!(kv.peak_utilization() > 0.0);
+    }
+
+    #[test]
+    fn admission_fails_when_exhausted() {
+        let cfg = SimConfig::paper();
+        let mut kv = KvCacheManager::with_kv_subarrays(&cfg, 2);
+        let per_sub = cfg.hbm.subarray_bytes() / cfg.model.kv_bytes_per_token();
+        let a = kv.try_admit(1, per_sub).expect("first subarray");
+        let _b = kv.try_admit(2, per_sub).expect("second subarray");
+        assert!(kv.try_admit(3, 1).is_none(), "over-admission");
+        kv.release(a);
+        assert!(kv.try_admit(3, 1).is_some(), "slot must free on release");
+    }
+
+    #[test]
+    fn fits_ever_screens_impossible_requests() {
+        let cfg = SimConfig::paper();
+        let kv = KvCacheManager::with_kv_subarrays(&cfg, 1);
+        assert!(kv.fits_ever(1));
+        assert!(!kv.fits_ever(kv.capacity_tokens() + cfg.hbm.subarray_bytes()));
+    }
+
+    #[test]
+    fn subarray_granularity_rounds_up() {
+        let cfg = SimConfig::paper();
+        let kv = KvCacheManager::with_kv_subarrays(&cfg, 100);
+        // One token still burns a whole subarray.
+        assert_eq!(kv.subarrays_for(1), 1);
+        let per_sub = cfg.hbm.subarray_bytes() / cfg.model.kv_bytes_per_token();
+        assert_eq!(kv.subarrays_for(per_sub + 1), 2);
+    }
+}

@@ -1,14 +1,22 @@
 //! Serving metrics: latency percentiles, throughput, utilization.
+//!
+//! All aggregations are *total*: a serving loop must survive a metrics
+//! window with zero completions, so [`percentile`] returns `None` on empty
+//! input and [`ServeMetrics::from_completions`] yields zeroed defaults
+//! instead of panicking.
 
-use super::Completion;
+use super::types::Completion;
 
 /// Percentile of a sample set (nearest-rank; `p` in [0, 100]).
-pub fn percentile(samples: &[f64], p: f64) -> f64 {
-    assert!(!samples.is_empty());
+/// Returns `None` for an empty sample set.
+pub fn percentile(samples: &[f64], p: f64) -> Option<f64> {
+    if samples.is_empty() {
+        return None;
+    }
     let mut v = samples.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
-    v[rank.min(v.len() - 1)]
+    Some(v[rank.min(v.len() - 1)])
 }
 
 /// Aggregated serving metrics for a batch of completions.
@@ -26,8 +34,25 @@ pub struct ServeMetrics {
 }
 
 impl ServeMetrics {
+    /// All-zero metrics (the empty window).
+    pub fn empty() -> Self {
+        ServeMetrics {
+            requests: 0,
+            total_tokens: 0,
+            makespan_s: 0.0,
+            throughput_tok_s: 0.0,
+            p50_latency_s: 0.0,
+            p95_latency_s: 0.0,
+            p50_ttft_s: 0.0,
+            p95_ttft_s: 0.0,
+            mean_queue_s: 0.0,
+        }
+    }
+
     pub fn from_completions(done: &[Completion]) -> Self {
-        assert!(!done.is_empty());
+        if done.is_empty() {
+            return Self::empty();
+        }
         let latencies: Vec<f64> = done.iter().map(|c| c.total_latency_s()).collect();
         let ttfts: Vec<f64> = done.iter().map(|c| c.ttft_s()).collect();
         let total_tokens: usize = done.iter().map(|c| c.tokens_out).sum();
@@ -44,10 +69,10 @@ impl ServeMetrics {
             } else {
                 0.0
             },
-            p50_latency_s: percentile(&latencies, 50.0),
-            p95_latency_s: percentile(&latencies, 95.0),
-            p50_ttft_s: percentile(&ttfts, 50.0),
-            p95_ttft_s: percentile(&ttfts, 95.0),
+            p50_latency_s: percentile(&latencies, 50.0).unwrap_or(0.0),
+            p95_latency_s: percentile(&latencies, 95.0).unwrap_or(0.0),
+            p50_ttft_s: percentile(&ttfts, 50.0).unwrap_or(0.0),
+            p95_ttft_s: percentile(&ttfts, 95.0).unwrap_or(0.0),
             mean_queue_s: done.iter().map(|c| c.queue_s).sum::<f64>() / done.len() as f64,
         }
     }
@@ -84,19 +109,26 @@ mod tests {
             id,
             prompt_len: 32,
             tokens_out: tokens,
+            tokens_simulated: tokens,
             queue_s: queue,
             prefill_s: prefill,
             decode_s: decode,
             finish_s: queue + prefill + decode,
+            device: 0,
         }
     }
 
     #[test]
     fn percentile_basics() {
         let v = vec![1.0, 2.0, 3.0, 4.0, 5.0];
-        assert_eq!(percentile(&v, 0.0), 1.0);
-        assert_eq!(percentile(&v, 50.0), 3.0);
-        assert_eq!(percentile(&v, 100.0), 5.0);
+        assert_eq!(percentile(&v, 0.0), Some(1.0));
+        assert_eq!(percentile(&v, 50.0), Some(3.0));
+        assert_eq!(percentile(&v, 100.0), Some(5.0));
+    }
+
+    #[test]
+    fn percentile_of_empty_is_none() {
+        assert_eq!(percentile(&[], 50.0), None);
     }
 
     #[test]
@@ -111,6 +143,15 @@ mod tests {
         assert!(m.throughput_tok_s > 0.0);
         assert!(m.p95_latency_s >= m.p50_latency_s);
         assert!((m.mean_queue_s - 0.025).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_window_is_survivable() {
+        let m = ServeMetrics::from_completions(&[]);
+        assert_eq!(m.requests, 0);
+        assert_eq!(m.total_tokens, 0);
+        assert_eq!(m.throughput_tok_s, 0.0);
+        assert_eq!(m.p95_latency_s, 0.0);
     }
 
     #[test]

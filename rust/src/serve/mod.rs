@@ -1,0 +1,39 @@
+//! The cluster serving engine (L4).
+//!
+//! The [`crate::coordinator`] serves one request at a time on one device —
+//! faithful to the paper's evaluation, but nothing like the heavy-traffic
+//! regime a deployed SAL-PIM pod faces. This module is the serving layer
+//! above it:
+//!
+//! * [`KvCacheManager`] — maps per-request KV state onto subarray capacity
+//!   derived from [`crate::config::HbmConfig`]; admission fails when the
+//!   KV region is exhausted and slots free on completion;
+//! * [`DeviceEngine`] — a continuous-batching scheduler over one simulated
+//!   device: new requests join at token boundaries and batched decode
+//!   steps are charged with the multi-subarray timing model
+//!   ([`crate::mapper::GenerationSim::decode_batch_step`]);
+//! * [`Cluster`] — N devices behind a router ([`Routing`]: round-robin,
+//!   least-loaded, session-affinity) with per-device queues;
+//! * [`workload`] — open-loop Poisson / bursty arrival generation;
+//! * [`sweep`] — the latency-vs-offered-load sweep behind
+//!   `sal-pim serve --sweep` and `bench_serve_cluster`.
+//!
+//! The request/completion/policy/metric types live here and are shared
+//! with the single-device coordinator (which re-exports them), so both
+//! paths consume the identical vocabulary.
+
+mod cluster;
+mod engine;
+mod kv_cache;
+mod metrics;
+mod policy;
+mod types;
+pub mod sweep;
+pub mod workload;
+
+pub use cluster::{Cluster, Routing};
+pub use engine::{DeviceEngine, EngineReport};
+pub use kv_cache::{KvCacheManager, KvLease};
+pub use metrics::{percentile, ServeMetrics};
+pub use policy::{Policy, Scheduler};
+pub use types::{Completion, Request};

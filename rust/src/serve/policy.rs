@@ -1,6 +1,7 @@
-//! Scheduling policies for the serving queue.
+//! Scheduling policies for serving queues (shared by the sequential
+//! coordinator and the continuous-batching engine).
 
-use super::Request;
+use super::types::Request;
 
 /// Which waiting request runs next.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -49,7 +50,7 @@ impl Policy {
 }
 
 /// Standalone scheduler over a waiting set (used by tests and the
-/// mapping-explorer example; the coordinator embeds the same logic).
+/// mapping-explorer example; the serving loops embed the same logic).
 #[derive(Debug)]
 pub struct Scheduler {
     pub policy: Policy,
@@ -85,6 +86,7 @@ mod tests {
             prompt_len: prompt,
             max_new_tokens: out,
             arrival_s: at,
+            session: id,
         }
     }
 

@@ -1,0 +1,101 @@
+//! Latency-vs-offered-load sweeps over the cluster engine.
+//!
+//! Drives [`Cluster`] with open-loop Poisson workloads at increasing
+//! offered loads and reports the classic serving curve: throughput
+//! climbs with load until the devices saturate, then queueing pushes the
+//! tail latencies up. Exposed as `sal-pim serve --sweep` and used by
+//! `bench_serve_cluster`.
+
+use super::cluster::{Cluster, Routing};
+use super::metrics::ServeMetrics;
+use super::policy::Policy;
+use super::workload::{generate, ArrivalPattern};
+use crate::config::SimConfig;
+
+/// Sweep shape shared by the CLI and the bench.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    pub devices: usize,
+    pub max_batch: usize,
+    pub routing: Routing,
+    pub policy: Policy,
+    pub requests: usize,
+    pub seed: u64,
+    pub n_sessions: usize,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            devices: 4,
+            max_batch: 8,
+            routing: Routing::RoundRobin,
+            policy: Policy::Fcfs,
+            requests: 64,
+            seed: 42,
+            n_sessions: 8,
+        }
+    }
+}
+
+/// One point on the latency-vs-load curve.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub offered_rps: f64,
+    pub metrics: ServeMetrics,
+    pub rejected: usize,
+}
+
+/// Run the cluster at each offered load (requests/second).
+pub fn latency_vs_load(cfg: &SimConfig, sc: &SweepConfig, loads_rps: &[f64]) -> Vec<SweepPoint> {
+    loads_rps
+        .iter()
+        .map(|&rate| {
+            let reqs = generate(
+                sc.seed,
+                sc.requests,
+                ArrivalPattern::Poisson { rate_rps: rate },
+                sc.n_sessions,
+            );
+            let mut cluster =
+                Cluster::new(cfg, sc.devices, sc.max_batch, sc.routing).with_policy(sc.policy);
+            for r in reqs {
+                cluster.submit(r);
+            }
+            let done = cluster.run();
+            SweepPoint {
+                offered_rps: rate,
+                metrics: ServeMetrics::from_completions(&done),
+                rejected: cluster.rejected(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_raises_tail_latency() {
+        let cfg = SimConfig::paper();
+        let sc = SweepConfig {
+            devices: 1,
+            max_batch: 4,
+            requests: 16,
+            ..SweepConfig::default()
+        };
+        let pts = latency_vs_load(&cfg, &sc, &[20.0, 20_000.0]);
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[0].metrics.requests, 16);
+        assert_eq!(pts[1].metrics.requests, 16);
+        // At a crush load the queueing delay must dominate: p95 latency
+        // is no better than at the gentle load.
+        assert!(
+            pts[1].metrics.p95_latency_s >= pts[0].metrics.p95_latency_s,
+            "saturation must not *improve* tail latency: {} vs {}",
+            pts[1].metrics.p95_latency_s,
+            pts[0].metrics.p95_latency_s
+        );
+    }
+}

@@ -1,0 +1,91 @@
+//! Request / completion vocabulary shared by every serving path.
+//!
+//! These used to live in [`crate::coordinator`]; they moved here so the
+//! single-device sequential coordinator and the cluster engine speak the
+//! same types (the coordinator re-exports them for compatibility).
+
+/// A generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+    /// Arrival time in seconds (simulated wall clock).
+    pub arrival_s: f64,
+    /// Session the request belongs to (drives session-affinity routing;
+    /// requests of one session share KV locality on a device).
+    pub session: u64,
+}
+
+impl Request {
+    /// KV-cache tokens the request needs reserved for its whole lifetime
+    /// (prompt plus full output budget).
+    pub fn kv_tokens(&self) -> usize {
+        self.prompt_len + self.max_new_tokens
+    }
+}
+
+/// A finished request with its latency breakdown.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub prompt_len: usize,
+    /// Output budget of the request (what the client asked for).
+    pub tokens_out: usize,
+    /// Tokens whose production was actually simulated (prefill's first
+    /// token + executed decode iterations; `max_seq` truncation stops
+    /// the count). Scheduling must never change this — the sequential
+    /// and batching engines are required to agree per request.
+    pub tokens_simulated: usize,
+    pub queue_s: f64,
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    pub finish_s: f64,
+    /// Index of the device that served the request (0 for single-device).
+    pub device: usize,
+}
+
+impl Completion {
+    pub fn total_latency_s(&self) -> f64 {
+        self.queue_s + self.prefill_s + self.decode_s
+    }
+
+    /// Time to first token (queue + summarization).
+    pub fn ttft_s(&self) -> f64 {
+        self.queue_s + self.prefill_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_tokens_is_prompt_plus_budget() {
+        let r = Request {
+            id: 0,
+            prompt_len: 32,
+            max_new_tokens: 16,
+            arrival_s: 0.0,
+            session: 0,
+        };
+        assert_eq!(r.kv_tokens(), 48);
+    }
+
+    #[test]
+    fn latency_composition() {
+        let c = Completion {
+            id: 0,
+            prompt_len: 32,
+            tokens_out: 8,
+            tokens_simulated: 8,
+            queue_s: 0.1,
+            prefill_s: 0.2,
+            decode_s: 0.7,
+            finish_s: 1.0,
+            device: 0,
+        };
+        assert!((c.total_latency_s() - 1.0).abs() < 1e-12);
+        assert!((c.ttft_s() - 0.3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,151 @@
+//! Open-loop workload generation for serving experiments.
+//!
+//! Arrival processes are derived from the same deterministic
+//! [`RequestMix`] stream the example and CLI consume, so a (seed, n,
+//! pattern) triple fully determines the workload — routing and batching
+//! comparisons replay it exactly.
+
+use super::types::Request;
+use crate::testutil::{MixItem, RequestMix};
+
+/// How request arrivals are spaced.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalPattern {
+    /// Everything at t = 0 (the saturating / closed-batch case).
+    AtOnce,
+    /// The historical serving mix: each gap is `jitter × scale_s`.
+    Jittered { scale_s: f64 },
+    /// Open-loop Poisson arrivals at `rate_rps` requests/second
+    /// (exponential gaps drawn from the mix's jitter stream).
+    Poisson { rate_rps: f64 },
+    /// Bursts of `burst` simultaneous requests, burst starts Poisson at
+    /// `rate_rps` requests/second overall.
+    Bursty { rate_rps: f64, burst: usize },
+}
+
+impl ArrivalPattern {
+    /// Human-readable label for tables.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalPattern::AtOnce => "at-once",
+            ArrivalPattern::Jittered { .. } => "jittered",
+            ArrivalPattern::Poisson { .. } => "poisson",
+            ArrivalPattern::Bursty { .. } => "bursty",
+        }
+    }
+}
+
+/// Inverse-CDF exponential gap from a uniform [0,1) draw.
+fn exp_gap(u: f64, rate_rps: f64) -> f64 {
+    debug_assert!(rate_rps > 0.0);
+    -(1.0 - u).ln() / rate_rps
+}
+
+/// Turn drawn shapes into requests with `pattern` arrivals. Sessions
+/// cycle over `n_sessions` (drives session-affinity routing).
+pub fn requests_from_items(
+    items: &[MixItem],
+    pattern: ArrivalPattern,
+    n_sessions: usize,
+) -> Vec<Request> {
+    assert!(n_sessions >= 1);
+    let mut at = 0.0f64;
+    items
+        .iter()
+        .enumerate()
+        .map(|(i, item)| {
+            match pattern {
+                ArrivalPattern::AtOnce => {}
+                ArrivalPattern::Jittered { scale_s } => at += item.jitter * scale_s,
+                ArrivalPattern::Poisson { rate_rps } => at += exp_gap(item.jitter, rate_rps),
+                ArrivalPattern::Bursty { rate_rps, burst } => {
+                    let burst = burst.max(1);
+                    if i % burst == 0 {
+                        // One gap per burst keeps the overall offered
+                        // rate at `rate_rps`.
+                        at += exp_gap(item.jitter, rate_rps) * burst as f64;
+                    }
+                }
+            }
+            Request {
+                id: i as u64,
+                prompt_len: item.prompt_len,
+                max_new_tokens: item.max_new_tokens,
+                arrival_s: at,
+                session: (i % n_sessions) as u64,
+            }
+        })
+        .collect()
+}
+
+/// `n` paper-mix requests under `pattern` (seeded, deterministic).
+pub fn generate(seed: u64, n: usize, pattern: ArrivalPattern, n_sessions: usize) -> Vec<Request> {
+    let items = RequestMix::paper(seed).take(n);
+    requests_from_items(&items, pattern, n_sessions)
+}
+
+/// `n` small-mix requests under `pattern` (fast tests).
+pub fn generate_small(
+    seed: u64,
+    n: usize,
+    pattern: ArrivalPattern,
+    n_sessions: usize,
+) -> Vec<Request> {
+    let items = RequestMix::small(seed).take(n);
+    requests_from_items(&items, pattern, n_sessions)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn at_once_pins_arrivals_to_zero() {
+        let reqs = generate(1, 8, ArrivalPattern::AtOnce, 4);
+        assert_eq!(reqs.len(), 8);
+        assert!(reqs.iter().all(|r| r.arrival_s == 0.0));
+        assert_eq!(reqs[5].session, 1);
+    }
+
+    #[test]
+    fn poisson_arrivals_are_monotone_and_rate_scaled() {
+        let slow = generate(9, 64, ArrivalPattern::Poisson { rate_rps: 10.0 }, 1);
+        let fast = generate(9, 64, ArrivalPattern::Poisson { rate_rps: 1000.0 }, 1);
+        for w in slow.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+        // Same uniform draws, 100× the rate → exactly 100× tighter span.
+        let span_slow = slow.last().unwrap().arrival_s;
+        let span_fast = fast.last().unwrap().arrival_s;
+        assert!(span_slow > 0.0);
+        assert!((span_slow / span_fast - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bursty_groups_share_an_arrival_instant() {
+        let reqs = generate(
+            5,
+            12,
+            ArrivalPattern::Bursty {
+                rate_rps: 100.0,
+                burst: 4,
+            },
+            2,
+        );
+        for chunk in reqs.chunks(4) {
+            assert!(chunk.iter().all(|r| r.arrival_s == chunk[0].arrival_s));
+        }
+        assert!(reqs[4].arrival_s > reqs[3].arrival_s);
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = generate(3, 16, ArrivalPattern::Poisson { rate_rps: 50.0 }, 8);
+        let b = generate(3, 16, ArrivalPattern::Poisson { rate_rps: 50.0 }, 8);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt_len, y.prompt_len);
+            assert_eq!(x.arrival_s, y.arrival_s);
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Shared request-mix generation.
+//!
+//! The serving example, the CLI and the benches used to each re-draw the
+//! "paper mix" (prompt 16–128, output 8–128, jittered arrivals) from their
+//! own `SplitMix64` loops — keeping two consumers aligned meant fragile
+//! tricks like drawing-and-discarding a value to keep RNG streams in
+//! lockstep. [`RequestMix`] generates the mix once as data, so every
+//! consumer (PIM coordinator, batching engine, GPU baseline) sees the
+//! identical workload *by construction*.
+
+use super::SplitMix64;
+
+/// One drawn request shape. `jitter` is a uniform [0,1) draw consumers
+/// may scale into an inter-arrival gap (or feed into an exponential).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MixItem {
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+    pub jitter: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum MixKind {
+    /// The historical serving mix: prompt 16–128 (×16), output 8–128
+    /// (powers of two) — what `serve_textgen` and `sal-pim serve` draw.
+    Paper,
+    /// A trimmed mix for tests: prompt 16–64, output 8–32. Keeps the
+    /// distinct-KV working set (and so simulation time) small.
+    Small,
+}
+
+/// Deterministic request-shape stream.
+#[derive(Debug, Clone)]
+pub struct RequestMix {
+    rng: SplitMix64,
+    kind: MixKind,
+}
+
+impl RequestMix {
+    /// The paper serving mix; seed 42 reproduces the historical
+    /// `serve_textgen` / `sal-pim serve` workload draw-for-draw.
+    pub fn paper(seed: u64) -> Self {
+        RequestMix {
+            rng: SplitMix64::new(seed),
+            kind: MixKind::Paper,
+        }
+    }
+
+    /// Small mix for fast tests.
+    pub fn small(seed: u64) -> Self {
+        RequestMix {
+            rng: SplitMix64::new(seed),
+            kind: MixKind::Small,
+        }
+    }
+
+    /// Draw the next request shape (three RNG draws, always).
+    pub fn next_item(&mut self) -> MixItem {
+        let (prompt_len, max_new_tokens) = match self.kind {
+            MixKind::Paper => {
+                let prompt = 16 + (self.rng.below(8) * 16) as usize;
+                let out = 8usize << self.rng.below(5);
+                (prompt, out)
+            }
+            MixKind::Small => {
+                let prompt = 16 + (self.rng.below(4) * 16) as usize;
+                let out = 8usize << self.rng.below(3);
+                (prompt, out)
+            }
+        };
+        let jitter = self.rng.f64_unit();
+        MixItem {
+            prompt_len,
+            max_new_tokens,
+            jitter,
+        }
+    }
+
+    /// Draw `n` shapes.
+    pub fn take(&mut self, n: usize) -> Vec<MixItem> {
+        (0..n).map(|_| self.next_item()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_mix_matches_legacy_stream() {
+        // The legacy loops drew below(8), below(5), f64_unit per request
+        // from SplitMix64::new(42); the mix must reproduce that exactly.
+        let mut legacy = SplitMix64::new(42);
+        let mut mix = RequestMix::paper(42);
+        for _ in 0..16 {
+            let prompt = 16 + (legacy.below(8) * 16) as usize;
+            let out = 8usize << legacy.below(5);
+            let jitter = legacy.f64_unit();
+            let item = mix.next_item();
+            assert_eq!(item.prompt_len, prompt);
+            assert_eq!(item.max_new_tokens, out);
+            assert_eq!(item.jitter, jitter);
+        }
+    }
+
+    #[test]
+    fn mix_is_deterministic_per_seed() {
+        let a = RequestMix::paper(7).take(8);
+        let b = RequestMix::paper(7).take(8);
+        assert_eq!(a, b);
+        let c = RequestMix::paper(8).take(8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn small_mix_stays_small() {
+        let items = RequestMix::small(3).take(100);
+        for i in items {
+            assert!((16..=64).contains(&i.prompt_len));
+            assert!((8..=32).contains(&i.max_new_tokens));
+            assert!((0.0..1.0).contains(&i.jitter));
+        }
+    }
+}

@@ -16,9 +16,11 @@
 //! ```
 
 mod gen;
+mod mix;
 mod runner;
 
 pub use gen::Gen;
+pub use mix::{MixItem, RequestMix};
 pub use runner::{forall, forall_seeded};
 
 /// SplitMix64: tiny, high-quality 64-bit PRNG (public-domain algorithm).
