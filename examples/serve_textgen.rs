@@ -8,6 +8,10 @@
 //!   engines side by side — the sequential coordinator, the
 //!   continuous-batching engine and a 4-device cluster — plus the GPU
 //!   baseline, all consuming the identical workload by construction;
+//! * serves the same mix on three *execution backends* — SAL-PIM, the
+//!   batched GPU roofline, and heterogeneous GPU-prefill + PIM-decode
+//!   (with chunked prefill) — the paper-style end-to-end comparison
+//!   under load;
 //! * reports throughput, latency percentiles and speedups.
 //!
 //! ```bash
@@ -20,7 +24,7 @@ use sal_pim::config::SimConfig;
 use sal_pim::coordinator::{Coordinator, Policy, ServeMetrics};
 use sal_pim::report::{fmt_pct, fmt_time, fmt_x, Table};
 use sal_pim::serve::workload::{requests_from_items, ArrivalPattern};
-use sal_pim::serve::{Cluster, DeviceEngine, Routing};
+use sal_pim::serve::{BackendKind, Cluster, DeviceEngine, Routing};
 use sal_pim::testutil::{MixItem, RequestMix};
 
 /// Float-golden (PJRT) vs fixed-point cross-check — needs the `pjrt`
@@ -149,6 +153,47 @@ fn main() -> anyhow::Result<()> {
         "batching engine: kv peak util {} | max batch seen {}",
         fmt_pct(rep.kv_peak_utilization),
         rep.max_batch_seen
+    );
+
+    // ---- Execution backends: SAL-PIM vs GPU vs hetero, one device  ----
+    // each, continuous batch×8, the IDENTICAL request mix. The hetero
+    // device runs GPU prefill + PIM decode with a PCIe-class KV handoff,
+    // with prefill interleaved in 32-token chunks.
+    let mut bt = Table::new(
+        "execution backends (continuous batch×8, identical 16-request mix)",
+        &["backend", "throughput", "p50 latency", "p95 latency", "p95 TTFT", "makespan"],
+    );
+    let mut backend_makespans: Vec<(BackendKind, f64)> = Vec::new();
+    for kind in [BackendKind::SalPim, BackendKind::Gpu, BackendKind::Hetero] {
+        let chunk = if kind == BackendKind::Hetero { Some(32) } else { None };
+        let mut eng = DeviceEngine::with_backend(kind.build(&cfg), 8).with_prefill_chunk(chunk);
+        for r in requests_from_items(&items, pattern, 8) {
+            eng.submit(r);
+        }
+        let name = eng.backend_name();
+        let m = ServeMetrics::from_completions(&eng.run());
+        bt.row(&[
+            name,
+            format!("{:.1} tok/s", m.throughput_tok_s),
+            fmt_time(m.p50_latency_s),
+            fmt_time(m.p95_latency_s),
+            fmt_time(m.p95_ttft_s),
+            fmt_time(m.makespan_s),
+        ]);
+        backend_makespans.push((kind, m.makespan_s));
+    }
+    bt.print();
+    let span = |k: BackendKind| {
+        backend_makespans
+            .iter()
+            .find(|(kind, _)| *kind == k)
+            .map(|(_, s)| *s)
+            .expect("backend row recorded")
+    };
+    println!(
+        "speedup vs GPU backend on the served mix: sal-pim {} | hetero {}",
+        fmt_x(span(BackendKind::Gpu) / span(BackendKind::SalPim)),
+        fmt_x(span(BackendKind::Gpu) / span(BackendKind::Hetero))
     );
 
     // GPU baseline on the same workload (sequential FCFS service) —

@@ -12,7 +12,7 @@ use sal_pim::coordinator::Coordinator;
 use sal_pim::report::{fmt_pct, fmt_time, fmt_x, Table};
 use sal_pim::serve::sweep::{latency_vs_load, SweepConfig};
 use sal_pim::serve::workload::{requests_from_items, ArrivalPattern};
-use sal_pim::serve::{Cluster, DeviceEngine, Routing, ServeMetrics};
+use sal_pim::serve::{BackendKind, Cluster, DeviceEngine, Routing, ServeMetrics};
 use sal_pim::testutil::RequestMix;
 
 fn main() {
@@ -115,5 +115,58 @@ fn main() {
         ]);
     }
     t.print();
+
+    // ---- (d) Execution backends on the shared mix (batch 8, t=0). ----
+    let items = RequestMix::paper(42).take(16);
+    let reqs = requests_from_items(&items, ArrivalPattern::AtOnce, 8);
+    let mut t = Table::new(
+        "execution backends (1 device × batch 8, 16-request mix at t=0)",
+        &["backend", "prefill", "tok/s", "makespan", "p95 TTFT"],
+    );
+    let mut spans: Vec<(BackendKind, f64)> = Vec::new();
+    for (kind, chunk) in [
+        (BackendKind::SalPim, None),
+        (BackendKind::Gpu, None),
+        (BackendKind::BankLevel, None),
+        (BackendKind::Hetero, None),
+        (BackendKind::Hetero, Some(32usize)),
+    ] {
+        let mut eng = DeviceEngine::with_backend(kind.build(&cfg), 8).with_prefill_chunk(chunk);
+        for r in reqs.clone() {
+            eng.submit(r);
+        }
+        let name = eng.backend_name();
+        let m = ServeMetrics::from_completions(&eng.run());
+        t.row(&[
+            name,
+            match chunk {
+                Some(c) => format!("chunk {c}"),
+                None => "inline".to_string(),
+            },
+            format!("{:.1}", m.throughput_tok_s),
+            fmt_time(m.makespan_s),
+            fmt_time(m.p95_ttft_s),
+        ]);
+        if chunk.is_none() {
+            spans.push((kind, m.makespan_s));
+        }
+    }
+    t.print();
+    let span = |k: BackendKind| {
+        spans
+            .iter()
+            .find(|(kind, _)| *kind == k)
+            .map(|(_, s)| *s)
+            .expect("backend measured")
+    };
+    println!(
+        "makespan speedup vs GPU backend: sal-pim {} | hetero {}",
+        fmt_x(span(BackendKind::Gpu) / span(BackendKind::SalPim)),
+        fmt_x(span(BackendKind::Gpu) / span(BackendKind::Hetero))
+    );
+    assert!(
+        span(BackendKind::SalPim) < span(BackendKind::Gpu),
+        "PIM decode must beat the GPU roofline on the decode-bound mix"
+    );
     println!("serve cluster bench OK");
 }

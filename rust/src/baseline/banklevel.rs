@@ -24,8 +24,16 @@ impl BankLevelPim {
     /// Build from a SAL-PIM config (same HBM2 device, Table 2 timing).
     pub fn new(cfg: &SimConfig) -> Self {
         BankLevelPim {
-            cfg: cfg.clone().with_p_sub(1),
+            cfg: Self::device_config(cfg),
         }
+    }
+
+    /// The restricted device config a bank-level PIM runs: the same HBM2
+    /// stack with one streaming subarray per bank (P_Sub = 1). Shared
+    /// with the serving layer's `BankLevelBackend` so the GEMV baseline
+    /// and the servable device agree on timing.
+    pub fn device_config(cfg: &SimConfig) -> SimConfig {
+        cfg.clone().with_p_sub(1)
     }
 
     /// GEMV macro-ops under the Newton mapping: rows → banks × channels,

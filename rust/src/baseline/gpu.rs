@@ -37,6 +37,9 @@ impl GpuBreakdown {
 pub struct GpuModel {
     /// Peak memory bandwidth (bytes/s).
     pub mem_bw: f64,
+    /// Card DRAM size in bytes (bounds the KV working set when the model
+    /// serves as an execution backend).
+    pub mem_bytes: usize,
     /// Achieved fraction of peak bandwidth on weight-streaming GEMV.
     pub bw_eff: f64,
     /// Peak fp16 tensor throughput (FLOP/s).
@@ -62,6 +65,7 @@ impl GpuModel {
     pub fn titan_rtx() -> Self {
         GpuModel {
             mem_bw: 672e9,
+            mem_bytes: 24 << 30, // 24 GB GDDR6
             bw_eff: 0.78,
             peak_flops: 130e12,
             flops_eff: 0.30,
@@ -78,25 +82,54 @@ impl GpuModel {
         self.mem_bw * self.bw_eff
     }
 
-    /// Per-phase time of one decode iteration at a KV length.
-    pub fn decode_breakdown(&self, m: &ModelConfig, kv_len: usize) -> GpuBreakdown {
+    /// The KV-independent, batch-invariant part of one decode step: the
+    /// full weight stream (QKV/proj, FFN, LM head) plus the fused
+    /// per-layer kernels. A batched decode step pays this once — every
+    /// request in the batch consumes the same weight tiles.
+    pub fn decode_shared_time(&self, m: &ModelConfig) -> f64 {
         let d = m.d_model as f64;
         let layers = m.n_layers as f64;
         // Weight-streaming GEMV time per layer (memory-bound at batch 1).
         let mha_weights = 4.0 * d * d * m.param_bytes as f64;
         let ffn_weights = 2.0 * d * m.d_ff as f64 * m.param_bytes as f64;
-        let kv_bytes = 2.0 * kv_len as f64 * d * m.param_bytes as f64;
         let launches = self.kernel_launch * self.kernels_per_layer;
-
-        let mha = layers
-            * (mha_weights / self.eff_bw()
-                + kv_bytes / self.eff_bw()
-                + self.attn_fixed
-                + self.attn_per_kv_token * kv_len as f64
-                + launches * 0.5);
+        let mha_stream = layers * (mha_weights / self.eff_bw() + launches * 0.5);
         let ffn = layers * (ffn_weights / self.eff_bw() + launches * 0.25);
         let nonlinear = layers * (self.nonlinear_per_layer + launches * 0.25);
         // LM head + embedding + sampling.
+        let lm_bytes = m.vocab as f64 * d * m.param_bytes as f64;
+        let other = lm_bytes / self.eff_bw() + 4.0 * self.kernel_launch;
+        mha_stream + ffn + nonlinear + other
+    }
+
+    /// The per-request attention work of one decode step at a KV length:
+    /// K/V streaming plus the batch-1 small-kernel and softmax
+    /// overheads. Accumulates across a batched step — each request's KV
+    /// rows live in different memory.
+    pub fn decode_attention_time(&self, m: &ModelConfig, kv_len: usize) -> f64 {
+        let d = m.d_model as f64;
+        let layers = m.n_layers as f64;
+        let kv_bytes = 2.0 * kv_len as f64 * d * m.param_bytes as f64;
+        layers
+            * (kv_bytes / self.eff_bw()
+                + self.attn_fixed
+                + self.attn_per_kv_token * kv_len as f64)
+    }
+
+    /// Per-phase time of one decode iteration at a KV length. Built from
+    /// [`GpuModel::decode_shared_time`] + [`GpuModel::decode_attention_time`]
+    /// so the single-request and batched costs cannot drift.
+    pub fn decode_breakdown(&self, m: &ModelConfig, kv_len: usize) -> GpuBreakdown {
+        let d = m.d_model as f64;
+        let layers = m.n_layers as f64;
+        let mha_weights = 4.0 * d * d * m.param_bytes as f64;
+        let ffn_weights = 2.0 * d * m.d_ff as f64 * m.param_bytes as f64;
+        let launches = self.kernel_launch * self.kernels_per_layer;
+
+        let mha = layers * (mha_weights / self.eff_bw() + launches * 0.5)
+            + self.decode_attention_time(m, kv_len);
+        let ffn = layers * (ffn_weights / self.eff_bw() + launches * 0.25);
+        let nonlinear = layers * (self.nonlinear_per_layer + launches * 0.25);
         let lm_bytes = m.vocab as f64 * d * m.param_bytes as f64;
         let other = lm_bytes / self.eff_bw() + 4.0 * self.kernel_launch;
         GpuBreakdown {
@@ -208,6 +241,22 @@ mod tests {
         let prefill = g.prefill_time(&m, 128);
         let decode128: f64 = (1..128).map(|i| g.decode_token_time(&m, i)).sum();
         assert!(prefill < decode128 / 10.0, "prefill {prefill} decode {decode128}");
+    }
+
+    #[test]
+    fn shared_plus_attention_equals_the_decode_iteration() {
+        // The batching decomposition must reproduce the single-request
+        // roofline exactly (a batch of one is a plain decode).
+        let g = GpuModel::titan_rtx();
+        let m = medium();
+        for kv in [1usize, 64, 700] {
+            let split = g.decode_shared_time(&m) + g.decode_attention_time(&m, kv);
+            let total = g.decode_token_time(&m, kv);
+            assert!(
+                (split - total).abs() < 1e-12 * total,
+                "kv={kv}: {split} != {total}"
+            );
+        }
     }
 
     #[test]

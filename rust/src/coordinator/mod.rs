@@ -19,6 +19,7 @@ pub use crate::serve::{percentile, Completion, Policy, Request, Scheduler, Serve
 use crate::baseline::GpuModel;
 use crate::config::SimConfig;
 use crate::mapper::GenerationSim;
+use crate::serve::backend::{kv_handoff_s, HOST_LINK_BW};
 
 /// Where the summarization stage runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -91,14 +92,14 @@ impl Coordinator {
                 st.seconds(self.cfg.timing.tck_ns)
             }
             PrefillTarget::GpuOffload => {
-                // GPU prefill + one KV transfer over the host link
-                // (PCIe-class 16 GB/s): KV bytes for the prompt.
+                // GPU prefill + one KV transfer over the host link —
+                // the same composition `serve`'s HeteroBackend charges.
                 let gpu = self.gpu.prefill_time(&self.cfg.model, prompt_len);
-                let kv_bytes = (2 * self.cfg.model.n_layers
-                    * prompt_len
-                    * self.cfg.model.d_model
-                    * self.cfg.model.param_bytes) as f64;
-                gpu + kv_bytes / 16e9
+                gpu + kv_handoff_s(
+                    self.cfg.model.kv_bytes_per_token(),
+                    prompt_len,
+                    HOST_LINK_BW,
+                )
             }
         }
     }
@@ -122,7 +123,7 @@ impl Coordinator {
     /// Drain the queue, producing completions in service order.
     pub fn run(&mut self) -> Vec<Completion> {
         let mut pending = std::mem::take(&mut self.queue);
-        pending.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        pending.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
         let mut completions = Vec::with_capacity(pending.len());
         let mut device_free_at = 0.0f64;
         let mut waiting: Vec<Request> = Vec::new();

@@ -9,6 +9,8 @@
 //! sal-pim area                                 # Table 3 arithmetic
 //! sal-pim serve    --requests 16 [--policy fcfs|sjf|spf] [--offload]
 //!                  [--engine seq|batch|cluster] [--devices 4] [--batch 8]
+//!                  [--backend salpim|gpu|banklevel|hetero]
+//!                  [--prefill-chunk 32]
 //!                  [--route rr|ll|affinity] [--rate 200] [--burst 4]
 //!                  [--sweep] [--seed 42]
 //! ```
@@ -19,6 +21,12 @@
 //!   controlled, batched decode steps);
 //! * `--engine cluster` — `--devices` N batching devices behind a router
 //!   (`--route` round-robin / least-loaded / session-affinity);
+//! * `--backend` picks the execution backend batching devices simulate:
+//!   the subarray-level PIM (default), the Titan RTX roofline with
+//!   batched decode, the Newton-style bank-level PIM, or the
+//!   heterogeneous GPU-prefill + PIM-decode device;
+//! * `--prefill-chunk` C interleaves summarization in C-token chunks at
+//!   token boundaries instead of stalling the decode batch;
 //! * `--rate` R switches arrivals to open-loop Poisson at R req/s
 //!   (`--burst` B makes them bursts of B); without it the legacy jittered
 //!   mix is used;
@@ -33,7 +41,7 @@ use sal_pim::mapper::GenerationSim;
 use sal_pim::report::{fmt_bw, fmt_pct, fmt_time, fmt_x, Table};
 use sal_pim::serve::sweep::{latency_vs_load, SweepConfig};
 use sal_pim::serve::workload::{requests_from_items, ArrivalPattern};
-use sal_pim::serve::{Cluster, DeviceEngine, Routing};
+use sal_pim::serve::{BackendKind, Cluster, DeviceEngine, Routing};
 use sal_pim::testutil::RequestMix;
 
 fn main() {
@@ -78,6 +86,10 @@ fn run() -> anyhow::Result<()> {
             println!("  --devices N        cluster size (default 4)");
             println!("  --batch M          continuous-batching slots per device (default 8)");
             println!("  --route R          rr|ll|affinity (default rr)");
+            println!("  --backend B        salpim|gpu|banklevel|hetero (default salpim;");
+            println!("                     batch/cluster/sweep engines)");
+            println!("  --prefill-chunk C  interleave prefill in C-token chunks instead of");
+            println!("                     stalling the decode batch");
             println!("  --rate R           open-loop Poisson arrivals at R req/s");
             println!("  --burst B          make Poisson arrivals bursts of B");
             println!("  --offload          GPU prefill offload (seq engine only)");
@@ -255,6 +267,19 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     };
     let devices = args.get("devices", 4usize)?;
     let max_batch = args.get("batch", 8usize)?;
+    let backend_flag = args.flag("backend").unwrap_or("salpim");
+    let backend = BackendKind::parse(backend_flag).ok_or_else(|| {
+        anyhow::anyhow!("unknown backend `{backend_flag}` (salpim|gpu|banklevel|hetero)")
+    })?;
+    // switch() also catches a bare `--prefill-chunk` (defaults to 32
+    // tokens) that flag() would miss.
+    let prefill_chunk = if args.switch("prefill-chunk") {
+        let c = args.get("prefill-chunk", 32usize)?;
+        anyhow::ensure!(c >= 1, "--prefill-chunk must be at least 1 token");
+        Some(c)
+    } else {
+        None
+    };
 
     if args.switch("sweep") {
         // Honor an explicit --requests; default to a load big enough to
@@ -267,16 +292,19 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             policy,
             requests: sweep_requests,
             seed,
+            backend,
+            prefill_chunk,
             ..SweepConfig::default()
         };
         let loads = [50.0, 200.0, 1000.0];
         let pts = latency_vs_load(&cfg, &sc, &loads);
         let mut t = Table::new(
             &format!(
-                "latency vs offered load ({} devices × batch {}, {}, {} requests)",
+                "latency vs offered load ({} devices × batch {}, {}, backend {}, {} requests)",
                 sc.devices,
                 sc.max_batch,
                 routing.name(),
+                backend.name(),
                 sc.requests
             ),
             &["offered req/s", "tok/s", "p50 lat", "p95 lat", "p95 TTFT", "rejected"],
@@ -315,6 +343,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 
     match args.flag("engine").unwrap_or("seq") {
         "seq" => {
+            anyhow::ensure!(
+                backend == BackendKind::SalPim,
+                "--engine seq is the paper-faithful PIM coordinator; pick --engine batch|cluster \
+                 for --backend {} (or use --offload for GPU prefill)",
+                backend.name()
+            );
+            anyhow::ensure!(
+                prefill_chunk.is_none(),
+                "--prefill-chunk needs the batching scheduler; pick --engine batch|cluster"
+            );
             let mut coord = Coordinator::new(&cfg).with_policy(policy);
             if args.switch("offload") {
                 coord = coord.with_prefill_target(PrefillTarget::GpuOffload);
@@ -331,16 +369,24 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             );
         }
         "batch" => {
-            let mut eng = DeviceEngine::new(&cfg, max_batch).with_policy(policy);
+            let mut eng = DeviceEngine::with_backend(backend.build(&cfg), max_batch)
+                .with_policy(policy)
+                .with_prefill_chunk(prefill_chunk);
             for r in requests {
                 eng.submit(r);
             }
+            let backend_name = eng.backend_name();
             let m = ServeMetrics::from_completions(&eng.run());
             let rep = eng.report();
             println!(
-                "engine=batch policy={} batch={} arrivals={}\n{m}",
+                "engine=batch backend={} policy={} batch={} chunk={} arrivals={}\n{m}",
+                backend_name,
                 policy.name(),
                 max_batch,
+                match prefill_chunk {
+                    Some(c) => c.to_string(),
+                    None => "inline".to_string(),
+                },
                 pattern.name()
             );
             println!(
@@ -351,14 +397,17 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             );
         }
         "cluster" => {
-            let mut cluster = Cluster::new(&cfg, devices, max_batch, routing).with_policy(policy);
+            let mut cluster = Cluster::homogeneous(&cfg, backend, devices, max_batch, routing)
+                .with_policy(policy)
+                .with_prefill_chunk(prefill_chunk);
             for r in requests {
                 cluster.submit(r);
             }
             let done = cluster.run();
             let m = ServeMetrics::from_completions(&done);
             println!(
-                "engine=cluster devices={} batch={} route={} arrivals={}\n{m}",
+                "engine=cluster backend={} devices={} batch={} route={} arrivals={}\n{m}",
+                backend.name(),
                 devices,
                 max_batch,
                 routing.name(),
@@ -366,13 +415,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             );
             let mut t = Table::new(
                 "per-device",
-                &["device", "requests", "tok/s", "p95 lat", "kv peak util"],
+                &["device", "backend", "requests", "tok/s", "p95 lat", "kv peak util"],
             );
             let per = cluster.per_device_metrics(&done);
             let reps = cluster.per_device_reports();
+            let names = cluster.backend_names();
             for (i, (pm, rep)) in per.iter().zip(&reps).enumerate() {
                 t.row(&[
                     i.to_string(),
+                    names[i].clone(),
                     pm.requests.to_string(),
                     format!("{:.1}", pm.throughput_tok_s),
                     fmt_time(pm.p95_latency_s),

@@ -39,14 +39,32 @@ struct ScaledTraffic {
 }
 
 impl ScaledTraffic {
-    fn from_stats(src: &Stats, frac: f64) -> Self {
-        let scale = |v: u64| (v as f64 * frac).round() as u64;
-        ScaledTraffic {
-            internal_bytes: scale(src.internal_bytes),
-            external_bytes: scale(src.external_bytes),
-            activations: scale(src.activations),
-            commands: src.commands.iter().map(|(k, c)| (*k, scale(*c))).collect(),
-        }
+    /// Split `src`'s counters into a per-request share (`per_req_frac`
+    /// of each counter, rounded) and the *exact residual* as the shared
+    /// group. Rounding the two groups independently let them drift from
+    /// the unbatched totals by ±1 per counter; assigning the residual
+    /// guarantees `shared + per_req == src` exactly, so a batch of one
+    /// reproduces the single-iteration traffic bit for bit.
+    fn split(src: &Stats, per_req_frac: f64) -> (Self, Self) {
+        let per = |v: u64| ((v as f64 * per_req_frac).round() as u64).min(v);
+        let per_req = ScaledTraffic {
+            internal_bytes: per(src.internal_bytes),
+            external_bytes: per(src.external_bytes),
+            activations: per(src.activations),
+            commands: src.commands.iter().map(|(k, c)| (*k, per(*c))).collect(),
+        };
+        let shared = ScaledTraffic {
+            internal_bytes: src.internal_bytes - per_req.internal_bytes,
+            external_bytes: src.external_bytes - per_req.external_bytes,
+            activations: src.activations - per_req.activations,
+            commands: src
+                .commands
+                .iter()
+                .zip(&per_req.commands)
+                .map(|((k, c), (_, p))| (*k, c - p))
+                .collect(),
+        };
+        (shared, per_req)
     }
 
     fn add_into(&self, dst: &mut Stats) {
@@ -76,21 +94,18 @@ impl BatchTerms {
         let grab = |p: Phase| st.phase_cycles.get(&p).copied().unwrap_or(0);
         let shared_phases = WEIGHT_SHARED_PHASES.map(|p| (p, grab(p)));
         let per_req_phases = PER_REQUEST_PHASES.map(|p| (p, grab(p)));
-        let shared: u64 = shared_phases.iter().map(|(_, c)| *c).sum();
         let per_req: u64 = per_req_phases.iter().map(|(_, c)| *c).sum();
-        let (shared_frac, per_req_frac) = if st.cycles == 0 {
-            (0.0, 0.0)
+        let per_req_frac = if st.cycles == 0 {
+            0.0
         } else {
-            (
-                shared as f64 / st.cycles as f64,
-                per_req as f64 / st.cycles as f64,
-            )
+            per_req as f64 / st.cycles as f64
         };
+        let (shared_traffic, per_req_traffic) = ScaledTraffic::split(st, per_req_frac);
         BatchTerms {
             shared_phases,
             per_req_phases,
-            shared_traffic: ScaledTraffic::from_stats(st, shared_frac),
-            per_req_traffic: ScaledTraffic::from_stats(st, per_req_frac),
+            shared_traffic,
+            per_req_traffic,
         }
     }
 
@@ -342,6 +357,45 @@ mod tests {
         let batch = sim.decode_batch_step(&[64]);
         assert_eq!(batch.cycles, single.cycles);
         assert_eq!(batch.tokens_generated, 1);
+    }
+
+    #[test]
+    fn batch_of_one_conserves_traffic_counters() {
+        // The shared/per-request traffic split assigns the exact
+        // residual to the shared group, so a batch of one must
+        // reproduce the single-iteration counters exactly — not within
+        // a per-counter rounding drift.
+        let mut sim = GenerationSim::new(&SimConfig::paper());
+        for kv in [17usize, 64, 333] {
+            let single = sim.decode_token(kv);
+            let batch = sim.decode_batch_step(&[kv]);
+            assert_eq!(batch.internal_bytes, single.internal_bytes, "kv={kv}");
+            assert_eq!(batch.external_bytes, single.external_bytes, "kv={kv}");
+            assert_eq!(batch.activations, single.activations, "kv={kv}");
+            assert_eq!(batch.commands, single.commands, "kv={kv}");
+        }
+    }
+
+    #[test]
+    fn split_traffic_sums_back_exactly() {
+        // Direct conservation check on the splitter with an awkward
+        // fraction (1/3 rounds every counter).
+        let mut src = Stats::new();
+        src.add_phase_cycles(Phase::Mha, 1);
+        src.add_phase_cycles(Phase::Ffn, 2);
+        src.internal_bytes = 101;
+        src.external_bytes = 7;
+        src.count_cmd(crate::stats::CmdKind::Act, 13); // also sets activations
+
+        src.count_cmd(crate::stats::CmdKind::Rd, 999);
+        let (shared, per_req) = ScaledTraffic::split(&src, 1.0 / 3.0);
+        assert_eq!(shared.internal_bytes + per_req.internal_bytes, 101);
+        assert_eq!(shared.external_bytes + per_req.external_bytes, 7);
+        assert_eq!(shared.activations + per_req.activations, 13);
+        for ((k, s), (k2, p)) in shared.commands.iter().zip(&per_req.commands) {
+            assert_eq!(k, k2);
+            assert_eq!(s + p, src.commands[k]);
+        }
     }
 
     #[test]

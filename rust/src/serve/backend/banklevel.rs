@@ -1,0 +1,95 @@
+//! The bank-level PIM execution backend (Newton-style, §5.4 / Fig. 12).
+//!
+//! Reuses the timing engine restricted to one streaming subarray per
+//! bank ([`BankLevelPim::device_config`]): column reads arrive at the
+//! tCCDL cadence, 1/P_Sub of SAL-PIM's rate. The crucial *serving*
+//! difference from SAL-PIM is that the per-bank adder tree computes one
+//! dot product at a time and has no per-request accumulator file next to
+//! the subarrays — a weight row broadcast cannot be consumed by several
+//! requests at once, so batched decode steps do NOT amortize: a step
+//! over N requests costs the sum of N single-request iterations.
+//!
+//! Its DRAM also embeds no LUT subarrays, so the KV region is the whole
+//! device minus the weight replica.
+
+use super::{DeviceCapacity, ExecutionBackend};
+use crate::baseline::BankLevelPim;
+use crate::config::SimConfig;
+use crate::mapper::GenerationSim;
+
+/// Newton-style bank-level PIM device backend.
+pub struct BankLevelBackend {
+    cfg: SimConfig,
+    sim: GenerationSim,
+}
+
+impl BankLevelBackend {
+    /// Build from a SAL-PIM config (same HBM2 device, Table 2 timing).
+    pub fn new(cfg: &SimConfig) -> Self {
+        let cfg = BankLevelPim::device_config(cfg);
+        BankLevelBackend {
+            sim: GenerationSim::new(&cfg),
+            cfg,
+        }
+    }
+}
+
+impl ExecutionBackend for BankLevelBackend {
+    fn name(&self) -> String {
+        "banklevel".to_string()
+    }
+
+    fn prefill_s(&mut self, n_tokens: usize) -> f64 {
+        self.sim.prefill(n_tokens).seconds(self.cfg.timing.tck_ns)
+    }
+
+    fn decode_step_s(&mut self, kv_lens: &[usize]) -> f64 {
+        assert!(!kv_lens.is_empty(), "empty decode batch");
+        // No per-request accumulators: requests serialize within a step.
+        let cycles: u64 = kv_lens.iter().map(|&kv| self.sim.decode_token(kv).cycles).sum();
+        self.cfg.timing.cycles_to_sec(cycles)
+    }
+
+    fn capacity(&self) -> DeviceCapacity {
+        let subarray_bytes = self.cfg.hbm.subarray_bytes();
+        let weight_bytes = self.cfg.model.total_params() * self.cfg.model.param_bytes;
+        let kv_subarrays = self
+            .cfg
+            .hbm
+            .total_subarrays()
+            .saturating_sub(weight_bytes.div_ceil(subarray_bytes));
+        DeviceCapacity {
+            kv_bytes_per_token: self.cfg.model.kv_bytes_per_token(),
+            kv_alloc_unit_bytes: subarray_bytes,
+            kv_total_units: kv_subarrays,
+            max_seq: self.cfg.model.max_seq,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::backend::SalPimBackend;
+
+    #[test]
+    fn decode_does_not_amortize_across_the_batch() {
+        let cfg = SimConfig::paper();
+        let mut b = BankLevelBackend::new(&cfg);
+        let singles: f64 = [64usize, 96].iter().map(|&kv| b.decode_step_s(&[kv])).sum();
+        let batch = b.decode_step_s(&[64, 96]);
+        assert!((batch - singles).abs() < 1e-15 + 1e-12 * singles);
+    }
+
+    #[test]
+    fn salpim_outruns_banklevel_decode() {
+        let cfg = SimConfig::paper();
+        let mut bank = BankLevelBackend::new(&cfg);
+        let mut sal = SalPimBackend::new(&cfg);
+        let kvs = [64usize, 64, 64, 64];
+        assert!(
+            bank.decode_step_s(&kvs) > sal.decode_step_s(&kvs),
+            "bank-level must be slower than subarray-level"
+        );
+    }
+}

@@ -1,0 +1,115 @@
+//! The GPU execution backend: the Titan RTX roofline baseline promoted
+//! to a servable device with batching semantics.
+//!
+//! [`crate::baseline::GpuModel`] was a one-off per-request cost model;
+//! here one batched decode step pays the *weight stream* (and the fused
+//! per-layer kernels) once — every request in the batch consumes the
+//! same weight tiles — while the per-request attention work (KV
+//! streaming, small-kernel softmax overheads) accumulates, mirroring
+//! FasterTransformer's batched decode. A batch of one reproduces
+//! [`GpuModel::decode_token_time`] exactly (the decomposition lives in
+//! [`GpuModel::decode_shared_time`] / [`GpuModel::decode_attention_time`],
+//! so model and backend cannot drift).
+//!
+//! KV capacity is the card's DRAM minus one fp16 weight replica,
+//! allocated in 2 MiB pages.
+
+use super::{DeviceCapacity, ExecutionBackend};
+use crate::baseline::GpuModel;
+use crate::config::ModelConfig;
+
+/// KV allocation granularity on the GPU (a CUDA-allocator-style page).
+const GPU_KV_PAGE_BYTES: usize = 2 << 20;
+
+/// GPU device backend (roofline + launch overheads, batched decode).
+pub struct GpuBackend {
+    model: ModelConfig,
+    gpu: GpuModel,
+}
+
+impl GpuBackend {
+    pub fn new(model: &ModelConfig, gpu: GpuModel) -> Self {
+        GpuBackend {
+            model: model.clone(),
+            gpu,
+        }
+    }
+
+    /// The paper's calibrated Titan RTX + FasterTransformer baseline.
+    pub fn titan_rtx(model: &ModelConfig) -> Self {
+        Self::new(model, GpuModel::titan_rtx())
+    }
+
+    /// The wrapped roofline model.
+    pub fn model(&self) -> &GpuModel {
+        &self.gpu
+    }
+}
+
+impl ExecutionBackend for GpuBackend {
+    fn name(&self) -> String {
+        "gpu".to_string()
+    }
+
+    fn prefill_s(&mut self, n_tokens: usize) -> f64 {
+        self.gpu.prefill_time(&self.model, n_tokens)
+    }
+
+    fn decode_step_s(&mut self, kv_lens: &[usize]) -> f64 {
+        assert!(!kv_lens.is_empty(), "empty decode batch");
+        let shared = self.gpu.decode_shared_time(&self.model);
+        let per_req: f64 = kv_lens
+            .iter()
+            .map(|&kv| self.gpu.decode_attention_time(&self.model, kv))
+            .sum();
+        shared + per_req
+    }
+
+    fn capacity(&self) -> DeviceCapacity {
+        let weight_bytes = self.model.total_params() * self.model.param_bytes;
+        let kv_bytes = self.gpu.mem_bytes.saturating_sub(weight_bytes);
+        DeviceCapacity {
+            kv_bytes_per_token: self.model.kv_bytes_per_token(),
+            kv_alloc_unit_bytes: GPU_KV_PAGE_BYTES,
+            kv_total_units: kv_bytes / GPU_KV_PAGE_BYTES,
+            max_seq: self.model.max_seq,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_of_one_equals_the_roofline_decode() {
+        let m = ModelConfig::gpt2_medium();
+        let mut b = GpuBackend::titan_rtx(&m);
+        let single = GpuModel::titan_rtx().decode_token_time(&m, 64);
+        let step = b.decode_step_s(&[64]);
+        assert!(
+            (step - single).abs() < 1e-12 * single.max(1.0),
+            "step {step} != single {single}"
+        );
+    }
+
+    #[test]
+    fn batched_step_amortizes_the_weight_stream() {
+        let m = ModelConfig::gpt2_medium();
+        let mut b = GpuBackend::titan_rtx(&m);
+        let kvs = [64usize, 96, 128, 160];
+        let batch = b.decode_step_s(&kvs);
+        let sequential: f64 = kvs.iter().map(|&kv| b.decode_step_s(&[kv])).sum();
+        let slowest = b.decode_step_s(&[160]);
+        assert!(batch < sequential, "{batch} !< {sequential}");
+        assert!(batch >= slowest, "{batch} < slowest member {slowest}");
+    }
+
+    #[test]
+    fn titan_rtx_holds_a_large_kv_working_set() {
+        // 24 GB minus ~700 MB of fp16 weights at 96 KB of KV per token:
+        // well over 100k resident tokens.
+        let cap = GpuBackend::titan_rtx(&ModelConfig::gpt2_medium()).capacity();
+        assert!(cap.capacity_tokens() > 100_000, "{}", cap.capacity_tokens());
+    }
+}

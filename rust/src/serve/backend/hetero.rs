@@ -1,0 +1,132 @@
+//! Heterogeneous execution: prefill on one backend, decode on another.
+//!
+//! The paper's §6.3 future work (and PAPI / PIM-GPT as deployed
+//! systems): the summarization stage is compute-dense and belongs on a
+//! GPU/ASIC; token-by-token generation is memory-bound and belongs on
+//! PIM. [`HeteroBackend`] composes any two [`ExecutionBackend`]s that
+//! way, charging a KV handoff over the host link after prefill — the
+//! prompt's K/V state is produced on the prefill device and must land in
+//! the decode device's DRAM before the first decode step.
+//!
+//! The handoff is linear in tokens, so chunked prefill composes cleanly:
+//! each chunk's incremental cost carries its own KV bytes and the chunk
+//! costs telescope to the unchunked total.
+
+use super::{DeviceCapacity, ExecutionBackend};
+use crate::config::SimConfig;
+
+/// PCIe-class host link for the prefill→decode KV handoff (bytes/s).
+/// Shared with the sequential coordinator's §6.3 offload policy.
+pub const HOST_LINK_BW: f64 = 16e9;
+
+/// Seconds to move `tokens` worth of KV state over a `link_bw` bytes/s
+/// host link.
+pub fn kv_handoff_s(kv_bytes_per_token: usize, tokens: usize, link_bw: f64) -> f64 {
+    debug_assert!(link_bw > 0.0);
+    (tokens * kv_bytes_per_token) as f64 / link_bw
+}
+
+/// Prefill on one device, decode on another, KV handed off in between.
+pub struct HeteroBackend {
+    prefill: Box<dyn ExecutionBackend>,
+    decode: Box<dyn ExecutionBackend>,
+    /// Host-link bandwidth for the KV handoff (bytes/s).
+    pub handoff_bw: f64,
+}
+
+impl HeteroBackend {
+    pub fn new(
+        prefill: Box<dyn ExecutionBackend>,
+        decode: Box<dyn ExecutionBackend>,
+        handoff_bw: f64,
+    ) -> Self {
+        assert!(handoff_bw > 0.0, "handoff bandwidth must be positive");
+        HeteroBackend {
+            prefill,
+            decode,
+            handoff_bw,
+        }
+    }
+
+    /// The canonical composition: GPU prefill + SAL-PIM decode over a
+    /// PCIe-class link (what `--backend hetero` builds).
+    pub fn gpu_prefill_pim_decode(cfg: &SimConfig) -> Self {
+        Self::new(
+            Box::new(super::GpuBackend::titan_rtx(&cfg.model)),
+            Box::new(super::SalPimBackend::new(cfg)),
+            HOST_LINK_BW,
+        )
+    }
+
+    /// KV handoff cost for an `n`-token prompt at this link.
+    fn handoff_s(&self, n_tokens: usize) -> f64 {
+        kv_handoff_s(
+            self.decode.capacity().kv_bytes_per_token,
+            n_tokens,
+            self.handoff_bw,
+        )
+    }
+}
+
+impl ExecutionBackend for HeteroBackend {
+    fn name(&self) -> String {
+        format!("hetero({}→{})", self.prefill.name(), self.decode.name())
+    }
+
+    fn prefill_s(&mut self, n_tokens: usize) -> f64 {
+        self.prefill.prefill_s(n_tokens) + self.handoff_s(n_tokens)
+    }
+
+    fn decode_step_s(&mut self, kv_lens: &[usize]) -> f64 {
+        self.decode.decode_step_s(kv_lens)
+    }
+
+    /// KV lives on the decode device — that is the capacity that gates
+    /// admission.
+    fn capacity(&self) -> DeviceCapacity {
+        self.decode.capacity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::serve::backend::{GpuBackend, SalPimBackend};
+
+    #[test]
+    fn composes_prefill_decode_and_handoff_exactly() {
+        let cfg = SimConfig::paper();
+        let mut het = HeteroBackend::gpu_prefill_pim_decode(&cfg);
+        let mut gpu = GpuBackend::titan_rtx(&cfg.model);
+        let mut pim = SalPimBackend::new(&cfg);
+
+        let n = 128;
+        let handoff = kv_handoff_s(cfg.model.kv_bytes_per_token(), n, HOST_LINK_BW);
+        let want = gpu.prefill_s(n) + handoff;
+        let got = het.prefill_s(n);
+        assert!((got - want).abs() < 1e-15 + 1e-12 * want, "{got} != {want}");
+
+        assert_eq!(het.decode_step_s(&[64, 96]), pim.decode_step_s(&[64, 96]));
+        assert_eq!(het.capacity().kv_total_units, pim.capacity().kv_total_units);
+    }
+
+    #[test]
+    fn handoff_scales_with_tokens_and_bandwidth() {
+        let kvt = ModelConfig::gpt2_medium().kv_bytes_per_token();
+        let one = kv_handoff_s(kvt, 1, HOST_LINK_BW);
+        assert!(one > 0.0);
+        assert!((kv_handoff_s(kvt, 10, HOST_LINK_BW) - 10.0 * one).abs() < 1e-12);
+        assert!(kv_handoff_s(kvt, 1, 2.0 * HOST_LINK_BW) < one);
+    }
+
+    #[test]
+    fn hetero_prefill_beats_pim_prefill_on_long_prompts() {
+        // §6.3's whole point: the GPU's parallel-input prefill plus the
+        // handoff still beats PIM prefill for long prompts.
+        let cfg = SimConfig::paper();
+        let mut het = HeteroBackend::gpu_prefill_pim_decode(&cfg);
+        let mut pim = SalPimBackend::new(&cfg);
+        assert!(het.prefill_s(128) < pim.prefill_s(128));
+    }
+}

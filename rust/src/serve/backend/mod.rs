@@ -1,0 +1,171 @@
+//! Pluggable execution backends for the serving layer.
+//!
+//! The serving engine ([`crate::serve::DeviceEngine`]) used to own a
+//! [`crate::mapper::GenerationSim`] directly, which welded the whole
+//! batching/routing/sweep stack to the SAL-PIM cost model. The
+//! [`ExecutionBackend`] trait decouples them: a backend answers the only
+//! three questions the scheduler asks —
+//!
+//! 1. how long does a summarization (prefill) over `n` tokens take,
+//! 2. how long does one *batched* decode step over a set of in-flight
+//!    KV lengths take, and
+//! 3. what KV capacity does the device expose ([`DeviceCapacity`]) —
+//!
+//! so every cost model in the repo becomes a servable, clusterable
+//! device. The four implementations:
+//!
+//! * [`SalPimBackend`] — the paper's subarray-level PIM
+//!   ([`crate::mapper::GenerationSim`], cycle-accurate, weight stream
+//!   amortized across the batch);
+//! * [`GpuBackend`] — the Titan RTX roofline
+//!   ([`crate::baseline::GpuModel`]) *with batching semantics*: the
+//!   weight stream is paid once per step, per-request attention
+//!   accumulates;
+//! * [`BankLevelBackend`] — the Newton-style bank-level PIM (one
+//!   streaming subarray per bank, no per-request accumulators, so decode
+//!   steps do NOT amortize across a batch);
+//! * [`HeteroBackend`] — prefill on one backend, decode on another
+//!   (PAPI / PIM-GPT style GPU-prefill + PIM-decode), with a
+//!   configurable KV handoff cost over the host link.
+
+mod banklevel;
+mod gpu;
+mod hetero;
+mod salpim;
+
+pub use banklevel::BankLevelBackend;
+pub use gpu::GpuBackend;
+pub use hetero::{kv_handoff_s, HeteroBackend, HOST_LINK_BW};
+pub use salpim::SalPimBackend;
+
+use crate::config::SimConfig;
+
+/// KV-capacity hints one device exposes to the serving layer's admission
+/// control. Capacity is consumed in whole allocation units — subarrays
+/// on a PIM device (open-row streaming wants contiguous K/V rows), pages
+/// on a GPU.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceCapacity {
+    /// Bytes of K+V state one token pins for a request's lifetime.
+    pub kv_bytes_per_token: usize,
+    /// Bytes per allocation unit (subarray / page).
+    pub kv_alloc_unit_bytes: usize,
+    /// Allocation units in the device's KV region.
+    pub kv_total_units: usize,
+    /// Longest KV length the device's model supports.
+    pub max_seq: usize,
+}
+
+impl DeviceCapacity {
+    /// Token capacity if the region were filled by one giant request.
+    pub fn capacity_tokens(&self) -> usize {
+        self.kv_total_units * self.kv_alloc_unit_bytes / self.kv_bytes_per_token
+    }
+}
+
+/// One simulated device the serving engine can schedule onto.
+///
+/// Methods take `&mut self` because the cost models memoize per-KV
+/// simulations. All times are seconds of simulated wall clock, so
+/// heterogeneous compositions and cross-backend comparisons need no
+/// unit conversion.
+pub trait ExecutionBackend {
+    /// Human-readable backend label for tables and reports.
+    fn name(&self) -> String;
+
+    /// Service time of the summarization stage over `n_tokens` prompt
+    /// tokens (emits the first output token). Must be monotone
+    /// non-decreasing in `n_tokens`: chunked prefill charges chunk `i`
+    /// as `prefill_s(end_i) - prefill_s(start_i)`, which telescopes to
+    /// the unchunked total.
+    fn prefill_s(&mut self, n_tokens: usize) -> f64;
+
+    /// Service time of one batched decode step: every entry of
+    /// `kv_lens` is one in-flight request producing its next token in
+    /// the same step. A batch of one must equal the backend's
+    /// single-request decode iteration.
+    fn decode_step_s(&mut self, kv_lens: &[usize]) -> f64;
+
+    /// KV capacity hints for admission control.
+    fn capacity(&self) -> DeviceCapacity;
+}
+
+/// The built-in backend families, as selected by `--backend`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Subarray-level PIM (the paper's device).
+    SalPim,
+    /// Titan RTX roofline with batched decode semantics.
+    Gpu,
+    /// Newton-style bank-level PIM (no batch amortization).
+    BankLevel,
+    /// GPU prefill + SAL-PIM decode with a PCIe-class KV handoff.
+    Hetero,
+}
+
+impl BackendKind {
+    pub const ALL: [BackendKind; 4] = [
+        BackendKind::SalPim,
+        BackendKind::Gpu,
+        BackendKind::BankLevel,
+        BackendKind::Hetero,
+    ];
+
+    /// Parse a `--backend` value.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "salpim" | "sal-pim" | "pim" => Some(BackendKind::SalPim),
+            "gpu" => Some(BackendKind::Gpu),
+            "banklevel" | "bank-level" => Some(BackendKind::BankLevel),
+            "hetero" => Some(BackendKind::Hetero),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::SalPim => "salpim",
+            BackendKind::Gpu => "gpu",
+            BackendKind::BankLevel => "banklevel",
+            BackendKind::Hetero => "hetero",
+        }
+    }
+
+    /// Build the backend for a device config.
+    pub fn build(&self, cfg: &SimConfig) -> Box<dyn ExecutionBackend> {
+        match self {
+            BackendKind::SalPim => Box::new(SalPimBackend::new(cfg)),
+            BackendKind::Gpu => Box::new(GpuBackend::titan_rtx(&cfg.model)),
+            BackendKind::BankLevel => Box::new(BankLevelBackend::new(cfg)),
+            BackendKind::Hetero => Box::new(HeteroBackend::gpu_prefill_pim_decode(cfg)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parses_and_names_round_trip() {
+        for kind in BackendKind::ALL {
+            assert_eq!(BackendKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(BackendKind::parse("pim"), Some(BackendKind::SalPim));
+        assert_eq!(BackendKind::parse("cuda"), None);
+    }
+
+    #[test]
+    fn every_kind_builds_a_live_backend() {
+        let cfg = SimConfig::paper();
+        for kind in BackendKind::ALL {
+            let mut b = kind.build(&cfg);
+            assert!(b.prefill_s(16) > 0.0, "{}", b.name());
+            assert!(b.decode_step_s(&[32]) > 0.0, "{}", b.name());
+            let cap = b.capacity();
+            assert!(cap.kv_total_units > 0, "{}", b.name());
+            assert!(cap.capacity_tokens() > 0, "{}", b.name());
+            assert_eq!(cap.max_seq, cfg.model.max_seq);
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! The SAL-PIM execution backend: the paper's subarray-level device
+//! behind the [`ExecutionBackend`] trait.
+//!
+//! Thin adapter over [`GenerationSim`] — cycle-accurate prefill and
+//! batched decode steps ([`GenerationSim::decode_batch_step`]: the
+//! shared weight stream is paid once per step, per-request KV/attention
+//! work accumulates), converted to seconds at the config's tCK. The KV
+//! region is whatever subarrays remain after the model weights and the
+//! LUT-embedded subarrays are placed
+//! ([`crate::serve::kv_cache::device_kv_subarrays`]).
+
+use super::{DeviceCapacity, ExecutionBackend};
+use crate::config::SimConfig;
+use crate::mapper::GenerationSim;
+use crate::serve::kv_cache::device_kv_subarrays;
+
+/// Subarray-level PIM device (wraps the cycle-accurate simulator).
+pub struct SalPimBackend {
+    cfg: SimConfig,
+    sim: GenerationSim,
+}
+
+impl SalPimBackend {
+    pub fn new(cfg: &SimConfig) -> Self {
+        SalPimBackend {
+            cfg: cfg.clone(),
+            sim: GenerationSim::new(cfg),
+        }
+    }
+
+    /// The device config the backend simulates.
+    pub fn config(&self) -> &SimConfig {
+        &self.cfg
+    }
+}
+
+impl ExecutionBackend for SalPimBackend {
+    fn name(&self) -> String {
+        "salpim".to_string()
+    }
+
+    fn prefill_s(&mut self, n_tokens: usize) -> f64 {
+        self.sim.prefill(n_tokens).seconds(self.cfg.timing.tck_ns)
+    }
+
+    fn decode_step_s(&mut self, kv_lens: &[usize]) -> f64 {
+        let st = self.sim.decode_batch_step(kv_lens);
+        self.cfg.timing.cycles_to_sec(st.cycles)
+    }
+
+    fn capacity(&self) -> DeviceCapacity {
+        DeviceCapacity {
+            kv_bytes_per_token: self.cfg.model.kv_bytes_per_token(),
+            kv_alloc_unit_bytes: self.cfg.hbm.subarray_bytes(),
+            kv_total_units: device_kv_subarrays(&self.cfg),
+            max_seq: self.cfg.model.max_seq,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_the_generation_sim_exactly() {
+        let cfg = SimConfig::paper();
+        let mut b = SalPimBackend::new(&cfg);
+        let mut sim = GenerationSim::new(&cfg);
+        let tck = cfg.timing.tck_ns;
+        assert_eq!(b.prefill_s(32), sim.prefill(32).seconds(tck));
+        assert_eq!(
+            b.decode_step_s(&[64, 96]),
+            cfg.timing.cycles_to_sec(sim.decode_batch_step(&[64, 96]).cycles)
+        );
+    }
+
+    #[test]
+    fn batch_of_one_degenerates_to_a_single_decode() {
+        let cfg = SimConfig::paper();
+        let mut b = SalPimBackend::new(&cfg);
+        let mut sim = GenerationSim::new(&cfg);
+        assert_eq!(
+            b.decode_step_s(&[128]),
+            cfg.timing.cycles_to_sec(sim.decode_token(128).cycles)
+        );
+    }
+
+    #[test]
+    fn capacity_mirrors_the_kv_manager() {
+        let cfg = SimConfig::paper();
+        let cap = SalPimBackend::new(&cfg).capacity();
+        let kv = crate::serve::KvCacheManager::for_device(&cfg);
+        assert_eq!(cap.kv_total_units, kv.total_subarrays());
+        assert_eq!(cap.capacity_tokens(), kv.capacity_tokens());
+    }
+}

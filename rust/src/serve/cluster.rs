@@ -1,4 +1,4 @@
-//! A cluster of SAL-PIM devices behind a router.
+//! A cluster of serving devices behind a router.
 //!
 //! Scaling past one 8 GB stack means sharding traffic across devices
 //! (each holds a full weight replica, as in PIM-GPT-style multi-device
@@ -6,7 +6,13 @@
 //! and routes at submit time — routing is deterministic for a fixed
 //! submission order, so whole-cluster runs replay exactly under a fixed
 //! workload seed.
+//!
+//! Devices are [`super::backend::ExecutionBackend`]-generic: a cluster
+//! can be homogeneous ([`Cluster::homogeneous`] — N SAL-PIM, N GPU, …)
+//! or mixed ([`Cluster::from_engines`] — e.g. a GPU tier next to PIM
+//! devices), and routing stays deterministic either way.
 
+use super::backend::BackendKind;
 use super::engine::{DeviceEngine, EngineReport};
 use super::metrics::ServeMetrics;
 use super::policy::Policy;
@@ -46,17 +52,37 @@ pub struct Cluster {
 }
 
 impl Cluster {
+    /// N SAL-PIM devices (the historical constructor).
     pub fn new(cfg: &SimConfig, n_devices: usize, max_batch: usize, routing: Routing) -> Self {
+        Self::homogeneous(cfg, BackendKind::SalPim, n_devices, max_batch, routing)
+    }
+
+    /// N identical devices of one backend family.
+    pub fn homogeneous(
+        cfg: &SimConfig,
+        kind: BackendKind,
+        n_devices: usize,
+        max_batch: usize,
+        routing: Routing,
+    ) -> Self {
         assert!(n_devices >= 1);
-        let devices = (0..n_devices)
-            .map(|i| {
-                let mut d = DeviceEngine::new(cfg, max_batch);
-                d.device_index = i;
-                d
-            })
-            .collect();
+        Self::from_engines(
+            (0..n_devices)
+                .map(|_| DeviceEngine::with_backend(kind.build(cfg), max_batch))
+                .collect(),
+            routing,
+        )
+    }
+
+    /// A cluster over pre-built (possibly heterogeneous) devices.
+    /// Device indices are reassigned to the vector order.
+    pub fn from_engines(mut engines: Vec<DeviceEngine>, routing: Routing) -> Self {
+        assert!(!engines.is_empty(), "a cluster needs at least one device");
+        for (i, d) in engines.iter_mut().enumerate() {
+            d.device_index = i;
+        }
         Cluster {
-            devices,
+            devices: engines,
             routing,
             rr_next: 0,
             assignments: Vec::new(),
@@ -68,6 +94,23 @@ impl Cluster {
             d.policy = policy;
         }
         self
+    }
+
+    /// Apply one prefill-chunk setting to every device (see
+    /// [`DeviceEngine::with_prefill_chunk`]).
+    pub fn with_prefill_chunk(mut self, chunk: Option<usize>) -> Self {
+        if let Some(c) = chunk {
+            assert!(c >= 1, "prefill chunk must be at least one token");
+        }
+        for d in &mut self.devices {
+            d.prefill_chunk = chunk;
+        }
+        self
+    }
+
+    /// Per-device backend labels (device index order).
+    pub fn backend_names(&self) -> Vec<String> {
+        self.devices.iter().map(|d| d.backend_name()).collect()
     }
 
     pub fn n_devices(&self) -> usize {
@@ -103,7 +146,7 @@ impl Cluster {
         for d in &mut self.devices {
             all.extend(d.run());
         }
-        all.sort_by(|a, b| a.finish_s.partial_cmp(&b.finish_s).unwrap());
+        all.sort_by(|a, b| a.finish_s.total_cmp(&b.finish_s));
         all
     }
 
@@ -176,6 +219,25 @@ mod tests {
         let d2 = c.submit(req(2, 2, 0.0));
         assert_ne!(d0, d1);
         assert_eq!(d1, d2, "second device stays lighter than the big job");
+    }
+
+    #[test]
+    fn mixed_backend_cluster_serves_and_labels_devices() {
+        let cfg = SimConfig::paper();
+        let engines = vec![
+            DeviceEngine::with_backend(BackendKind::SalPim.build(&cfg), 4),
+            DeviceEngine::with_backend(BackendKind::Gpu.build(&cfg), 4),
+        ];
+        let mut c = Cluster::from_engines(engines, Routing::RoundRobin);
+        assert_eq!(c.backend_names(), vec!["salpim".to_string(), "gpu".to_string()]);
+        for i in 0..4 {
+            c.submit(req(i, i, 0.0));
+        }
+        let done = c.run();
+        assert_eq!(done.len(), 4);
+        // Both devices took traffic.
+        assert!(done.iter().any(|c| c.device == 0));
+        assert!(done.iter().any(|c| c.device == 1));
     }
 
     #[test]

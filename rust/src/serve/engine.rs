@@ -1,51 +1,79 @@
-//! Continuous-batching serving engine for one simulated SAL-PIM device.
+//! Continuous-batching serving engine for one simulated device.
 //!
 //! The sequential [`crate::coordinator::Coordinator`] runs each request to
 //! completion before touching the next. This engine instead keeps a batch
 //! of in-flight generations and walks simulated time event by event:
 //!
 //! * at every token boundary, waiting requests (policy-ordered) are
-//!   admitted while a batch slot **and** a KV reservation are available —
-//!   admission charges the request's summarization (prefill) inline;
+//!   admitted while a batch slot **and** a KV reservation are available;
 //! * one batched decode step then produces one token for every active
-//!   request, charged via
-//!   [`crate::mapper::GenerationSim::decode_batch_step`]: the shared
-//!   weight stream is paid once per step, the per-request KV/attention
-//!   work accumulates — which is exactly why batching wins on a
-//!   weight-streaming PIM;
+//!   request, charged via [`ExecutionBackend::decode_step_s`] — on
+//!   SAL-PIM the shared weight stream is paid once per step and the
+//!   per-request KV/attention work accumulates, which is exactly why
+//!   batching wins on a weight-streaming PIM;
 //! * completions release their KV lease, freeing admission slots.
+//!
+//! The engine is generic over [`ExecutionBackend`], so the same
+//! scheduler serves SAL-PIM, the GPU roofline, bank-level PIM, or a
+//! heterogeneous GPU-prefill + PIM-decode device — the backend only
+//! answers "how long does this prefill / batched step take" and "how
+//! much KV fits".
+//!
+//! **Prefill scheduling.** By default a request's whole summarization is
+//! charged inline at admission, stalling the decode batch (the legacy
+//! behaviour). With [`DeviceEngine::with_prefill_chunk`] the prefill is
+//! split into token chunks interleaved at token boundaries: every
+//! still-prefilling request advances one chunk per boundary, then the
+//! decode step runs over the requests already generating. Chunk `i`
+//! covering tokens `[a, b)` is charged `prefill_s(b) − prefill_s(a)`,
+//! which telescopes to the unchunked total — chunking reorders time, it
+//! never changes the simulated token count. A completion's `prefill_s`
+//! is the wall-clock span from admission to its first token (identical
+//! to the service time when unchunked).
 //!
 //! Requests whose KV window can never fit the device are rejected rather
 //! than wedging the queue (the device has no eviction path).
 
+use super::backend::{DeviceCapacity, ExecutionBackend, SalPimBackend};
 use super::kv_cache::{KvCacheManager, KvLease};
 use super::metrics::ServeMetrics;
 use super::policy::Policy;
 use super::types::{Completion, Request};
 use crate::config::SimConfig;
-use crate::mapper::GenerationSim;
 
 /// A request currently holding a batch slot.
 struct ActiveReq {
     req: Request,
     /// Clock when the request left the queue (prefill start).
     admit_s: f64,
-    prefill_s: f64,
+    /// Prompt tokens already summarized (== prompt_len once decoding).
+    prefill_done: usize,
     /// Clock when the request entered the decode batch.
     decode_start_s: f64,
-    /// Tokens produced so far (the prefill emits the first).
+    /// Tokens produced so far (the completed prefill emits the first).
     produced: usize,
     lease: KvLease,
 }
 
 impl ActiveReq {
+    /// Still in the (chunked) summarization stage.
+    fn prefilling(&self) -> bool {
+        self.prefill_done < self.req.prompt_len
+    }
+
     /// KV length the next decode step runs at.
     fn next_kv(&self) -> usize {
         self.req.prompt_len + self.produced
     }
 
     fn finished(&self, max_seq: usize) -> bool {
-        self.produced >= self.req.max_new_tokens || self.next_kv() >= max_seq
+        !self.prefilling()
+            && (self.produced >= self.req.max_new_tokens || self.next_kv() >= max_seq)
+    }
+
+    /// Participates in the next batched decode step.
+    fn decoding(&self, max_seq: usize) -> bool {
+        !self.prefilling() && !self.finished(max_seq)
     }
 }
 
@@ -62,10 +90,10 @@ pub struct EngineReport {
     pub decode_steps: u64,
 }
 
-/// One device running continuous batching.
+/// One device running continuous batching over an [`ExecutionBackend`].
 pub struct DeviceEngine {
-    pub cfg: SimConfig,
-    sim: GenerationSim,
+    backend: Box<dyn ExecutionBackend>,
+    capacity: DeviceCapacity,
     kv: KvCacheManager,
     pub policy: Policy,
     /// Batch slots (concurrent generations the command scheduler
@@ -73,6 +101,9 @@ pub struct DeviceEngine {
     pub max_batch: usize,
     /// Index reported in completions (set by the cluster).
     pub device_index: usize,
+    /// Prefill chunk size in tokens; `None` charges whole prefills
+    /// inline at admission (the legacy decode-stalling behaviour).
+    pub prefill_chunk: Option<usize>,
     pending: Vec<Request>,
     clock_s: f64,
     rejected: Vec<Request>,
@@ -81,15 +112,23 @@ pub struct DeviceEngine {
 }
 
 impl DeviceEngine {
+    /// A SAL-PIM device (the historical constructor).
     pub fn new(cfg: &SimConfig, max_batch: usize) -> Self {
+        Self::with_backend(Box::new(SalPimBackend::new(cfg)), max_batch)
+    }
+
+    /// A device over any execution backend.
+    pub fn with_backend(backend: Box<dyn ExecutionBackend>, max_batch: usize) -> Self {
         assert!(max_batch >= 1);
+        let capacity = backend.capacity();
         DeviceEngine {
-            cfg: cfg.clone(),
-            sim: GenerationSim::new(cfg),
-            kv: KvCacheManager::for_device(cfg),
+            backend,
+            capacity,
+            kv: KvCacheManager::from_capacity(&capacity),
             policy: Policy::Fcfs,
             max_batch,
             device_index: 0,
+            prefill_chunk: None,
             pending: Vec::new(),
             clock_s: 0.0,
             rejected: Vec::new(),
@@ -103,10 +142,27 @@ impl DeviceEngine {
         self
     }
 
-    /// Shrink the KV region (what-if experiments / admission pressure).
-    pub fn with_kv_subarrays(mut self, kv_subarrays: usize) -> Self {
-        self.kv = KvCacheManager::with_kv_subarrays(&self.cfg, kv_subarrays);
+    /// Shrink the KV region to `units` allocation units — subarrays on
+    /// PIM (what-if experiments / admission pressure).
+    pub fn with_kv_subarrays(mut self, units: usize) -> Self {
+        self.kv = KvCacheManager::from_capacity_units(&self.capacity, units);
         self
+    }
+
+    /// Interleave prefills in `chunk`-token pieces at token boundaries
+    /// instead of stalling the decode batch; `None` restores the inline
+    /// behaviour.
+    pub fn with_prefill_chunk(mut self, chunk: Option<usize>) -> Self {
+        if let Some(c) = chunk {
+            assert!(c >= 1, "prefill chunk must be at least one token");
+        }
+        self.prefill_chunk = chunk;
+        self
+    }
+
+    /// The backend's display name.
+    pub fn backend_name(&self) -> String {
+        self.backend.name()
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -118,21 +174,25 @@ impl DeviceEngine {
         self.pending.iter().map(|r| r.kv_tokens()).sum()
     }
 
-    fn prefill_time(&mut self, prompt_len: usize) -> f64 {
-        let st = self.sim.prefill(prompt_len);
-        st.seconds(self.cfg.timing.tck_ns)
+    /// Incremental cost of summarizing prompt tokens `[from, to)`.
+    fn prefill_increment_s(&mut self, from: usize, to: usize) -> f64 {
+        if from == 0 {
+            self.backend.prefill_s(to)
+        } else {
+            (self.backend.prefill_s(to) - self.backend.prefill_s(from)).max(0.0)
+        }
     }
 
     /// Drain the queue with continuous batching; returns completions in
     /// finish order.
     pub fn run(&mut self) -> Vec<Completion> {
         let mut incoming = std::mem::take(&mut self.pending);
-        incoming.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        incoming.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
         let mut incoming = incoming.into_iter().peekable();
         let mut waiting: Vec<Request> = Vec::new();
         let mut active: Vec<ActiveReq> = Vec::new();
         let mut completions: Vec<Completion> = Vec::new();
-        let max_seq = self.cfg.model.max_seq;
+        let max_seq = self.capacity.max_seq;
 
         loop {
             // Pull everything that has arrived by the current clock.
@@ -170,16 +230,27 @@ impl DeviceEngine {
                     Some(lease) => {
                         let req = waiting.swap_remove(idx);
                         let admit_s = self.clock_s;
-                        let prefill_s = self.prefill_time(req.prompt_len);
-                        self.clock_s += prefill_s;
-                        active.push(ActiveReq {
+                        let mut a = ActiveReq {
                             req,
                             admit_s,
-                            prefill_s,
-                            decode_start_s: self.clock_s,
-                            produced: 1,
+                            prefill_done: 0,
+                            decode_start_s: admit_s,
+                            produced: 0,
                             lease,
-                        });
+                        };
+                        if self.prefill_chunk.is_none() {
+                            // Whole summarization charged inline.
+                            let dt = self.prefill_increment_s(0, a.req.prompt_len);
+                            self.clock_s += dt;
+                            a.prefill_done = a.req.prompt_len;
+                            a.decode_start_s = self.clock_s;
+                            a.produced = 1;
+                        } else if !a.prefilling() {
+                            // Degenerate empty prompt: nothing to chunk,
+                            // the first token is immediate.
+                            a.produced = 1;
+                        }
+                        active.push(a);
                     }
                     // KV region full right now: wait for a completion.
                     None => break,
@@ -187,19 +258,39 @@ impl DeviceEngine {
             }
             self.max_batch_seen = self.max_batch_seen.max(active.len());
 
+            // Advance one prefill chunk per still-prefilling request
+            // (the device time-shares chunks at token boundaries).
+            if let Some(chunk) = self.prefill_chunk {
+                for a in active.iter_mut() {
+                    if !a.prefilling() {
+                        continue;
+                    }
+                    let from = a.prefill_done;
+                    let to = (from + chunk).min(a.req.prompt_len);
+                    let dt = self.prefill_increment_s(from, to);
+                    self.clock_s += dt;
+                    a.prefill_done = to;
+                    if !a.prefilling() {
+                        // Summarization complete: emits the first token.
+                        a.decode_start_s = self.clock_s;
+                        a.produced = 1;
+                    }
+                }
+            }
+
             // One batched decode step over every request that still
-            // decodes (not finished, KV below the model window).
+            // decodes (past prefill, not finished, KV below the window).
             let kv_lens: Vec<usize> = active
                 .iter()
-                .filter(|a| !a.finished(max_seq))
+                .filter(|a| a.decoding(max_seq))
                 .map(|a| a.next_kv())
                 .collect();
             if !kv_lens.is_empty() {
-                let st = self.sim.decode_batch_step(&kv_lens);
-                self.clock_s += self.cfg.timing.cycles_to_sec(st.cycles);
+                let dt = self.backend.decode_step_s(&kv_lens);
+                self.clock_s += dt;
                 self.decode_steps += 1;
                 for a in active.iter_mut() {
-                    if !a.finished(max_seq) {
+                    if a.decoding(max_seq) {
                         a.produced += 1;
                     }
                 }
@@ -221,7 +312,9 @@ impl DeviceEngine {
                         // match the sequential path per request.
                         tokens_simulated: a.produced,
                         queue_s: a.admit_s - a.req.arrival_s,
-                        prefill_s: a.prefill_s,
+                        // Wall span from admission to the first token;
+                        // equals the prefill service time when unchunked.
+                        prefill_s: a.decode_start_s - a.admit_s,
                         decode_s: self.clock_s - a.decode_start_s,
                         finish_s: self.clock_s,
                         device: self.device_index,
@@ -258,6 +351,7 @@ impl DeviceEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serve::backend::BackendKind;
 
     fn req(id: u64, prompt: usize, out: usize, at: f64) -> Request {
         Request {
@@ -332,5 +426,37 @@ mod tests {
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].id, 1);
         assert_eq!(e.report().rejected, 1);
+    }
+
+    #[test]
+    fn chunked_prefill_conserves_tokens() {
+        // Chunking reorders time; the simulated token counts per request
+        // are identical to the inline-prefill run.
+        let cfg = SimConfig::paper();
+        let run = |chunk: Option<usize>| -> Vec<(u64, usize)> {
+            let mut e = DeviceEngine::new(&cfg, 4).with_prefill_chunk(chunk);
+            e.submit(req(0, 96, 8, 0.0));
+            e.submit(req(1, 32, 16, 0.0));
+            e.submit(req(2, 48, 4, 0.0));
+            let mut out: Vec<(u64, usize)> =
+                e.run().iter().map(|c| (c.id, c.tokens_simulated)).collect();
+            out.sort();
+            out
+        };
+        assert_eq!(run(None), run(Some(16)));
+        assert_eq!(run(None), run(Some(7)), "odd chunk sizes too");
+    }
+
+    #[test]
+    fn gpu_backend_serves_the_same_queue() {
+        let cfg = SimConfig::paper();
+        let mut e = DeviceEngine::with_backend(BackendKind::Gpu.build(&cfg), 4);
+        assert_eq!(e.backend_name(), "gpu");
+        for i in 0..3 {
+            e.submit(req(i, 32, 8, 0.0));
+        }
+        let done = e.run();
+        assert_eq!(done.len(), 3);
+        assert_eq!(e.report().rejected, 0);
     }
 }

@@ -15,7 +15,21 @@
 //! so admission control is the only defence against mid-generation
 //! overflow. Slots free on completion via [`KvCacheManager::release`].
 
+use super::backend::DeviceCapacity;
 use crate::config::SimConfig;
+
+/// Subarrays left for KV on a SAL-PIM device: total subarrays minus the
+/// LUT-embedded subarrays minus what the model weights occupy. Shared by
+/// [`KvCacheManager::for_device`] and the SAL-PIM execution backend's
+/// capacity hint so the two can never disagree.
+pub fn device_kv_subarrays(cfg: &SimConfig) -> usize {
+    let subarray_bytes = cfg.hbm.subarray_bytes();
+    let total = cfg.hbm.total_subarrays();
+    let lut = cfg.hbm.total_banks() * cfg.lut.num_lut_subarrays;
+    let weight_bytes = cfg.model.total_params() * cfg.model.param_bytes;
+    let weight_subarrays = weight_bytes.div_ceil(subarray_bytes);
+    total.saturating_sub(lut + weight_subarrays)
+}
 
 /// A granted KV reservation (returned by [`KvCacheManager::try_admit`];
 /// hand it back with [`KvCacheManager::release`]).
@@ -47,15 +61,31 @@ pub struct KvCacheManager {
 
 impl KvCacheManager {
     /// KV region derived from the device config: total subarrays minus
-    /// the LUT-embedded subarrays minus what the model weights occupy.
+    /// the LUT-embedded subarrays minus what the model weights occupy
+    /// (see [`device_kv_subarrays`]).
     pub fn for_device(cfg: &SimConfig) -> Self {
-        let subarray_bytes = cfg.hbm.subarray_bytes();
-        let total = cfg.hbm.total_subarrays();
-        let lut = cfg.hbm.total_banks() * cfg.lut.num_lut_subarrays;
-        let weight_bytes = cfg.model.total_params() * cfg.model.param_bytes;
-        let weight_subarrays = weight_bytes.div_ceil(subarray_bytes);
-        let kv_subarrays = total.saturating_sub(lut + weight_subarrays);
-        Self::with_kv_subarrays(cfg, kv_subarrays)
+        Self::with_kv_subarrays(cfg, device_kv_subarrays(cfg))
+    }
+
+    /// Manager over a backend's capacity hints. "Subarray" generalizes
+    /// to the backend's allocation unit (a DRAM subarray on PIM, a page
+    /// on a GPU).
+    pub fn from_capacity(cap: &DeviceCapacity) -> Self {
+        Self::from_capacity_units(cap, cap.kv_total_units)
+    }
+
+    /// [`KvCacheManager::from_capacity`] with an overridden unit count
+    /// (tests and what-if admission-pressure sweeps).
+    pub fn from_capacity_units(cap: &DeviceCapacity, units: usize) -> Self {
+        KvCacheManager {
+            kv_bytes_per_token: cap.kv_bytes_per_token,
+            subarray_bytes: cap.kv_alloc_unit_bytes,
+            total_subarrays: units,
+            free_subarrays: units,
+            reserved_tokens: 0,
+            admitted: 0,
+            peak_used_subarrays: 0,
+        }
     }
 
     /// Manager over an explicit KV-region size (tests and what-if sweeps).
@@ -195,6 +225,24 @@ mod tests {
         let kv = KvCacheManager::with_kv_subarrays(&cfg, 1);
         assert!(kv.fits_ever(1));
         assert!(!kv.fits_ever(kv.capacity_tokens() + cfg.hbm.subarray_bytes()));
+    }
+
+    #[test]
+    fn capacity_constructor_matches_for_device() {
+        let cfg = SimConfig::paper();
+        let cap = DeviceCapacity {
+            kv_bytes_per_token: cfg.model.kv_bytes_per_token(),
+            kv_alloc_unit_bytes: cfg.hbm.subarray_bytes(),
+            kv_total_units: device_kv_subarrays(&cfg),
+            max_seq: cfg.model.max_seq,
+        };
+        let a = KvCacheManager::for_device(&cfg);
+        let b = KvCacheManager::from_capacity(&cap);
+        assert_eq!(a.total_subarrays(), b.total_subarrays());
+        assert_eq!(a.capacity_tokens(), b.capacity_tokens());
+        assert_eq!(a.subarrays_for(100), b.subarrays_for(100));
+        let c = KvCacheManager::from_capacity_units(&cap, 3);
+        assert_eq!(c.total_subarrays(), 3);
     }
 
     #[test]

@@ -14,7 +14,7 @@ pub fn percentile(samples: &[f64], p: f64) -> Option<f64> {
         return None;
     }
     let mut v = samples.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
     Some(v[rank.min(v.len() - 1)])
 }

@@ -5,15 +5,22 @@
 //! regime a deployed SAL-PIM pod faces. This module is the serving layer
 //! above it:
 //!
-//! * [`KvCacheManager`] — maps per-request KV state onto subarray capacity
-//!   derived from [`crate::config::HbmConfig`]; admission fails when the
-//!   KV region is exhausted and slots free on completion;
-//! * [`DeviceEngine`] — a continuous-batching scheduler over one simulated
-//!   device: new requests join at token boundaries and batched decode
-//!   steps are charged with the multi-subarray timing model
-//!   ([`crate::mapper::GenerationSim::decode_batch_step`]);
+//! * [`backend`] — the [`ExecutionBackend`] trait plus the four device
+//!   cost models (SAL-PIM, GPU roofline, bank-level PIM, heterogeneous
+//!   GPU-prefill + PIM-decode); everything below schedules against the
+//!   trait, never a concrete simulator;
+//! * [`KvCacheManager`] — maps per-request KV state onto the backend's
+//!   capacity hints (subarrays on PIM, pages on a GPU); admission fails
+//!   when the KV region is exhausted and slots free on completion;
+//! * [`DeviceEngine`] — a continuous-batching scheduler over one
+//!   simulated device: new requests join at token boundaries, batched
+//!   decode steps are charged via [`ExecutionBackend::decode_step_s`],
+//!   and prefills optionally interleave in token chunks
+//!   ([`DeviceEngine::with_prefill_chunk`]) instead of stalling the
+//!   decode batch;
 //! * [`Cluster`] — N devices behind a router ([`Routing`]: round-robin,
-//!   least-loaded, session-affinity) with per-device queues;
+//!   least-loaded, session-affinity) with per-device queues; devices may
+//!   mix backend families ([`Cluster::from_engines`]);
 //! * [`workload`] — open-loop Poisson / bursty arrival generation;
 //! * [`sweep`] — the latency-vs-offered-load sweep behind
 //!   `sal-pim serve --sweep` and `bench_serve_cluster`.
@@ -24,13 +31,18 @@
 
 mod cluster;
 mod engine;
-mod kv_cache;
 mod metrics;
 mod policy;
 mod types;
+pub mod backend;
+pub mod kv_cache;
 pub mod sweep;
 pub mod workload;
 
+pub use backend::{
+    BackendKind, BankLevelBackend, DeviceCapacity, ExecutionBackend, GpuBackend, HeteroBackend,
+    SalPimBackend,
+};
 pub use cluster::{Cluster, Routing};
 pub use engine::{DeviceEngine, EngineReport};
 pub use kv_cache::{KvCacheManager, KvLease};

@@ -22,7 +22,7 @@ impl Policy {
             Policy::Fcfs => waiting
                 .iter()
                 .enumerate()
-                .min_by(|a, b| a.1.arrival_s.partial_cmp(&b.1.arrival_s).unwrap())
+                .min_by(|a, b| a.1.arrival_s.total_cmp(&b.1.arrival_s))
                 .map(|(i, _)| i)
                 .unwrap(),
             Policy::ShortestJobFirst => waiting
@@ -64,9 +64,7 @@ impl Scheduler {
     /// Order a whole batch per policy (stable for ties).
     pub fn order(&self, mut reqs: Vec<Request>) -> Vec<Request> {
         match self.policy {
-            Policy::Fcfs => {
-                reqs.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap())
-            }
+            Policy::Fcfs => reqs.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s)),
             Policy::ShortestJobFirst => {
                 reqs.sort_by_key(|r| r.prompt_len + r.max_new_tokens)
             }

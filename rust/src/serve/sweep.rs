@@ -6,6 +6,7 @@
 //! tail latencies up. Exposed as `sal-pim serve --sweep` and used by
 //! `bench_serve_cluster`.
 
+use super::backend::BackendKind;
 use super::cluster::{Cluster, Routing};
 use super::metrics::ServeMetrics;
 use super::policy::Policy;
@@ -22,6 +23,11 @@ pub struct SweepConfig {
     pub requests: usize,
     pub seed: u64,
     pub n_sessions: usize,
+    /// Execution backend every device runs (`--backend`).
+    pub backend: BackendKind,
+    /// Chunked-prefill token size, `None` for inline prefill
+    /// (`--prefill-chunk`).
+    pub prefill_chunk: Option<usize>,
 }
 
 impl Default for SweepConfig {
@@ -34,6 +40,8 @@ impl Default for SweepConfig {
             requests: 64,
             seed: 42,
             n_sessions: 8,
+            backend: BackendKind::SalPim,
+            prefill_chunk: None,
         }
     }
 }
@@ -58,7 +66,9 @@ pub fn latency_vs_load(cfg: &SimConfig, sc: &SweepConfig, loads_rps: &[f64]) -> 
                 sc.n_sessions,
             );
             let mut cluster =
-                Cluster::new(cfg, sc.devices, sc.max_batch, sc.routing).with_policy(sc.policy);
+                Cluster::homogeneous(cfg, sc.backend, sc.devices, sc.max_batch, sc.routing)
+                    .with_policy(sc.policy)
+                    .with_prefill_chunk(sc.prefill_chunk);
             for r in reqs {
                 cluster.submit(r);
             }
@@ -75,6 +85,25 @@ pub fn latency_vs_load(cfg: &SimConfig, sc: &SweepConfig, loads_rps: &[f64]) -> 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn hetero_backend_sweeps_end_to_end() {
+        // The CLI acceptance path: `--backend hetero --sweep` (with
+        // chunked prefill) must run every point to completion.
+        let cfg = SimConfig::paper();
+        let sc = SweepConfig {
+            devices: 2,
+            max_batch: 4,
+            requests: 8,
+            backend: BackendKind::Hetero,
+            prefill_chunk: Some(32),
+            ..SweepConfig::default()
+        };
+        let pts = latency_vs_load(&cfg, &sc, &[100.0]);
+        assert_eq!(pts.len(), 1);
+        assert_eq!(pts[0].metrics.requests, 8);
+        assert!(pts[0].metrics.throughput_tok_s > 0.0);
+    }
 
     #[test]
     fn load_raises_tail_latency() {

@@ -38,6 +38,10 @@ pub struct Completion {
     /// and batching engines are required to agree per request.
     pub tokens_simulated: usize,
     pub queue_s: f64,
+    /// Wall-clock span from admission to the first token. Equals the
+    /// summarization service time when prefill runs inline; under
+    /// chunked prefill it also covers the decode steps and other
+    /// requests' chunks interleaved between this request's chunks.
     pub prefill_s: f64,
     pub decode_s: f64,
     pub finish_s: f64,
