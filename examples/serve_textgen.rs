@@ -4,15 +4,18 @@
 //!   request's tokens through BOTH the float golden model (PJRT) and the
 //!   bit-exact fixed-point functional pipeline (the S-ALU/LUT path),
 //!   cross-checking them token by token;
-//! * draws ONE request mix ([`RequestMix`]) and serves it through three
-//!   engines side by side — the sequential coordinator, the
-//!   continuous-batching engine and a 4-device cluster — plus the GPU
-//!   baseline, all consuming the identical workload by construction;
+//! * declares ONE shared workload (16 requests, seed 42, jittered
+//!   arrivals) as `Scenario::Serve` descriptions and runs it through the
+//!   scenario `Runner` on four engines side by side — the sequential
+//!   coordinator (fcfs and sjf), the continuous-batching engine and a
+//!   4-device cluster — every engine consuming the identical mix by
+//!   construction;
 //! * serves the same mix on three *execution backends* — SAL-PIM, the
 //!   batched GPU roofline, and heterogeneous GPU-prefill + PIM-decode
 //!   (with chunked prefill) — the paper-style end-to-end comparison
 //!   under load;
-//! * reports throughput, latency percentiles and speedups.
+//! * reports throughput, latency percentiles and speedups from the
+//!   structured outcomes.
 //!
 //! ```bash
 //! cargo run --release --example serve_textgen
@@ -21,10 +24,9 @@
 
 use sal_pim::baseline::GpuModel;
 use sal_pim::config::SimConfig;
-use sal_pim::coordinator::{Coordinator, Policy, ServeMetrics};
-use sal_pim::report::{fmt_pct, fmt_time, fmt_x, Table};
-use sal_pim::serve::workload::{requests_from_items, ArrivalPattern};
-use sal_pim::serve::{BackendKind, Cluster, DeviceEngine, Routing};
+use sal_pim::report::{fmt_time, fmt_x, Table};
+use sal_pim::scenario::{EngineKind, Outcome, Runner, Scenario, ServeParams};
+use sal_pim::serve::{BackendKind, Policy};
 use sal_pim::testutil::{MixItem, RequestMix};
 
 /// Float-golden (PJRT) vs fixed-point cross-check — needs the `pjrt`
@@ -82,77 +84,57 @@ fn golden_crosscheck() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// One row of a cross-engine comparison table, from outcome metrics.
+fn metrics_row(label: &str, o: &Outcome) -> Vec<String> {
+    vec![
+        label.to_string(),
+        format!("{:.1} tok/s", o.metric_f64("throughput").unwrap()),
+        fmt_time(o.metric_f64("p50_latency").unwrap()),
+        fmt_time(o.metric_f64("p95_latency").unwrap()),
+        fmt_time(o.metric_f64("p95_ttft").unwrap()),
+    ]
+}
+
 fn main() -> anyhow::Result<()> {
     #[cfg(feature = "pjrt")]
     golden_crosscheck()?;
     #[cfg(not(feature = "pjrt"))]
     println!("(pjrt feature disabled — skipping the float golden cross-check)");
 
-    // ---- Timing path: ONE request mix served by every engine.       ----
-    // The mix is drawn once as data, so the coordinator, the batching
-    // engine, the cluster and the GPU baseline consume the identical
-    // workload — no RNG-stream-alignment tricks.
+    // ---- Timing path: ONE workload declaration, every engine.       ----
+    // The shared base scenario (16 requests, seed 42, jittered arrivals)
+    // pins the workload; engines vary around it, so the coordinator, the
+    // batching engine, the cluster and the GPU baseline all consume the
+    // identical request mix by construction.
     println!("\n== cycle-accurate serving (GPT-2 medium timing, 16 requests) ==");
-    let cfg = SimConfig::paper();
-    let items: Vec<MixItem> = RequestMix::paper(42).take(16);
-    let pattern = ArrivalPattern::Jittered { scale_s: 0.05 };
+    let runner = Runner::new();
+    let base = ServeParams::default().with_workload(16, 42);
+    let run = |p: ServeParams| -> anyhow::Result<Outcome> {
+        Ok(runner.run(&Scenario::Serve(p))?)
+    };
+
+    let seq_fcfs = run(base.clone())?;
+    let seq_sjf = run(base.clone().with_policy(Policy::ShortestJobFirst))?;
+    let batch = run(base.clone().with_engine(EngineKind::Batch))?;
+    let cluster = run(base
+        .clone()
+        .with_engine(EngineKind::Cluster)
+        .with_cluster(4, 8))?;
 
     let mut table = Table::new(
         "serving engines on the shared 16-request mix (arrivals over ~0.4 s)",
         &["engine", "throughput", "p50 latency", "p95 latency", "p95 TTFT"],
     );
-    let mut seq_metrics = None;
-
-    for policy in [Policy::Fcfs, Policy::ShortestJobFirst] {
-        let mut coord = Coordinator::new(&cfg).with_policy(policy);
-        for r in requests_from_items(&items, pattern, 8) {
-            coord.submit_request(r);
-        }
-        let m = ServeMetrics::from_completions(&coord.run());
-        table.row(&[
-            format!("sequential {}", policy.name()),
-            format!("{:.1} tok/s", m.throughput_tok_s),
-            fmt_time(m.p50_latency_s),
-            fmt_time(m.p95_latency_s),
-            fmt_time(m.p95_ttft_s),
-        ]);
-        if policy == Policy::Fcfs {
-            seq_metrics = Some(m);
-        }
-    }
-
-    let mut engine = DeviceEngine::new(&cfg, 8);
-    for r in requests_from_items(&items, pattern, 8) {
-        engine.submit(r);
-    }
-    let batch_m = ServeMetrics::from_completions(&engine.run());
-    let rep = engine.report();
-    table.row(&[
-        "continuous batch×8".into(),
-        format!("{:.1} tok/s", batch_m.throughput_tok_s),
-        fmt_time(batch_m.p50_latency_s),
-        fmt_time(batch_m.p95_latency_s),
-        fmt_time(batch_m.p95_ttft_s),
-    ]);
-
-    let mut cluster = Cluster::new(&cfg, 4, 8, Routing::RoundRobin);
-    for r in requests_from_items(&items, pattern, 8) {
-        cluster.submit(r);
-    }
-    let cluster_m = ServeMetrics::from_completions(&cluster.run());
-    table.row(&[
-        "cluster 4×batch8".into(),
-        format!("{:.1} tok/s", cluster_m.throughput_tok_s),
-        fmt_time(cluster_m.p50_latency_s),
-        fmt_time(cluster_m.p95_latency_s),
-        fmt_time(cluster_m.p95_ttft_s),
-    ]);
+    table.row(&metrics_row("sequential fcfs", &seq_fcfs));
+    table.row(&metrics_row("sequential sjf", &seq_sjf));
+    table.row(&metrics_row("continuous batch×8", &batch));
+    table.row(&metrics_row("cluster 4×batch8", &cluster));
     table.print();
 
     println!(
-        "batching engine: kv peak util {} | max batch seen {}",
-        fmt_pct(rep.kv_peak_utilization),
-        rep.max_batch_seen
+        "batching engine: kv peak util {:.1}% | max batch seen {}",
+        batch.metric_f64("kv_peak_utilization").unwrap() * 100.0,
+        batch.metric_f64("max_batch_seen").unwrap()
     );
 
     // ---- Execution backends: SAL-PIM vs GPU vs hetero, one device  ----
@@ -166,21 +148,16 @@ fn main() -> anyhow::Result<()> {
     let mut backend_makespans: Vec<(BackendKind, f64)> = Vec::new();
     for kind in [BackendKind::SalPim, BackendKind::Gpu, BackendKind::Hetero] {
         let chunk = if kind == BackendKind::Hetero { Some(32) } else { None };
-        let mut eng = DeviceEngine::with_backend(kind.build(&cfg), 8).with_prefill_chunk(chunk);
-        for r in requests_from_items(&items, pattern, 8) {
-            eng.submit(r);
-        }
-        let name = eng.backend_name();
-        let m = ServeMetrics::from_completions(&eng.run());
-        bt.row(&[
-            name,
-            format!("{:.1} tok/s", m.throughput_tok_s),
-            fmt_time(m.p50_latency_s),
-            fmt_time(m.p95_latency_s),
-            fmt_time(m.p95_ttft_s),
-            fmt_time(m.makespan_s),
-        ]);
-        backend_makespans.push((kind, m.makespan_s));
+        let o = run(base
+            .clone()
+            .with_engine(EngineKind::Batch)
+            .with_backend(kind)
+            .with_prefill_chunk(chunk))?;
+        let makespan = o.metric_f64("makespan").unwrap();
+        let mut row = metrics_row(kind.name(), &o);
+        row.push(fmt_time(makespan));
+        bt.row(&row);
+        backend_makespans.push((kind, makespan));
     }
     bt.print();
     let span = |k: BackendKind| {
@@ -197,24 +174,28 @@ fn main() -> anyhow::Result<()> {
     );
 
     // GPU baseline on the same workload (sequential FCFS service) —
-    // identical mix, by construction.
+    // identical mix, by construction: the scenario draws its items from
+    // `RequestMix::paper(seed)` exactly as done here.
+    let cfg = SimConfig::paper();
+    let items: Vec<MixItem> = RequestMix::paper(42).take(16);
     let gpu = GpuModel::titan_rtx();
     let gpu_time: f64 = items
         .iter()
         .map(|it| gpu.generation_time(&cfg.model, it.prompt_len, it.max_new_tokens))
         .sum();
-    let seq = seq_metrics.expect("fcfs row recorded");
+    let seq_makespan = seq_fcfs.metric_f64("makespan").unwrap();
+    let batch_makespan = batch.metric_f64("makespan").unwrap();
     println!(
         "GPU serial service time: {} | sequential PIM makespan: {} (speedup {}) | batched: {} (speedup {})",
         fmt_time(gpu_time),
-        fmt_time(seq.makespan_s),
-        fmt_x(gpu_time / seq.makespan_s),
-        fmt_time(batch_m.makespan_s),
-        fmt_x(gpu_time / batch_m.makespan_s)
+        fmt_time(seq_makespan),
+        fmt_x(gpu_time / seq_makespan),
+        fmt_time(batch_makespan),
+        fmt_x(gpu_time / batch_makespan)
     );
     println!(
         "served {} tokens per engine — sequential vs continuous batching vs 4-device cluster",
-        seq.total_tokens
+        seq_fcfs.metric_f64("total_tokens").unwrap() as usize
     );
     Ok(())
 }

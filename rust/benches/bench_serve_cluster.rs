@@ -1,128 +1,110 @@
-//! Cluster serving bench: continuous batching vs sequential service, and
-//! multi-device scaling at saturating load — the numbers behind the
+//! Cluster serving bench: continuous batching vs sequential service,
+//! multi-device scaling at saturating load, the latency-vs-load curve
+//! and the execution-backend comparison — the numbers behind the
 //! EXPERIMENTS.md "serving" section.
 //!
-//! Asserts the acceptance bars:
+//! Every section runs declarative `Scenario::Serve` descriptions through
+//! the scenario `Runner` (the same path as `sal-pim serve`), asserts the
+//! acceptance bars on the structured outcomes, and accumulates all of
+//! them into `BENCH_serve.json`:
 //! * continuous batching on one device beats sequential FCFS on the same
 //!   16-request mix (strictly higher tok/s over makespan);
-//! * a 4-device cluster scales ≥ 2.5× over one device at saturating load.
+//! * a 4-device cluster scales ≥ 2.5× over one device at saturating load;
+//! * PIM decode beats the GPU roofline backend on the decode-bound mix.
 
-use sal_pim::config::SimConfig;
-use sal_pim::coordinator::Coordinator;
-use sal_pim::report::{fmt_pct, fmt_time, fmt_x, Table};
-use sal_pim::serve::sweep::{latency_vs_load, SweepConfig};
-use sal_pim::serve::workload::{requests_from_items, ArrivalPattern};
-use sal_pim::serve::{BackendKind, Cluster, DeviceEngine, Routing, ServeMetrics};
-use sal_pim::testutil::RequestMix;
+use sal_pim::scenario::{sink, EngineKind, Outcome, Runner, Scenario, ServeParams};
+use sal_pim::serve::BackendKind;
+use std::path::Path;
+
+fn run(params: ServeParams) -> Outcome {
+    Runner::new()
+        .run(&Scenario::Serve(params))
+        .expect("serve scenario runs")
+}
 
 fn main() {
-    let cfg = SimConfig::paper();
+    let runner_tag = Scenario::Serve(ServeParams::default()).bench_tag();
+    let mut recorded: Vec<Outcome> = Vec::new();
 
     // ---- (a) Continuous batching vs sequential on one device. ----
-    let items = RequestMix::paper(42).take(16);
-    let reqs = requests_from_items(&items, ArrivalPattern::AtOnce, 8);
-
-    let mut coord = Coordinator::new(&cfg);
-    for r in reqs.clone() {
-        coord.submit_request(r);
+    let mix16 = ServeParams::default().with_workload(16, 42).with_at_once(true);
+    let seq = run(mix16.clone());
+    let bat = run(mix16.clone().with_engine(EngineKind::Batch));
+    for o in [&seq, &bat] {
+        print!("{}", sink::render_text(o));
+        println!();
     }
-    let seq = ServeMetrics::from_completions(&coord.run());
-
-    let mut eng = DeviceEngine::new(&cfg, 8);
-    for r in reqs.clone() {
-        eng.submit(r);
-    }
-    let bat = ServeMetrics::from_completions(&eng.run());
-    let rep = eng.report();
-
-    let mut t = Table::new(
-        "continuous batching vs sequential (1 device, 16-request mix at t=0)",
-        &["engine", "tok/s", "makespan", "p50 lat", "p95 lat", "p95 TTFT"],
+    let (seq_tok, bat_tok) = (
+        seq.metric_f64("throughput").unwrap(),
+        bat.metric_f64("throughput").unwrap(),
     );
-    for (name, m) in [("sequential fcfs", &seq), ("continuous batch×8", &bat)] {
-        t.row(&[
-            name.into(),
-            format!("{:.1}", m.throughput_tok_s),
-            fmt_time(m.makespan_s),
-            fmt_time(m.p50_latency_s),
-            fmt_time(m.p95_latency_s),
-            fmt_time(m.p95_ttft_s),
-        ]);
-    }
-    t.print();
     println!(
-        "batching gain: {} | kv peak util {} | max batch {} | decode steps {}",
-        fmt_x(bat.throughput_tok_s / seq.throughput_tok_s),
-        fmt_pct(rep.kv_peak_utilization),
-        rep.max_batch_seen,
-        rep.decode_steps
+        "batching gain: {:.2}x | kv peak util {:.1}% | max batch {} | decode steps {}\n",
+        bat_tok / seq_tok,
+        bat.metric_f64("kv_peak_utilization").unwrap() * 100.0,
+        bat.metric_f64("max_batch_seen").unwrap(),
+        bat.metric_f64("decode_steps").unwrap()
     );
-    assert_eq!(seq.total_tokens, bat.total_tokens, "token conservation");
+    assert_eq!(
+        seq.metric_f64("total_tokens"),
+        bat.metric_f64("total_tokens"),
+        "token conservation"
+    );
     assert!(
-        bat.throughput_tok_s > seq.throughput_tok_s,
+        bat_tok > seq_tok,
         "continuous batching must beat sequential FCFS"
     );
+    recorded.push(seq);
+    recorded.push(bat);
 
     // ---- (b) Cluster scaling at saturating load. ----
-    let items = RequestMix::paper(7).take(64);
-    let sat = requests_from_items(&items, ArrivalPattern::AtOnce, 8);
-    let mut t = Table::new(
-        "cluster scaling (batch 8/device, 64-request mix at t=0, round-robin)",
-        &["devices", "tok/s", "makespan", "scaling"],
-    );
     let mut base = 0.0;
     let mut last = 0.0;
     for devices in [1usize, 2, 4] {
-        let mut cluster = Cluster::new(&cfg, devices, 8, Routing::RoundRobin);
-        for r in sat.clone() {
-            cluster.submit(r);
-        }
-        let m = ServeMetrics::from_completions(&cluster.run());
+        let outcome = run(
+            ServeParams::default()
+                .with_engine(EngineKind::Cluster)
+                .with_workload(64, 7)
+                .with_cluster(devices, 8)
+                .with_at_once(true),
+        );
+        let tok = outcome.metric_f64("throughput").unwrap();
         if devices == 1 {
-            base = m.throughput_tok_s;
+            base = tok;
         }
-        last = m.throughput_tok_s;
-        t.row(&[
-            devices.to_string(),
-            format!("{:.1}", m.throughput_tok_s),
-            fmt_time(m.makespan_s),
-            fmt_x(m.throughput_tok_s / base),
-        ]);
+        last = tok;
+        println!(
+            "cluster {} device(s): {:.1} tok/s ({:.2}x)",
+            devices,
+            tok,
+            tok / base
+        );
+        recorded.push(outcome);
     }
-    t.print();
     let scaling = last / base;
+    println!();
     assert!(
         scaling >= 2.5,
         "4-device scaling {scaling:.2}× < 2.5× at saturating load"
     );
 
     // ---- (c) Latency vs offered load (Poisson, 4-device cluster). ----
-    let sc = SweepConfig::default();
-    let loads = [50.0, 200.0, 1000.0];
-    let pts = latency_vs_load(&cfg, &sc, &loads);
-    let mut t = Table::new(
-        "latency vs offered load (4 devices × batch 8, 64 Poisson requests)",
-        &["offered req/s", "tok/s", "p50 lat", "p95 lat", "p95 TTFT", "rejected"],
+    let sweep = run(
+        ServeParams::default()
+            .with_workload(64, 42)
+            .with_cluster(4, 8)
+            .with_sweep(vec![50.0, 200.0, 1000.0]),
     );
-    for p in &pts {
-        t.row(&[
-            format!("{:.0}", p.offered_rps),
-            format!("{:.1}", p.metrics.throughput_tok_s),
-            fmt_time(p.metrics.p50_latency_s),
-            fmt_time(p.metrics.p95_latency_s),
-            fmt_time(p.metrics.p95_ttft_s),
-            p.rejected.to_string(),
-        ]);
-    }
-    t.print();
+    print!("{}", sink::render_text(&sweep));
+    println!();
+    let p95 = sweep.column_f64("p95_latency");
+    assert!(
+        p95.last().unwrap() >= p95.first().unwrap(),
+        "saturation must not *improve* tail latency: {p95:?}"
+    );
+    recorded.push(sweep);
 
     // ---- (d) Execution backends on the shared mix (batch 8, t=0). ----
-    let items = RequestMix::paper(42).take(16);
-    let reqs = requests_from_items(&items, ArrivalPattern::AtOnce, 8);
-    let mut t = Table::new(
-        "execution backends (1 device × batch 8, 16-request mix at t=0)",
-        &["backend", "prefill", "tok/s", "makespan", "p95 TTFT"],
-    );
     let mut spans: Vec<(BackendKind, f64)> = Vec::new();
     for (kind, chunk) in [
         (BackendKind::SalPim, None),
@@ -131,27 +113,30 @@ fn main() {
         (BackendKind::Hetero, None),
         (BackendKind::Hetero, Some(32usize)),
     ] {
-        let mut eng = DeviceEngine::with_backend(kind.build(&cfg), 8).with_prefill_chunk(chunk);
-        for r in reqs.clone() {
-            eng.submit(r);
-        }
-        let name = eng.backend_name();
-        let m = ServeMetrics::from_completions(&eng.run());
-        t.row(&[
-            name,
+        let outcome = run(
+            ServeParams::default()
+                .with_engine(EngineKind::Batch)
+                .with_workload(16, 42)
+                .with_at_once(true)
+                .with_backend(kind)
+                .with_prefill_chunk(chunk),
+        );
+        println!(
+            "backend {:>9} prefill {:>8}: {:>7.1} tok/s | makespan {:.3} s | p95 TTFT {:.3} s",
+            kind.name(),
             match chunk {
                 Some(c) => format!("chunk {c}"),
                 None => "inline".to_string(),
             },
-            format!("{:.1}", m.throughput_tok_s),
-            fmt_time(m.makespan_s),
-            fmt_time(m.p95_ttft_s),
-        ]);
+            outcome.metric_f64("throughput").unwrap(),
+            outcome.metric_f64("makespan").unwrap(),
+            outcome.metric_f64("p95_ttft").unwrap()
+        );
         if chunk.is_none() {
-            spans.push((kind, m.makespan_s));
+            spans.push((kind, outcome.metric_f64("makespan").unwrap()));
         }
+        recorded.push(outcome);
     }
-    t.print();
     let span = |k: BackendKind| {
         spans
             .iter()
@@ -160,13 +145,20 @@ fn main() {
             .expect("backend measured")
     };
     println!(
-        "makespan speedup vs GPU backend: sal-pim {} | hetero {}",
-        fmt_x(span(BackendKind::Gpu) / span(BackendKind::SalPim)),
-        fmt_x(span(BackendKind::Gpu) / span(BackendKind::Hetero))
+        "makespan speedup vs GPU backend: sal-pim {:.2}x | hetero {:.2}x",
+        span(BackendKind::Gpu) / span(BackendKind::SalPim),
+        span(BackendKind::Gpu) / span(BackendKind::Hetero)
     );
     assert!(
         span(BackendKind::SalPim) < span(BackendKind::Gpu),
         "PIM decode must beat the GPU roofline on the decode-bound mix"
     );
+
+    // ---- Record the whole trajectory. ----
+    let refs: Vec<(&str, &Outcome)> = recorded.iter().map(|o| (runner_tag, o)).collect();
+    let paths = sink::write_bench_files(Path::new("."), &refs).expect("write BENCH_serve.json");
+    for p in &paths {
+        println!("wrote {}", p.display());
+    }
     println!("serve cluster bench OK");
 }

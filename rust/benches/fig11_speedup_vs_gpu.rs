@@ -1,62 +1,50 @@
 //! Fig. 11 — end-to-end speedup of SAL-PIM over the GPU for text
 //! generation by input and output size (paper: max 4.72×, avg 1.83×;
 //! speedup grows with output size and shrinks with input size).
+//!
+//! Runs the declarative `Scenario::Sweep` through the scenario `Runner`
+//! (the same path as `sal-pim sweep`), asserts the paper's shape claims
+//! on the structured outcome, and records it to `BENCH_fig11.json`.
 
-use sal_pim::baseline::GpuModel;
-use sal_pim::config::SimConfig;
-use sal_pim::mapper::GenerationSim;
-use sal_pim::report::{fmt_x, Table};
+use sal_pim::scenario::{sink, Runner, Scenario, SweepParams};
+use std::path::Path;
 
 fn main() {
-    let cfg = SimConfig::paper();
-    let gpu = GpuModel::titan_rtx();
-    let mut sim = GenerationSim::new(&cfg);
-    let outs = [1usize, 4, 16, 32, 64, 128, 256];
-    let ins = [32usize, 64, 128];
+    let params = SweepParams::default();
+    let (ins, outs) = (params.ins.clone(), params.outs.clone());
+    let scenario = Scenario::Sweep(params);
+    let outcome = Runner::new().run(&scenario).expect("sweep scenario runs");
 
-    let mut t = Table::new(
-        "Fig. 11 — SAL-PIM speedup vs GPU (P_Sub=4)",
-        &["in\\out", "1", "4", "16", "32", "64", "128", "256"],
-    );
-    let mut all = Vec::new();
-    let mut grid = vec![vec![0.0f64; outs.len()]; ins.len()];
-    for (i, &n_in) in ins.iter().enumerate() {
-        let mut row = vec![n_in.to_string()];
-        for (j, &n_out) in outs.iter().enumerate() {
-            let pim = sim.generate(n_in, n_out).seconds(cfg.timing.tck_ns);
-            let g = gpu.generation_time(&cfg.model, n_in, n_out);
-            let s = g / pim;
-            grid[i][j] = s;
-            all.push(s);
-            row.push(fmt_x(s));
-        }
-        t.row(&row);
-    }
-    t.print();
+    print!("{}", sink::render_text(&outcome));
 
-    let max = all.iter().cloned().fold(0.0f64, f64::max);
-    let avg = all.iter().sum::<f64>() / all.len() as f64;
-    println!("measured: max {} avg {}", fmt_x(max), fmt_x(avg));
-    println!("paper:    max 4.72× avg 1.83×");
+    let speedups = outcome.column_f64("speedup");
+    assert_eq!(speedups.len(), ins.len() * outs.len());
+    let grid: Vec<&[f64]> = speedups.chunks(outs.len()).collect();
 
     // Shape assertions from the paper's discussion of Fig. 11:
     // (a) larger outputs → larger speedup (same input size);
-    for (i, _) in ins.iter().enumerate() {
+    for (i, row) in grid.iter().enumerate() {
         assert!(
-            grid[i][outs.len() - 1] > grid[i][0],
+            row[outs.len() - 1] > row[0],
             "speedup must grow with output size (in={})",
             ins[i]
         );
     }
     // (b) larger inputs → smaller speedup (same output size);
-    for (j, _) in outs.iter().enumerate().skip(2) {
+    for j in 2..outs.len() {
         assert!(
-            grid[0][j] > grid[2][j],
+            grid[0][j] > grid[ins.len() - 1][j],
             "speedup must shrink with input size (out={})",
             outs[j]
         );
     }
     // (c) SAL-PIM wins overall (avg > 1) and by single-digit factors.
+    let avg = outcome.metric_f64("avg_speedup").expect("avg metric");
+    let max = outcome.metric_f64("max_speedup").expect("max metric");
     assert!(avg > 1.0 && max < 25.0, "avg {avg} max {max}");
+
+    let path = sink::write_bench_file(Path::new("."), scenario.bench_tag(), &[&outcome])
+        .expect("write BENCH_fig11.json");
+    println!("wrote {}", path.display());
     println!("fig11 OK");
 }

@@ -2,38 +2,22 @@
 //! 32-token generation (paper: P_Sub ∈ {1,2} well under the 60 W HBM2
 //! budget; P_Sub=4 exceeds it — by 24 % in the paper; our simulator's
 //! higher achieved bandwidth pushes it somewhat further).
+//!
+//! Runs `Scenario::Power` through the scenario `Runner` (the same path
+//! as `sal-pim power`), asserts the budget claims on the structured
+//! outcome, and records it to `BENCH_fig15.json`.
 
-use sal_pim::config::SimConfig;
-use sal_pim::energy::{EnergyParams, PowerReport};
-use sal_pim::mapper::GenerationSim;
-use sal_pim::report::Table;
+use sal_pim::scenario::{sink, PowerParams, Runner, Scenario};
+use std::path::Path;
 
 fn main() {
-    let params = EnergyParams::paper();
-    let mut t = Table::new(
-        "Fig. 15 — power by P_Sub (32-token generation, GPT-2 medium)",
-        &["P_Sub", "ACT W", "move W", "logic W", "refresh W", "total W", "vs budget"],
-    );
-    let mut fracs = Vec::new();
-    for &p in &[1usize, 2, 4] {
-        let cfg = SimConfig::paper().with_p_sub(p);
-        let mut sim = GenerationSim::new(&cfg);
-        let r = sim.generate(32, 32);
-        let rep = PowerReport::from_stats(&cfg, &params, &r.total());
-        let s = rep.seconds;
-        fracs.push(rep.budget_fraction());
-        t.row(&[
-            p.to_string(),
-            format!("{:.1}", rep.act_j / s),
-            format!("{:.1}", rep.movement_j / s),
-            format!("{:.1}", rep.logic_j / s),
-            format!("{:.1}", rep.refresh_j / s),
-            format!("{:.1}", rep.avg_power_w()),
-            format!("{:.0}%", rep.budget_fraction() * 100.0),
-        ]);
-    }
-    t.print();
+    let scenario = Scenario::Power(PowerParams::default());
+    let outcome = Runner::new().run(&scenario).expect("power scenario runs");
 
+    print!("{}", sink::render_text(&outcome));
+
+    let fracs = outcome.column_f64("budget_fraction");
+    assert_eq!(fracs.len(), 3, "P_Sub ∈ {{1,2,4}} rows");
     println!(
         "paper: P_Sub=4 exceeds the 60 W budget by 24% | measured: {:.0}% over",
         (fracs[2] - 1.0) * 100.0
@@ -41,5 +25,9 @@ fn main() {
     assert!(fracs[0] < 1.0, "P_Sub=1 must stay in budget: {}", fracs[0]);
     assert!(fracs[2] > 1.0, "P_Sub=4 must exceed budget: {}", fracs[2]);
     assert!(fracs[0] < fracs[1] && fracs[1] < fracs[2]);
+
+    let path = sink::write_bench_file(Path::new("."), scenario.bench_tag(), &[&outcome])
+        .expect("write BENCH_fig15.json");
+    println!("wrote {}", path.display());
     println!("fig15 OK");
 }

@@ -1,14 +1,22 @@
-//! Minimal command-line parsing (no clap in the offline environment).
+//! Spec-driven command-line parsing (no clap in the offline environment).
 //!
-//! Grammar: `sal-pim <command> [--flag value] [--switch] [positional…]`.
+//! Grammar: `sal-pim <command> [--flag value] [--flag=value] [--switch]`.
+//!
+//! Parsing is driven by the command's declarative [`spec::CommandSpec`]
+//! table: whether a flag consumes a value is declared per flag, so a bare
+//! switch can never swallow a following token, and a flag the command
+//! does not declare is a hard error (with a nearest-name suggestion)
+//! instead of a silently-ignored typo.
+
+pub mod spec;
 
 use std::collections::{HashMap, HashSet};
 
-/// Parsed command line.
+pub use spec::{Arity, CommandSpec, FlagSpec};
+
+/// Parsed, spec-validated arguments of one command.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
-    pub command: Option<String>,
-    pub positional: Vec<String>,
     flags: HashMap<String, String>,
     switches: HashSet<String>,
 }
@@ -23,49 +31,109 @@ pub enum CliError {
         value: String,
         why: String,
     },
+    #[error("unknown flag --{flag} for `{command}`{suggestion}")]
+    UnknownFlag {
+        flag: String,
+        command: String,
+        suggestion: String,
+    },
+    #[error("--{0} is a switch and takes no value")]
+    SwitchWithValue(String),
+    #[error("unexpected positional argument `{0}`")]
+    UnexpectedPositional(String),
+    #[error("unknown command `{command}`{suggestion} — run `sal-pim help`")]
+    UnknownCommand { command: String, suggestion: String },
+}
+
+/// Levenshtein distance, for "did you mean" suggestions.
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, ca) in a.iter().enumerate() {
+        let mut cur = vec![i + 1];
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur.push(sub.min(prev[j + 1] + 1).min(cur[j] + 1));
+        }
+        prev = cur;
+    }
+    prev[b.len()]
+}
+
+/// ` (did you mean --x?)` when a close candidate exists. Also used by
+/// the binary for unknown-command suggestions.
+pub fn suggest<'a, I: Iterator<Item = &'a str>>(input: &str, candidates: I, prefix: &str) -> String {
+    candidates
+        .map(|c| (edit_distance(input, c), c))
+        .filter(|(d, _)| *d <= 2)
+        .min_by_key(|(d, _)| *d)
+        .map(|(_, c)| format!(" (did you mean {prefix}{c}?)"))
+        .unwrap_or_default()
 }
 
 impl Args {
-    /// Parse an iterator of arguments (excluding argv[0]).
-    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Result<Self, CliError> {
+    /// Parse one command's arguments (everything after the command word)
+    /// against its spec. `--help` is accepted by every command.
+    pub fn parse_for<I: IntoIterator<Item = String>>(
+        spec: &CommandSpec,
+        items: I,
+    ) -> Result<Self, CliError> {
         let mut out = Args::default();
         let mut iter = items.into_iter().peekable();
         while let Some(item) = iter.next() {
-            if let Some(name) = item.strip_prefix("--") {
-                if let Some((k, v)) = name.split_once('=') {
-                    out.flags.insert(k.to_string(), v.to_string());
-                } else if iter
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
-                {
-                    let v = iter.next().unwrap();
-                    out.flags.insert(name.to_string(), v);
-                } else {
+            let Some(name) = item.strip_prefix("--") else {
+                return Err(CliError::UnexpectedPositional(item));
+            };
+            let (name, inline) = match name.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (name, None),
+            };
+            if name == "help" {
+                out.switches.insert("help".to_string());
+                continue;
+            }
+            let Some(flag) = spec.flag(name) else {
+                return Err(CliError::UnknownFlag {
+                    flag: name.to_string(),
+                    command: spec.name.to_string(),
+                    suggestion: suggest(name, spec.flags.iter().map(|f| f.name), "--"),
+                });
+            };
+            match (flag.arity, inline) {
+                (Arity::Switch, Some(_)) => {
+                    return Err(CliError::SwitchWithValue(name.to_string()))
+                }
+                (Arity::Switch, None) => {
                     out.switches.insert(name.to_string());
                 }
-            } else if out.command.is_none() {
-                out.command = Some(item);
-            } else {
-                out.positional.push(item);
+                (_, Some(v)) => {
+                    out.flags.insert(name.to_string(), v);
+                }
+                (Arity::Value, None) => {
+                    let v = iter.next().ok_or_else(|| CliError::MissingValue(name.to_string()))?;
+                    out.flags.insert(name.to_string(), v);
+                }
+                (Arity::OptionalValue, None) => {
+                    // Takes the next token as its value unless that token
+                    // is itself a flag; bare form reads as a switch.
+                    if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                        let v = iter.next().unwrap();
+                        out.flags.insert(name.to_string(), v);
+                    } else {
+                        out.switches.insert(name.to_string());
+                    }
+                }
             }
         }
         Ok(out)
-    }
-
-    /// Parse from the process environment.
-    pub fn from_env() -> Result<Self, CliError> {
-        Self::parse(std::env::args().skip(1))
     }
 
     pub fn flag(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(|s| s.as_str())
     }
 
-    /// True if `--name` appeared at all (bare or with a value). A bare
-    /// switch followed by a positional argument captures it as a value —
-    /// use `--name=value`/`--name` last, or check `flag()` when the
-    /// distinction matters.
+    /// True if `--name` appeared at all (bare or with a value).
     pub fn switch(&self, name: &str) -> bool {
         self.switches.contains(name) || self.flags.contains_key(name)
     }
@@ -90,46 +158,97 @@ impl Args {
 mod tests {
     use super::*;
 
-    fn parse(s: &str) -> Args {
-        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    fn parse(cmd: &str, s: &str) -> Result<Args, CliError> {
+        let spec = spec::find(cmd).expect("command exists");
+        Args::parse_for(&spec, s.split_whitespace().map(|x| x.to_string()))
     }
 
     #[test]
-    fn command_flags_switches_positionals() {
-        let a = parse("simulate extra1 extra2 --in 32 --out=64 --prefetch");
-        assert_eq!(a.command.as_deref(), Some("simulate"));
+    fn flags_and_switches_parse() {
+        let a = parse("simulate", "--in 32 --gen=64 --prefetch").unwrap();
         assert_eq!(a.flag("in"), Some("32"));
-        assert_eq!(a.flag("out"), Some("64"));
+        assert_eq!(a.flag("gen"), Some("64"));
         assert!(a.switch("prefetch"));
-        assert_eq!(a.positional, vec!["extra1", "extra2"]);
-        // A switch directly before a positional captures it as a value
-        // but still reads as "present".
-        let b = parse("run --prefetch pos");
-        assert!(b.switch("prefetch"));
-        assert_eq!(b.flag("prefetch"), Some("pos"));
+        assert_eq!(a.get("in", 1usize).unwrap(), 32);
+        assert_eq!(a.get("kv-missing-uses-default", 7usize).unwrap(), 7);
     }
 
     #[test]
-    fn typed_get_with_default() {
-        let a = parse("simulate --out 128");
-        assert_eq!(a.get("out", 1usize).unwrap(), 128);
-        assert_eq!(a.get("in", 32usize).unwrap(), 32);
-        assert!(a.get::<usize>("out", 0).is_ok());
+    fn switch_never_swallows_the_next_token() {
+        // The historical wart: `--prefetch 64` captured "64" as the
+        // switch's value. Now the spec knows prefetch is a switch, so the
+        // stray token is a hard error.
+        let err = parse("simulate", "--prefetch 64").unwrap_err();
+        assert!(matches!(err, CliError::UnexpectedPositional(v) if v == "64"));
+        let a = parse("simulate", "--prefetch --in 16").unwrap();
+        assert!(a.switch("prefetch"));
+        assert_eq!(a.flag("in"), Some("16"));
+    }
+
+    #[test]
+    fn unknown_flag_is_a_hard_error_with_suggestion() {
+        let err = parse("serve", "--prefil-chunk 32").unwrap_err();
+        match err {
+            CliError::UnknownFlag {
+                flag, suggestion, ..
+            } => {
+                assert_eq!(flag, "prefil-chunk");
+                assert!(suggestion.contains("--prefill-chunk"), "{suggestion}");
+            }
+            other => panic!("expected UnknownFlag, got {other:?}"),
+        }
+        assert!(parse("simulate", "--frobnicate").is_err());
+    }
+
+    #[test]
+    fn switch_with_inline_value_rejected() {
+        let err = parse("simulate", "--prefetch=yes").unwrap_err();
+        assert!(matches!(err, CliError::SwitchWithValue(_)));
+    }
+
+    #[test]
+    fn value_flag_requires_a_value() {
+        let err = parse("simulate", "--in").unwrap_err();
+        assert!(matches!(err, CliError::MissingValue(f) if f == "in"));
+    }
+
+    #[test]
+    fn optional_value_flag_takes_bare_and_valued_forms() {
+        let a = parse("serve", "--prefill-chunk").unwrap();
+        assert!(a.switch("prefill-chunk"));
+        assert_eq!(a.flag("prefill-chunk"), None);
+        let b = parse("serve", "--prefill-chunk 16 --sweep").unwrap();
+        assert_eq!(b.flag("prefill-chunk"), Some("16"));
+        let c = parse("serve", "--prefill-chunk --sweep").unwrap();
+        assert!(c.switch("prefill-chunk"));
+        assert!(c.switch("sweep"));
     }
 
     #[test]
     fn bad_value_is_reported() {
-        let a = parse("simulate --out abc");
+        let a = parse("simulate", "--gen abc").unwrap();
         assert!(matches!(
-            a.get::<usize>("out", 0),
+            a.get::<usize>("gen", 0),
             Err(CliError::BadValue { .. })
         ));
     }
 
     #[test]
-    fn trailing_switch() {
-        let a = parse("bench --quiet");
-        assert!(a.switch("quiet"));
-        assert_eq!(a.flag("quiet"), None);
+    fn help_is_accepted_everywhere() {
+        for cmd in ["config", "simulate", "serve", "run"] {
+            let a = parse(cmd, "--help").unwrap();
+            assert!(a.switch("help"));
+        }
+    }
+
+    #[test]
+    fn suggestions_use_edit_distance() {
+        assert_eq!(edit_distance("sweep", "sweep"), 0);
+        assert_eq!(edit_distance("swep", "sweep"), 1);
+        assert_eq!(edit_distance("", "abc"), 3);
+        let s = suggest("serv", ["serve", "simulate"].into_iter(), "");
+        assert!(s.contains("serve"));
+        let none = suggest("xyzzy", ["serve"].into_iter(), "");
+        assert!(none.is_empty());
     }
 }

@@ -1,0 +1,347 @@
+//! Declarative command/flag tables.
+//!
+//! Every `sal-pim` command declares its surface as a [`CommandSpec`]: a
+//! table of [`FlagSpec`]s (name, arity, default, help). Parsing, `--help`
+//! text, the README CLI section (`sal-pim help --markdown`) and
+//! unknown-flag rejection are all generated from the same table, so a
+//! flag exists exactly once and a typo'd flag is a hard error instead of
+//! a silently-ignored no-op.
+
+use std::fmt::Write as _;
+
+/// Whether a flag consumes a value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arity {
+    /// Bare switch; never consumes the next token.
+    Switch,
+    /// Always takes one value (`--flag V` or `--flag=V`).
+    Value,
+    /// Takes a value when one follows (`--flag V` / `--flag=V`), else
+    /// acts as a switch with a documented bare-form default.
+    OptionalValue,
+}
+
+/// One flag of one command.
+#[derive(Debug, Clone, Copy)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub arity: Arity,
+    /// Placeholder shown in help for value-taking flags (`N`, `FILE`…).
+    pub value_name: &'static str,
+    /// Default shown in help; `""` means "no default" (optional flag).
+    pub default: &'static str,
+    pub help: &'static str,
+}
+
+impl FlagSpec {
+    const fn switch(name: &'static str, help: &'static str) -> Self {
+        FlagSpec {
+            name,
+            arity: Arity::Switch,
+            value_name: "",
+            default: "",
+            help,
+        }
+    }
+
+    const fn value(
+        name: &'static str,
+        value_name: &'static str,
+        default: &'static str,
+        help: &'static str,
+    ) -> Self {
+        FlagSpec {
+            name,
+            arity: Arity::Value,
+            value_name,
+            default,
+            help,
+        }
+    }
+
+    const fn optional_value(
+        name: &'static str,
+        value_name: &'static str,
+        default: &'static str,
+        help: &'static str,
+    ) -> Self {
+        FlagSpec {
+            name,
+            arity: Arity::OptionalValue,
+            value_name,
+            default,
+            help,
+        }
+    }
+
+    /// `--name` / `--name N` as shown in usage lines.
+    pub fn usage(&self) -> String {
+        match self.arity {
+            Arity::Switch => format!("--{}", self.name),
+            Arity::Value => format!("--{} {}", self.name, self.value_name),
+            Arity::OptionalValue => format!("--{} [{}]", self.name, self.value_name),
+        }
+    }
+}
+
+/// One CLI command: name, one-line summary, flag table.
+#[derive(Debug, Clone)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub flags: Vec<FlagSpec>,
+}
+
+impl CommandSpec {
+    pub fn flag(&self, name: &str) -> Option<&FlagSpec> {
+        self.flags.iter().find(|f| f.name == name)
+    }
+
+    /// Per-command `--help` text.
+    pub fn help_text(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "sal-pim {} — {}", self.name, self.summary);
+        let _ = writeln!(out, "\nflags:");
+        let width = self
+            .flags
+            .iter()
+            .map(|f| f.usage().len())
+            .max()
+            .unwrap_or(0);
+        for f in &self.flags {
+            let default = if f.default.is_empty() {
+                String::new()
+            } else {
+                format!(" (default {})", f.default)
+            };
+            let _ = writeln!(
+                out,
+                "  {:<width$}  {}{}",
+                f.usage(),
+                f.help,
+                default,
+                width = width
+            );
+        }
+        out
+    }
+}
+
+/// Flags shared by every command that resolves a simulator config.
+fn config_flags() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec::value("preset", "P", "paper", "simulator preset: paper|mini"),
+        FlagSpec::value("file", "FILE", "", "key = value config override file"),
+        FlagSpec::value("p-sub", "N", "", "override subarray-level parallelism P_Sub"),
+    ]
+}
+
+/// Flags every command supports for machine-readable output.
+fn output_flags() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec::switch("json", "print the outcome as schema-versioned JSON"),
+        FlagSpec::value(
+            "out",
+            "FILE",
+            "",
+            "also write the outcome to FILE (.json/.csv by extension)",
+        ),
+    ]
+}
+
+fn with_common(mut extra: Vec<FlagSpec>) -> Vec<FlagSpec> {
+    let mut flags = config_flags();
+    flags.append(&mut extra);
+    flags.append(&mut output_flags());
+    flags
+}
+
+/// The full command table — the single source of truth for the CLI.
+pub fn commands() -> Vec<CommandSpec> {
+    vec![
+        CommandSpec {
+            name: "config",
+            summary: "resolve and validate a simulator configuration",
+            flags: with_common(vec![]),
+        },
+        CommandSpec {
+            name: "simulate",
+            summary: "one end-to-end generation on SAL-PIM vs the GPU baseline",
+            flags: with_common(vec![
+                FlagSpec::value("in", "N", "32", "prompt tokens"),
+                FlagSpec::value("gen", "N", "64", "generated (output) tokens"),
+                FlagSpec::switch("prefetch", "enable next-row prefetch in the simulator"),
+            ]),
+        },
+        CommandSpec {
+            name: "sweep",
+            summary: "the Fig. 11 speedup grid over prompt/output sizes",
+            flags: with_common(vec![]),
+        },
+        CommandSpec {
+            name: "breakdown",
+            summary: "decode-iteration phase breakdown (Fig. 3)",
+            flags: with_common(vec![FlagSpec::value("kv", "N", "128", "KV length of the iteration")]),
+        },
+        CommandSpec {
+            name: "power",
+            summary: "power by subarray-level parallelism (Fig. 15)",
+            flags: with_common(vec![FlagSpec::value("gen", "N", "32", "generated tokens per run")]),
+        },
+        CommandSpec {
+            name: "area",
+            summary: "added-logic area per channel (Table 3)",
+            flags: with_common(vec![]),
+        },
+        CommandSpec {
+            name: "serve",
+            summary: "serve a request mix on the sequential/batching/cluster engines",
+            flags: with_common(vec![
+                FlagSpec::value("requests", "N", "16", "request count"),
+                FlagSpec::value("policy", "P", "fcfs", "queue policy: fcfs|sjf|spf"),
+                FlagSpec::value("engine", "E", "seq", "engine: seq|batch|cluster"),
+                FlagSpec::value("devices", "N", "4", "cluster size"),
+                FlagSpec::value("batch", "N", "8", "continuous-batching slots per device"),
+                FlagSpec::value("route", "R", "rr", "cluster routing: rr|ll|affinity"),
+                FlagSpec::value(
+                    "backend",
+                    "B",
+                    "salpim",
+                    "execution backend: salpim|gpu|banklevel|hetero",
+                ),
+                FlagSpec::optional_value(
+                    "prefill-chunk",
+                    "C",
+                    "32",
+                    "interleave prefill in C-token chunks instead of stalling the batch",
+                ),
+                FlagSpec::value("rate", "R", "", "open-loop Poisson arrivals at R req/s"),
+                FlagSpec::value("burst", "B", "", "make Poisson arrivals bursts of B"),
+                FlagSpec::switch("at-once", "queue every request at t = 0"),
+                FlagSpec::switch("offload", "GPU prefill offload (seq engine only)"),
+                FlagSpec::switch("sweep", "latency-vs-offered-load curve (3 loads)"),
+                FlagSpec::value("seed", "S", "42", "workload seed"),
+            ]),
+        },
+        CommandSpec {
+            name: "run",
+            summary: "execute a scenario suite file and write BENCH_*.json",
+            flags: vec![
+                FlagSpec::value("scenario", "FILE", "", "scenario suite (TOML subset)"),
+                FlagSpec::value("out-dir", "DIR", ".", "directory for BENCH_<tag>.json files"),
+                FlagSpec::switch("json", "print the outcome as schema-versioned JSON"),
+                FlagSpec::value(
+                    "out",
+                    "FILE",
+                    "",
+                    "also write the whole suite as one JSON array to FILE",
+                ),
+            ],
+        },
+        CommandSpec {
+            name: "help",
+            summary: "print CLI help (--markdown emits the README section)",
+            flags: vec![FlagSpec::switch(
+                "markdown",
+                "emit the CLI reference as Markdown (used to generate README.md)",
+            )],
+        },
+    ]
+}
+
+/// Look up one command's spec.
+pub fn find(name: &str) -> Option<CommandSpec> {
+    commands().into_iter().find(|c| c.name == name)
+}
+
+/// Top-level usage text (no command / bad command).
+pub fn usage() -> String {
+    let mut out = String::from("usage: sal-pim <command> [flags]  (sal-pim <command> --help)\n\n");
+    let cmds = commands();
+    let width = cmds.iter().map(|c| c.name.len()).max().unwrap_or(0);
+    for c in &cmds {
+        let _ = writeln!(out, "  {:<width$}  {}", c.name, c.summary, width = width);
+    }
+    out
+}
+
+/// The README "CLI" section, generated from the same tables
+/// (`sal-pim help --markdown`).
+pub fn markdown() -> String {
+    let mut out = String::from("## CLI\n");
+    for c in commands() {
+        if c.name == "help" {
+            continue;
+        }
+        let _ = writeln!(out, "\n### `sal-pim {}` — {}\n", c.name, c.summary);
+        for f in &c.flags {
+            let default = if f.default.is_empty() {
+                String::new()
+            } else {
+                format!(" (default {})", f.default)
+            };
+            let _ = writeln!(out, "* `{}` — {}{}", f.usage(), f.help, default);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_command_supports_json_and_out() {
+        for c in commands() {
+            if c.name == "help" {
+                continue;
+            }
+            assert!(c.flag("json").is_some(), "{} lacks --json", c.name);
+            assert!(c.flag("out").is_some(), "{} lacks --out", c.name);
+        }
+    }
+
+    #[test]
+    fn flag_names_are_unique_per_command() {
+        for c in commands() {
+            for (i, f) in c.flags.iter().enumerate() {
+                assert!(
+                    !c.flags[i + 1..].iter().any(|g| g.name == f.name),
+                    "{} declares --{} twice",
+                    c.name,
+                    f.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn help_text_lists_every_flag() {
+        let spec = find("serve").unwrap();
+        let help = spec.help_text();
+        for f in &spec.flags {
+            assert!(help.contains(&format!("--{}", f.name)), "missing {}", f.name);
+        }
+        assert!(help.contains("(default fcfs)"));
+    }
+
+    #[test]
+    fn markdown_covers_every_command() {
+        let md = markdown();
+        for c in commands() {
+            if c.name == "help" {
+                continue;
+            }
+            assert!(md.contains(&format!("### `sal-pim {}`", c.name)));
+        }
+        assert!(md.contains("`--prefill-chunk [C]`"));
+    }
+
+    #[test]
+    fn usage_names_every_command() {
+        let u = usage();
+        for c in commands() {
+            assert!(u.contains(c.name));
+        }
+    }
+}

@@ -110,9 +110,12 @@ pub fn apply_override(
     Ok(())
 }
 
-/// Parse a whole config file's text on top of a base config.
-pub fn parse_config(base: SimConfig, text: &str) -> Result<SimConfig, ConfigError> {
-    let mut cfg = base;
+/// Split a config file's text into `(line, key, value)` triples without
+/// applying them (comments and blanks skipped). The scenario layer stores
+/// overrides in this form so one suite file can carry per-scenario config
+/// deltas that are applied — and type-checked — by [`apply_overrides`].
+pub fn parse_pairs(text: &str) -> Result<Vec<(usize, String, String)>, ConfigError> {
+    let mut pairs = Vec::new();
     for (i, raw) in text.lines().enumerate() {
         let line_no = i + 1;
         let line = raw.split('#').next().unwrap_or("").trim();
@@ -125,7 +128,18 @@ pub fn parse_config(base: SimConfig, text: &str) -> Result<SimConfig, ConfigErro
                 text: raw.to_string(),
             });
         };
-        apply_override(&mut cfg, line_no, key.trim(), value.trim())?;
+        pairs.push((line_no, key.trim().to_string(), value.trim().to_string()));
+    }
+    Ok(pairs)
+}
+
+/// Apply a list of `(line, key, value)` overrides and validate the result.
+pub fn apply_overrides(
+    mut cfg: SimConfig,
+    pairs: &[(usize, String, String)],
+) -> Result<SimConfig, ConfigError> {
+    for (line, key, value) in pairs {
+        apply_override(&mut cfg, *line, key, value)?;
     }
     let problems = cfg.validate();
     if problems.is_empty() {
@@ -133,6 +147,11 @@ pub fn parse_config(base: SimConfig, text: &str) -> Result<SimConfig, ConfigErro
     } else {
         Err(ConfigError::Invalid(problems))
     }
+}
+
+/// Parse a whole config file's text on top of a base config.
+pub fn parse_config(base: SimConfig, text: &str) -> Result<SimConfig, ConfigError> {
+    apply_overrides(base, &parse_pairs(text)?)
 }
 
 #[cfg(test)]
@@ -186,5 +205,58 @@ mod tests {
     fn inline_comment_after_value() {
         let cfg = parse_config(SimConfig::paper(), "p_sub = 1 # bank-level-ish\n").unwrap();
         assert_eq!(cfg.parallelism.p_sub, 1);
+    }
+
+    #[test]
+    fn parse_pairs_preserves_line_numbers() {
+        let pairs = parse_pairs("# header\np_sub = 2\n\nlut.sections = 32\n").unwrap();
+        assert_eq!(
+            pairs,
+            vec![
+                (2, "p_sub".to_string(), "2".to_string()),
+                (4, "lut.sections".to_string(), "32".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn apply_overrides_applies_and_validates() {
+        let pairs = vec![(1, "model".to_string(), "gpt2-xl".to_string())];
+        let cfg = apply_overrides(SimConfig::paper(), &pairs).unwrap();
+        assert_eq!(cfg.model.name, "gpt2-xl");
+        // An individually-legal value that breaks cross-field validation
+        // is still rejected.
+        let bad = vec![(3, "p_ba".to_string(), "1000".to_string())];
+        let err = apply_overrides(SimConfig::paper(), &bad).unwrap_err();
+        assert!(matches!(err, ConfigError::Invalid(_)));
+    }
+
+    #[test]
+    fn apply_overrides_reports_the_failing_line() {
+        let pairs = vec![
+            (1, "p_sub".to_string(), "2".to_string()),
+            (7, "timing.t_ccdl".to_string(), "soon".to_string()),
+        ];
+        match apply_overrides(SimConfig::paper(), &pairs).unwrap_err() {
+            ConfigError::BadValue { line, key, .. } => {
+                assert_eq!(line, 7);
+                assert_eq!(key, "timing.t_ccdl");
+            }
+            other => panic!("expected BadValue, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn timing_and_model_shape_overrides_cascade() {
+        let cfg = parse_config(
+            SimConfig::paper(),
+            "timing.t_ccdl = 8\nmodel.n_layers = 12\nmodel.d_model = 768\nmodel.n_heads = 12\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.timing.t_ccdl, 8);
+        assert_eq!(cfg.model.n_layers, 12);
+        // Halved burst rate halves peak internal bandwidth.
+        let base = SimConfig::paper().peak_internal_bandwidth();
+        assert!((cfg.peak_internal_bandwidth() - base / 2.0).abs() < 1e-3);
     }
 }

@@ -23,6 +23,10 @@
 //! * a text-generation **serving coordinator** ([`coordinator`]),
 //! * a **cluster serving engine** — continuous batching, subarray-aware
 //!   KV-cache accounting and multi-device routing ([`serve`]),
+//! * the **scenario experiment API** — declarative [`scenario::Scenario`]
+//!   descriptions executed by [`scenario::Runner`] into structured
+//!   [`scenario::Outcome`]s, rendered as tables / JSON / CSV and
+//!   accumulated into `BENCH_*.json` ([`scenario`]),
 //! * reporting/CLI/test utilities ([`report`], [`cli`], [`testutil`]).
 //!
 //! See `DESIGN.md` for the architecture and the per-experiment index, and
@@ -40,6 +44,7 @@ pub mod model;
 pub mod pim;
 pub mod report;
 pub mod runtime;
+pub mod scenario;
 pub mod serve;
 pub mod stats;
 pub mod testutil;

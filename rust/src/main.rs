@@ -1,48 +1,27 @@
 //! SAL-PIM command-line interface.
 //!
-//! ```text
-//! sal-pim config   [--preset paper|mini] [--file overrides.cfg]
-//! sal-pim simulate --in 32 --out 64 [--p-sub 4] [--prefetch]
-//! sal-pim sweep    [--p-sub 4]                 # the Fig. 11 grid
-//! sal-pim breakdown [--kv 128]                 # decode phase breakdown
-//! sal-pim power    [--out 32]                  # Fig. 15 power report
-//! sal-pim area                                 # Table 3 arithmetic
-//! sal-pim serve    --requests 16 [--policy fcfs|sjf|spf] [--offload]
-//!                  [--engine seq|batch|cluster] [--devices 4] [--batch 8]
-//!                  [--backend salpim|gpu|banklevel|hetero]
-//!                  [--prefill-chunk 32]
-//!                  [--route rr|ll|affinity] [--rate 200] [--burst 4]
-//!                  [--sweep] [--seed 42]
-//! ```
+//! Every command is declared as a [`cli::spec::CommandSpec`] flag table
+//! (parsing, `--help` and the README CLI section are generated from it)
+//! and executed through the [`scenario`] subsystem: the command builds a
+//! typed [`Scenario`], the [`Runner`] returns a structured [`Outcome`],
+//! and the sink layer renders it — text tables by default, `--json` for
+//! the schema-versioned JSON record, `--out FILE` to also write it
+//! (`.json` / `.csv` picked by extension).
 //!
-//! `serve` modes:
-//! * `--engine seq` (default) — the paper-faithful sequential coordinator;
-//! * `--engine batch` — continuous batching on one device (KV-admission
-//!   controlled, batched decode steps);
-//! * `--engine cluster` — `--devices` N batching devices behind a router
-//!   (`--route` round-robin / least-loaded / session-affinity);
-//! * `--backend` picks the execution backend batching devices simulate:
-//!   the subarray-level PIM (default), the Titan RTX roofline with
-//!   batched decode, the Newton-style bank-level PIM, or the
-//!   heterogeneous GPU-prefill + PIM-decode device;
-//! * `--prefill-chunk` C interleaves summarization in C-token chunks at
-//!   token boundaries instead of stalling the decode batch;
-//! * `--rate` R switches arrivals to open-loop Poisson at R req/s
-//!   (`--burst` B makes them bursts of B); without it the legacy jittered
-//!   mix is used;
-//! * `--sweep` — the latency-vs-offered-load curve at 3 loads.
+//! `sal-pim run --scenario scenarios/smoke.toml` executes a whole suite
+//! from a file and accumulates the outcomes into `BENCH_<tag>.json`
+//! trajectory files. Run `sal-pim help` for the command list and
+//! `sal-pim <command> --help` for any flag table.
 
-use sal_pim::baseline::GpuModel;
-use sal_pim::cli::Args;
-use sal_pim::config::{parse::parse_config, SimConfig};
-use sal_pim::coordinator::{Coordinator, Policy, PrefillTarget, ServeMetrics};
-use sal_pim::energy::{AreaModel, EnergyParams, PowerReport};
-use sal_pim::mapper::GenerationSim;
-use sal_pim::report::{fmt_bw, fmt_pct, fmt_time, fmt_x, Table};
-use sal_pim::serve::sweep::{latency_vs_load, SweepConfig};
-use sal_pim::serve::workload::{requests_from_items, ArrivalPattern};
-use sal_pim::serve::{BackendKind, Cluster, DeviceEngine, Routing};
-use sal_pim::testutil::RequestMix;
+use sal_pim::cli::{spec, Args};
+use sal_pim::scenario::{
+    file::parse_suite, parse_policy, parse_route, sink, AreaParams, BreakdownParams, ConfigSel,
+    EngineKind, Outcome, PowerParams, Provenance, Runner, Scenario, ServeParams, SimulateParams,
+    SweepParams,
+};
+use sal_pim::report::fmt_bw;
+use sal_pim::serve::BackendKind;
+use std::path::Path;
 
 fn main() {
     if let Err(e) = run() {
@@ -51,388 +30,253 @@ fn main() {
     }
 }
 
-fn load_config(args: &Args) -> anyhow::Result<SimConfig> {
-    let mut cfg = match args.flag("preset").unwrap_or("paper") {
-        "paper" => SimConfig::paper(),
-        "mini" => SimConfig::mini(),
-        other => anyhow::bail!("unknown preset `{other}` (paper|mini)"),
-    };
-    if let Some(path) = args.flag("file") {
-        let text = std::fs::read_to_string(path)?;
-        cfg = parse_config(cfg, &text)?;
-    }
-    let p_sub = args.get("p-sub", cfg.parallelism.p_sub)?;
-    Ok(cfg.with_p_sub(p_sub))
-}
-
 fn run() -> anyhow::Result<()> {
-    let args = Args::from_env()?;
-    match args.command.as_deref() {
-        Some("config") => cmd_config(&args),
-        Some("simulate") => cmd_simulate(&args),
-        Some("sweep") => cmd_sweep(&args),
-        Some("breakdown") => cmd_breakdown(&args),
-        Some("power") => cmd_power(&args),
-        Some("area") => cmd_area(&args),
-        Some("serve") => cmd_serve(&args),
-        Some(other) => anyhow::bail!("unknown command `{other}` — see --help in the README"),
+    let mut argv = std::env::args().skip(1);
+    let command = match argv.next() {
         None => {
-            println!("usage: sal-pim <config|simulate|sweep|breakdown|power|area|serve> [flags]");
-            println!();
-            println!("serve flags:");
-            println!("  --requests N       request count (default 16)");
-            println!("  --policy P         fcfs|sjf|spf (default fcfs)");
-            println!("  --engine E         seq|batch|cluster (default seq)");
-            println!("  --devices N        cluster size (default 4)");
-            println!("  --batch M          continuous-batching slots per device (default 8)");
-            println!("  --route R          rr|ll|affinity (default rr)");
-            println!("  --backend B        salpim|gpu|banklevel|hetero (default salpim;");
-            println!("                     batch/cluster/sweep engines)");
-            println!("  --prefill-chunk C  interleave prefill in C-token chunks instead of");
-            println!("                     stalling the decode batch");
-            println!("  --rate R           open-loop Poisson arrivals at R req/s");
-            println!("  --burst B          make Poisson arrivals bursts of B");
-            println!("  --offload          GPU prefill offload (seq engine only)");
-            println!("  --sweep            latency-vs-offered-load curve (3 loads)");
-            println!("  --seed S           workload seed (default 42)");
+            print!("{}", spec::usage());
+            return Ok(());
+        }
+        Some(c) if c == "--help" || c == "-h" => {
+            print!("{}", spec::usage());
+            return Ok(());
+        }
+        Some(c) => c,
+    };
+    let Some(command_spec) = spec::find(&command) else {
+        let commands = spec::commands();
+        let suggestion =
+            sal_pim::cli::suggest(&command, commands.iter().map(|c| c.name), "");
+        anyhow::bail!("unknown command `{command}`{suggestion} — run `sal-pim help`");
+    };
+    let args = Args::parse_for(&command_spec, argv)?;
+    if args.switch("help") {
+        print!("{}", command_spec.help_text());
+        return Ok(());
+    }
+    match command.as_str() {
+        "config" => cmd_config(&args),
+        "run" => cmd_run(&args),
+        "help" => {
+            if args.switch("markdown") {
+                print!("{}", spec::markdown());
+            } else {
+                print!("{}", spec::usage());
+            }
             Ok(())
         }
+        cmd => {
+            let scenario = build_scenario(cmd, &args)?;
+            let outcome = Runner::new().run(&scenario)?;
+            emit(&args, &outcome)
+        }
     }
 }
 
-fn cmd_config(args: &Args) -> anyhow::Result<()> {
-    let cfg = load_config(args)?;
-    println!("{cfg:#?}");
-    println!(
-        "peak internal bandwidth: {}",
-        fmt_bw(cfg.peak_internal_bandwidth())
-    );
-    println!(
-        "peak external bandwidth: {}",
-        fmt_bw(cfg.peak_external_bandwidth())
-    );
-    let problems = cfg.validate();
-    if problems.is_empty() {
-        println!("config OK");
+/// Build the scenario one experiment command describes.
+fn build_scenario(command: &str, args: &Args) -> anyhow::Result<Scenario> {
+    let config = config_sel(args)?;
+    match command {
+        "simulate" => Ok(Scenario::Simulate(
+            SimulateParams::default()
+                .with_config(config)
+                .with_io(args.get("in", 32usize)?, args.get("gen", 64usize)?)
+                .with_prefetch(args.switch("prefetch")),
+        )),
+        "sweep" => Ok(Scenario::Sweep(SweepParams::default().with_config(config))),
+        "breakdown" => Ok(Scenario::Breakdown(
+            BreakdownParams::default()
+                .with_config(config)
+                .with_kv(args.get("kv", 128usize)?),
+        )),
+        "power" => Ok(Scenario::Power(
+            PowerParams::default()
+                .with_config(config)
+                .with_io(32, args.get("gen", 32usize)?),
+        )),
+        "area" => Ok(Scenario::Area(AreaParams::default().with_config(config))),
+        "serve" => scenario_serve(args, config),
+        other => anyhow::bail!("unhandled command `{other}`"),
+    }
+}
+
+/// The shared `--preset/--file/--p-sub` triple as a [`ConfigSel`].
+fn config_sel(args: &Args) -> anyhow::Result<ConfigSel> {
+    let mut sel = ConfigSel::preset(args.flag("preset").unwrap_or("paper"));
+    if let Some(path) = args.flag("file") {
+        let text = std::fs::read_to_string(path)?;
+        let pairs = sal_pim::config::parse::parse_pairs(&text)?;
+        // Validate against the preset NOW, so a bad override reports the
+        // file's real line number (ConfigSel::resolve renumbers its
+        // overrides by index).
+        sal_pim::config::parse::apply_overrides(
+            ConfigSel::preset(&sel.preset).resolve()?,
+            &pairs,
+        )?;
+        for (_, key, value) in pairs {
+            sel = sel.with_override(&key, &value);
+        }
+    }
+    if args.flag("p-sub").is_some() {
+        sel = sel.with_p_sub(args.get("p-sub", 0usize)?);
+    }
+    Ok(sel)
+}
+
+/// Render an outcome per the `--json` / `--out FILE` flags.
+fn emit(args: &Args, outcome: &Outcome) -> anyhow::Result<()> {
+    if args.switch("json") {
+        println!("{}", sink::to_json(outcome));
     } else {
-        for p in problems {
-            println!("PROBLEM: {p}");
-        }
+        print!("{}", sink::render_text(outcome));
+    }
+    if let Some(path) = args.flag("out") {
+        let text = if path.ends_with(".json") {
+            let mut s = sink::to_json(outcome);
+            s.push('\n');
+            s
+        } else if path.ends_with(".csv") {
+            sink::to_csv(outcome)
+        } else {
+            sink::render_text(outcome)
+        };
+        std::fs::write(path, text)?;
+        eprintln!("wrote {path}");
     }
     Ok(())
 }
 
-fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
-    let cfg = load_config(args)?;
-    let n_in = args.get("in", 32usize)?;
-    let n_out = args.get("out", 64usize)?;
-    let mut sim = GenerationSim::new(&cfg);
-    sim.set_prefetch(args.switch("prefetch"));
-    let r = sim.generate(n_in, n_out);
-    let tck = cfg.timing.tck_ns;
-    let gpu = GpuModel::titan_rtx().generation_time(&cfg.model, n_in, n_out);
-    println!(
-        "SAL-PIM  in={n_in} out={n_out} P_Sub={}",
-        cfg.parallelism.p_sub
-    );
-    println!("  prefill: {}", fmt_time(r.prefill.seconds(tck)));
-    println!(
-        "  decode:  {} ({:.1} tok/s)",
-        fmt_time(r.decode.seconds(tck)),
-        r.decode_tokens_per_sec(tck)
-    );
-    println!("  total:   {}", fmt_time(r.seconds(tck)));
-    println!(
-        "  avg internal bandwidth: {}",
-        fmt_bw(r.total().avg_internal_bandwidth(tck) * cfg.hbm.pseudo_channels() as f64)
-    );
-    println!("  GPU baseline: {}", fmt_time(gpu));
-    println!("  speedup vs GPU: {}", fmt_x(gpu / r.seconds(tck)));
-    Ok(())
-}
-
-fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
-    let cfg = load_config(args)?;
-    let gpu = GpuModel::titan_rtx();
-    let mut sim = GenerationSim::new(&cfg);
-    let mut t = Table::new(
-        "Fig. 11 — speedup of SAL-PIM vs GPU",
-        &["in", "out", "pim", "gpu", "speedup"],
-    );
-    let mut speedups = Vec::new();
-    for &n_in in &[32usize, 64, 128] {
-        for &n_out in &[1usize, 4, 16, 32, 64, 128, 256] {
-            let pim = sim.generate(n_in, n_out).seconds(cfg.timing.tck_ns);
-            let g = gpu.generation_time(&cfg.model, n_in, n_out);
-            speedups.push(g / pim);
-            t.row(&[
-                n_in.to_string(),
-                n_out.to_string(),
-                fmt_time(pim),
-                fmt_time(g),
-                fmt_x(g / pim),
-            ]);
-        }
-    }
-    t.print();
-    let max = speedups.iter().cloned().fold(0.0f64, f64::max);
-    let avg = speedups.iter().sum::<f64>() / speedups.len() as f64;
-    println!("max speedup {} | avg speedup {} (paper: 4.72× / 1.83×)", fmt_x(max), fmt_x(avg));
-    Ok(())
-}
-
-fn cmd_breakdown(args: &Args) -> anyhow::Result<()> {
-    let cfg = load_config(args)?;
-    let kv = args.get("kv", 128usize)?;
-    let mut sim = GenerationSim::new(&cfg);
-    let st = sim.decode_token(kv);
-    println!(
-        "decode iteration @ kv={kv}, P_Sub={}: {}",
-        cfg.parallelism.p_sub,
-        fmt_time(st.seconds(cfg.timing.tck_ns))
-    );
-    for (phase, frac) in st.breakdown() {
-        println!("  {:>13}: {:5.2}%", phase.name(), frac * 100.0);
-    }
-    Ok(())
-}
-
-fn cmd_power(args: &Args) -> anyhow::Result<()> {
-    let cfg = load_config(args)?;
-    let n_out = args.get("out", 32usize)?;
-    let mut t = Table::new(
-        "Fig. 15 — power by subarray-level parallelism",
-        &["P_Sub", "avg W", "vs 60 W budget"],
-    );
-    for p_sub in [1usize, 2, 4] {
-        let c = cfg.clone().with_p_sub(p_sub);
-        let mut sim = GenerationSim::new(&c);
-        let r = sim.generate(32, n_out);
-        let rep = PowerReport::from_stats(&c, &EnergyParams::paper(), &r.total());
-        t.row(&[
-            p_sub.to_string(),
-            format!("{:.1}", rep.avg_power_w()),
-            format!("{:.0}%", rep.budget_fraction() * 100.0),
-        ]);
-    }
-    t.print();
-    Ok(())
-}
-
-fn cmd_area(args: &Args) -> anyhow::Result<()> {
-    let cfg = load_config(args)?;
-    let a = AreaModel::new(&cfg);
-    let mut t = Table::new(
-        "Table 3 — area per channel",
-        &["unit", "count", "area (mm²)"],
-    );
-    t.row(&[
-        "S-ALU".into(),
-        a.salus_per_channel.to_string(),
-        format!("{:.2}", a.salu_area_mm2()),
-    ]);
-    t.row(&[
-        "Bank-level unit".into(),
-        a.bank_units_per_channel.to_string(),
-        format!("{:.2}", a.bank_unit_area_mm2()),
-    ]);
-    t.row(&[
-        "C-ALU".into(),
-        a.calus_per_channel.to_string(),
-        format!("{:.2}", a.calu_area_mm2()),
-    ]);
-    t.print();
-    println!(
-        "overhead vs HBM2 channel: {:.2}% (paper: 4.81%, threshold 25%)",
-        a.overhead_fraction() * 100.0
-    );
-    Ok(())
-}
-
-fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    let cfg = load_config(args)?;
-    let n = args.get("requests", 16usize)?;
-    let seed = args.get("seed", 42u64)?;
-    let policy = match args.flag("policy").unwrap_or("fcfs") {
-        "fcfs" => Policy::Fcfs,
-        "sjf" => Policy::ShortestJobFirst,
-        "spf" => Policy::ShortestPromptFirst,
-        other => anyhow::bail!("unknown policy `{other}`"),
-    };
-    let routing = match args.flag("route").unwrap_or("rr") {
-        "rr" => Routing::RoundRobin,
-        "ll" => Routing::LeastLoaded,
-        "affinity" => Routing::SessionAffinity,
-        other => anyhow::bail!("unknown route `{other}` (rr|ll|affinity)"),
-    };
-    let devices = args.get("devices", 4usize)?;
-    let max_batch = args.get("batch", 8usize)?;
+fn scenario_serve(args: &Args, config: ConfigSel) -> anyhow::Result<Scenario> {
+    let policy_flag = args.flag("policy").unwrap_or("fcfs");
+    let policy = parse_policy(policy_flag)
+        .ok_or_else(|| anyhow::anyhow!("unknown policy `{policy_flag}` (fcfs|sjf|spf)"))?;
+    let route_flag = args.flag("route").unwrap_or("rr");
+    let route = parse_route(route_flag)
+        .ok_or_else(|| anyhow::anyhow!("unknown route `{route_flag}` (rr|ll|affinity)"))?;
+    let engine_flag = args.flag("engine").unwrap_or("seq");
+    let engine = EngineKind::parse(engine_flag)
+        .ok_or_else(|| anyhow::anyhow!("unknown engine `{engine_flag}` (seq|batch|cluster)"))?;
     let backend_flag = args.flag("backend").unwrap_or("salpim");
     let backend = BackendKind::parse(backend_flag).ok_or_else(|| {
         anyhow::anyhow!("unknown backend `{backend_flag}` (salpim|gpu|banklevel|hetero)")
     })?;
-    // switch() also catches a bare `--prefill-chunk` (defaults to 32
-    // tokens) that flag() would miss.
+    // Bare `--prefill-chunk` means the 32-token default.
     let prefill_chunk = if args.switch("prefill-chunk") {
-        let c = args.get("prefill-chunk", 32usize)?;
-        anyhow::ensure!(c >= 1, "--prefill-chunk must be at least 1 token");
-        Some(c)
+        Some(args.get("prefill-chunk", 32usize)?)
     } else {
         None
     };
-
-    if args.switch("sweep") {
-        // Honor an explicit --requests; default to a load big enough to
-        // actually saturate the cluster.
-        let sweep_requests = if args.flag("requests").is_some() { n } else { 64 };
-        let sc = SweepConfig {
-            devices,
-            max_batch,
-            routing,
-            policy,
-            requests: sweep_requests,
-            seed,
-            backend,
-            prefill_chunk,
-            ..SweepConfig::default()
-        };
-        let loads = [50.0, 200.0, 1000.0];
-        let pts = latency_vs_load(&cfg, &sc, &loads);
-        let mut t = Table::new(
-            &format!(
-                "latency vs offered load ({} devices × batch {}, {}, backend {}, {} requests)",
-                sc.devices,
-                sc.max_batch,
-                routing.name(),
-                backend.name(),
-                sc.requests
-            ),
-            &["offered req/s", "tok/s", "p50 lat", "p95 lat", "p95 TTFT", "rejected"],
-        );
-        for p in &pts {
-            t.row(&[
-                format!("{:.0}", p.offered_rps),
-                format!("{:.1}", p.metrics.throughput_tok_s),
-                fmt_time(p.metrics.p50_latency_s),
-                fmt_time(p.metrics.p95_latency_s),
-                fmt_time(p.metrics.p95_ttft_s),
-                p.rejected.to_string(),
-            ]);
-        }
-        t.print();
-        return Ok(());
-    }
-
-    // The shared request mix: every engine sees the identical workload.
-    let items = RequestMix::paper(seed).take(n);
-    let pattern = match args.flag("rate") {
-        Some(_) => {
-            let rate = args.get("rate", 200.0f64)?;
-            anyhow::ensure!(rate > 0.0, "--rate must be positive");
-            match args.flag("burst") {
-                Some(_) => ArrivalPattern::Bursty {
-                    rate_rps: rate,
-                    burst: args.get("burst", 4usize)?,
-                },
-                None => ArrivalPattern::Poisson { rate_rps: rate },
-            }
-        }
-        None => ArrivalPattern::Jittered { scale_s: 0.05 },
+    let rate = match args.flag("rate") {
+        Some(_) => Some(args.get("rate", 0.0f64)?),
+        None => None,
     };
-    let requests = requests_from_items(&items, pattern, 8);
+    let burst = match args.flag("burst") {
+        Some(_) => Some(args.get("burst", 4usize)?),
+        None => None,
+    };
 
-    match args.flag("engine").unwrap_or("seq") {
-        "seq" => {
-            anyhow::ensure!(
-                backend == BackendKind::SalPim,
-                "--engine seq is the paper-faithful PIM coordinator; pick --engine batch|cluster \
-                 for --backend {} (or use --offload for GPU prefill)",
-                backend.name()
-            );
-            anyhow::ensure!(
-                prefill_chunk.is_none(),
-                "--prefill-chunk needs the batching scheduler; pick --engine batch|cluster"
-            );
-            let mut coord = Coordinator::new(&cfg).with_policy(policy);
-            if args.switch("offload") {
-                coord = coord.with_prefill_target(PrefillTarget::GpuOffload);
-            }
-            for r in requests {
-                coord.submit_request(r);
-            }
-            let m = ServeMetrics::from_completions(&coord.run());
-            println!(
-                "engine=seq policy={} offload={} arrivals={}\n{m}",
-                policy.name(),
-                args.switch("offload"),
-                pattern.name()
-            );
+    let mut params = ServeParams::default()
+        .with_config(config)
+        .with_engine(engine)
+        .with_backend(backend)
+        .with_policy(policy)
+        .with_route(route)
+        .with_cluster(args.get("devices", 4usize)?, args.get("batch", 8usize)?)
+        .with_prefill_chunk(prefill_chunk)
+        .with_at_once(args.switch("at-once"))
+        .with_rate(rate, burst)
+        .with_offload(args.switch("offload"));
+    params.seed = args.get("seed", 42u64)?;
+    params.requests = if args.flag("requests").is_some() {
+        args.get("requests", 16usize)?
+    } else if args.switch("sweep") {
+        // Default a sweep to a load big enough to saturate the cluster.
+        64
+    } else {
+        16
+    };
+    if args.switch("sweep") {
+        params = params.with_sweep(vec![50.0, 200.0, 1000.0]);
+    }
+    Ok(Scenario::Serve(params))
+}
+
+/// `sal-pim config` — not an experiment, but it emits an [`Outcome`] too
+/// so `--json` / `--out` work uniformly.
+fn cmd_config(args: &Args) -> anyhow::Result<()> {
+    let sel = config_sel(args)?;
+    let cfg = sel.resolve()?;
+    let mut out = Outcome::new(
+        &format!("config — preset={} P_Sub={}", sel.preset, cfg.parallelism.p_sub),
+        Provenance {
+            scenario: "config".to_string(),
+            preset: sel.preset.clone(),
+            p_sub: cfg.parallelism.p_sub,
+            backend: None,
+            seed: None,
+            params: sel
+                .overrides
+                .iter()
+                .map(|(k, v)| (format!("cfg.{k}"), v.clone()))
+                .collect(),
+        },
+    );
+    out.metric("model", cfg.model.name.as_str(), None);
+    out.metric(
+        "peak_internal_bandwidth",
+        cfg.peak_internal_bandwidth(),
+        Some("B/s"),
+    );
+    out.metric(
+        "peak_external_bandwidth",
+        cfg.peak_external_bandwidth(),
+        Some("B/s"),
+    );
+    out.note(&format!(
+        "peak internal {} | peak external {}",
+        fmt_bw(cfg.peak_internal_bandwidth()),
+        fmt_bw(cfg.peak_external_bandwidth())
+    ));
+    if !args.switch("json") {
+        println!("{cfg:#?}");
+    }
+    emit(args, &out)
+}
+
+/// `sal-pim run --scenario FILE` — execute a suite, write BENCH files.
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let Some(path) = args.flag("scenario") else {
+        anyhow::bail!("run needs --scenario FILE (see scenarios/smoke.toml)");
+    };
+    let text = std::fs::read_to_string(path)?;
+    let scenarios = parse_suite(&text)?;
+    anyhow::ensure!(!scenarios.is_empty(), "suite `{path}` declares no scenarios");
+    let runner = Runner::new();
+    let mut outcomes: Vec<(String, Outcome)> = Vec::new();
+    for scenario in &scenarios {
+        let outcome = runner.run(scenario)?;
+        if args.switch("json") {
+            println!("{}", sink::to_json(&outcome));
+        } else {
+            print!("{}", sink::render_text(&outcome));
+            println!();
         }
-        "batch" => {
-            let mut eng = DeviceEngine::with_backend(backend.build(&cfg), max_batch)
-                .with_policy(policy)
-                .with_prefill_chunk(prefill_chunk);
-            for r in requests {
-                eng.submit(r);
-            }
-            let backend_name = eng.backend_name();
-            let m = ServeMetrics::from_completions(&eng.run());
-            let rep = eng.report();
-            println!(
-                "engine=batch backend={} policy={} batch={} chunk={} arrivals={}\n{m}",
-                backend_name,
-                policy.name(),
-                max_batch,
-                match prefill_chunk {
-                    Some(c) => c.to_string(),
-                    None => "inline".to_string(),
-                },
-                pattern.name()
-            );
-            println!(
-                "kv peak util:    {} | max batch seen: {} | rejected: {}",
-                fmt_pct(rep.kv_peak_utilization),
-                rep.max_batch_seen,
-                rep.rejected
-            );
-        }
-        "cluster" => {
-            let mut cluster = Cluster::homogeneous(&cfg, backend, devices, max_batch, routing)
-                .with_policy(policy)
-                .with_prefill_chunk(prefill_chunk);
-            for r in requests {
-                cluster.submit(r);
-            }
-            let done = cluster.run();
-            let m = ServeMetrics::from_completions(&done);
-            println!(
-                "engine=cluster backend={} devices={} batch={} route={} arrivals={}\n{m}",
-                backend.name(),
-                devices,
-                max_batch,
-                routing.name(),
-                pattern.name()
-            );
-            let mut t = Table::new(
-                "per-device",
-                &["device", "backend", "requests", "tok/s", "p95 lat", "kv peak util"],
-            );
-            let per = cluster.per_device_metrics(&done);
-            let reps = cluster.per_device_reports();
-            let names = cluster.backend_names();
-            for (i, (pm, rep)) in per.iter().zip(&reps).enumerate() {
-                t.row(&[
-                    i.to_string(),
-                    names[i].clone(),
-                    pm.requests.to_string(),
-                    format!("{:.1}", pm.throughput_tok_s),
-                    fmt_time(pm.p95_latency_s),
-                    fmt_pct(rep.kv_peak_utilization),
-                ]);
-            }
-            t.print();
-        }
-        other => anyhow::bail!("unknown engine `{other}` (seq|batch|cluster)"),
+        outcomes.push((scenario.bench_tag().to_string(), outcome));
+    }
+    let out_dir = args.flag("out-dir").unwrap_or(".");
+    let tagged: Vec<(&str, &Outcome)> = outcomes
+        .iter()
+        .map(|(tag, o)| (tag.as_str(), o))
+        .collect();
+    let paths = sink::write_bench_files(Path::new(out_dir), &tagged)?;
+    for p in &paths {
+        eprintln!("wrote {}", p.display());
+    }
+    if let Some(path) = args.flag("out") {
+        // The whole suite as one JSON array.
+        let body: Vec<String> = outcomes.iter().map(|(_, o)| sink::to_json(o)).collect();
+        std::fs::write(path, format!("[\n{}\n]\n", body.join(",\n")))?;
+        eprintln!("wrote {path}");
     }
     Ok(())
 }

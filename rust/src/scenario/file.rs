@@ -1,0 +1,492 @@
+//! Scenario suite files: a flat TOML subset, round-trippable.
+//!
+//! The offline build has no serde/toml crates, so suites use the same
+//! hand-rolled philosophy as [`crate::config::parse`]: line-based
+//! `key = value` with `[[scenario]]` section headers, quoted strings,
+//! integer/float/bool literals and one-line `[a, b, c]` lists. Unknown
+//! keys are hard errors so a typo'd suite fails loudly.
+//!
+//! ```text
+//! # smoke suite
+//! [[scenario]]
+//! kind = "simulate"
+//! preset = "paper"
+//! n_in = 32
+//! n_out = 64
+//!
+//! [[scenario]]
+//! kind = "serve"
+//! engine = "batch"
+//! cfg.model = "gpt2-medium"   # config override vocabulary
+//! ```
+//!
+//! [`Scenario::to_toml`] serializes every field, and
+//! [`parse_suite`] parses it back to an equal value — the round-trip the
+//! `scenario_roundtrip` test suite exercises property-style.
+
+use super::{
+    parse_policy, parse_route, route_token, AreaParams, BreakdownParams, ConfigSel, EngineKind,
+    PowerParams, Scenario, ScenarioError, ServeParams, SimulateParams, SweepParams,
+};
+use crate::serve::BackendKind;
+use std::fmt::Write as _;
+
+/// Strip an inline `#` comment, respecting double quotes.
+fn strip_comment(line: &str) -> &str {
+    let mut in_quote = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_quote = !in_quote,
+            '#' if !in_quote => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Remove surrounding double quotes, if any.
+fn unquote(s: &str) -> &str {
+    s.strip_prefix('"')
+        .and_then(|t| t.strip_suffix('"'))
+        .unwrap_or(s)
+}
+
+fn bad(line: usize, key: &str, value: &str, want: &str) -> ScenarioError {
+    ScenarioError::Parse {
+        line,
+        msg: format!("bad value `{value}` for `{key}` (expected {want})"),
+    }
+}
+
+fn p_usize(line: usize, key: &str, v: &str) -> Result<usize, ScenarioError> {
+    v.parse().map_err(|_| bad(line, key, v, "an integer"))
+}
+
+fn p_u64(line: usize, key: &str, v: &str) -> Result<u64, ScenarioError> {
+    v.parse().map_err(|_| bad(line, key, v, "an integer"))
+}
+
+fn p_f64(line: usize, key: &str, v: &str) -> Result<f64, ScenarioError> {
+    v.parse().map_err(|_| bad(line, key, v, "a number"))
+}
+
+fn p_bool(line: usize, key: &str, v: &str) -> Result<bool, ScenarioError> {
+    match v {
+        "true" => Ok(true),
+        "false" => Ok(false),
+        _ => Err(bad(line, key, v, "true|false")),
+    }
+}
+
+fn list_items(line: usize, key: &str, v: &str) -> Result<Vec<String>, ScenarioError> {
+    let inner = v
+        .strip_prefix('[')
+        .and_then(|t| t.strip_suffix(']'))
+        .ok_or_else(|| bad(line, key, v, "a [a, b, c] list"))?;
+    let inner = inner.trim();
+    if inner.is_empty() {
+        return Ok(Vec::new());
+    }
+    Ok(inner.split(',').map(|s| s.trim().to_string()).collect())
+}
+
+fn p_list_usize(line: usize, key: &str, v: &str) -> Result<Vec<usize>, ScenarioError> {
+    list_items(line, key, v)?
+        .iter()
+        .map(|s| p_usize(line, key, s))
+        .collect()
+}
+
+fn p_list_f64(line: usize, key: &str, v: &str) -> Result<Vec<f64>, ScenarioError> {
+    list_items(line, key, v)?
+        .iter()
+        .map(|s| p_f64(line, key, s))
+        .collect()
+}
+
+fn fmt_list<T: std::fmt::Display>(items: &[T]) -> String {
+    let body: Vec<String> = items.iter().map(|x| x.to_string()).collect();
+    format!("[{}]", body.join(", "))
+}
+
+/// Handle keys shared by every scenario kind. Returns `true` if consumed.
+fn common_key(
+    config: &mut ConfigSel,
+    line: usize,
+    key: &str,
+    value: &str,
+) -> Result<bool, ScenarioError> {
+    match key {
+        "kind" => Ok(true),
+        "preset" => {
+            config.preset = unquote(value).to_string();
+            Ok(true)
+        }
+        "p_sub" => {
+            config.p_sub = Some(p_usize(line, key, value)?);
+            Ok(true)
+        }
+        _ => {
+            if let Some(cfg_key) = key.strip_prefix("cfg.") {
+                config
+                    .overrides
+                    .push((cfg_key.to_string(), unquote(value).to_string()));
+                Ok(true)
+            } else {
+                Ok(false)
+            }
+        }
+    }
+}
+
+fn unknown_key(line: usize, kind: &str, key: &str) -> ScenarioError {
+    ScenarioError::Parse {
+        line,
+        msg: format!("unknown key `{key}` for scenario kind `{kind}`"),
+    }
+}
+
+/// Build one scenario from `(line, key, value)` pairs.
+pub fn from_kv(pairs: &[(usize, String, String)]) -> Result<Scenario, ScenarioError> {
+    let first_line = pairs.first().map(|p| p.0).unwrap_or(0);
+    let (_, _, kind_raw) = pairs
+        .iter()
+        .find(|(_, k, _)| k == "kind")
+        .ok_or_else(|| ScenarioError::Parse {
+            line: first_line,
+            msg: "scenario is missing `kind`".to_string(),
+        })?;
+    let kind = unquote(kind_raw).to_string();
+    match kind.as_str() {
+        "simulate" => {
+            let mut p = SimulateParams::default();
+            for (line, key, value) in pairs {
+                if common_key(&mut p.config, *line, key, value)? {
+                    continue;
+                }
+                match key.as_str() {
+                    "n_in" => p.n_in = p_usize(*line, key, value)?,
+                    "n_out" => p.n_out = p_usize(*line, key, value)?,
+                    "prefetch" => p.prefetch = p_bool(*line, key, value)?,
+                    _ => return Err(unknown_key(*line, &kind, key)),
+                }
+            }
+            Ok(Scenario::Simulate(p))
+        }
+        "sweep" => {
+            let mut p = SweepParams::default();
+            for (line, key, value) in pairs {
+                if common_key(&mut p.config, *line, key, value)? {
+                    continue;
+                }
+                match key.as_str() {
+                    "ins" => p.ins = p_list_usize(*line, key, value)?,
+                    "outs" => p.outs = p_list_usize(*line, key, value)?,
+                    _ => return Err(unknown_key(*line, &kind, key)),
+                }
+            }
+            Ok(Scenario::Sweep(p))
+        }
+        "breakdown" => {
+            let mut p = BreakdownParams::default();
+            for (line, key, value) in pairs {
+                if common_key(&mut p.config, *line, key, value)? {
+                    continue;
+                }
+                match key.as_str() {
+                    "kv" => p.kv = p_usize(*line, key, value)?,
+                    _ => return Err(unknown_key(*line, &kind, key)),
+                }
+            }
+            Ok(Scenario::Breakdown(p))
+        }
+        "power" => {
+            let mut p = PowerParams::default();
+            for (line, key, value) in pairs {
+                if common_key(&mut p.config, *line, key, value)? {
+                    continue;
+                }
+                match key.as_str() {
+                    "n_in" => p.n_in = p_usize(*line, key, value)?,
+                    "n_out" => p.n_out = p_usize(*line, key, value)?,
+                    "p_subs" => p.p_subs = p_list_usize(*line, key, value)?,
+                    _ => return Err(unknown_key(*line, &kind, key)),
+                }
+            }
+            Ok(Scenario::Power(p))
+        }
+        "area" => {
+            let mut p = AreaParams::default();
+            for (line, key, value) in pairs {
+                if common_key(&mut p.config, *line, key, value)? {
+                    continue;
+                }
+                return Err(unknown_key(*line, &kind, key));
+            }
+            Ok(Scenario::Area(p))
+        }
+        "serve" => {
+            let mut p = ServeParams::default();
+            for (line, key, value) in pairs {
+                if common_key(&mut p.config, *line, key, value)? {
+                    continue;
+                }
+                let v = unquote(value);
+                match key.as_str() {
+                    "engine" => {
+                        p.engine = EngineKind::parse(v)
+                            .ok_or_else(|| bad(*line, key, v, "seq|batch|cluster"))?
+                    }
+                    "backend" => {
+                        p.backend = BackendKind::parse(v)
+                            .ok_or_else(|| bad(*line, key, v, "salpim|gpu|banklevel|hetero"))?
+                    }
+                    "policy" => {
+                        p.policy =
+                            parse_policy(v).ok_or_else(|| bad(*line, key, v, "fcfs|sjf|spf"))?
+                    }
+                    "route" => {
+                        p.route =
+                            parse_route(v).ok_or_else(|| bad(*line, key, v, "rr|ll|affinity"))?
+                    }
+                    "requests" => p.requests = p_usize(*line, key, value)?,
+                    "seed" => p.seed = p_u64(*line, key, value)?,
+                    "devices" => p.devices = p_usize(*line, key, value)?,
+                    "max_batch" => p.max_batch = p_usize(*line, key, value)?,
+                    "n_sessions" => p.n_sessions = p_usize(*line, key, value)?,
+                    "prefill_chunk" => p.prefill_chunk = Some(p_usize(*line, key, value)?),
+                    "at_once" => p.at_once = p_bool(*line, key, value)?,
+                    "rate" => p.rate = Some(p_f64(*line, key, value)?),
+                    "burst" => p.burst = Some(p_usize(*line, key, value)?),
+                    "offload" => p.offload = p_bool(*line, key, value)?,
+                    "sweep" => p.sweep = p_bool(*line, key, value)?,
+                    "loads" => p.loads = p_list_f64(*line, key, value)?,
+                    _ => return Err(unknown_key(*line, &kind, key)),
+                }
+            }
+            Ok(Scenario::Serve(p))
+        }
+        other => Err(ScenarioError::Parse {
+            line: first_line,
+            msg: format!(
+                "unknown scenario kind `{other}` \
+                 (simulate|sweep|breakdown|power|area|serve)"
+            ),
+        }),
+    }
+}
+
+impl Scenario {
+    /// Flatten to the suite-file `key = value` vocabulary (every field,
+    /// quoted-string values unquoted). Also used as outcome provenance.
+    pub fn to_kv(&self) -> Vec<(String, String)> {
+        let mut kv: Vec<(String, String)> = vec![("kind".to_string(), self.kind().to_string())];
+        let mut push = |k: &str, v: String| kv.push((k.to_string(), v));
+        let config = self.config();
+        push("preset", config.preset.clone());
+        if let Some(p_sub) = config.p_sub {
+            push("p_sub", p_sub.to_string());
+        }
+        for (k, v) in &config.overrides {
+            push(&format!("cfg.{k}"), v.clone());
+        }
+        match self {
+            Scenario::Simulate(p) => {
+                push("n_in", p.n_in.to_string());
+                push("n_out", p.n_out.to_string());
+                push("prefetch", p.prefetch.to_string());
+            }
+            Scenario::Sweep(p) => {
+                push("ins", fmt_list(&p.ins));
+                push("outs", fmt_list(&p.outs));
+            }
+            Scenario::Breakdown(p) => push("kv", p.kv.to_string()),
+            Scenario::Power(p) => {
+                push("n_in", p.n_in.to_string());
+                push("n_out", p.n_out.to_string());
+                push("p_subs", fmt_list(&p.p_subs));
+            }
+            Scenario::Area(_) => {}
+            Scenario::Serve(p) => {
+                push("engine", p.engine.name().to_string());
+                push("backend", p.backend.name().to_string());
+                push("policy", p.policy.name().to_string());
+                push("route", route_token(p.route).to_string());
+                push("requests", p.requests.to_string());
+                push("seed", p.seed.to_string());
+                push("devices", p.devices.to_string());
+                push("max_batch", p.max_batch.to_string());
+                push("n_sessions", p.n_sessions.to_string());
+                if let Some(c) = p.prefill_chunk {
+                    push("prefill_chunk", c.to_string());
+                }
+                push("at_once", p.at_once.to_string());
+                if let Some(r) = p.rate {
+                    push("rate", r.to_string());
+                }
+                if let Some(b) = p.burst {
+                    push("burst", b.to_string());
+                }
+                push("offload", p.offload.to_string());
+                push("sweep", p.sweep.to_string());
+                push("loads", fmt_list(&p.loads));
+            }
+        }
+        kv
+    }
+
+    /// Serialize as one `[[scenario]]` block.
+    pub fn to_toml(&self) -> String {
+        // Keys whose values are strings and therefore TOML-quoted.
+        fn is_string_key(key: &str) -> bool {
+            matches!(
+                key,
+                "kind" | "preset" | "engine" | "backend" | "policy" | "route"
+            ) || key.starts_with("cfg.")
+        }
+        let mut out = String::from("[[scenario]]\n");
+        for (k, v) in self.to_kv() {
+            if is_string_key(&k) {
+                let _ = writeln!(out, "{k} = \"{v}\"");
+            } else {
+                let _ = writeln!(out, "{k} = {v}");
+            }
+        }
+        out
+    }
+}
+
+/// Serialize a whole suite.
+pub fn suite_to_toml(scenarios: &[Scenario]) -> String {
+    scenarios
+        .iter()
+        .map(|s| s.to_toml())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// Parse a suite file's text into scenarios, in order.
+pub fn parse_suite(text: &str) -> Result<Vec<Scenario>, ScenarioError> {
+    let mut suites = Vec::new();
+    let mut pairs: Vec<(usize, String, String)> = Vec::new();
+    let mut seen_header = false;
+    for (i, raw) in text.lines().enumerate() {
+        let line_no = i + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line == "[[scenario]]" {
+            if seen_header || !pairs.is_empty() {
+                suites.push(from_kv(&pairs)?);
+            }
+            pairs.clear();
+            seen_header = true;
+            continue;
+        }
+        if line.starts_with('[') {
+            return Err(ScenarioError::Parse {
+                line: line_no,
+                msg: format!("unsupported section header `{line}` (only [[scenario]])"),
+            });
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            return Err(ScenarioError::Parse {
+                line: line_no,
+                msg: format!("expected `key = value`, got `{line}`"),
+            });
+        };
+        pairs.push((
+            line_no,
+            key.trim().to_string(),
+            value.trim().to_string(),
+        ));
+    }
+    if seen_header || !pairs.is_empty() {
+        suites.push(from_kv(&pairs)?);
+    }
+    Ok(suites)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{Policy, Routing};
+
+    #[test]
+    fn every_kind_round_trips_through_toml() {
+        let scenarios = vec![
+            Scenario::Simulate(
+                SimulateParams::default()
+                    .with_io(16, 8)
+                    .with_prefetch(true)
+                    .with_config(ConfigSel::preset("mini").with_p_sub(2)),
+            ),
+            Scenario::Sweep(SweepParams::default().with_grid(vec![32], vec![1, 64])),
+            Scenario::Breakdown(BreakdownParams::default().with_kv(256)),
+            Scenario::Power(PowerParams::default().with_p_subs(vec![1, 4])),
+            Scenario::Area(AreaParams::default()),
+            Scenario::Serve(
+                ServeParams::default()
+                    .with_engine(EngineKind::Cluster)
+                    .with_backend(BackendKind::Hetero)
+                    .with_policy(Policy::ShortestJobFirst)
+                    .with_route(Routing::SessionAffinity)
+                    .with_prefill_chunk(Some(32))
+                    .with_rate(Some(212.5), Some(4))
+                    .with_config(ConfigSel::default().with_override("model", "gpt2-mini")),
+            ),
+        ];
+        let text = suite_to_toml(&scenarios);
+        let parsed = parse_suite(&text).unwrap();
+        assert_eq!(parsed, scenarios);
+    }
+
+    #[test]
+    fn comments_quotes_and_blanks_are_tolerated() {
+        let text = "\n# suite\n[[scenario]]\nkind = \"area\"  # trailing\n\n";
+        let parsed = parse_suite(text).unwrap();
+        assert_eq!(parsed, vec![Scenario::Area(AreaParams::default())]);
+        // '#' inside a quoted value is not a comment.
+        let text = "[[scenario]]\nkind = \"sweep\"\nins = [32] # grid\n";
+        assert!(parse_suite(text).is_ok());
+    }
+
+    #[test]
+    fn header_is_optional_for_a_single_scenario() {
+        let parsed = parse_suite("kind = \"breakdown\"\nkv = 64\n").unwrap();
+        assert_eq!(
+            parsed,
+            vec![Scenario::Breakdown(BreakdownParams::default().with_kv(64))]
+        );
+    }
+
+    #[test]
+    fn unknown_kind_and_key_are_hard_errors() {
+        let err = parse_suite("[[scenario]]\nkind = \"frobnicate\"\n").unwrap_err();
+        assert!(matches!(err, ScenarioError::Parse { line: 2, .. }));
+        let err = parse_suite("[[scenario]]\nkind = \"sweep\"\nkvs = [1]\n").unwrap_err();
+        match err {
+            ScenarioError::Parse { line, msg } => {
+                assert_eq!(line, 3);
+                assert!(msg.contains("kvs"));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn missing_kind_and_bad_values_are_reported() {
+        assert!(parse_suite("[[scenario]]\nkv = 64\n").is_err());
+        assert!(parse_suite("[[scenario]]\nkind = \"serve\"\nrequests = many\n").is_err());
+        assert!(parse_suite("[[scenario]]\nkind = \"serve\"\nengine = \"warp\"\n").is_err());
+        assert!(parse_suite("[[scenario]]\nkind = \"sweep\"\nins = 32\n").is_err());
+        assert!(parse_suite("not a kv line\n").is_err());
+        assert!(parse_suite("[table]\n").is_err());
+    }
+
+    #[test]
+    fn empty_suite_parses_to_nothing() {
+        assert_eq!(parse_suite("# only comments\n").unwrap(), Vec::new());
+    }
+}

@@ -1,0 +1,587 @@
+//! The declarative experiment API.
+//!
+//! A [`Scenario`] is a typed, serializable description of one experiment
+//! — what every CLI command, bench and example used to hand-wire. The
+//! [`Runner`] executes a scenario against the simulator stack and
+//! returns a structured [`Outcome`] (metrics + rows + provenance); the
+//! [`sink`] layer renders outcomes as text tables, JSON or CSV and
+//! accumulates them into schema-versioned `BENCH_*.json` files.
+//!
+//! Scenarios round-trip through a flat TOML subset ([`file`]):
+//! `sal-pim run --scenario scenarios/smoke.toml` executes a whole suite
+//! from a file. New experiment surfaces should add a scenario variant
+//! here instead of growing bespoke CLI plumbing.
+
+pub mod file;
+pub mod outcome;
+pub mod runner;
+pub mod sink;
+
+pub use outcome::{Column, Metric, Outcome, Provenance, Value, SCHEMA_VERSION};
+pub use runner::Runner;
+
+use crate::config::parse::{apply_overrides, ConfigError};
+use crate::config::SimConfig;
+use crate::serve::{BackendKind, Policy, Routing};
+
+/// Scenario-layer failure.
+#[derive(Debug, thiserror::Error)]
+pub enum ScenarioError {
+    #[error("unknown preset `{0}` (paper|mini)")]
+    UnknownPreset(String),
+    #[error(transparent)]
+    Config(#[from] ConfigError),
+    #[error("scenario file line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+    #[error("P_Sub {p_sub} out of range 1..={max}")]
+    BadPSub { p_sub: usize, max: usize },
+    #[error("scenario cannot run: {0}")]
+    Unsupported(String),
+}
+
+/// Which simulator configuration a scenario resolves.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConfigSel {
+    /// Preset name: `paper` | `mini`.
+    pub preset: String,
+    /// Optional `P_Sub` override on top of the preset.
+    pub p_sub: Option<usize>,
+    /// `key = value` config overrides (the [`crate::config::parse`]
+    /// vocabulary), applied after the preset.
+    pub overrides: Vec<(String, String)>,
+}
+
+impl Default for ConfigSel {
+    fn default() -> Self {
+        ConfigSel {
+            preset: "paper".to_string(),
+            p_sub: None,
+            overrides: Vec::new(),
+        }
+    }
+}
+
+impl ConfigSel {
+    pub fn preset(name: &str) -> Self {
+        ConfigSel {
+            preset: name.to_string(),
+            ..Self::default()
+        }
+    }
+
+    pub fn with_p_sub(mut self, p_sub: usize) -> Self {
+        self.p_sub = Some(p_sub);
+        self
+    }
+
+    pub fn with_override(mut self, key: &str, value: &str) -> Self {
+        self.overrides.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    /// Resolve to a validated [`SimConfig`].
+    pub fn resolve(&self) -> Result<SimConfig, ScenarioError> {
+        let base = match self.preset.as_str() {
+            "paper" => SimConfig::paper(),
+            "mini" => SimConfig::mini(),
+            other => return Err(ScenarioError::UnknownPreset(other.to_string())),
+        };
+        let pairs: Vec<(usize, String, String)> = self
+            .overrides
+            .iter()
+            .enumerate()
+            .map(|(i, (k, v))| (i + 1, k.clone(), v.clone()))
+            .collect();
+        let mut cfg = apply_overrides(base, &pairs)?;
+        if let Some(p_sub) = self.p_sub {
+            if !(1..=cfg.salu.max_p_sub).contains(&p_sub) {
+                return Err(ScenarioError::BadPSub {
+                    p_sub,
+                    max: cfg.salu.max_p_sub,
+                });
+            }
+            cfg = cfg.with_p_sub(p_sub);
+        }
+        Ok(cfg)
+    }
+}
+
+/// One end-to-end generation (`sal-pim simulate`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimulateParams {
+    pub config: ConfigSel,
+    pub n_in: usize,
+    pub n_out: usize,
+    pub prefetch: bool,
+}
+
+impl Default for SimulateParams {
+    fn default() -> Self {
+        SimulateParams {
+            config: ConfigSel::default(),
+            n_in: 32,
+            n_out: 64,
+            prefetch: false,
+        }
+    }
+}
+
+impl SimulateParams {
+    pub fn with_config(mut self, config: ConfigSel) -> Self {
+        self.config = config;
+        self
+    }
+
+    pub fn with_io(mut self, n_in: usize, n_out: usize) -> Self {
+        self.n_in = n_in;
+        self.n_out = n_out;
+        self
+    }
+
+    pub fn with_prefetch(mut self, on: bool) -> Self {
+        self.prefetch = on;
+        self
+    }
+}
+
+/// The Fig. 11 speedup grid (`sal-pim sweep`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepParams {
+    pub config: ConfigSel,
+    /// Prompt sizes (grid rows).
+    pub ins: Vec<usize>,
+    /// Output sizes (grid columns).
+    pub outs: Vec<usize>,
+}
+
+impl Default for SweepParams {
+    fn default() -> Self {
+        SweepParams {
+            config: ConfigSel::default(),
+            ins: vec![32, 64, 128],
+            outs: vec![1, 4, 16, 32, 64, 128, 256],
+        }
+    }
+}
+
+impl SweepParams {
+    pub fn with_config(mut self, config: ConfigSel) -> Self {
+        self.config = config;
+        self
+    }
+
+    pub fn with_grid(mut self, ins: Vec<usize>, outs: Vec<usize>) -> Self {
+        self.ins = ins;
+        self.outs = outs;
+        self
+    }
+}
+
+/// Decode-iteration phase breakdown (`sal-pim breakdown`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BreakdownParams {
+    pub config: ConfigSel,
+    /// KV length of the examined iteration.
+    pub kv: usize,
+}
+
+impl Default for BreakdownParams {
+    fn default() -> Self {
+        BreakdownParams {
+            config: ConfigSel::default(),
+            kv: 128,
+        }
+    }
+}
+
+impl BreakdownParams {
+    pub fn with_config(mut self, config: ConfigSel) -> Self {
+        self.config = config;
+        self
+    }
+
+    pub fn with_kv(mut self, kv: usize) -> Self {
+        self.kv = kv;
+        self
+    }
+}
+
+/// Power by subarray-level parallelism (`sal-pim power`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PowerParams {
+    pub config: ConfigSel,
+    pub n_in: usize,
+    pub n_out: usize,
+    /// `P_Sub` values to sweep (rows of the Fig. 15 table).
+    pub p_subs: Vec<usize>,
+}
+
+impl Default for PowerParams {
+    fn default() -> Self {
+        PowerParams {
+            config: ConfigSel::default(),
+            n_in: 32,
+            n_out: 32,
+            p_subs: vec![1, 2, 4],
+        }
+    }
+}
+
+impl PowerParams {
+    pub fn with_config(mut self, config: ConfigSel) -> Self {
+        self.config = config;
+        self
+    }
+
+    pub fn with_io(mut self, n_in: usize, n_out: usize) -> Self {
+        self.n_in = n_in;
+        self.n_out = n_out;
+        self
+    }
+
+    pub fn with_p_subs(mut self, p_subs: Vec<usize>) -> Self {
+        self.p_subs = p_subs;
+        self
+    }
+}
+
+/// Added-logic area (`sal-pim area`).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct AreaParams {
+    pub config: ConfigSel,
+}
+
+impl AreaParams {
+    pub fn with_config(mut self, config: ConfigSel) -> Self {
+        self.config = config;
+        self
+    }
+}
+
+/// Which serving engine a [`ServeParams`] scenario drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Paper-faithful sequential coordinator.
+    Seq,
+    /// Continuous batching on one device.
+    Batch,
+    /// N batching devices behind a router.
+    Cluster,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "seq" => Some(EngineKind::Seq),
+            "batch" => Some(EngineKind::Batch),
+            "cluster" => Some(EngineKind::Cluster),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Seq => "seq",
+            EngineKind::Batch => "batch",
+            EngineKind::Cluster => "cluster",
+        }
+    }
+}
+
+/// A serving experiment (`sal-pim serve`): one engine, one backend, one
+/// seeded workload — or the latency-vs-offered-load sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeParams {
+    pub config: ConfigSel,
+    pub engine: EngineKind,
+    pub backend: BackendKind,
+    pub policy: Policy,
+    pub route: Routing,
+    pub requests: usize,
+    pub seed: u64,
+    pub devices: usize,
+    pub max_batch: usize,
+    pub n_sessions: usize,
+    /// Chunked-prefill token size; `None` = inline prefill.
+    pub prefill_chunk: Option<usize>,
+    /// Queue every request at t = 0 (saturating load).
+    pub at_once: bool,
+    /// Open-loop Poisson arrivals at this rate; `None` = jittered mix.
+    pub rate: Option<f64>,
+    /// Burst size for Poisson arrivals.
+    pub burst: Option<usize>,
+    /// GPU prefill offload (seq engine only).
+    pub offload: bool,
+    /// Latency-vs-offered-load mode: run the cluster once per load.
+    pub sweep: bool,
+    /// Offered loads (req/s) for sweep mode.
+    pub loads: Vec<f64>,
+}
+
+impl Default for ServeParams {
+    fn default() -> Self {
+        ServeParams {
+            config: ConfigSel::default(),
+            engine: EngineKind::Seq,
+            backend: BackendKind::SalPim,
+            policy: Policy::Fcfs,
+            route: Routing::RoundRobin,
+            requests: 16,
+            seed: 42,
+            devices: 4,
+            max_batch: 8,
+            n_sessions: 8,
+            prefill_chunk: None,
+            at_once: false,
+            rate: None,
+            burst: None,
+            offload: false,
+            sweep: false,
+            loads: vec![50.0, 200.0, 1000.0],
+        }
+    }
+}
+
+impl ServeParams {
+    pub fn with_config(mut self, config: ConfigSel) -> Self {
+        self.config = config;
+        self
+    }
+
+    pub fn with_engine(mut self, engine: EngineKind) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    pub fn with_backend(mut self, backend: BackendKind) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    pub fn with_policy(mut self, policy: Policy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_route(mut self, route: Routing) -> Self {
+        self.route = route;
+        self
+    }
+
+    pub fn with_workload(mut self, requests: usize, seed: u64) -> Self {
+        self.requests = requests;
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_cluster(mut self, devices: usize, max_batch: usize) -> Self {
+        self.devices = devices;
+        self.max_batch = max_batch;
+        self
+    }
+
+    pub fn with_prefill_chunk(mut self, chunk: Option<usize>) -> Self {
+        self.prefill_chunk = chunk;
+        self
+    }
+
+    pub fn with_at_once(mut self, on: bool) -> Self {
+        self.at_once = on;
+        self
+    }
+
+    pub fn with_rate(mut self, rate: Option<f64>, burst: Option<usize>) -> Self {
+        self.rate = rate;
+        self.burst = burst;
+        self
+    }
+
+    pub fn with_offload(mut self, on: bool) -> Self {
+        self.offload = on;
+        self
+    }
+
+    pub fn with_sweep(mut self, loads: Vec<f64>) -> Self {
+        self.sweep = true;
+        self.loads = loads;
+        self
+    }
+}
+
+/// Parse a policy token (`fcfs|sjf|spf`).
+pub fn parse_policy(s: &str) -> Option<Policy> {
+    match s {
+        "fcfs" => Some(Policy::Fcfs),
+        "sjf" => Some(Policy::ShortestJobFirst),
+        "spf" => Some(Policy::ShortestPromptFirst),
+        _ => None,
+    }
+}
+
+/// Parse a routing token (`rr|ll|affinity`, long names accepted).
+pub fn parse_route(s: &str) -> Option<Routing> {
+    match s {
+        "rr" | "round-robin" => Some(Routing::RoundRobin),
+        "ll" | "least-loaded" => Some(Routing::LeastLoaded),
+        "affinity" | "session-affinity" => Some(Routing::SessionAffinity),
+        _ => None,
+    }
+}
+
+/// Short routing token, the `--route` vocabulary (serialization form).
+pub fn route_token(r: Routing) -> &'static str {
+    match r {
+        Routing::RoundRobin => "rr",
+        Routing::LeastLoaded => "ll",
+        Routing::SessionAffinity => "affinity",
+    }
+}
+
+/// A declarative experiment.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Scenario {
+    Simulate(SimulateParams),
+    Sweep(SweepParams),
+    Breakdown(BreakdownParams),
+    Power(PowerParams),
+    Area(AreaParams),
+    Serve(ServeParams),
+}
+
+impl Scenario {
+    /// Kind tag used in suite files and provenance.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Scenario::Simulate(_) => "simulate",
+            Scenario::Sweep(_) => "sweep",
+            Scenario::Breakdown(_) => "breakdown",
+            Scenario::Power(_) => "power",
+            Scenario::Area(_) => "area",
+            Scenario::Serve(_) => "serve",
+        }
+    }
+
+    /// Tag naming the `BENCH_<tag>.json` file outcomes accumulate into
+    /// (paper-figure tags where the scenario reproduces a figure).
+    pub fn bench_tag(&self) -> &'static str {
+        match self {
+            Scenario::Simulate(_) => "simulate",
+            Scenario::Sweep(_) => "fig11",
+            Scenario::Breakdown(_) => "fig03",
+            Scenario::Power(_) => "fig15",
+            Scenario::Area(_) => "tab03",
+            Scenario::Serve(_) => "serve",
+        }
+    }
+
+    /// The scenario's config selector.
+    pub fn config(&self) -> &ConfigSel {
+        match self {
+            Scenario::Simulate(p) => &p.config,
+            Scenario::Sweep(p) => &p.config,
+            Scenario::Breakdown(p) => &p.config,
+            Scenario::Power(p) => &p.config,
+            Scenario::Area(p) => &p.config,
+            Scenario::Serve(p) => &p.config,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_sel_resolves_presets_and_overrides() {
+        let cfg = ConfigSel::default().resolve().unwrap();
+        assert_eq!(cfg.parallelism.p_sub, 4);
+        let cfg = ConfigSel::preset("mini")
+            .with_p_sub(2)
+            .with_override("lut.sections", "128")
+            .resolve()
+            .unwrap();
+        assert_eq!(cfg.model.name, "gpt2-mini");
+        assert_eq!(cfg.parallelism.p_sub, 2);
+        assert_eq!(cfg.lut.sections, 128);
+    }
+
+    #[test]
+    fn config_sel_rejects_bad_inputs_without_panicking() {
+        assert!(matches!(
+            ConfigSel::preset("huge").resolve(),
+            Err(ScenarioError::UnknownPreset(_))
+        ));
+        assert!(matches!(
+            ConfigSel::default().with_p_sub(8).resolve(),
+            Err(ScenarioError::BadPSub { p_sub: 8, max: 4 })
+        ));
+        assert!(matches!(
+            ConfigSel::default()
+                .with_override("p_subb", "4")
+                .resolve(),
+            Err(ScenarioError::Config(_))
+        ));
+    }
+
+    #[test]
+    fn builders_cover_the_cli_surface() {
+        let s = ServeParams::default()
+            .with_engine(EngineKind::Cluster)
+            .with_backend(BackendKind::Hetero)
+            .with_policy(Policy::ShortestJobFirst)
+            .with_route(Routing::LeastLoaded)
+            .with_workload(64, 7)
+            .with_cluster(2, 4)
+            .with_prefill_chunk(Some(32))
+            .with_rate(Some(200.0), Some(4));
+        assert_eq!(s.engine, EngineKind::Cluster);
+        assert_eq!(s.devices, 2);
+        assert_eq!(s.rate, Some(200.0));
+        let sweep = ServeParams::default().with_sweep(vec![100.0]);
+        assert!(sweep.sweep);
+        assert_eq!(sweep.loads, vec![100.0]);
+    }
+
+    #[test]
+    fn kind_and_tag_cover_every_variant() {
+        let all = [
+            Scenario::Simulate(SimulateParams::default()),
+            Scenario::Sweep(SweepParams::default()),
+            Scenario::Breakdown(BreakdownParams::default()),
+            Scenario::Power(PowerParams::default()),
+            Scenario::Area(AreaParams::default()),
+            Scenario::Serve(ServeParams::default()),
+        ];
+        let kinds: Vec<&str> = all.iter().map(|s| s.kind()).collect();
+        assert_eq!(
+            kinds,
+            vec!["simulate", "sweep", "breakdown", "power", "area", "serve"]
+        );
+        let tags: Vec<&str> = all.iter().map(|s| s.bench_tag()).collect();
+        assert_eq!(
+            tags,
+            vec!["simulate", "fig11", "fig03", "fig15", "tab03", "serve"]
+        );
+        assert_eq!(all[0].config().preset, "paper");
+    }
+
+    #[test]
+    fn token_parsers_round_trip() {
+        for p in [Policy::Fcfs, Policy::ShortestJobFirst, Policy::ShortestPromptFirst] {
+            assert_eq!(parse_policy(p.name()), Some(p));
+        }
+        for r in [
+            Routing::RoundRobin,
+            Routing::LeastLoaded,
+            Routing::SessionAffinity,
+        ] {
+            assert_eq!(parse_route(route_token(r)), Some(r));
+            assert_eq!(parse_route(r.name()), Some(r));
+        }
+        for e in [EngineKind::Seq, EngineKind::Batch, EngineKind::Cluster] {
+            assert_eq!(EngineKind::parse(e.name()), Some(e));
+        }
+        assert_eq!(parse_policy("lifo"), None);
+        assert_eq!(parse_route("random"), None);
+    }
+}

@@ -1,0 +1,240 @@
+//! Structured experiment results.
+//!
+//! Every scenario run yields one [`Outcome`]: named summary metrics
+//! (value + unit), an optional row grid (the table body), and
+//! [`Provenance`] — which config preset, `P_Sub`, backend and seed
+//! produced the numbers. Outcomes are what the sinks render (text table,
+//! JSON, CSV) and what `BENCH_*.json` files accumulate, so downstream
+//! tooling never scrapes `println!` output.
+
+/// Version stamp carried by every serialized outcome. Bump on any
+/// field rename/removal; additions are backward compatible.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// A typed cell/metric value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Num(f64),
+    Text(String),
+    Bool(bool),
+}
+
+impl Value {
+    /// Numeric view (ints widen; text/bool are `None`).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+}
+
+impl From<usize> for Value {
+    fn from(v: usize) -> Self {
+        Value::Int(v as i64)
+    }
+}
+
+impl From<u64> for Value {
+    fn from(v: u64) -> Self {
+        Value::Int(v as i64)
+    }
+}
+
+impl From<i64> for Value {
+    fn from(v: i64) -> Self {
+        Value::Int(v)
+    }
+}
+
+impl From<f64> for Value {
+    fn from(v: f64) -> Self {
+        Value::Num(v)
+    }
+}
+
+impl From<&str> for Value {
+    fn from(v: &str) -> Self {
+        Value::Text(v.to_string())
+    }
+}
+
+impl From<String> for Value {
+    fn from(v: String) -> Self {
+        Value::Text(v)
+    }
+}
+
+impl From<bool> for Value {
+    fn from(v: bool) -> Self {
+        Value::Bool(v)
+    }
+}
+
+/// One named summary metric.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Metric {
+    pub name: String,
+    pub value: Value,
+    /// Unit tag (`"s"`, `"tok/s"`, `"x"`, `"frac"`, `"W"`, `"B/s"`,
+    /// `"mm2"`…); `None` for dimensionless counts/labels. Sinks use it
+    /// both for display formatting and as machine-readable metadata.
+    pub unit: Option<String>,
+}
+
+/// One column of the row grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Column {
+    pub name: String,
+    pub unit: Option<String>,
+}
+
+/// Where an outcome's numbers came from.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Provenance {
+    /// Scenario kind (`"simulate"`, `"sweep"`, `"serve"`…).
+    pub scenario: String,
+    /// Config preset the run resolved (`"paper"` / `"mini"`).
+    pub preset: String,
+    /// Resolved subarray-level parallelism.
+    pub p_sub: usize,
+    /// Execution backend, when one applies (serve scenarios).
+    pub backend: Option<String>,
+    /// Workload seed, when one applies.
+    pub seed: Option<u64>,
+    /// The full scenario parameter set, flattened to the same
+    /// `key = value` form the suite files use — enough to re-run the
+    /// exact experiment.
+    pub params: Vec<(String, String)>,
+}
+
+/// A structured experiment result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Outcome {
+    pub schema_version: u32,
+    pub title: String,
+    pub provenance: Provenance,
+    pub metrics: Vec<Metric>,
+    pub columns: Vec<Column>,
+    pub rows: Vec<Vec<Value>>,
+    /// Free-text context lines (paper reference points etc.).
+    pub notes: Vec<String>,
+}
+
+impl Outcome {
+    pub fn new(title: &str, provenance: Provenance) -> Self {
+        Outcome {
+            schema_version: SCHEMA_VERSION,
+            title: title.to_string(),
+            provenance,
+            metrics: Vec::new(),
+            columns: Vec::new(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    /// Add a summary metric.
+    pub fn metric<V: Into<Value>>(&mut self, name: &str, value: V, unit: Option<&str>) {
+        self.metrics.push(Metric {
+            name: name.to_string(),
+            value: value.into(),
+            unit: unit.map(|u| u.to_string()),
+        });
+    }
+
+    /// Declare the row-grid columns as `(name, unit)` pairs.
+    pub fn columns(&mut self, cols: &[(&str, Option<&str>)]) {
+        self.columns = cols
+            .iter()
+            .map(|(n, u)| Column {
+                name: n.to_string(),
+                unit: u.map(|s| s.to_string()),
+            })
+            .collect();
+    }
+
+    /// Append one row (arity must match the declared columns).
+    pub fn row(&mut self, cells: Vec<Value>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, text: &str) {
+        self.notes.push(text.to_string());
+    }
+
+    /// Look up a summary metric's numeric value.
+    pub fn metric_f64(&self, name: &str) -> Option<f64> {
+        self.metrics
+            .iter()
+            .find(|m| m.name == name)
+            .and_then(|m| m.value.as_f64())
+    }
+
+    /// Index of a grid column by name.
+    pub fn column_index(&self, name: &str) -> Option<usize> {
+        self.columns.iter().position(|c| c.name == name)
+    }
+
+    /// Numeric view of one column across all rows.
+    pub fn column_f64(&self, name: &str) -> Vec<f64> {
+        match self.column_index(name) {
+            None => Vec::new(),
+            Some(i) => self
+                .rows
+                .iter()
+                .filter_map(|r| r[i].as_f64())
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prov() -> Provenance {
+        Provenance {
+            scenario: "test".to_string(),
+            preset: "paper".to_string(),
+            p_sub: 4,
+            backend: None,
+            seed: Some(42),
+            params: vec![("kind".to_string(), "test".to_string())],
+        }
+    }
+
+    #[test]
+    fn metrics_and_rows_accumulate() {
+        let mut o = Outcome::new("t", prov());
+        o.metric("speedup", 4.72, Some("x"));
+        o.metric("requests", 16usize, None);
+        o.columns(&[("in", None), ("time", Some("s"))]);
+        o.row(vec![32usize.into(), 0.5.into()]);
+        assert_eq!(o.schema_version, SCHEMA_VERSION);
+        assert_eq!(o.metric_f64("speedup"), Some(4.72));
+        assert_eq!(o.metric_f64("requests"), Some(16.0));
+        assert_eq!(o.metric_f64("absent"), None);
+        assert_eq!(o.column_f64("time"), vec![0.5]);
+        assert_eq!(o.column_index("in"), Some(0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_mismatch_panics() {
+        let mut o = Outcome::new("t", prov());
+        o.columns(&[("a", None), ("b", None)]);
+        o.row(vec![1usize.into()]);
+    }
+
+    #[test]
+    fn value_coercions() {
+        assert_eq!(Value::from(3usize).as_f64(), Some(3.0));
+        assert_eq!(Value::from(2.5).as_f64(), Some(2.5));
+        assert_eq!(Value::from("x").as_f64(), None);
+        assert_eq!(Value::from(true), Value::Bool(true));
+    }
+}

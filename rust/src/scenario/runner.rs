@@ -1,0 +1,615 @@
+//! Scenario execution.
+//!
+//! [`Runner`] is the one place experiments are wired to the simulator
+//! stack: the CLI, the benches and the examples all hand it a
+//! [`Scenario`] and get back a structured [`Outcome`] with the same
+//! numbers the hand-wired code paths used to print. Each variant's
+//! implementation mirrors the paper experiment it reproduces.
+
+use super::outcome::{Outcome, Provenance};
+use super::{EngineKind, Scenario, ScenarioError, ServeParams};
+use crate::baseline::GpuModel;
+use crate::config::SimConfig;
+use crate::coordinator::{Coordinator, PrefillTarget};
+use crate::energy::{AreaModel, EnergyParams, PowerReport};
+use crate::mapper::GenerationSim;
+use crate::serve::sweep::{latency_vs_load, SweepConfig};
+use crate::serve::workload::{requests_from_items, ArrivalPattern};
+use crate::serve::{BackendKind, Cluster, DeviceEngine, ServeMetrics};
+use crate::testutil::RequestMix;
+
+/// Executes scenarios. Stateless — each run resolves its own config.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Runner;
+
+impl Runner {
+    pub fn new() -> Self {
+        Runner
+    }
+
+    /// Run one scenario to a structured outcome.
+    pub fn run(&self, scenario: &Scenario) -> Result<Outcome, ScenarioError> {
+        let cfg = scenario.config().resolve()?;
+        let provenance = Provenance {
+            scenario: scenario.kind().to_string(),
+            preset: scenario.config().preset.clone(),
+            p_sub: cfg.parallelism.p_sub,
+            backend: match scenario {
+                Scenario::Serve(p) => Some(p.backend.name().to_string()),
+                _ => None,
+            },
+            seed: match scenario {
+                Scenario::Serve(p) => Some(p.seed),
+                _ => None,
+            },
+            params: scenario.to_kv(),
+        };
+        match scenario {
+            Scenario::Simulate(p) => Ok(run_simulate(&cfg, provenance, p)),
+            Scenario::Sweep(p) => Ok(run_sweep(&cfg, provenance, p)),
+            Scenario::Breakdown(p) => Ok(run_breakdown(&cfg, provenance, p)),
+            Scenario::Power(p) => run_power(&cfg, provenance, p),
+            Scenario::Area(_) => Ok(run_area(&cfg, provenance)),
+            Scenario::Serve(p) => run_serve(&cfg, provenance, p),
+        }
+    }
+
+    /// Run a whole suite, in order.
+    pub fn run_suite(&self, scenarios: &[Scenario]) -> Result<Vec<Outcome>, ScenarioError> {
+        scenarios.iter().map(|s| self.run(s)).collect()
+    }
+}
+
+fn run_simulate(
+    cfg: &SimConfig,
+    provenance: Provenance,
+    p: &super::SimulateParams,
+) -> Outcome {
+    let mut sim = GenerationSim::new(cfg);
+    sim.set_prefetch(p.prefetch);
+    let r = sim.generate(p.n_in, p.n_out);
+    let tck = cfg.timing.tck_ns;
+    let gpu = GpuModel::titan_rtx().generation_time(&cfg.model, p.n_in, p.n_out);
+    let total = r.seconds(tck);
+    let mut out = Outcome::new(
+        &format!(
+            "SAL-PIM generation — in={} out={} P_Sub={}",
+            p.n_in, p.n_out, cfg.parallelism.p_sub
+        ),
+        provenance,
+    );
+    out.metric("prefill", r.prefill.seconds(tck), Some("s"));
+    out.metric("decode", r.decode.seconds(tck), Some("s"));
+    out.metric("decode_rate", r.decode_tokens_per_sec(tck), Some("tok/s"));
+    out.metric("total", total, Some("s"));
+    out.metric(
+        "avg_internal_bandwidth",
+        r.total().avg_internal_bandwidth(tck) * cfg.hbm.pseudo_channels() as f64,
+        Some("B/s"),
+    );
+    out.metric("gpu_baseline", gpu, Some("s"));
+    out.metric("speedup_vs_gpu", gpu / total, Some("x"));
+    out
+}
+
+fn run_sweep(cfg: &SimConfig, provenance: Provenance, p: &super::SweepParams) -> Outcome {
+    let gpu = GpuModel::titan_rtx();
+    let mut sim = GenerationSim::new(cfg);
+    let mut out = Outcome::new("Fig. 11 — speedup of SAL-PIM vs GPU", provenance);
+    out.columns(&[
+        ("in", None),
+        ("out", None),
+        ("pim", Some("s")),
+        ("gpu", Some("s")),
+        ("speedup", Some("x")),
+    ]);
+    let mut speedups = Vec::new();
+    for &n_in in &p.ins {
+        for &n_out in &p.outs {
+            let pim = sim.generate(n_in, n_out).seconds(cfg.timing.tck_ns);
+            let g = gpu.generation_time(&cfg.model, n_in, n_out);
+            speedups.push(g / pim);
+            out.row(vec![
+                n_in.into(),
+                n_out.into(),
+                pim.into(),
+                g.into(),
+                (g / pim).into(),
+            ]);
+        }
+    }
+    let max = speedups.iter().cloned().fold(0.0f64, f64::max);
+    let avg = if speedups.is_empty() {
+        0.0
+    } else {
+        speedups.iter().sum::<f64>() / speedups.len() as f64
+    };
+    out.metric("max_speedup", max, Some("x"));
+    out.metric("avg_speedup", avg, Some("x"));
+    out.note("paper: max 4.72x / avg 1.83x");
+    out
+}
+
+fn run_breakdown(
+    cfg: &SimConfig,
+    provenance: Provenance,
+    p: &super::BreakdownParams,
+) -> Outcome {
+    let mut sim = GenerationSim::new(cfg);
+    let st = sim.decode_token(p.kv);
+    let mut out = Outcome::new(
+        &format!(
+            "decode iteration breakdown — kv={} P_Sub={}",
+            p.kv, cfg.parallelism.p_sub
+        ),
+        provenance,
+    );
+    out.metric("iteration", st.seconds(cfg.timing.tck_ns), Some("s"));
+    out.columns(&[("phase", None), ("fraction", Some("frac"))]);
+    for (phase, frac) in st.breakdown() {
+        out.row(vec![phase.name().into(), frac.into()]);
+    }
+    out
+}
+
+fn run_power(
+    cfg: &SimConfig,
+    provenance: Provenance,
+    p: &super::PowerParams,
+) -> Result<Outcome, ScenarioError> {
+    let params = EnergyParams::paper();
+    let mut out = Outcome::new(
+        "Fig. 15 — power by subarray-level parallelism",
+        provenance,
+    );
+    out.columns(&[
+        ("p_sub", None),
+        ("act", Some("W")),
+        ("movement", Some("W")),
+        ("logic", Some("W")),
+        ("refresh", Some("W")),
+        ("total", Some("W")),
+        ("budget_fraction", Some("frac")),
+    ]);
+    for &p_sub in &p.p_subs {
+        if !(1..=cfg.salu.max_p_sub).contains(&p_sub) {
+            return Err(ScenarioError::BadPSub {
+                p_sub,
+                max: cfg.salu.max_p_sub,
+            });
+        }
+        let c = cfg.clone().with_p_sub(p_sub);
+        let mut sim = GenerationSim::new(&c);
+        let r = sim.generate(p.n_in, p.n_out);
+        let rep = PowerReport::from_stats(&c, &params, &r.total());
+        let s = rep.seconds;
+        out.row(vec![
+            p_sub.into(),
+            (rep.act_j / s).into(),
+            (rep.movement_j / s).into(),
+            (rep.logic_j / s).into(),
+            (rep.refresh_j / s).into(),
+            rep.avg_power_w().into(),
+            rep.budget_fraction().into(),
+        ]);
+    }
+    out.note("paper: P_Sub=4 exceeds the 60 W HBM2 budget by 24%");
+    Ok(out)
+}
+
+fn run_area(cfg: &SimConfig, provenance: Provenance) -> Outcome {
+    let a = AreaModel::new(cfg);
+    let mut out = Outcome::new("Table 3 — area per channel", provenance);
+    out.columns(&[("unit", None), ("count", None), ("area", Some("mm2"))]);
+    out.row(vec![
+        "S-ALU".into(),
+        a.salus_per_channel.into(),
+        a.salu_area_mm2().into(),
+    ]);
+    out.row(vec![
+        "Bank-level unit".into(),
+        a.bank_units_per_channel.into(),
+        a.bank_unit_area_mm2().into(),
+    ]);
+    out.row(vec![
+        "C-ALU".into(),
+        a.calus_per_channel.into(),
+        a.calu_area_mm2().into(),
+    ]);
+    out.metric("total_added", a.total_added_mm2(), Some("mm2"));
+    out.metric("overhead_vs_channel", a.overhead_fraction(), Some("frac"));
+    out.note("paper: 4.81% overhead vs an HBM2 channel (threshold 25%)");
+    out
+}
+
+/// Push the standard serving metrics onto an outcome.
+fn serve_metrics(out: &mut Outcome, m: &ServeMetrics) {
+    out.metric("requests", m.requests, None);
+    out.metric("total_tokens", m.total_tokens, None);
+    out.metric("makespan", m.makespan_s, Some("s"));
+    out.metric("throughput", m.throughput_tok_s, Some("tok/s"));
+    out.metric("p50_latency", m.p50_latency_s, Some("s"));
+    out.metric("p95_latency", m.p95_latency_s, Some("s"));
+    out.metric("p50_ttft", m.p50_ttft_s, Some("s"));
+    out.metric("p95_ttft", m.p95_ttft_s, Some("s"));
+    out.metric("mean_queue", m.mean_queue_s, Some("s"));
+}
+
+fn arrival_pattern(p: &ServeParams) -> Result<ArrivalPattern, ScenarioError> {
+    if p.at_once {
+        return Ok(ArrivalPattern::AtOnce);
+    }
+    match (p.rate, p.burst) {
+        (None, None) => Ok(ArrivalPattern::Jittered { scale_s: 0.05 }),
+        (None, Some(_)) => Err(ScenarioError::Unsupported(
+            "`burst` needs `rate` (bursty arrivals are Poisson bursts)".to_string(),
+        )),
+        (Some(rate), burst) => {
+            if rate <= 0.0 {
+                return Err(ScenarioError::Unsupported(format!(
+                    "arrival rate must be positive, got {rate}"
+                )));
+            }
+            Ok(match burst {
+                Some(b) => ArrivalPattern::Bursty {
+                    rate_rps: rate,
+                    burst: b,
+                },
+                None => ArrivalPattern::Poisson { rate_rps: rate },
+            })
+        }
+    }
+}
+
+fn run_serve(
+    cfg: &SimConfig,
+    provenance: Provenance,
+    p: &ServeParams,
+) -> Result<Outcome, ScenarioError> {
+    if let Some(chunk) = p.prefill_chunk {
+        if chunk < 1 {
+            return Err(ScenarioError::Unsupported(
+                "prefill_chunk must be at least 1 token".to_string(),
+            ));
+        }
+    }
+    if p.sweep {
+        return run_serve_sweep(cfg, provenance, p);
+    }
+    let pattern = arrival_pattern(p)?;
+    let items = RequestMix::paper(p.seed).take(p.requests);
+    let requests = requests_from_items(&items, pattern, p.n_sessions);
+
+    match p.engine {
+        EngineKind::Seq => {
+            if p.backend != BackendKind::SalPim {
+                return Err(ScenarioError::Unsupported(format!(
+                    "engine seq is the paper-faithful PIM coordinator; pick batch|cluster \
+                     for backend {} (or offload for GPU prefill)",
+                    p.backend.name()
+                )));
+            }
+            if p.prefill_chunk.is_some() {
+                return Err(ScenarioError::Unsupported(
+                    "prefill_chunk needs the batching scheduler; pick engine batch|cluster"
+                        .to_string(),
+                ));
+            }
+            let mut coord = Coordinator::new(cfg).with_policy(p.policy);
+            if p.offload {
+                coord = coord.with_prefill_target(PrefillTarget::GpuOffload);
+            }
+            for r in requests {
+                coord.submit_request(r);
+            }
+            let m = ServeMetrics::from_completions(&coord.run());
+            let mut out = Outcome::new(
+                &format!(
+                    "serve — engine=seq policy={} offload={} arrivals={}",
+                    p.policy.name(),
+                    p.offload,
+                    pattern.name()
+                ),
+                provenance,
+            );
+            serve_metrics(&mut out, &m);
+            Ok(out)
+        }
+        EngineKind::Batch => {
+            if p.offload {
+                return Err(ScenarioError::Unsupported(
+                    "offload applies to engine seq only (use backend hetero for \
+                     GPU prefill under batching)"
+                        .to_string(),
+                ));
+            }
+            let mut eng = DeviceEngine::with_backend(p.backend.build(cfg), p.max_batch)
+                .with_policy(p.policy)
+                .with_prefill_chunk(p.prefill_chunk);
+            for r in requests {
+                eng.submit(r);
+            }
+            let backend_name = eng.backend_name();
+            let m = ServeMetrics::from_completions(&eng.run());
+            let rep = eng.report();
+            let mut out = Outcome::new(
+                &format!(
+                    "serve — engine=batch backend={} policy={} batch={} chunk={} arrivals={}",
+                    backend_name,
+                    p.policy.name(),
+                    p.max_batch,
+                    match p.prefill_chunk {
+                        Some(c) => c.to_string(),
+                        None => "inline".to_string(),
+                    },
+                    pattern.name()
+                ),
+                provenance,
+            );
+            serve_metrics(&mut out, &m);
+            out.metric("kv_peak_utilization", rep.kv_peak_utilization, Some("frac"));
+            out.metric("max_batch_seen", rep.max_batch_seen, None);
+            out.metric("decode_steps", rep.decode_steps, None);
+            out.metric("rejected", rep.rejected, None);
+            Ok(out)
+        }
+        EngineKind::Cluster => {
+            if p.offload {
+                return Err(ScenarioError::Unsupported(
+                    "offload applies to engine seq only".to_string(),
+                ));
+            }
+            let mut cluster =
+                Cluster::homogeneous(cfg, p.backend, p.devices, p.max_batch, p.route)
+                    .with_policy(p.policy)
+                    .with_prefill_chunk(p.prefill_chunk);
+            for r in requests {
+                cluster.submit(r);
+            }
+            let done = cluster.run();
+            let m = ServeMetrics::from_completions(&done);
+            let mut out = Outcome::new(
+                &format!(
+                    "serve — engine=cluster backend={} devices={} batch={} route={} arrivals={}",
+                    p.backend.name(),
+                    p.devices,
+                    p.max_batch,
+                    p.route.name(),
+                    pattern.name()
+                ),
+                provenance,
+            );
+            serve_metrics(&mut out, &m);
+            out.metric("rejected", cluster.rejected(), None);
+            out.columns(&[
+                ("device", None),
+                ("backend", None),
+                ("requests", None),
+                ("throughput", Some("tok/s")),
+                ("p95_latency", Some("s")),
+                ("kv_peak_utilization", Some("frac")),
+            ]);
+            let per = cluster.per_device_metrics(&done);
+            let reps = cluster.per_device_reports();
+            let names = cluster.backend_names();
+            for (i, (pm, rep)) in per.iter().zip(&reps).enumerate() {
+                out.row(vec![
+                    i.into(),
+                    names[i].clone().into(),
+                    pm.requests.into(),
+                    pm.throughput_tok_s.into(),
+                    pm.p95_latency_s.into(),
+                    rep.kv_peak_utilization.into(),
+                ]);
+            }
+            Ok(out)
+        }
+    }
+}
+
+fn run_serve_sweep(
+    cfg: &SimConfig,
+    provenance: Provenance,
+    p: &ServeParams,
+) -> Result<Outcome, ScenarioError> {
+    if p.loads.is_empty() {
+        return Err(ScenarioError::Unsupported(
+            "sweep mode needs at least one offered load".to_string(),
+        ));
+    }
+    let sc = SweepConfig {
+        devices: p.devices,
+        max_batch: p.max_batch,
+        routing: p.route,
+        policy: p.policy,
+        requests: p.requests,
+        seed: p.seed,
+        n_sessions: p.n_sessions,
+        backend: p.backend,
+        prefill_chunk: p.prefill_chunk,
+    };
+    let pts = latency_vs_load(cfg, &sc, &p.loads);
+    let mut out = Outcome::new(
+        &format!(
+            "latency vs offered load — {} devices x batch {}, {}, backend {}, {} requests",
+            sc.devices,
+            sc.max_batch,
+            sc.routing.name(),
+            sc.backend.name(),
+            sc.requests
+        ),
+        provenance,
+    );
+    out.columns(&[
+        ("offered", Some("req/s")),
+        ("throughput", Some("tok/s")),
+        ("p50_latency", Some("s")),
+        ("p95_latency", Some("s")),
+        ("p95_ttft", Some("s")),
+        ("rejected", None),
+    ]);
+    for pt in &pts {
+        out.row(vec![
+            pt.offered_rps.into(),
+            pt.metrics.throughput_tok_s.into(),
+            pt.metrics.p50_latency_s.into(),
+            pt.metrics.p95_latency_s.into(),
+            pt.metrics.p95_ttft_s.into(),
+            pt.rejected.into(),
+        ]);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::{
+        AreaParams, BreakdownParams, ConfigSel, PowerParams, SimulateParams, SweepParams,
+    };
+
+    fn mini() -> ConfigSel {
+        ConfigSel::preset("mini")
+    }
+
+    #[test]
+    fn simulate_outcome_matches_the_direct_simulation() {
+        let scenario = Scenario::Simulate(
+            SimulateParams::default().with_io(8, 4).with_config(mini()),
+        );
+        let out = Runner::new().run(&scenario).unwrap();
+        let cfg = mini().resolve().unwrap();
+        let expect = GenerationSim::new(&cfg).generate(8, 4).seconds(cfg.timing.tck_ns);
+        assert!((out.metric_f64("total").unwrap() - expect).abs() < 1e-12);
+        assert!(out.metric_f64("speedup_vs_gpu").unwrap() > 0.0);
+        assert_eq!(out.provenance.scenario, "simulate");
+        assert_eq!(out.provenance.preset, "mini");
+        assert_eq!(out.provenance.backend, None);
+    }
+
+    #[test]
+    fn sweep_outcome_has_the_full_grid() {
+        let scenario = Scenario::Sweep(
+            SweepParams::default()
+                .with_grid(vec![8, 16], vec![1, 4, 8])
+                .with_config(mini()),
+        );
+        let out = Runner::new().run(&scenario).unwrap();
+        assert_eq!(out.rows.len(), 6);
+        let speedups = out.column_f64("speedup");
+        let max = out.metric_f64("max_speedup").unwrap();
+        assert!((speedups.iter().cloned().fold(0.0f64, f64::max) - max).abs() < 1e-12);
+    }
+
+    #[test]
+    fn breakdown_fractions_sum_to_one() {
+        let scenario =
+            Scenario::Breakdown(BreakdownParams::default().with_kv(32).with_config(mini()));
+        let out = Runner::new().run(&scenario).unwrap();
+        let total: f64 = out.column_f64("fraction").iter().sum();
+        assert!((total - 1.0).abs() < 1e-6, "fractions sum to {total}");
+        assert!(out.metric_f64("iteration").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn power_rows_follow_p_sub_order_and_validate() {
+        let scenario = Scenario::Power(
+            PowerParams::default()
+                .with_io(8, 4)
+                .with_p_subs(vec![1, 4])
+                .with_config(mini()),
+        );
+        let out = Runner::new().run(&scenario).unwrap();
+        let fracs = out.column_f64("budget_fraction");
+        assert_eq!(fracs.len(), 2);
+        assert!(fracs[0] < fracs[1], "power grows with P_Sub: {fracs:?}");
+        let bad = Scenario::Power(PowerParams::default().with_p_subs(vec![9]));
+        assert!(matches!(
+            Runner::new().run(&bad),
+            Err(ScenarioError::BadPSub { .. })
+        ));
+    }
+
+    #[test]
+    fn area_outcome_reports_overhead() {
+        let out = Runner::new()
+            .run(&Scenario::Area(AreaParams::default()))
+            .unwrap();
+        let overhead = out.metric_f64("overhead_vs_channel").unwrap();
+        assert!(overhead > 0.0 && overhead < 0.25);
+        assert_eq!(out.rows.len(), 3);
+    }
+
+    #[test]
+    fn serve_engines_agree_on_simulated_tokens() {
+        let base = ServeParams::default()
+            .with_config(mini())
+            .with_workload(6, 11)
+            .with_at_once(true);
+        let seq = Runner::new()
+            .run(&Scenario::Serve(base.clone()))
+            .unwrap();
+        let batch = Runner::new()
+            .run(&Scenario::Serve(
+                base.clone().with_engine(EngineKind::Batch),
+            ))
+            .unwrap();
+        assert_eq!(
+            seq.metric_f64("total_tokens"),
+            batch.metric_f64("total_tokens"),
+            "token conservation across engines"
+        );
+        assert!(batch.metric_f64("kv_peak_utilization").is_some());
+        assert_eq!(batch.provenance.seed, Some(11));
+    }
+
+    #[test]
+    fn serve_cluster_outcome_has_per_device_rows() {
+        let scenario = Scenario::Serve(
+            ServeParams::default()
+                .with_config(mini())
+                .with_engine(EngineKind::Cluster)
+                .with_cluster(2, 4)
+                .with_workload(8, 3)
+                .with_at_once(true),
+        );
+        let out = Runner::new().run(&scenario).unwrap();
+        assert_eq!(out.rows.len(), 2);
+        let per_device: f64 = out.column_f64("requests").iter().sum();
+        assert_eq!(per_device as usize, 8);
+    }
+
+    #[test]
+    fn serve_sweep_outcome_has_one_row_per_load() {
+        let scenario = Scenario::Serve(
+            ServeParams::default()
+                .with_config(mini())
+                .with_cluster(1, 4)
+                .with_workload(6, 5)
+                .with_sweep(vec![50.0, 5000.0]),
+        );
+        let out = Runner::new().run(&scenario).unwrap();
+        assert_eq!(out.rows.len(), 2);
+        let p95 = out.column_f64("p95_latency");
+        assert!(p95[1] >= p95[0], "load must not improve tails: {p95:?}");
+    }
+
+    #[test]
+    fn unsupported_combinations_are_rejected() {
+        let gpu_seq = ServeParams::default().with_backend(BackendKind::Gpu);
+        assert!(matches!(
+            Runner::new().run(&Scenario::Serve(gpu_seq)),
+            Err(ScenarioError::Unsupported(_))
+        ));
+        let chunk_seq = ServeParams::default().with_prefill_chunk(Some(32));
+        assert!(Runner::new().run(&Scenario::Serve(chunk_seq)).is_err());
+        let burst_only = ServeParams::default().with_rate(None, Some(4));
+        assert!(Runner::new().run(&Scenario::Serve(burst_only)).is_err());
+        let zero_rate = ServeParams::default().with_rate(Some(0.0), None);
+        assert!(Runner::new().run(&Scenario::Serve(zero_rate)).is_err());
+        let offload_batch = ServeParams::default()
+            .with_engine(EngineKind::Batch)
+            .with_offload(true);
+        assert!(Runner::new().run(&Scenario::Serve(offload_batch)).is_err());
+    }
+}

@@ -1,0 +1,386 @@
+//! Outcome rendering: text tables, JSON, CSV, `BENCH_*.json` files.
+//!
+//! One [`Outcome`] feeds every consumer: the CLI renders it as the
+//! familiar [`crate::report::Table`] text (unit-aware cell formatting),
+//! `--json` emits a schema-versioned JSON object, `--out file.csv`
+//! emits the raw machine values, and the bench harness accumulates
+//! outcomes into `BENCH_<tag>.json` trajectory files. Because every
+//! rendering reads the same record, the JSON metrics always match the
+//! text tables by construction.
+
+use super::outcome::{Column, Metric, Outcome, Value};
+use crate::report::{fmt_bw, fmt_pct, fmt_time, fmt_x, Table};
+use std::fmt::Write as _;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Format a value for human tables, using the column/metric unit.
+fn display_cell(value: &Value, unit: Option<&str>) -> String {
+    match value {
+        Value::Text(s) => s.clone(),
+        Value::Bool(b) => b.to_string(),
+        Value::Int(i) => i.to_string(),
+        Value::Num(x) => match unit {
+            Some("s") => fmt_time(*x),
+            Some("x") => fmt_x(*x),
+            Some("frac") => fmt_pct(*x),
+            Some("B/s") => fmt_bw(*x),
+            Some("tok/s") | Some("W") => format!("{x:.1}"),
+            Some("mm2") => format!("{x:.2}"),
+            Some("req/s") => format!("{x:.0}"),
+            _ => format!("{x:.3}"),
+        },
+    }
+}
+
+/// Units the display formatter embeds into the cell text itself.
+fn unit_embedded_in_cell(unit: &str) -> bool {
+    matches!(unit, "s" | "x" | "frac" | "B/s")
+}
+
+fn header_of(col: &Column) -> String {
+    match &col.unit {
+        Some(u) if !unit_embedded_in_cell(u) => format!("{} ({u})", col.name),
+        _ => col.name.clone(),
+    }
+}
+
+/// Render the outcome's row grid as a [`Table`].
+pub fn to_table(outcome: &Outcome) -> Table {
+    let headers: Vec<String> = outcome.columns.iter().map(header_of).collect();
+    let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&outcome.title, &header_refs);
+    for row in &outcome.rows {
+        let cells: Vec<String> = row
+            .iter()
+            .zip(&outcome.columns)
+            .map(|(v, c)| display_cell(v, c.unit.as_deref()))
+            .collect();
+        t.row(&cells);
+    }
+    t
+}
+
+fn metric_line(m: &Metric) -> String {
+    let shown = display_cell(&m.value, m.unit.as_deref());
+    match &m.unit {
+        Some(u) if !unit_embedded_in_cell(u) => format!("{}: {} {}", m.name, shown, u),
+        _ => format!("{}: {}", m.name, shown),
+    }
+}
+
+/// The full human rendering: table (if any rows), metrics, notes.
+pub fn render_text(outcome: &Outcome) -> String {
+    let mut out = String::new();
+    if outcome.rows.is_empty() {
+        let _ = writeln!(out, "## {}", outcome.title);
+    } else {
+        out.push_str(&to_table(outcome).render());
+    }
+    for m in &outcome.metrics {
+        let _ = writeln!(out, "{}", metric_line(m));
+    }
+    for n in &outcome.notes {
+        let _ = writeln!(out, "note: {n}");
+    }
+    out
+}
+
+/// JSON string escaping (quotes, backslashes, control characters).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_value(v: &Value) -> String {
+    match v {
+        Value::Int(i) => i.to_string(),
+        Value::Num(x) if x.is_finite() => x.to_string(),
+        Value::Num(_) => "null".to_string(),
+        Value::Text(s) => format!("\"{}\"", json_escape(s)),
+        Value::Bool(b) => b.to_string(),
+    }
+}
+
+fn json_opt_str(s: &Option<String>) -> String {
+    match s {
+        Some(s) => format!("\"{}\"", json_escape(s)),
+        None => "null".to_string(),
+    }
+}
+
+/// Serialize one outcome as a JSON object (schema-versioned).
+pub fn to_json(outcome: &Outcome) -> String {
+    let p = &outcome.provenance;
+    let params: Vec<String> = p
+        .params
+        .iter()
+        .map(|(k, v)| format!("\"{}\": \"{}\"", json_escape(k), json_escape(v)))
+        .collect();
+    let metrics: Vec<String> = outcome
+        .metrics
+        .iter()
+        .map(|m| {
+            format!(
+                "{{\"name\": \"{}\", \"value\": {}, \"unit\": {}}}",
+                json_escape(&m.name),
+                json_value(&m.value),
+                json_opt_str(&m.unit)
+            )
+        })
+        .collect();
+    let columns: Vec<String> = outcome
+        .columns
+        .iter()
+        .map(|c| {
+            format!(
+                "{{\"name\": \"{}\", \"unit\": {}}}",
+                json_escape(&c.name),
+                json_opt_str(&c.unit)
+            )
+        })
+        .collect();
+    let rows: Vec<String> = outcome
+        .rows
+        .iter()
+        .map(|r| {
+            let cells: Vec<String> = r.iter().map(json_value).collect();
+            format!("[{}]", cells.join(", "))
+        })
+        .collect();
+    let notes: Vec<String> = outcome
+        .notes
+        .iter()
+        .map(|n| format!("\"{}\"", json_escape(n)))
+        .collect();
+    format!(
+        "{{\"schema_version\": {}, \"scenario\": \"{}\", \"title\": \"{}\", \
+         \"provenance\": {{\"preset\": \"{}\", \"p_sub\": {}, \"backend\": {}, \
+         \"seed\": {}, \"params\": {{{}}}}}, \
+         \"metrics\": [{}], \"columns\": [{}], \"rows\": [{}], \"notes\": [{}]}}",
+        outcome.schema_version,
+        json_escape(&p.scenario),
+        json_escape(&outcome.title),
+        json_escape(&p.preset),
+        p.p_sub,
+        json_opt_str(&p.backend),
+        p.seed.map(|s| s.to_string()).unwrap_or_else(|| "null".to_string()),
+        params.join(", "),
+        metrics.join(", "),
+        columns.join(", "),
+        rows.join(", "),
+        notes.join(", ")
+    )
+}
+
+fn csv_cell(v: &Value) -> String {
+    match v {
+        Value::Text(s) if s.contains(',') || s.contains('"') => {
+            format!("\"{}\"", s.replace('"', "\"\""))
+        }
+        Value::Text(s) => s.clone(),
+        Value::Int(i) => i.to_string(),
+        Value::Num(x) => x.to_string(),
+        Value::Bool(b) => b.to_string(),
+    }
+}
+
+/// CSV of the row grid (raw machine values, `name (unit)` headers).
+/// Metric-only outcomes (no row grid) fall back to `metric,value,unit`
+/// rows so `--out file.csv` never writes an empty file.
+pub fn to_csv(outcome: &Outcome) -> String {
+    let mut out = String::new();
+    if outcome.columns.is_empty() {
+        let _ = writeln!(out, "metric,value,unit");
+        for m in &outcome.metrics {
+            let _ = writeln!(
+                out,
+                "{},{},{}",
+                csv_cell(&Value::Text(m.name.clone())),
+                csv_cell(&m.value),
+                m.unit.as_deref().unwrap_or("")
+            );
+        }
+        return out;
+    }
+    let headers: Vec<String> = outcome.columns.iter().map(header_of).collect();
+    let _ = writeln!(out, "{}", headers.join(","));
+    for row in &outcome.rows {
+        let cells: Vec<String> = row.iter().map(csv_cell).collect();
+        let _ = writeln!(out, "{}", cells.join(","));
+    }
+    out
+}
+
+/// The `BENCH_<tag>.json` document: every outcome of one tag.
+pub fn bench_json(tag: &str, outcomes: &[&Outcome]) -> String {
+    let body: Vec<String> = outcomes.iter().map(|o| to_json(o)).collect();
+    format!(
+        "{{\"schema_version\": {}, \"bench\": \"{}\", \"outcomes\": [\n{}\n]}}\n",
+        super::SCHEMA_VERSION,
+        json_escape(tag),
+        body.join(",\n")
+    )
+}
+
+/// Write one tag's bench file into `dir`; returns its path.
+pub fn write_bench_file(dir: &Path, tag: &str, outcomes: &[&Outcome]) -> io::Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("BENCH_{tag}.json"));
+    std::fs::write(&path, bench_json(tag, outcomes))?;
+    Ok(path)
+}
+
+/// Group `(tag, outcome)` pairs by tag (first-seen order) and write one
+/// bench file per tag; returns the written paths.
+pub fn write_bench_files(
+    dir: &Path,
+    tagged: &[(&str, &Outcome)],
+) -> io::Result<Vec<PathBuf>> {
+    let mut tags: Vec<&str> = Vec::new();
+    for (tag, _) in tagged {
+        if !tags.contains(tag) {
+            tags.push(tag);
+        }
+    }
+    let mut paths = Vec::new();
+    for tag in tags {
+        let group: Vec<&Outcome> = tagged
+            .iter()
+            .filter(|(t, _)| *t == tag)
+            .map(|(_, o)| *o)
+            .collect();
+        paths.push(write_bench_file(dir, tag, &group)?);
+    }
+    Ok(paths)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::outcome::Provenance;
+
+    fn sample() -> Outcome {
+        let mut o = Outcome::new(
+            "Fig. T — sample",
+            Provenance {
+                scenario: "sweep".to_string(),
+                preset: "paper".to_string(),
+                p_sub: 4,
+                backend: Some("salpim".to_string()),
+                seed: Some(42),
+                params: vec![("kind".to_string(), "sweep".to_string())],
+            },
+        );
+        o.metric("max_speedup", 4.72, Some("x"));
+        o.metric("requests", 16usize, None);
+        o.columns(&[
+            ("in", None),
+            ("time", Some("s")),
+            ("speedup", Some("x")),
+            ("power", Some("W")),
+        ]);
+        o.row(vec![32usize.into(), 0.0025.into(), 4.72.into(), 61.25.into()]);
+        o.note("paper: 4.72x");
+        o
+    }
+
+    #[test]
+    fn table_uses_unit_aware_formatting() {
+        let t = to_table(&sample());
+        let r = t.render();
+        assert!(r.contains("2.500 ms"), "{r}");
+        assert!(r.contains("4.72×"), "{r}");
+        assert!(r.contains("61.2"), "{r}");
+        assert!(r.contains("power (W)"), "{r}");
+        // Embedded units don't repeat in the header.
+        assert!(!r.contains("time (s)"), "{r}");
+    }
+
+    #[test]
+    fn render_text_includes_metrics_and_notes() {
+        let text = render_text(&sample());
+        assert!(text.contains("## Fig. T — sample"));
+        assert!(text.contains("max_speedup: 4.72×"));
+        assert!(text.contains("requests: 16"));
+        assert!(text.contains("note: paper: 4.72x"));
+    }
+
+    #[test]
+    fn json_is_schema_versioned_and_quotes_escape() {
+        let mut o = sample();
+        o.note("a \"quoted\" note\nwith newline");
+        let j = to_json(&o);
+        assert!(j.starts_with("{\"schema_version\": 1, \"scenario\": \"sweep\""));
+        assert!(j.contains("\"p_sub\": 4"));
+        assert!(j.contains("\"backend\": \"salpim\""));
+        assert!(j.contains("\"seed\": 42"));
+        assert!(j.contains("\\\"quoted\\\""));
+        assert!(j.contains("\\n"));
+        assert!(j.contains("\"rows\": [[32, 0.0025, 4.72, 61.25]]"));
+        // Balanced braces/brackets (cheap well-formedness probe).
+        assert_eq!(
+            j.matches('{').count(),
+            j.matches('}').count(),
+            "unbalanced braces: {j}"
+        );
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn nan_serializes_as_null() {
+        let mut o = sample();
+        o.metric("bad", f64::NAN, None);
+        let j = to_json(&o);
+        assert!(j.contains("\"name\": \"bad\", \"value\": null"));
+    }
+
+    #[test]
+    fn csv_has_raw_values() {
+        let csv = to_csv(&sample());
+        let mut lines = csv.lines();
+        assert_eq!(lines.next(), Some("in,time,speedup,power (W)"));
+        assert_eq!(lines.next(), Some("32,0.0025,4.72,61.25"));
+    }
+
+    #[test]
+    fn csv_falls_back_to_metrics_without_a_grid() {
+        let mut o = sample();
+        o.columns.clear();
+        o.rows.clear();
+        let csv = to_csv(&o);
+        let mut lines = csv.lines();
+        assert_eq!(lines.next(), Some("metric,value,unit"));
+        assert_eq!(lines.next(), Some("max_speedup,4.72,x"));
+        assert_eq!(lines.next(), Some("requests,16,"));
+        assert_eq!(lines.next(), None);
+    }
+
+    #[test]
+    fn bench_files_group_by_tag() {
+        let dir = std::env::temp_dir().join("salpim_sink_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let a = sample();
+        let b = sample();
+        let paths =
+            write_bench_files(&dir, &[("fig11", &a), ("serve", &b), ("fig11", &b)]).unwrap();
+        assert_eq!(paths.len(), 2);
+        let fig11 = std::fs::read_to_string(dir.join("BENCH_fig11.json")).unwrap();
+        assert!(fig11.contains("\"bench\": \"fig11\""));
+        assert_eq!(fig11.matches("\"schema_version\": 1").count(), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,242 @@
+//! Scenario round-trip and suite-level integration tests.
+//!
+//! * property-style serialize → parse equality over randomized
+//!   scenarios (every kind, every optional field toggled);
+//! * parse → run → serialize → parse stability for runnable scenarios;
+//! * the checked-in `scenarios/smoke.toml` suite parses, runs, and its
+//!   outcomes group into schema-versioned `BENCH_*.json` files;
+//! * scenario outcomes agree with the direct simulator numbers, so
+//!   `--json` metrics match the text tables the CLI prints.
+
+use sal_pim::config::SimConfig;
+use sal_pim::mapper::GenerationSim;
+use sal_pim::scenario::{
+    file::{parse_suite, suite_to_toml},
+    sink, BreakdownParams, ConfigSel, EngineKind, PowerParams, Runner, Scenario, ServeParams,
+    SimulateParams, SweepParams, SCHEMA_VERSION,
+};
+use sal_pim::serve::{BackendKind, Policy, Routing};
+use sal_pim::testutil::SplitMix64;
+
+fn rand_config(rng: &mut SplitMix64) -> ConfigSel {
+    let mut sel = if rng.below(2) == 0 {
+        ConfigSel::preset("paper")
+    } else {
+        ConfigSel::preset("mini")
+    };
+    if rng.below(2) == 0 {
+        sel = sel.with_p_sub([1, 2, 4][rng.below(3) as usize]);
+    }
+    if rng.below(3) == 0 {
+        sel = sel.with_override("lut.sections", ["32", "64", "128"][rng.below(3) as usize]);
+    }
+    sel
+}
+
+/// A random scenario; always serializable, not necessarily runnable.
+fn rand_scenario(rng: &mut SplitMix64) -> Scenario {
+    let config = rand_config(rng);
+    match rng.below(6) {
+        0 => Scenario::Simulate(
+            SimulateParams::default()
+                .with_config(config)
+                .with_io(1 + rng.below(64) as usize, 1 + rng.below(64) as usize)
+                .with_prefetch(rng.below(2) == 0),
+        ),
+        1 => Scenario::Sweep(
+            SweepParams::default()
+                .with_config(config)
+                .with_grid(
+                    vec![1 + rng.below(32) as usize, 64],
+                    vec![1, 1 + rng.below(128) as usize],
+                ),
+        ),
+        2 => Scenario::Breakdown(
+            BreakdownParams::default()
+                .with_config(config)
+                .with_kv(1 + rng.below(256) as usize),
+        ),
+        3 => Scenario::Power(
+            PowerParams::default()
+                .with_config(config)
+                .with_io(1 + rng.below(32) as usize, 1 + rng.below(32) as usize)
+                .with_p_subs(vec![1, [2, 4][rng.below(2) as usize]]),
+        ),
+        4 => Scenario::Area(sal_pim::scenario::AreaParams::default().with_config(config)),
+        _ => {
+            let engines = [EngineKind::Seq, EngineKind::Batch, EngineKind::Cluster];
+            let engine = engines[rng.below(3) as usize];
+            let backends = [
+                BackendKind::SalPim,
+                BackendKind::Gpu,
+                BackendKind::BankLevel,
+                BackendKind::Hetero,
+            ];
+            let policies = [
+                Policy::Fcfs,
+                Policy::ShortestJobFirst,
+                Policy::ShortestPromptFirst,
+            ];
+            let routes = [
+                Routing::RoundRobin,
+                Routing::LeastLoaded,
+                Routing::SessionAffinity,
+            ];
+            // Keep the combination runnable: seq implies the SAL-PIM
+            // backend and inline prefill; burst implies a rate.
+            let mut p = ServeParams::default()
+                .with_config(config)
+                .with_engine(engine)
+                .with_policy(policies[rng.below(3) as usize])
+                .with_route(routes[rng.below(3) as usize])
+                .with_workload(2 + rng.below(6) as usize, rng.next_u64() % 1000)
+                .with_cluster(1 + rng.below(4) as usize, 2 + rng.below(8) as usize)
+                .with_at_once(rng.below(2) == 0);
+            if engine != EngineKind::Seq {
+                p = p.with_backend(backends[rng.below(4) as usize]);
+                if rng.below(2) == 0 {
+                    p = p.with_prefill_chunk(Some(8 + rng.below(64) as usize));
+                }
+            }
+            if !p.at_once && rng.below(2) == 0 {
+                let rate = 10.0 + rng.below(500) as f64 + 0.5;
+                let burst = if rng.below(2) == 0 {
+                    Some(2 + rng.below(6) as usize)
+                } else {
+                    None
+                };
+                p = p.with_rate(Some(rate), burst);
+            }
+            if rng.below(4) == 0 {
+                p = p.with_sweep(vec![20.0, 20.0 + rng.below(2000) as f64]);
+            }
+            Scenario::Serve(p)
+        }
+    }
+}
+
+#[test]
+fn random_scenarios_round_trip_through_toml() {
+    let mut rng = SplitMix64::new(0xC0FFEE);
+    for i in 0..80 {
+        let scenario = rand_scenario(&mut rng);
+        let text = scenario.to_toml();
+        let parsed = parse_suite(&text).unwrap_or_else(|e| {
+            panic!("iteration {i}: `{text}` failed to parse: {e}");
+        });
+        assert_eq!(parsed.len(), 1, "iteration {i}");
+        assert_eq!(parsed[0], scenario, "iteration {i}: `{text}`");
+    }
+}
+
+#[test]
+fn random_suites_round_trip_as_a_whole() {
+    let mut rng = SplitMix64::new(7);
+    let suite: Vec<Scenario> = (0..10).map(|_| rand_scenario(&mut rng)).collect();
+    let text = suite_to_toml(&suite);
+    assert_eq!(parse_suite(&text).unwrap(), suite);
+}
+
+#[test]
+fn parse_run_serialize_parse_is_stable() {
+    // The satellite property: a scenario survives parse → run →
+    // serialize → parse, and the run stamps the exact parameter set
+    // into the outcome's provenance.
+    let mut rng = SplitMix64::new(42);
+    let runner = Runner::new();
+    let mut ran = 0usize;
+    for _ in 0..40 {
+        let mut scenario = rand_scenario(&mut rng);
+        // Shrink to the mini preset so the property stays fast.
+        if let Scenario::Serve(p) = &mut scenario {
+            p.config.preset = "mini".to_string();
+            if ran >= 6 {
+                continue;
+            }
+        } else {
+            continue;
+        }
+        let parsed = parse_suite(&scenario.to_toml()).unwrap().remove(0);
+        let outcome = runner.run(&parsed).unwrap_or_else(|e| {
+            panic!("runnable-by-construction scenario failed: {e}\n{}", scenario.to_toml())
+        });
+        assert_eq!(outcome.schema_version, SCHEMA_VERSION);
+        assert_eq!(outcome.provenance.params, parsed.to_kv());
+        let again = parse_suite(&parsed.to_toml()).unwrap().remove(0);
+        assert_eq!(again, parsed);
+        ran += 1;
+    }
+    assert!(ran >= 3, "property exercised only {ran} runnable scenarios");
+}
+
+fn smoke_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("scenarios/smoke.toml")
+}
+
+#[test]
+fn smoke_suite_parses_and_covers_every_family() {
+    let text = std::fs::read_to_string(smoke_path()).expect("scenarios/smoke.toml is checked in");
+    let suite = parse_suite(&text).unwrap();
+    let kinds: Vec<&str> = suite.iter().map(|s| s.kind()).collect();
+    for kind in ["simulate", "sweep", "breakdown", "power", "area", "serve"] {
+        assert!(kinds.contains(&kind), "smoke suite misses `{kind}`");
+    }
+}
+
+#[test]
+fn smoke_suite_runs_and_writes_schema_versioned_bench_files() {
+    let text = std::fs::read_to_string(smoke_path()).unwrap();
+    let suite = parse_suite(&text).unwrap();
+    let outcomes = Runner::new().run_suite(&suite).expect("smoke suite runs");
+    assert_eq!(outcomes.len(), suite.len());
+
+    let dir = std::env::temp_dir().join("salpim_smoke_bench");
+    let _ = std::fs::remove_dir_all(&dir);
+    let tagged: Vec<(&str, &sal_pim::scenario::Outcome)> = suite
+        .iter()
+        .zip(&outcomes)
+        .map(|(s, o)| (s.bench_tag(), o))
+        .collect();
+    let paths = sink::write_bench_files(&dir, &tagged).unwrap();
+    assert!(paths.iter().any(|p| p.ends_with("BENCH_serve.json")));
+    assert!(paths.iter().any(|p| p.ends_with("BENCH_fig11.json")));
+    for p in &paths {
+        let body = std::fs::read_to_string(p).unwrap();
+        assert!(
+            body.starts_with(&format!("{{\"schema_version\": {SCHEMA_VERSION}")),
+            "{}: {}",
+            p.display(),
+            &body[..body.len().min(80)]
+        );
+        assert_eq!(body.matches('{').count(), body.matches('}').count());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn scenario_metrics_match_the_direct_simulation() {
+    // The CLI acceptance bar: `sal-pim run`'s JSON metrics must equal
+    // what the equivalent individual command computes. Both go through
+    // Runner, so pin the Runner against the raw simulator here.
+    let suite = parse_suite(
+        "[[scenario]]\nkind = \"sweep\"\npreset = \"mini\"\nins = [8]\nouts = [4, 8]\n",
+    )
+    .unwrap();
+    let outcome = Runner::new().run(&suite[0]).unwrap();
+    let cfg = SimConfig::mini();
+    let mut sim = GenerationSim::new(&cfg);
+    for (row, &n_out) in outcome.rows.iter().zip(&[4usize, 8]) {
+        let expect = sim.generate(8, n_out).seconds(cfg.timing.tck_ns);
+        let got = row[outcome.column_index("pim").unwrap()]
+            .as_f64()
+            .unwrap();
+        assert!(
+            (got - expect).abs() < 1e-12,
+            "out={n_out}: scenario {got} vs direct {expect}"
+        );
+    }
+    // And the JSON rendering carries the same numbers (spot check).
+    let json = sink::to_json(&outcome);
+    assert!(json.contains("\"scenario\": \"sweep\""));
+    assert!(json.contains("max_speedup"));
+}
