@@ -13,7 +13,7 @@
 //! * PIM decode beats the GPU roofline backend on the decode-bound mix.
 
 use sal_pim::scenario::{sink, EngineKind, Outcome, Runner, Scenario, ServeParams};
-use sal_pim::serve::BackendKind;
+use sal_pim::serve::{BackendKind, KvPolicy};
 use std::path::Path;
 
 fn run(params: ServeParams) -> Outcome {
@@ -153,6 +153,57 @@ fn main() {
         span(BackendKind::SalPim) < span(BackendKind::Gpu),
         "PIM decode must beat the GPU roofline on the decode-bound mix"
     );
+
+    // ---- (e) Paged vs whole-window KV at equal capacity, overload. ----
+    // A KV region two orders of magnitude below the device's (64
+    // subarrays ≈ a handful of whole windows) under a saturating
+    // open-loop rate: whole-window reservation caps the decode batch at
+    // the windows that fit, the paged allocator admits by resident
+    // tokens instead.
+    let mut kv_outcomes: Vec<(KvPolicy, Outcome)> = Vec::new();
+    for policy in [KvPolicy::Whole, KvPolicy::Paged] {
+        let outcome = run(
+            ServeParams::default()
+                .with_engine(EngineKind::Cluster)
+                .with_workload(48, 23)
+                .with_cluster(2, 16)
+                .with_kv_policy(policy)
+                .with_kv_units(Some(64))
+                .with_rate(Some(2000.0), None),
+        );
+        println!(
+            "kv {:>5}: {:>7.1} tok/s | mean batch {:>5.2} | preempt {} (recompute {} tok) | reuse {} ({} tok)",
+            policy.name(),
+            outcome.metric_f64("throughput").unwrap(),
+            outcome.metric_f64("mean_decode_batch").unwrap(),
+            outcome.metric_f64("preemptions").unwrap(),
+            outcome.metric_f64("recompute_tokens").unwrap(),
+            outcome.metric_f64("reuse_hits").unwrap(),
+            outcome.metric_f64("reuse_tokens").unwrap(),
+        );
+        kv_outcomes.push((policy, outcome));
+    }
+    let metric = |p: KvPolicy, name: &str| {
+        kv_outcomes
+            .iter()
+            .find(|(k, _)| *k == p)
+            .and_then(|(_, o)| o.metric_f64(name))
+            .expect("kv policy measured")
+    };
+    assert_eq!(
+        metric(KvPolicy::Whole, "total_tokens"),
+        metric(KvPolicy::Paged, "total_tokens"),
+        "token conservation across KV policies"
+    );
+    assert!(
+        metric(KvPolicy::Paged, "mean_decode_batch")
+            > metric(KvPolicy::Whole, "mean_decode_batch"),
+        "paged mean decode batch {} !> whole {} at equal HBM capacity",
+        metric(KvPolicy::Paged, "mean_decode_batch"),
+        metric(KvPolicy::Whole, "mean_decode_batch")
+    );
+    println!();
+    recorded.extend(kv_outcomes.into_iter().map(|(_, o)| o));
 
     // ---- Record the whole trajectory. ----
     let refs: Vec<(&str, &Outcome)> = recorded.iter().map(|o| (runner_tag, o)).collect();

@@ -19,6 +19,7 @@ pub use spec::{Arity, CommandSpec, FlagSpec};
 pub struct Args {
     flags: HashMap<String, String>,
     switches: HashSet<String>,
+    positionals: Vec<String>,
 }
 
 #[derive(Debug, thiserror::Error)]
@@ -83,6 +84,12 @@ impl Args {
         let mut iter = items.into_iter().peekable();
         while let Some(item) = iter.next() {
             let Some(name) = item.strip_prefix("--") else {
+                // A bare token fills the next declared positional slot;
+                // commands without positionals reject it as before.
+                if out.positionals.len() < spec.positionals.len() {
+                    out.positionals.push(item);
+                    continue;
+                }
                 return Err(CliError::UnexpectedPositional(item));
             };
             let (name, inline) = match name.split_once('=') {
@@ -131,6 +138,16 @@ impl Args {
 
     pub fn flag(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// The `i`-th positional argument, if given.
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+
+    /// All positional arguments, in order.
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
     }
 
     /// True if `--name` appeared at all (bare or with a value).
@@ -239,6 +256,25 @@ mod tests {
             let a = parse(cmd, "--help").unwrap();
             assert!(a.switch("help"));
         }
+    }
+
+    #[test]
+    fn positionals_fill_declared_slots_in_order() {
+        let a = parse("compare", "a.json b.json --tolerance 5").unwrap();
+        assert_eq!(a.positional(0), Some("a.json"));
+        assert_eq!(a.positional(1), Some("b.json"));
+        assert_eq!(a.flag("tolerance"), Some("5"));
+        // Positionals may interleave with flags.
+        let b = parse("compare", "a.json --tolerance 5 b.json").unwrap();
+        assert_eq!(b.positionals(), &["a.json".to_string(), "b.json".to_string()]);
+        // A third bare token overflows the declared slots.
+        let err = parse("compare", "a.json b.json c.json").unwrap_err();
+        assert!(matches!(err, CliError::UnexpectedPositional(v) if v == "c.json"));
+        // Commands without positionals reject bare tokens as before.
+        assert!(matches!(
+            parse("sweep", "stray").unwrap_err(),
+            CliError::UnexpectedPositional(_)
+        ));
     }
 
     #[test]

@@ -84,11 +84,21 @@ impl FlagSpec {
     }
 }
 
-/// One CLI command: name, one-line summary, flag table.
+/// One positional argument of one command.
+#[derive(Debug, Clone, Copy)]
+pub struct PositionalSpec {
+    /// Placeholder shown in usage (`BASELINE`, `NEW`…).
+    pub name: &'static str,
+    pub help: &'static str,
+}
+
+/// One CLI command: name, one-line summary, positional and flag tables.
 #[derive(Debug, Clone)]
 pub struct CommandSpec {
     pub name: &'static str,
     pub summary: &'static str,
+    /// Required positional arguments, in order (most commands have none).
+    pub positionals: Vec<PositionalSpec>,
     pub flags: Vec<FlagSpec>,
 }
 
@@ -101,6 +111,20 @@ impl CommandSpec {
     pub fn help_text(&self) -> String {
         let mut out = String::new();
         let _ = writeln!(out, "sal-pim {} — {}", self.name, self.summary);
+        if !self.positionals.is_empty() {
+            let args: Vec<&str> = self.positionals.iter().map(|p| p.name).collect();
+            let _ = writeln!(out, "\nusage: sal-pim {} {} [flags]", self.name, args.join(" "));
+            let _ = writeln!(out, "\narguments:");
+            let width = self
+                .positionals
+                .iter()
+                .map(|p| p.name.len())
+                .max()
+                .unwrap_or(0);
+            for p in &self.positionals {
+                let _ = writeln!(out, "  {:<width$}  {}", p.name, p.help, width = width);
+            }
+        }
         let _ = writeln!(out, "\nflags:");
         let width = self
             .flags
@@ -162,11 +186,13 @@ pub fn commands() -> Vec<CommandSpec> {
         CommandSpec {
             name: "config",
             summary: "resolve and validate a simulator configuration",
+            positionals: vec![],
             flags: with_common(vec![]),
         },
         CommandSpec {
             name: "simulate",
             summary: "one end-to-end generation on SAL-PIM vs the GPU baseline",
+            positionals: vec![],
             flags: with_common(vec![
                 FlagSpec::value("in", "N", "32", "prompt tokens"),
                 FlagSpec::value("gen", "N", "64", "generated (output) tokens"),
@@ -176,26 +202,31 @@ pub fn commands() -> Vec<CommandSpec> {
         CommandSpec {
             name: "sweep",
             summary: "the Fig. 11 speedup grid over prompt/output sizes",
+            positionals: vec![],
             flags: with_common(vec![]),
         },
         CommandSpec {
             name: "breakdown",
             summary: "decode-iteration phase breakdown (Fig. 3)",
+            positionals: vec![],
             flags: with_common(vec![FlagSpec::value("kv", "N", "128", "KV length of the iteration")]),
         },
         CommandSpec {
             name: "power",
             summary: "power by subarray-level parallelism (Fig. 15)",
+            positionals: vec![],
             flags: with_common(vec![FlagSpec::value("gen", "N", "32", "generated tokens per run")]),
         },
         CommandSpec {
             name: "area",
             summary: "added-logic area per channel (Table 3)",
+            positionals: vec![],
             flags: with_common(vec![]),
         },
         CommandSpec {
             name: "serve",
             summary: "serve a request mix on the sequential/batching/cluster engines",
+            positionals: vec![],
             flags: with_common(vec![
                 FlagSpec::value("requests", "N", "16", "request count"),
                 FlagSpec::value("policy", "P", "fcfs", "queue policy: fcfs|sjf|spf"),
@@ -215,6 +246,25 @@ pub fn commands() -> Vec<CommandSpec> {
                     "32",
                     "interleave prefill in C-token chunks instead of stalling the batch",
                 ),
+                FlagSpec::value(
+                    "kv-policy",
+                    "K",
+                    "whole",
+                    "KV allocation: whole (reserve the full window) | paged (block on demand)",
+                ),
+                FlagSpec::value(
+                    "evict",
+                    "E",
+                    "lru",
+                    "paged eviction: lru (idle sessions first, then preempt+recompute) | none",
+                ),
+                FlagSpec::value("kv-block", "N", "", "paged KV block size in tokens"),
+                FlagSpec::value(
+                    "kv-units",
+                    "N",
+                    "",
+                    "shrink the KV region to N allocation units (capacity-pressure what-ifs)",
+                ),
                 FlagSpec::value("rate", "R", "", "open-loop Poisson arrivals at R req/s"),
                 FlagSpec::value("burst", "B", "", "make Poisson arrivals bursts of B"),
                 FlagSpec::switch("at-once", "queue every request at t = 0"),
@@ -226,6 +276,7 @@ pub fn commands() -> Vec<CommandSpec> {
         CommandSpec {
             name: "run",
             summary: "execute a scenario suite file and write BENCH_*.json",
+            positionals: vec![],
             flags: vec![
                 FlagSpec::value("scenario", "FILE", "", "scenario suite (TOML subset)"),
                 FlagSpec::value("out-dir", "DIR", ".", "directory for BENCH_<tag>.json files"),
@@ -239,8 +290,38 @@ pub fn commands() -> Vec<CommandSpec> {
             ],
         },
         CommandSpec {
+            name: "compare",
+            summary: "diff two BENCH_*.json files and flag metric regressions",
+            positionals: vec![
+                PositionalSpec {
+                    name: "BASELINE",
+                    help: "baseline BENCH_*.json (e.g. the previous main run's artifact)",
+                },
+                PositionalSpec {
+                    name: "NEW",
+                    help: "candidate BENCH_*.json to judge against the baseline",
+                },
+            ],
+            flags: vec![
+                FlagSpec::value(
+                    "tolerance",
+                    "PCT",
+                    "10",
+                    "allowed latency/throughput regression in percent before failing",
+                ),
+                FlagSpec::switch("json", "print the outcome as schema-versioned JSON"),
+                FlagSpec::value(
+                    "out",
+                    "FILE",
+                    "",
+                    "also write the outcome to FILE (.json/.csv by extension)",
+                ),
+            ],
+        },
+        CommandSpec {
             name: "help",
             summary: "print CLI help (--markdown emits the README section)",
+            positionals: vec![],
             flags: vec![FlagSpec::switch(
                 "markdown",
                 "emit the CLI reference as Markdown (used to generate README.md)",
@@ -274,6 +355,9 @@ pub fn markdown() -> String {
             continue;
         }
         let _ = writeln!(out, "\n### `sal-pim {}` — {}\n", c.name, c.summary);
+        for p in &c.positionals {
+            let _ = writeln!(out, "* `{}` — {}", p.name, p.help);
+        }
         for f in &c.flags {
             let default = if f.default.is_empty() {
                 String::new()
@@ -335,6 +419,18 @@ mod tests {
             assert!(md.contains(&format!("### `sal-pim {}`", c.name)));
         }
         assert!(md.contains("`--prefill-chunk [C]`"));
+        assert!(md.contains("`--kv-policy K`"));
+        assert!(md.contains("`BASELINE`"), "compare positionals documented");
+    }
+
+    #[test]
+    fn compare_declares_two_positionals() {
+        let spec = find("compare").unwrap();
+        let names: Vec<&str> = spec.positionals.iter().map(|p| p.name).collect();
+        assert_eq!(names, vec!["BASELINE", "NEW"]);
+        let help = spec.help_text();
+        assert!(help.contains("usage: sal-pim compare BASELINE NEW [flags]"), "{help}");
+        assert!(help.contains("--tolerance"));
     }
 
     #[test]

@@ -15,12 +15,12 @@
 
 use sal_pim::cli::{spec, Args};
 use sal_pim::scenario::{
-    file::parse_suite, parse_policy, parse_route, sink, AreaParams, BreakdownParams, ConfigSel,
-    EngineKind, Outcome, PowerParams, Provenance, Runner, Scenario, ServeParams, SimulateParams,
-    SweepParams,
+    compare, file::parse_suite, parse_policy, parse_route, sink, AreaParams, BreakdownParams,
+    ConfigSel, EngineKind, Outcome, PowerParams, Provenance, Runner, Scenario, ServeParams,
+    SimulateParams, SweepParams,
 };
 use sal_pim::report::fmt_bw;
-use sal_pim::serve::BackendKind;
+use sal_pim::serve::{BackendKind, EvictPolicy, KvPolicy};
 use std::path::Path;
 
 fn main() {
@@ -57,6 +57,7 @@ fn run() -> anyhow::Result<()> {
     match command.as_str() {
         "config" => cmd_config(&args),
         "run" => cmd_run(&args),
+        "compare" => cmd_compare(&args),
         "help" => {
             if args.switch("markdown") {
                 print!("{}", spec::markdown());
@@ -166,6 +167,20 @@ fn scenario_serve(args: &Args, config: ConfigSel) -> anyhow::Result<Scenario> {
     } else {
         None
     };
+    let kv_flag = args.flag("kv-policy").unwrap_or("whole");
+    let kv_policy = KvPolicy::parse(kv_flag)
+        .ok_or_else(|| anyhow::anyhow!("unknown kv-policy `{kv_flag}` (whole|paged)"))?;
+    let evict_flag = args.flag("evict").unwrap_or("lru");
+    let evict = EvictPolicy::parse(evict_flag)
+        .ok_or_else(|| anyhow::anyhow!("unknown evict policy `{evict_flag}` (lru|none)"))?;
+    let kv_block = match args.flag("kv-block") {
+        Some(_) => Some(args.get("kv-block", 0usize)?),
+        None => None,
+    };
+    let kv_units = match args.flag("kv-units") {
+        Some(_) => Some(args.get("kv-units", 0usize)?),
+        None => None,
+    };
     let rate = match args.flag("rate") {
         Some(_) => Some(args.get("rate", 0.0f64)?),
         None => None,
@@ -183,6 +198,10 @@ fn scenario_serve(args: &Args, config: ConfigSel) -> anyhow::Result<Scenario> {
         .with_route(route)
         .with_cluster(args.get("devices", 4usize)?, args.get("batch", 8usize)?)
         .with_prefill_chunk(prefill_chunk)
+        .with_kv_policy(kv_policy)
+        .with_evict(evict)
+        .with_kv_block(kv_block)
+        .with_kv_units(kv_units)
         .with_at_once(args.switch("at-once"))
         .with_rate(rate, burst)
         .with_offload(args.switch("offload"));
@@ -241,6 +260,34 @@ fn cmd_config(args: &Args) -> anyhow::Result<()> {
         println!("{cfg:#?}");
     }
     emit(args, &out)
+}
+
+/// `sal-pim compare BASELINE NEW [--tolerance PCT]` — diff two BENCH
+/// files metric-by-metric; exits nonzero when a latency/throughput
+/// metric regresses beyond the tolerance (the CI bench-diff gate).
+fn cmd_compare(args: &Args) -> anyhow::Result<()> {
+    let (Some(a_path), Some(b_path)) = (args.positional(0), args.positional(1)) else {
+        anyhow::bail!("compare needs two BENCH files: sal-pim compare BASELINE NEW");
+    };
+    let tolerance = args.get("tolerance", 10.0f64)?;
+    anyhow::ensure!(
+        tolerance >= 0.0,
+        "tolerance must be a non-negative percentage, got {tolerance}"
+    );
+    let a = compare::parse_bench(&std::fs::read_to_string(a_path)?)
+        .map_err(|e| anyhow::anyhow!("{a_path}: {e}"))?;
+    let b = compare::parse_bench(&std::fs::read_to_string(b_path)?)
+        .map_err(|e| anyhow::anyhow!("{b_path}: {e}"))?;
+    let report = compare::compare(&a, &b, tolerance);
+    let outcome = compare::report_outcome(&report, a_path, b_path);
+    emit(args, &outcome)?;
+    if report.regressions > 0 {
+        anyhow::bail!(
+            "{} metric(s) regressed beyond {tolerance}% (baseline {a_path})",
+            report.regressions
+        );
+    }
+    Ok(())
 }
 
 /// `sal-pim run --scenario FILE` — execute a suite, write BENCH files.

@@ -1,0 +1,661 @@
+//! BENCH-file comparison: the regression gate behind `sal-pim compare`.
+//!
+//! The sink layer writes schema-versioned `BENCH_<tag>.json` trajectory
+//! files; this module reads two of them back (a hand-rolled JSON reader —
+//! the offline build has no serde) and diffs them metric-by-metric.
+//! Outcomes are paired by `(scenario, title)`, every shared numeric
+//! metric becomes one diff row, and metrics with a known direction
+//! (latency-like: lower is better; throughput-like: higher is better)
+//! regress when they move the wrong way by more than the tolerance.
+//! `sal-pim compare` renders the report as a standard [`Outcome`]
+//! (`--json` / `--out` work as everywhere) and exits nonzero when any
+//! regression survives — which is what the CI `bench-diff` job gates on.
+
+use super::outcome::{Outcome, Provenance};
+use super::ScenarioError;
+
+/// A parsed JSON value (only what BENCH documents need).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+fn parse_err(pos: usize, msg: &str) -> ScenarioError {
+    ScenarioError::Parse {
+        line: 0,
+        msg: format!("JSON byte {pos}: {msg}"),
+    }
+}
+
+impl<'a> Parser<'a> {
+    fn new(text: &'a str) -> Self {
+        Parser {
+            bytes: text.as_bytes(),
+            pos: 0,
+        }
+    }
+
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.skip_ws();
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), ScenarioError> {
+        match self.peek() {
+            Some(b) if b == c => {
+                self.pos += 1;
+                Ok(())
+            }
+            other => Err(parse_err(
+                self.pos,
+                &format!("expected `{}`, found {:?}", c as char, other.map(|b| b as char)),
+            )),
+        }
+    }
+
+    fn literal(&mut self, word: &str, value: Json) -> Result<Json, ScenarioError> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(value)
+        } else {
+            Err(parse_err(self.pos, &format!("expected `{word}`")))
+        }
+    }
+
+    fn string(&mut self) -> Result<String, ScenarioError> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(&b) = self.bytes.get(self.pos) else {
+                return Err(parse_err(self.pos, "unterminated string"));
+            };
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(&esc) = self.bytes.get(self.pos) else {
+                        return Err(parse_err(self.pos, "unterminated escape"));
+                    };
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000C}'),
+                        b'u' => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos..self.pos + 4)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .and_then(|h| u32::from_str_radix(h, 16).ok())
+                                .ok_or_else(|| parse_err(self.pos, "bad \\u escape"))?;
+                            self.pos += 4;
+                            // Surrogate pairs don't occur in our writers;
+                            // map unpaired surrogates to U+FFFD.
+                            out.push(char::from_u32(hex).unwrap_or('\u{FFFD}'));
+                        }
+                        other => {
+                            return Err(parse_err(
+                                self.pos,
+                                &format!("bad escape `\\{}`", other as char),
+                            ))
+                        }
+                    }
+                }
+                _ => {
+                    // Collect the raw UTF-8 byte run verbatim.
+                    let start = self.pos - 1;
+                    let mut end = self.pos;
+                    while end < self.bytes.len()
+                        && self.bytes[end] != b'"'
+                        && self.bytes[end] != b'\\'
+                    {
+                        end += 1;
+                    }
+                    let chunk = std::str::from_utf8(&self.bytes[start..end])
+                        .map_err(|_| parse_err(start, "invalid UTF-8"))?;
+                    out.push_str(chunk);
+                    self.pos = end;
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, ScenarioError> {
+        let start = self.pos;
+        while self
+            .bytes
+            .get(self.pos)
+            .is_some_and(|b| b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E'))
+        {
+            self.pos += 1;
+        }
+        std::str::from_utf8(&self.bytes[start..self.pos])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .map(Json::Num)
+            .ok_or_else(|| parse_err(start, "bad number"))
+    }
+
+    fn value(&mut self) -> Result<Json, ScenarioError> {
+        match self.peek() {
+            Some(b'{') => {
+                self.pos += 1;
+                let mut fields = Vec::new();
+                if self.peek() == Some(b'}') {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                loop {
+                    self.skip_ws();
+                    let key = self.string()?;
+                    self.expect(b':')?;
+                    let val = self.value()?;
+                    fields.push((key, val));
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b'}') => {
+                            self.pos += 1;
+                            return Ok(Json::Obj(fields));
+                        }
+                        _ => return Err(parse_err(self.pos, "expected `,` or `}`")),
+                    }
+                }
+            }
+            Some(b'[') => {
+                self.pos += 1;
+                let mut items = Vec::new();
+                if self.peek() == Some(b']') {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                loop {
+                    items.push(self.value()?);
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b']') => {
+                            self.pos += 1;
+                            return Ok(Json::Arr(items));
+                        }
+                        _ => return Err(parse_err(self.pos, "expected `,` or `]`")),
+                    }
+                }
+            }
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(_) => self.number(),
+            None => Err(parse_err(self.pos, "unexpected end of input")),
+        }
+    }
+}
+
+/// Parse one JSON document (trailing whitespace tolerated).
+pub fn parse_json(text: &str) -> Result<Json, ScenarioError> {
+    let mut p = Parser::new(text);
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(parse_err(p.pos, "trailing garbage after the document"));
+    }
+    Ok(v)
+}
+
+/// One outcome's numeric metrics, flattened for comparison.
+#[derive(Debug, Clone)]
+pub struct OutcomeMetrics {
+    pub scenario: String,
+    pub title: String,
+    /// `(name, value, unit)` in document order; non-numeric metric
+    /// values (labels like `kv_policy`) are skipped.
+    pub metrics: Vec<(String, f64, Option<String>)>,
+}
+
+/// A whole BENCH document (or a bare outcome / outcome array).
+#[derive(Debug, Clone)]
+pub struct BenchFile {
+    /// The `bench` tag, when the document carries one.
+    pub bench: Option<String>,
+    pub outcomes: Vec<OutcomeMetrics>,
+}
+
+fn outcome_metrics(o: &Json) -> Result<OutcomeMetrics, ScenarioError> {
+    let scenario = o
+        .get("scenario")
+        .and_then(Json::as_str)
+        .unwrap_or("?")
+        .to_string();
+    let title = o
+        .get("title")
+        .and_then(Json::as_str)
+        .unwrap_or("?")
+        .to_string();
+    let mut metrics = Vec::new();
+    for m in o
+        .get("metrics")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| parse_err(0, "outcome has no `metrics` array"))?
+    {
+        let Some(name) = m.get("name").and_then(Json::as_str) else {
+            continue;
+        };
+        let Some(value) = m.get("value").and_then(Json::as_f64) else {
+            continue; // text/bool/null metrics are labels, not numbers
+        };
+        let unit = m
+            .get("unit")
+            .and_then(Json::as_str)
+            .map(|u| u.to_string());
+        metrics.push((name.to_string(), value, unit));
+    }
+    Ok(OutcomeMetrics {
+        scenario,
+        title,
+        metrics,
+    })
+}
+
+/// Read a BENCH document: `{"bench": tag, "outcomes": [...]}`, a bare
+/// outcome object, or a JSON array of outcomes (the `run --out` shape).
+pub fn parse_bench(text: &str) -> Result<BenchFile, ScenarioError> {
+    let doc = parse_json(text)?;
+    let (bench, list): (Option<String>, Vec<&Json>) = if let Some(outs) =
+        doc.get("outcomes").and_then(Json::as_arr)
+    {
+        (
+            doc.get("bench").and_then(Json::as_str).map(String::from),
+            outs.iter().collect(),
+        )
+    } else if let Json::Arr(items) = &doc {
+        (None, items.iter().collect())
+    } else {
+        (None, vec![&doc])
+    };
+    let outcomes = list
+        .into_iter()
+        .map(outcome_metrics)
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(BenchFile { bench, outcomes })
+}
+
+/// Which way a metric is allowed to move.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Latency-like: growing past tolerance is a regression.
+    LowerIsBetter,
+    /// Throughput-like: shrinking past tolerance is a regression.
+    HigherIsBetter,
+    /// Counts/labels: reported, never gating.
+    Informational,
+}
+
+/// Classify a metric name. Conservative on purpose: only metrics whose
+/// direction is unambiguous (latency/time-like vs throughput-like) can
+/// fail the gate; everything else is informational.
+pub fn direction(name: &str) -> Direction {
+    let lower_better = [
+        "latency", "ttft", "queue", "makespan", "iteration", "prefill", "decode", "total",
+        "gpu_baseline",
+    ];
+    let higher_better = ["throughput", "speedup", "decode_rate"];
+    // Exact-name counters/diagnostics first — several contain substrings
+    // like `decode` or `total` that would otherwise read as durations
+    // (`mean_decode_batch` growing is the *win* paging exists for, not a
+    // latency regression).
+    let informational = [
+        "total_tokens",
+        "decode_steps",
+        "mean_decode_batch",
+        "preemptions",
+        "recompute_tokens",
+        "reuse_hits",
+        "reuse_tokens",
+        "rejected",
+    ];
+    if informational.contains(&name) {
+        return Direction::Informational;
+    }
+    if higher_better.iter().any(|k| name.contains(k)) {
+        return Direction::HigherIsBetter;
+    }
+    if lower_better.iter().any(|k| name.contains(k)) {
+        return Direction::LowerIsBetter;
+    }
+    Direction::Informational
+}
+
+/// One metric's diff between the two files.
+#[derive(Debug, Clone)]
+pub struct MetricDiff {
+    pub title: String,
+    pub metric: String,
+    pub unit: Option<String>,
+    pub baseline: f64,
+    pub candidate: f64,
+    /// Relative change `(candidate - baseline) / baseline` (0 when both
+    /// are 0; ±∞ when only the baseline is 0).
+    pub delta: f64,
+    pub direction: Direction,
+    pub regressed: bool,
+}
+
+/// The comparison result `sal-pim compare` renders and gates on.
+#[derive(Debug, Clone)]
+pub struct CompareReport {
+    pub rows: Vec<MetricDiff>,
+    /// Outcomes present in only one of the files (by scenario/title).
+    pub unmatched: usize,
+    pub regressions: usize,
+    pub improvements: usize,
+    pub tolerance_pct: f64,
+}
+
+/// Diff two parsed BENCH files. Outcomes pair by `(scenario, title)`
+/// first-match; metrics pair by name within a paired outcome.
+pub fn compare(a: &BenchFile, b: &BenchFile, tolerance_pct: f64) -> CompareReport {
+    let tol = tolerance_pct / 100.0;
+    let mut rows = Vec::new();
+    let mut regressions = 0usize;
+    let mut improvements = 0usize;
+    let mut used: Vec<bool> = vec![false; b.outcomes.len()];
+    let mut unmatched = 0usize;
+    for oa in &a.outcomes {
+        let Some(bi) = b
+            .outcomes
+            .iter()
+            .enumerate()
+            .position(|(i, ob)| !used[i] && ob.scenario == oa.scenario && ob.title == oa.title)
+        else {
+            unmatched += 1;
+            continue;
+        };
+        used[bi] = true;
+        let ob = &b.outcomes[bi];
+        for (name, base, unit) in &oa.metrics {
+            let Some((_, cand, _)) = ob.metrics.iter().find(|(n, _, _)| n == name) else {
+                continue;
+            };
+            let delta = if *base == 0.0 && *cand == 0.0 {
+                0.0
+            } else if *base == 0.0 {
+                f64::INFINITY * cand.signum()
+            } else {
+                (cand - base) / base.abs()
+            };
+            let dir = direction(name);
+            let regressed = match dir {
+                Direction::LowerIsBetter => delta > tol,
+                Direction::HigherIsBetter => delta < -tol,
+                Direction::Informational => false,
+            };
+            let improved = match dir {
+                Direction::LowerIsBetter => delta < -tol,
+                Direction::HigherIsBetter => delta > tol,
+                Direction::Informational => false,
+            };
+            regressions += usize::from(regressed);
+            improvements += usize::from(improved);
+            rows.push(MetricDiff {
+                title: oa.title.clone(),
+                metric: name.clone(),
+                unit: unit.clone(),
+                baseline: *base,
+                candidate: *cand,
+                delta,
+                direction: dir,
+                regressed,
+            });
+        }
+    }
+    unmatched += used.iter().filter(|u| !**u).count();
+    CompareReport {
+        rows,
+        unmatched,
+        regressions,
+        improvements,
+        tolerance_pct,
+    }
+}
+
+/// Render a comparison as a standard [`Outcome`] so the CLI's
+/// `--json` / `--out` sinks apply unchanged.
+pub fn report_outcome(report: &CompareReport, a_label: &str, b_label: &str) -> Outcome {
+    let mut out = Outcome::new(
+        &format!("bench diff — {a_label} → {b_label}"),
+        Provenance {
+            scenario: "compare".to_string(),
+            preset: "-".to_string(),
+            p_sub: 0,
+            backend: None,
+            seed: None,
+            params: vec![
+                ("baseline".to_string(), a_label.to_string()),
+                ("candidate".to_string(), b_label.to_string()),
+                ("tolerance_pct".to_string(), report.tolerance_pct.to_string()),
+            ],
+        },
+    );
+    out.columns(&[
+        ("outcome", None),
+        ("metric", None),
+        ("baseline", None),
+        ("candidate", None),
+        ("delta", Some("frac")),
+        ("verdict", None),
+    ]);
+    for r in &report.rows {
+        let verdict = if r.regressed {
+            "REGRESSED"
+        } else {
+            match r.direction {
+                Direction::Informational => "info",
+                _ => "ok",
+            }
+        };
+        out.row(vec![
+            r.title.clone().into(),
+            r.metric.clone().into(),
+            r.baseline.into(),
+            r.candidate.into(),
+            r.delta.into(),
+            verdict.into(),
+        ]);
+    }
+    out.metric("compared_metrics", report.rows.len(), None);
+    out.metric("regressions", report.regressions, None);
+    out.metric("improvements", report.improvements, None);
+    out.metric("unmatched_outcomes", report.unmatched, None);
+    out.metric("tolerance", report.tolerance_pct / 100.0, Some("frac"));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::sink;
+
+    fn bench_doc(throughput: f64, p95: f64) -> String {
+        let mut o = Outcome::new(
+            "serve — smoke",
+            Provenance {
+                scenario: "serve".to_string(),
+                preset: "paper".to_string(),
+                p_sub: 4,
+                backend: Some("salpim".to_string()),
+                seed: Some(42),
+                params: vec![],
+            },
+        );
+        o.metric("throughput", throughput, Some("tok/s"));
+        o.metric("p95_latency", p95, Some("s"));
+        o.metric("total_tokens", 1000usize, None);
+        o.metric("kv_policy", "paged", None);
+        sink::bench_json("serve", &[&o])
+    }
+
+    #[test]
+    fn json_parser_round_trips_sink_output() {
+        let doc = bench_doc(120.5, 0.25);
+        let parsed = parse_bench(&doc).unwrap();
+        assert_eq!(parsed.bench.as_deref(), Some("serve"));
+        assert_eq!(parsed.outcomes.len(), 1);
+        let o = &parsed.outcomes[0];
+        assert_eq!(o.scenario, "serve");
+        // The text-valued kv_policy metric is skipped; three numerics stay.
+        assert_eq!(o.metrics.len(), 3);
+        assert_eq!(o.metrics[0], ("throughput".to_string(), 120.5, Some("tok/s".to_string())));
+    }
+
+    #[test]
+    fn json_parser_handles_escapes_and_nesting() {
+        let j = parse_json(r#"{"a": [1, -2.5e3, "x\"y\n", true, null], "b": {}}"#).unwrap();
+        let arr = j.get("a").and_then(Json::as_arr).unwrap();
+        assert_eq!(arr[1].as_f64(), Some(-2500.0));
+        assert_eq!(arr[2].as_str(), Some("x\"y\n"));
+        assert_eq!(arr[3], Json::Bool(true));
+        assert_eq!(arr[4], Json::Null);
+        assert!(parse_json("{\"unterminated\": ").is_err());
+        assert!(parse_json("[1, 2] trailing").is_err());
+    }
+
+    #[test]
+    fn identical_files_show_no_regression() {
+        let a = parse_bench(&bench_doc(100.0, 0.2)).unwrap();
+        let r = compare(&a, &a, 10.0);
+        assert_eq!(r.regressions, 0);
+        assert_eq!(r.improvements, 0);
+        assert_eq!(r.unmatched, 0);
+        assert!(r.rows.iter().all(|d| d.delta == 0.0));
+    }
+
+    #[test]
+    fn injected_regression_beyond_tolerance_is_flagged() {
+        let base = parse_bench(&bench_doc(100.0, 0.2)).unwrap();
+        // 20% throughput drop + 50% latency growth: two regressions.
+        let bad = parse_bench(&bench_doc(80.0, 0.3)).unwrap();
+        let r = compare(&base, &bad, 10.0);
+        assert_eq!(r.regressions, 2, "{:?}", r.rows);
+        // Within tolerance: clean.
+        let ok = parse_bench(&bench_doc(95.0, 0.21)).unwrap();
+        assert_eq!(compare(&base, &ok, 10.0).regressions, 0);
+        // Improvements are counted, never gating.
+        let fast = parse_bench(&bench_doc(150.0, 0.1)).unwrap();
+        let r = compare(&base, &fast, 10.0);
+        assert_eq!(r.regressions, 0);
+        assert_eq!(r.improvements, 2);
+    }
+
+    #[test]
+    fn informational_metrics_never_gate() {
+        // total_tokens changing is visible but not a failure.
+        let mut a = parse_bench(&bench_doc(100.0, 0.2)).unwrap();
+        let b = parse_bench(&bench_doc(100.0, 0.2)).unwrap();
+        a.outcomes[0].metrics[2].1 = 500.0;
+        let r = compare(&a, &b, 10.0);
+        assert_eq!(r.regressions, 0);
+        let tok = r.rows.iter().find(|d| d.metric == "total_tokens").unwrap();
+        assert_eq!(tok.direction, Direction::Informational);
+        assert!(!tok.regressed);
+    }
+
+    #[test]
+    fn unmatched_outcomes_are_counted_not_fatal() {
+        let a = parse_bench(&bench_doc(100.0, 0.2)).unwrap();
+        let empty = BenchFile {
+            bench: None,
+            outcomes: vec![],
+        };
+        let r = compare(&a, &empty, 10.0);
+        assert_eq!(r.rows.len(), 0);
+        assert_eq!(r.unmatched, 1);
+    }
+
+    #[test]
+    fn direction_classification_is_conservative() {
+        assert_eq!(direction("p95_latency"), Direction::LowerIsBetter);
+        assert_eq!(direction("p50_ttft"), Direction::LowerIsBetter);
+        assert_eq!(direction("makespan"), Direction::LowerIsBetter);
+        assert_eq!(direction("throughput"), Direction::HigherIsBetter);
+        assert_eq!(direction("max_speedup"), Direction::HigherIsBetter);
+        assert_eq!(direction("total"), Direction::LowerIsBetter);
+        assert_eq!(direction("total_tokens"), Direction::Informational);
+        assert_eq!(direction("requests"), Direction::Informational);
+        assert_eq!(direction("kv_peak_utilization"), Direction::Informational);
+        // Paging counters must never gate — `mean_decode_batch` growing
+        // is the improvement the paged allocator exists to deliver.
+        assert_eq!(direction("mean_decode_batch"), Direction::Informational);
+        assert_eq!(direction("preemptions"), Direction::Informational);
+        assert_eq!(direction("recompute_tokens"), Direction::Informational);
+        assert_eq!(direction("reuse_hits"), Direction::Informational);
+        // …while `decode_rate` (tok/s) still gates in the right direction.
+        assert_eq!(direction("decode_rate"), Direction::HigherIsBetter);
+        assert_eq!(direction("decode"), Direction::LowerIsBetter);
+    }
+
+    #[test]
+    fn report_outcome_renders_and_serializes() {
+        let base = parse_bench(&bench_doc(100.0, 0.2)).unwrap();
+        let bad = parse_bench(&bench_doc(80.0, 0.3)).unwrap();
+        let rep = compare(&base, &bad, 10.0);
+        let out = report_outcome(&rep, "BENCH_a.json", "BENCH_b.json");
+        assert_eq!(out.metric_f64("regressions"), Some(2.0));
+        assert_eq!(out.rows.len(), rep.rows.len());
+        let text = sink::render_text(&out);
+        assert!(text.contains("REGRESSED"), "{text}");
+        let json = sink::to_json(&out);
+        assert!(json.contains("\"scenario\": \"compare\""));
+    }
+}

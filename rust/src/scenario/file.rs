@@ -28,7 +28,7 @@ use super::{
     parse_policy, parse_route, route_token, AreaParams, BreakdownParams, ConfigSel, EngineKind,
     PowerParams, Scenario, ScenarioError, ServeParams, SimulateParams, SweepParams,
 };
-use crate::serve::BackendKind;
+use crate::serve::{BackendKind, EvictPolicy, KvPolicy};
 use std::fmt::Write as _;
 
 /// Strip an inline `#` comment, respecting double quotes.
@@ -255,6 +255,16 @@ pub fn from_kv(pairs: &[(usize, String, String)]) -> Result<Scenario, ScenarioEr
                     "max_batch" => p.max_batch = p_usize(*line, key, value)?,
                     "n_sessions" => p.n_sessions = p_usize(*line, key, value)?,
                     "prefill_chunk" => p.prefill_chunk = Some(p_usize(*line, key, value)?),
+                    "kv_policy" => {
+                        p.kv_policy = KvPolicy::parse(v)
+                            .ok_or_else(|| bad(*line, key, v, "whole|paged"))?
+                    }
+                    "evict" => {
+                        p.evict = EvictPolicy::parse(v)
+                            .ok_or_else(|| bad(*line, key, v, "lru|none"))?
+                    }
+                    "kv_block" => p.kv_block = Some(p_usize(*line, key, value)?),
+                    "kv_units" => p.kv_units = Some(p_usize(*line, key, value)?),
                     "at_once" => p.at_once = p_bool(*line, key, value)?,
                     "rate" => p.rate = Some(p_f64(*line, key, value)?),
                     "burst" => p.burst = Some(p_usize(*line, key, value)?),
@@ -320,6 +330,14 @@ impl Scenario {
                 if let Some(c) = p.prefill_chunk {
                     push("prefill_chunk", c.to_string());
                 }
+                push("kv_policy", p.kv_policy.name().to_string());
+                push("evict", p.evict.name().to_string());
+                if let Some(b) = p.kv_block {
+                    push("kv_block", b.to_string());
+                }
+                if let Some(u) = p.kv_units {
+                    push("kv_units", u.to_string());
+                }
                 push("at_once", p.at_once.to_string());
                 if let Some(r) = p.rate {
                     push("rate", r.to_string());
@@ -341,7 +359,8 @@ impl Scenario {
         fn is_string_key(key: &str) -> bool {
             matches!(
                 key,
-                "kind" | "preset" | "engine" | "backend" | "policy" | "route"
+                "kind" | "preset" | "engine" | "backend" | "policy" | "route" | "kv_policy"
+                    | "evict"
             ) || key.starts_with("cfg.")
         }
         let mut out = String::from("[[scenario]]\n");
@@ -436,6 +455,14 @@ mod tests {
                     .with_rate(Some(212.5), Some(4))
                     .with_config(ConfigSel::default().with_override("model", "gpt2-mini")),
             ),
+            Scenario::Serve(
+                ServeParams::default()
+                    .with_engine(EngineKind::Cluster)
+                    .with_kv_policy(KvPolicy::Paged)
+                    .with_evict(EvictPolicy::None)
+                    .with_kv_block(Some(8))
+                    .with_kv_units(Some(48)),
+            ),
         ];
         let text = suite_to_toml(&scenarios);
         let parsed = parse_suite(&text).unwrap();
@@ -480,6 +507,8 @@ mod tests {
         assert!(parse_suite("[[scenario]]\nkv = 64\n").is_err());
         assert!(parse_suite("[[scenario]]\nkind = \"serve\"\nrequests = many\n").is_err());
         assert!(parse_suite("[[scenario]]\nkind = \"serve\"\nengine = \"warp\"\n").is_err());
+        assert!(parse_suite("[[scenario]]\nkind = \"serve\"\nkv_policy = \"paging\"\n").is_err());
+        assert!(parse_suite("[[scenario]]\nkind = \"serve\"\nevict = \"fifo\"\n").is_err());
         assert!(parse_suite("[[scenario]]\nkind = \"sweep\"\nins = 32\n").is_err());
         assert!(parse_suite("not a kv line\n").is_err());
         assert!(parse_suite("[table]\n").is_err());

@@ -12,6 +12,7 @@
 //! from a file. New experiment surfaces should add a scenario variant
 //! here instead of growing bespoke CLI plumbing.
 
+pub mod compare;
 pub mod file;
 pub mod outcome;
 pub mod runner;
@@ -22,7 +23,7 @@ pub use runner::Runner;
 
 use crate::config::parse::{apply_overrides, ConfigError};
 use crate::config::SimConfig;
-use crate::serve::{BackendKind, Policy, Routing};
+use crate::serve::{BackendKind, EvictPolicy, KvPolicy, Policy, Routing};
 
 /// Scenario-layer failure.
 #[derive(Debug, thiserror::Error)]
@@ -304,6 +305,15 @@ pub struct ServeParams {
     pub n_sessions: usize,
     /// Chunked-prefill token size; `None` = inline prefill.
     pub prefill_chunk: Option<usize>,
+    /// KV allocation discipline (`--kv-policy whole|paged`).
+    pub kv_policy: KvPolicy,
+    /// Paged eviction policy (`--evict lru|none`).
+    pub evict: EvictPolicy,
+    /// Paged block-size override in tokens (`--kv-block`).
+    pub kv_block: Option<usize>,
+    /// KV-region size override in allocation units (`--kv-units`;
+    /// what-if capacity-pressure experiments).
+    pub kv_units: Option<usize>,
     /// Queue every request at t = 0 (saturating load).
     pub at_once: bool,
     /// Open-loop Poisson arrivals at this rate; `None` = jittered mix.
@@ -332,6 +342,10 @@ impl Default for ServeParams {
             max_batch: 8,
             n_sessions: 8,
             prefill_chunk: None,
+            kv_policy: KvPolicy::Whole,
+            evict: EvictPolicy::Lru,
+            kv_block: None,
+            kv_units: None,
             at_once: false,
             rate: None,
             burst: None,
@@ -382,6 +396,26 @@ impl ServeParams {
 
     pub fn with_prefill_chunk(mut self, chunk: Option<usize>) -> Self {
         self.prefill_chunk = chunk;
+        self
+    }
+
+    pub fn with_kv_policy(mut self, policy: KvPolicy) -> Self {
+        self.kv_policy = policy;
+        self
+    }
+
+    pub fn with_evict(mut self, evict: EvictPolicy) -> Self {
+        self.evict = evict;
+        self
+    }
+
+    pub fn with_kv_block(mut self, block: Option<usize>) -> Self {
+        self.kv_block = block;
+        self
+    }
+
+    pub fn with_kv_units(mut self, units: Option<usize>) -> Self {
+        self.kv_units = units;
         self
     }
 
@@ -533,10 +567,18 @@ mod tests {
             .with_workload(64, 7)
             .with_cluster(2, 4)
             .with_prefill_chunk(Some(32))
+            .with_kv_policy(KvPolicy::Paged)
+            .with_evict(EvictPolicy::None)
+            .with_kv_block(Some(16))
+            .with_kv_units(Some(64))
             .with_rate(Some(200.0), Some(4));
         assert_eq!(s.engine, EngineKind::Cluster);
         assert_eq!(s.devices, 2);
         assert_eq!(s.rate, Some(200.0));
+        assert_eq!(s.kv_policy, KvPolicy::Paged);
+        assert_eq!(s.evict, EvictPolicy::None);
+        assert_eq!(s.kv_block, Some(16));
+        assert_eq!(s.kv_units, Some(64));
         let sweep = ServeParams::default().with_sweep(vec![100.0]);
         assert!(sweep.sweep);
         assert_eq!(sweep.loads, vec![100.0]);

@@ -15,7 +15,7 @@ use crate::energy::{AreaModel, EnergyParams, PowerReport};
 use crate::mapper::GenerationSim;
 use crate::serve::sweep::{latency_vs_load, SweepConfig};
 use crate::serve::workload::{requests_from_items, ArrivalPattern};
-use crate::serve::{BackendKind, Cluster, DeviceEngine, ServeMetrics};
+use crate::serve::{BackendKind, Cluster, DeviceEngine, KvPolicy, ServeMetrics};
 use crate::testutil::RequestMix;
 
 /// Executes scenarios. Stateless — each run resolves its own config.
@@ -273,6 +273,21 @@ fn run_serve(
             ));
         }
     }
+    if let Some(b) = p.kv_block {
+        if b < 1 {
+            return Err(ScenarioError::Unsupported(
+                "kv_block must be at least 1 token".to_string(),
+            ));
+        }
+    }
+    if p.engine == EngineKind::Seq
+        && (p.kv_policy != KvPolicy::Whole || p.kv_block.is_some() || p.kv_units.is_some())
+    {
+        return Err(ScenarioError::Unsupported(
+            "the paged KV policy needs the batching scheduler; pick engine batch|cluster"
+                .to_string(),
+        ));
+    }
     if p.sweep {
         return run_serve_sweep(cfg, provenance, p);
     }
@@ -325,16 +340,25 @@ fn run_serve(
             }
             let mut eng = DeviceEngine::with_backend(p.backend.build(cfg), p.max_batch)
                 .with_policy(p.policy)
-                .with_prefill_chunk(p.prefill_chunk);
+                .with_prefill_chunk(p.prefill_chunk)
+                .with_kv_policy(p.kv_policy)
+                .with_evict(p.evict);
+            if let Some(b) = p.kv_block {
+                eng = eng.with_kv_block(b);
+            }
+            if let Some(u) = p.kv_units {
+                eng = eng.with_kv_subarrays(u);
+            }
             for r in requests {
                 eng.submit(r);
             }
             let backend_name = eng.backend_name();
-            let m = ServeMetrics::from_completions(&eng.run());
+            let mut m = ServeMetrics::from_completions(&eng.run());
             let rep = eng.report();
+            m.absorb_reports(std::slice::from_ref(&rep));
             let mut out = Outcome::new(
                 &format!(
-                    "serve — engine=batch backend={} policy={} batch={} chunk={} arrivals={}",
+                    "serve — engine=batch backend={} policy={} batch={} chunk={} kv={} arrivals={}",
                     backend_name,
                     p.policy.name(),
                     p.max_batch,
@@ -342,14 +366,21 @@ fn run_serve(
                         Some(c) => c.to_string(),
                         None => "inline".to_string(),
                     },
+                    p.kv_policy.name(),
                     pattern.name()
                 ),
                 provenance,
             );
             serve_metrics(&mut out, &m);
+            out.metric("kv_policy", p.kv_policy.name(), None);
             out.metric("kv_peak_utilization", rep.kv_peak_utilization, Some("frac"));
             out.metric("max_batch_seen", rep.max_batch_seen, None);
             out.metric("decode_steps", rep.decode_steps, None);
+            out.metric("mean_decode_batch", rep.mean_decode_batch, None);
+            out.metric("preemptions", rep.preemptions, None);
+            out.metric("recompute_tokens", rep.recompute_tokens, None);
+            out.metric("reuse_hits", rep.reuse_hits, None);
+            out.metric("reuse_tokens", rep.reuse_tokens, None);
             out.metric("rejected", rep.rejected, None);
             Ok(out)
         }
@@ -362,24 +393,35 @@ fn run_serve(
             let mut cluster =
                 Cluster::homogeneous(cfg, p.backend, p.devices, p.max_batch, p.route)
                     .with_policy(p.policy)
-                    .with_prefill_chunk(p.prefill_chunk);
+                    .with_prefill_chunk(p.prefill_chunk)
+                    .with_kv(p.kv_policy, p.evict, p.kv_block, p.kv_units);
             for r in requests {
                 cluster.submit(r);
             }
             let done = cluster.run();
-            let m = ServeMetrics::from_completions(&done);
+            let reps = cluster.per_device_reports();
+            let mut m = ServeMetrics::from_completions(&done);
+            m.absorb_reports(&reps);
             let mut out = Outcome::new(
                 &format!(
-                    "serve — engine=cluster backend={} devices={} batch={} route={} arrivals={}",
+                    "serve — engine=cluster backend={} devices={} batch={} route={} kv={} \
+                     arrivals={}",
                     p.backend.name(),
                     p.devices,
                     p.max_batch,
                     p.route.name(),
+                    p.kv_policy.name(),
                     pattern.name()
                 ),
                 provenance,
             );
             serve_metrics(&mut out, &m);
+            out.metric("kv_policy", p.kv_policy.name(), None);
+            out.metric("mean_decode_batch", m.mean_decode_batch, None);
+            out.metric("preemptions", m.preemptions, None);
+            out.metric("recompute_tokens", m.recompute_tokens, None);
+            out.metric("reuse_hits", m.reuse_hits, None);
+            out.metric("reuse_tokens", m.reuse_tokens, None);
             out.metric("rejected", cluster.rejected(), None);
             out.columns(&[
                 ("device", None),
@@ -388,9 +430,11 @@ fn run_serve(
                 ("throughput", Some("tok/s")),
                 ("p95_latency", Some("s")),
                 ("kv_peak_utilization", Some("frac")),
+                ("mean_decode_batch", None),
+                ("preemptions", None),
+                ("reuse_hits", None),
             ]);
             let per = cluster.per_device_metrics(&done);
-            let reps = cluster.per_device_reports();
             let names = cluster.backend_names();
             for (i, (pm, rep)) in per.iter().zip(&reps).enumerate() {
                 out.row(vec![
@@ -400,6 +444,9 @@ fn run_serve(
                     pm.throughput_tok_s.into(),
                     pm.p95_latency_s.into(),
                     rep.kv_peak_utilization.into(),
+                    rep.mean_decode_batch.into(),
+                    rep.preemptions.into(),
+                    rep.reuse_hits.into(),
                 ]);
             }
             Ok(out)
@@ -427,6 +474,10 @@ fn run_serve_sweep(
         n_sessions: p.n_sessions,
         backend: p.backend,
         prefill_chunk: p.prefill_chunk,
+        kv_policy: p.kv_policy,
+        evict: p.evict,
+        kv_block: p.kv_block,
+        kv_units: p.kv_units,
     };
     let pts = latency_vs_load(cfg, &sc, &p.loads);
     let mut out = Outcome::new(
@@ -595,6 +646,32 @@ mod tests {
     }
 
     #[test]
+    fn paged_kv_is_sweepable_through_the_scenario_api() {
+        use crate::serve::KvPolicy;
+        let base = ServeParams::default()
+            .with_config(mini())
+            .with_engine(EngineKind::Batch)
+            .with_workload(8, 11)
+            .with_at_once(true);
+        let whole = Runner::new().run(&Scenario::Serve(base.clone())).unwrap();
+        let paged = Runner::new()
+            .run(&Scenario::Serve(base.with_kv_policy(KvPolicy::Paged)))
+            .unwrap();
+        assert_eq!(
+            whole.metric_f64("total_tokens"),
+            paged.metric_f64("total_tokens"),
+            "token conservation across KV policies"
+        );
+        assert!(paged.metric_f64("mean_decode_batch").is_some());
+        assert!(paged.metric_f64("preemptions").is_some());
+        assert!(
+            paged.metric_f64("mean_decode_batch").unwrap()
+                >= whole.metric_f64("mean_decode_batch").unwrap(),
+            "paged must not shrink the decode batch at equal capacity"
+        );
+    }
+
+    #[test]
     fn unsupported_combinations_are_rejected() {
         let gpu_seq = ServeParams::default().with_backend(BackendKind::Gpu);
         assert!(matches!(
@@ -611,5 +688,8 @@ mod tests {
             .with_engine(EngineKind::Batch)
             .with_offload(true);
         assert!(Runner::new().run(&Scenario::Serve(offload_batch)).is_err());
+        let paged_seq =
+            ServeParams::default().with_kv_policy(crate::serve::KvPolicy::Paged);
+        assert!(Runner::new().run(&Scenario::Serve(paged_seq)).is_err());
     }
 }

@@ -58,10 +58,16 @@ impl ExecutionBackend for BankLevelBackend {
             .hbm
             .total_subarrays()
             .saturating_sub(weight_bytes.div_ceil(subarray_bytes));
+        let kv_bytes_per_token = self.cfg.model.kv_bytes_per_token();
         DeviceCapacity {
-            kv_bytes_per_token: self.cfg.model.kv_bytes_per_token(),
+            kv_bytes_per_token,
             kv_alloc_unit_bytes: subarray_bytes,
             kv_total_units: kv_subarrays,
+            // One paged block = one subarray's rows worth of K/V state.
+            kv_block_tokens: DeviceCapacity::block_tokens_for_unit(
+                subarray_bytes,
+                kv_bytes_per_token,
+            ),
             max_seq: self.cfg.model.max_seq,
         }
     }

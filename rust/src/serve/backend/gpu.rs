@@ -68,10 +68,16 @@ impl ExecutionBackend for GpuBackend {
     fn capacity(&self) -> DeviceCapacity {
         let weight_bytes = self.model.total_params() * self.model.param_bytes;
         let kv_bytes = self.gpu.mem_bytes.saturating_sub(weight_bytes);
+        let kv_bytes_per_token = self.model.kv_bytes_per_token();
         DeviceCapacity {
-            kv_bytes_per_token: self.model.kv_bytes_per_token(),
+            kv_bytes_per_token,
             kv_alloc_unit_bytes: GPU_KV_PAGE_BYTES,
             kv_total_units: kv_bytes / GPU_KV_PAGE_BYTES,
+            // One paged block = one allocator page worth of K/V state.
+            kv_block_tokens: DeviceCapacity::block_tokens_for_unit(
+                GPU_KV_PAGE_BYTES,
+                kv_bytes_per_token,
+            ),
             max_seq: self.model.max_seq,
         }
     }

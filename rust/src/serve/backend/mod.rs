@@ -43,7 +43,8 @@ use crate::config::SimConfig;
 /// KV-capacity hints one device exposes to the serving layer's admission
 /// control. Capacity is consumed in whole allocation units — subarrays
 /// on a PIM device (open-row streaming wants contiguous K/V rows), pages
-/// on a GPU.
+/// on a GPU — and, under the paged KV policy, in fixed-size blocks of
+/// `kv_block_tokens` tokens each.
 #[derive(Debug, Clone, Copy)]
 pub struct DeviceCapacity {
     /// Bytes of K+V state one token pins for a request's lifetime.
@@ -52,11 +53,23 @@ pub struct DeviceCapacity {
     pub kv_alloc_unit_bytes: usize,
     /// Allocation units in the device's KV region.
     pub kv_total_units: usize,
+    /// Tokens per paged KV block: how many tokens of K+V state one
+    /// allocation unit's rows hold (at least 1). Derived from the
+    /// subarray row geometry on PIM (rows × row bytes / KV bytes per
+    /// token) and the allocator page size on a GPU, via
+    /// [`DeviceCapacity::block_tokens_for_unit`].
+    pub kv_block_tokens: usize,
     /// Longest KV length the device's model supports.
     pub max_seq: usize,
 }
 
 impl DeviceCapacity {
+    /// Tokens of K+V state one allocation unit holds — the paged block
+    /// size every backend derives its `kv_block_tokens` from.
+    pub fn block_tokens_for_unit(unit_bytes: usize, kv_bytes_per_token: usize) -> usize {
+        (unit_bytes / kv_bytes_per_token.max(1)).max(1)
+    }
+
     /// Token capacity if the region were filled by one giant request.
     pub fn capacity_tokens(&self) -> usize {
         self.kv_total_units * self.kv_alloc_unit_bytes / self.kv_bytes_per_token
@@ -165,6 +178,16 @@ mod tests {
             let cap = b.capacity();
             assert!(cap.kv_total_units > 0, "{}", b.name());
             assert!(cap.capacity_tokens() > 0, "{}", b.name());
+            assert!(cap.kv_block_tokens >= 1, "{}", b.name());
+            assert_eq!(
+                cap.kv_block_tokens,
+                DeviceCapacity::block_tokens_for_unit(
+                    cap.kv_alloc_unit_bytes,
+                    cap.kv_bytes_per_token
+                ),
+                "{}: block geometry must derive from the allocation unit",
+                b.name()
+            );
             assert_eq!(cap.max_seq, cfg.model.max_seq);
         }
     }

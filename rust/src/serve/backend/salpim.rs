@@ -49,10 +49,17 @@ impl ExecutionBackend for SalPimBackend {
     }
 
     fn capacity(&self) -> DeviceCapacity {
+        let kv_bytes_per_token = self.cfg.model.kv_bytes_per_token();
+        let subarray_bytes = self.cfg.hbm.subarray_bytes();
         DeviceCapacity {
-            kv_bytes_per_token: self.cfg.model.kv_bytes_per_token(),
-            kv_alloc_unit_bytes: self.cfg.hbm.subarray_bytes(),
+            kv_bytes_per_token,
+            kv_alloc_unit_bytes: subarray_bytes,
             kv_total_units: device_kv_subarrays(&self.cfg),
+            // One paged block = one subarray's rows worth of K/V state.
+            kv_block_tokens: DeviceCapacity::block_tokens_for_unit(
+                subarray_bytes,
+                kv_bytes_per_token,
+            ),
             max_seq: self.cfg.model.max_seq,
         }
     }

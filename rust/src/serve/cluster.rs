@@ -14,10 +14,12 @@
 
 use super::backend::BackendKind;
 use super::engine::{DeviceEngine, EngineReport};
+use super::kv_cache::{EvictPolicy, KvPolicy};
 use super::metrics::ServeMetrics;
 use super::policy::Policy;
 use super::types::{Completion, Request};
 use crate::config::SimConfig;
+use std::collections::HashMap;
 
 /// How requests are assigned to devices.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -26,8 +28,10 @@ pub enum Routing {
     RoundRobin,
     /// Device with the least estimated queued work (tokens) at submit.
     LeastLoaded,
-    /// `session % devices` — keeps a session's requests (and their KV
-    /// reuse) on one device.
+    /// Session block residency informs routing: a session's first
+    /// request is placed on the least-loaded device, and every follow-up
+    /// goes to that *home* device — where the session's paged KV blocks
+    /// (and so its reuse hits) live.
     SessionAffinity,
 }
 
@@ -46,6 +50,8 @@ pub struct Cluster {
     devices: Vec<DeviceEngine>,
     pub routing: Routing,
     rr_next: usize,
+    /// Session → home device (where the session's KV blocks reside).
+    session_home: HashMap<u64, usize>,
     /// Submit-time assignment trace (request id → device), for tests and
     /// routing diagnostics.
     assignments: Vec<(u64, usize)>,
@@ -85,6 +91,7 @@ impl Cluster {
             devices: engines,
             routing,
             rr_next: 0,
+            session_home: HashMap::new(),
             assignments: Vec::new(),
         }
     }
@@ -92,6 +99,22 @@ impl Cluster {
     pub fn with_policy(mut self, policy: Policy) -> Self {
         for d in &mut self.devices {
             d.policy = policy;
+        }
+        self
+    }
+
+    /// Apply one KV configuration to every device: allocation policy,
+    /// eviction policy, paged block-size override and a KV-region size
+    /// override in allocation units (see the [`DeviceEngine`] builders).
+    pub fn with_kv(
+        mut self,
+        policy: KvPolicy,
+        evict: EvictPolicy,
+        block: Option<usize>,
+        units: Option<usize>,
+    ) -> Self {
+        for d in &mut self.devices {
+            d.apply_kv(policy, evict, block, units);
         }
         self
     }
@@ -132,7 +155,21 @@ impl Cluster {
                     .min_by_key(|&i| (self.devices[i].queued_tokens(), i))
                     .unwrap()
             }
-            Routing::SessionAffinity => (req.session as usize) % n,
+            Routing::SessionAffinity => match self.session_home.get(&req.session) {
+                // Follow-ups stick to the home device, where the
+                // session's resident KV blocks (paged policy) make the
+                // prefix reusable without a re-prefill.
+                Some(&d) => d,
+                // First contact: place the session on the least-loaded
+                // device (ties break toward the lowest index).
+                None => {
+                    let d = (0..n)
+                        .min_by_key(|&i| (self.devices[i].queued_tokens(), i))
+                        .unwrap();
+                    self.session_home.insert(req.session, d);
+                    d
+                }
+            },
         };
         self.assignments.push((req.id, dev));
         self.devices[dev].submit(req);
@@ -205,7 +242,39 @@ mod tests {
         let b = c.submit(req(1, 7, 0.1));
         let other = c.submit(req(2, 8, 0.2));
         assert_eq!(a, b, "same session, same device");
-        assert_ne!(a, other);
+        assert_ne!(a, other, "a fresh session lands on a lighter device");
+    }
+
+    #[test]
+    fn session_affinity_spreads_first_contacts_by_load() {
+        // Four fresh sessions over two devices: first contacts alternate
+        // (least-loaded placement), follow-ups stay home.
+        let mut c = Cluster::new(&SimConfig::paper(), 2, 4, Routing::SessionAffinity);
+        let d0 = c.submit(req(0, 100, 0.0));
+        let d1 = c.submit(req(1, 101, 0.0));
+        assert_ne!(d0, d1, "second session avoids the loaded device");
+        let d0_again = c.submit(req(2, 100, 0.1));
+        assert_eq!(d0, d0_again, "follow-up sticks to the home device");
+    }
+
+    #[test]
+    fn kv_knobs_apply_to_every_device() {
+        use crate::serve::kv_cache::{EvictPolicy, KvPolicy};
+        let cfg = SimConfig::paper();
+        let mut c = Cluster::new(&cfg, 2, 4, Routing::RoundRobin).with_kv(
+            KvPolicy::Paged,
+            EvictPolicy::Lru,
+            None,
+            Some(64),
+        );
+        for i in 0..6 {
+            c.submit(req(i, i, 0.0));
+        }
+        let done = c.run();
+        assert_eq!(done.len(), 6);
+        for rep in c.per_device_reports() {
+            assert_eq!(rep.preemptions, 0, "ample region: no preemption");
+        }
     }
 
     #[test]

@@ -31,15 +31,34 @@
 //! is the wall-clock span from admission to its first token (identical
 //! to the service time when unchunked).
 //!
+//! **KV policy.** Under the historical whole-window policy
+//! ([`KvPolicy::Whole`]) admission reserves the full prompt + output
+//! window, so requests never interact once admitted. Under the paged
+//! policy ([`KvPolicy::Paged`]) admission reserves only the prompt (plus
+//! the first token) and the lease grows block-by-block at token
+//! boundaries; when the pool runs dry and `--evict lru` is in force, the
+//! engine preempts the *youngest* active decoding request — the one that
+//! wastes the least recompute work; its idle session blocks were already
+//! evicted LRU-first by the allocator — drops its blocks, and parks it on
+//! a readmit queue. On readmission the preempted request's KV (prompt +
+//! tokens generated so far) is *recomputed* through the backend's prefill
+//! model, so simulated time stays conserved: preemption trades block
+//! capacity for recompute time, it never teleports work. Generated-token
+//! counts are untouched by preemption — `tokens_simulated` is bit-for-bit
+//! identical with and without it. Completed paged requests park their
+//! blocks as *session residency*, so a session-affinity-routed follow-up
+//! request skips re-prefilling the shared prefix (a reuse hit).
+//!
 //! Requests whose KV window can never fit the device are rejected rather
-//! than wedging the queue (the device has no eviction path).
+//! than wedging the queue.
 
 use super::backend::{DeviceCapacity, ExecutionBackend, SalPimBackend};
-use super::kv_cache::{KvCacheManager, KvLease};
+use super::kv_cache::{EvictPolicy, KvPolicy, KvPool, PoolLease};
 use super::metrics::ServeMetrics;
 use super::policy::Policy;
 use super::types::{Completion, Request};
 use crate::config::SimConfig;
+use std::collections::VecDeque;
 
 /// A request currently holding a batch slot.
 struct ActiveReq {
@@ -47,12 +66,21 @@ struct ActiveReq {
     /// Clock when the request left the queue (prefill start).
     admit_s: f64,
     /// Prompt tokens already summarized (== prompt_len once decoding).
+    /// Starts at the session-reused prefix under the paged policy.
     prefill_done: usize,
     /// Clock when the request entered the decode batch.
     decode_start_s: f64,
     /// Tokens produced so far (the completed prefill emits the first).
     produced: usize,
-    lease: KvLease,
+    lease: PoolLease,
+    /// Admission sequence number — preemption victims are the youngest.
+    seq: u64,
+    /// A freshly readmitted request is shielded from being preempted
+    /// again until it has produced at least one token past its
+    /// recompute: without this, a tight pool can cycle
+    /// readmit → full recompute charge → immediate re-preemption,
+    /// inflating the clock with zero progress.
+    shielded: bool,
 }
 
 impl ActiveReq {
@@ -77,6 +105,16 @@ impl ActiveReq {
     }
 }
 
+/// A preempted request waiting to re-enter the batch. Its latency
+/// anchors survive preemption so the completion's queue/prefill/decode
+/// partition still tiles `[arrival, finish]` exactly.
+struct Preempted {
+    req: Request,
+    admit_s: f64,
+    decode_start_s: f64,
+    produced: usize,
+}
+
 /// Post-run accounting beyond the per-request completions.
 #[derive(Debug, Clone)]
 pub struct EngineReport {
@@ -88,13 +126,23 @@ pub struct EngineReport {
     pub max_batch_seen: usize,
     /// Batched decode steps executed.
     pub decode_steps: u64,
+    /// Mean decode-batch size over all steps (the amortization lever).
+    pub mean_decode_batch: f64,
+    /// Active requests preempted under paged KV pressure.
+    pub preemptions: usize,
+    /// Tokens re-prefilled on readmission after preemption.
+    pub recompute_tokens: usize,
+    /// Admissions that reclaimed a session-resident KV prefix.
+    pub reuse_hits: usize,
+    /// Prompt tokens whose prefill was skipped via session reuse.
+    pub reuse_tokens: usize,
 }
 
 /// One device running continuous batching over an [`ExecutionBackend`].
 pub struct DeviceEngine {
     backend: Box<dyn ExecutionBackend>,
     capacity: DeviceCapacity,
-    kv: KvCacheManager,
+    kv: KvPool,
     pub policy: Policy,
     /// Batch slots (concurrent generations the command scheduler
     /// interleaves across subarray groups).
@@ -104,11 +152,19 @@ pub struct DeviceEngine {
     /// Prefill chunk size in tokens; `None` charges whole prefills
     /// inline at admission (the legacy decode-stalling behaviour).
     pub prefill_chunk: Option<usize>,
+    kv_policy: KvPolicy,
+    evict: EvictPolicy,
+    kv_block: Option<usize>,
+    kv_units: Option<usize>,
     pending: Vec<Request>,
     clock_s: f64,
     rejected: Vec<Request>,
+    readmit: VecDeque<Preempted>,
     max_batch_seen: usize,
     decode_steps: u64,
+    decode_batch_sum: u64,
+    preemptions: usize,
+    recompute_tokens: usize,
 }
 
 impl DeviceEngine {
@@ -121,19 +177,29 @@ impl DeviceEngine {
     pub fn with_backend(backend: Box<dyn ExecutionBackend>, max_batch: usize) -> Self {
         assert!(max_batch >= 1);
         let capacity = backend.capacity();
+        let kv_policy = KvPolicy::Whole;
+        let evict = EvictPolicy::Lru;
         DeviceEngine {
             backend,
             capacity,
-            kv: KvCacheManager::from_capacity(&capacity),
+            kv: KvPool::for_capacity(&capacity, kv_policy, evict, None, None),
             policy: Policy::Fcfs,
             max_batch,
             device_index: 0,
             prefill_chunk: None,
+            kv_policy,
+            evict,
+            kv_block: None,
+            kv_units: None,
             pending: Vec::new(),
             clock_s: 0.0,
             rejected: Vec::new(),
+            readmit: VecDeque::new(),
             max_batch_seen: 0,
             decode_steps: 0,
+            decode_batch_sum: 0,
+            preemptions: 0,
+            recompute_tokens: 0,
         }
     }
 
@@ -142,11 +208,63 @@ impl DeviceEngine {
         self
     }
 
-    /// Shrink the KV region to `units` allocation units — subarrays on
-    /// PIM (what-if experiments / admission pressure).
-    pub fn with_kv_subarrays(mut self, units: usize) -> Self {
-        self.kv = KvCacheManager::from_capacity_units(&self.capacity, units);
+    fn rebuild_pool(&mut self) {
+        self.kv = KvPool::for_capacity(
+            &self.capacity,
+            self.kv_policy,
+            self.evict,
+            self.kv_block,
+            self.kv_units,
+        );
+    }
+
+    /// Switch the KV allocation discipline (`--kv-policy`).
+    pub fn with_kv_policy(mut self, policy: KvPolicy) -> Self {
+        self.kv_policy = policy;
+        self.rebuild_pool();
         self
+    }
+
+    /// Set what the paged pool may reclaim under pressure (`--evict`).
+    pub fn with_evict(mut self, evict: EvictPolicy) -> Self {
+        self.evict = evict;
+        self.rebuild_pool();
+        self
+    }
+
+    /// Override the paged block size in tokens (`--kv-block`).
+    pub fn with_kv_block(mut self, tokens: usize) -> Self {
+        assert!(tokens >= 1, "a KV block holds at least one token");
+        self.kv_block = Some(tokens);
+        self.rebuild_pool();
+        self
+    }
+
+    /// Shrink the KV region to `units` allocation units — subarrays on
+    /// PIM (what-if experiments / admission pressure). Both KV policies
+    /// see the same byte budget, so paged-vs-whole comparisons run at
+    /// equal HBM capacity.
+    pub fn with_kv_subarrays(mut self, units: usize) -> Self {
+        self.kv_units = Some(units);
+        self.rebuild_pool();
+        self
+    }
+
+    /// Apply the full KV knob set in place (used by [`super::Cluster`]).
+    pub(crate) fn apply_kv(
+        &mut self,
+        policy: KvPolicy,
+        evict: EvictPolicy,
+        block: Option<usize>,
+        units: Option<usize>,
+    ) {
+        self.kv_policy = policy;
+        self.evict = evict;
+        self.kv_block = block;
+        if units.is_some() {
+            self.kv_units = units;
+        }
+        self.rebuild_pool();
     }
 
     /// Interleave prefills in `chunk`-token pieces at token boundaries
@@ -165,6 +283,11 @@ impl DeviceEngine {
         self.backend.name()
     }
 
+    /// The KV allocation discipline in force.
+    pub fn kv_policy(&self) -> KvPolicy {
+        self.kv_policy
+    }
+
     pub fn submit(&mut self, req: Request) {
         self.pending.push(req);
     }
@@ -172,6 +295,12 @@ impl DeviceEngine {
     /// Estimated outstanding work in tokens (for least-loaded routing).
     pub fn queued_tokens(&self) -> usize {
         self.pending.iter().map(|r| r.kv_tokens()).sum()
+    }
+
+    /// Tokens of `session`'s KV currently parked for reuse on this
+    /// device (0 under the whole-window policy).
+    pub fn session_resident_tokens(&self, session: u64) -> usize {
+        self.kv.session_resident_tokens(session)
     }
 
     /// Incremental cost of summarizing prompt tokens `[from, to)`.
@@ -193,6 +322,7 @@ impl DeviceEngine {
         let mut active: Vec<ActiveReq> = Vec::new();
         let mut completions: Vec<Completion> = Vec::new();
         let max_seq = self.capacity.max_seq;
+        let mut admit_seq: u64 = 0;
 
         loop {
             // Pull everything that has arrived by the current clock.
@@ -204,7 +334,7 @@ impl DeviceEngine {
                 }
             }
             // Idle device: jump to the next arrival or stop.
-            if active.is_empty() && waiting.is_empty() {
+            if active.is_empty() && waiting.is_empty() && self.readmit.is_empty() {
                 match incoming.next() {
                     Some(r) => {
                         self.clock_s = self.clock_s.max(r.arrival_s);
@@ -215,32 +345,75 @@ impl DeviceEngine {
                 }
             }
 
+            // Readmit preempted requests first (FIFO — the longest-waiting
+            // victim re-enters first). The dropped KV (prompt + tokens
+            // generated so far) is *recomputed* through the backend's
+            // prefill model, so the preemption's cost is paid in simulated
+            // time, not hand-waved away.
+            while active.len() < self.max_batch {
+                let Some(front) = self.readmit.front() else {
+                    break;
+                };
+                let rebuilt = front.req.prompt_len + front.produced;
+                match self
+                    .kv
+                    .try_readmit(front.req.id, front.req.session, rebuilt + 1)
+                {
+                    Some(lease) => {
+                        let p = self.readmit.pop_front().unwrap();
+                        let dt = self.prefill_increment_s(0, rebuilt);
+                        self.clock_s += dt;
+                        self.recompute_tokens += rebuilt;
+                        admit_seq += 1;
+                        active.push(ActiveReq {
+                            prefill_done: p.req.prompt_len,
+                            req: p.req,
+                            admit_s: p.admit_s,
+                            decode_start_s: p.decode_start_s,
+                            produced: p.produced,
+                            lease,
+                            seq: admit_seq,
+                            shielded: true,
+                        });
+                    }
+                    None => break,
+                }
+            }
+
             // Token-boundary admission: policy-ordered while a batch slot
             // and a KV reservation are both available.
             while active.len() < self.max_batch && !waiting.is_empty() {
                 let idx = self.policy.pick(&waiting);
-                let tokens = waiting[idx].kv_tokens();
-                if !self.kv.fits_ever(tokens) {
+                let window = waiting[idx]
+                    .kv_tokens()
+                    .max(waiting[idx].prompt_len + 1);
+                if !self.kv.fits_ever(window) {
                     let req = waiting.swap_remove(idx);
                     self.rejected.push(req);
                     continue;
                 }
                 let id = waiting[idx].id;
-                match self.kv.try_admit(id, tokens) {
-                    Some(lease) => {
+                let session = waiting[idx].session;
+                let prompt_len = waiting[idx].prompt_len;
+                match self.kv.try_admit(id, session, prompt_len, window) {
+                    Some((lease, reused)) => {
                         let req = waiting.swap_remove(idx);
                         let admit_s = self.clock_s;
+                        admit_seq += 1;
                         let mut a = ActiveReq {
                             req,
                             admit_s,
-                            prefill_done: 0,
+                            // A session-reused prefix skips its prefill.
+                            prefill_done: reused,
                             decode_start_s: admit_s,
                             produced: 0,
                             lease,
+                            seq: admit_seq,
+                            shielded: false,
                         };
                         if self.prefill_chunk.is_none() {
-                            // Whole summarization charged inline.
-                            let dt = self.prefill_increment_s(0, a.req.prompt_len);
+                            // The (rest of the) summarization charged inline.
+                            let dt = self.prefill_increment_s(reused, a.req.prompt_len);
                             self.clock_s += dt;
                             a.prefill_done = a.req.prompt_len;
                             a.decode_start_s = self.clock_s;
@@ -278,25 +451,85 @@ impl DeviceEngine {
                 }
             }
 
-            // One batched decode step over every request that still
-            // decodes (past prefill, not finished, KV below the window).
-            let kv_lens: Vec<usize> = active
+            // Grow every decoding lease to cover the KV the next step
+            // writes. Oldest-first, so a pool shortfall preempts only
+            // *strictly younger* requests — the oldest always progresses,
+            // which rules out livelock. A request with no younger victim
+            // stalls one boundary and keeps its blocks.
+            let mut stalled: Vec<u64> = Vec::new();
+            let mut order: Vec<u64> = active
                 .iter()
                 .filter(|a| a.decoding(max_seq))
-                .map(|a| a.next_kv())
+                .map(|a| a.seq)
                 .collect();
-            if !kv_lens.is_empty() {
-                let dt = self.backend.decode_step_s(&kv_lens);
-                self.clock_s += dt;
-                self.decode_steps += 1;
-                for a in active.iter_mut() {
-                    if a.decoding(max_seq) {
-                        a.produced += 1;
+            order.sort_unstable();
+            'grow: for seq in order {
+                loop {
+                    let Some(i) = active.iter().position(|a| a.seq == seq) else {
+                        continue 'grow;
+                    };
+                    let need = active[i].next_kv() + 1;
+                    if self.kv.ensure(&mut active[i].lease, need) {
+                        continue 'grow;
+                    }
+                    if !self.kv.preemption_allowed() {
+                        stalled.push(seq);
+                        continue 'grow;
+                    }
+                    // Youngest strictly-younger decoding request;
+                    // shielded (just-readmitted) requests are spared so
+                    // their recompute charge buys at least one token.
+                    let victim = active
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, a)| a.seq > seq && a.decoding(max_seq) && !a.shielded)
+                        .max_by_key(|(_, a)| a.seq)
+                        .map(|(j, _)| j);
+                    match victim {
+                        Some(j) => {
+                            let v = active.swap_remove(j);
+                            self.kv.free(v.lease);
+                            self.preemptions += 1;
+                            self.readmit.push_back(Preempted {
+                                req: v.req,
+                                admit_s: v.admit_s,
+                                decode_start_s: v.decode_start_s,
+                                produced: v.produced,
+                            });
+                            // Retry the grow with the freed blocks.
+                        }
+                        None => {
+                            stalled.push(seq);
+                            continue 'grow;
+                        }
                     }
                 }
             }
 
-            // Retire finished requests, freeing their KV slots.
+            // One batched decode step over every request that still
+            // decodes (past prefill, not finished, KV below the window,
+            // not stalled on blocks).
+            let parts: Vec<usize> = active
+                .iter()
+                .enumerate()
+                .filter(|(_, a)| a.decoding(max_seq) && !stalled.contains(&a.seq))
+                .map(|(i, _)| i)
+                .collect();
+            if !parts.is_empty() {
+                let kv_lens: Vec<usize> = parts.iter().map(|&i| active[i].next_kv()).collect();
+                let dt = self.backend.decode_step_s(&kv_lens);
+                self.clock_s += dt;
+                self.decode_steps += 1;
+                self.decode_batch_sum += kv_lens.len() as u64;
+                for &i in &parts {
+                    active[i].produced += 1;
+                    // One token produced: the readmission paid for itself.
+                    active[i].shielded = false;
+                }
+            }
+
+            // Retire finished requests, freeing their KV slots (paged
+            // pools park the blocks as session residency for reuse).
             let mut i = 0;
             while i < active.len() {
                 if active[i].finished(max_seq) {
@@ -339,6 +572,15 @@ impl DeviceEngine {
             kv_peak_utilization: self.kv.peak_utilization(),
             max_batch_seen: self.max_batch_seen,
             decode_steps: self.decode_steps,
+            mean_decode_batch: if self.decode_steps == 0 {
+                0.0
+            } else {
+                self.decode_batch_sum as f64 / self.decode_steps as f64
+            },
+            preemptions: self.preemptions,
+            recompute_tokens: self.recompute_tokens,
+            reuse_hits: self.kv.reuse_hits(),
+            reuse_tokens: self.kv.reuse_tokens(),
         }
     }
 
@@ -352,6 +594,7 @@ impl DeviceEngine {
 mod tests {
     use super::*;
     use crate::serve::backend::BackendKind;
+    use crate::serve::kv_cache::KvCacheManager;
 
     fn req(id: u64, prompt: usize, out: usize, at: f64) -> Request {
         Request {
@@ -378,6 +621,8 @@ mod tests {
         assert_eq!(r.rejected, 0);
         assert_eq!(r.max_batch_seen, 1);
         assert_eq!(r.decode_steps, 7, "n_out-1 decode iterations");
+        assert_eq!(r.preemptions, 0);
+        assert!((r.mean_decode_batch - 1.0).abs() < 1e-12);
     }
 
     #[test]
@@ -458,5 +703,103 @@ mod tests {
         let done = e.run();
         assert_eq!(done.len(), 3);
         assert_eq!(e.report().rejected, 0);
+    }
+
+    #[test]
+    fn paged_policy_serves_the_same_queue_with_more_concurrency() {
+        // Same tiny region as `kv_pressure_blocks_then_frees`: whole
+        // serializes (one window at a time), paged overlaps requests
+        // because only resident tokens hold blocks.
+        let cfg = SimConfig::paper();
+        let per_sub = cfg.hbm.subarray_bytes() / cfg.model.kv_bytes_per_token();
+        let subs_for_one = (40usize).div_ceil(per_sub);
+        let run = |policy: KvPolicy| {
+            let mut e = DeviceEngine::new(&cfg, 8)
+                .with_kv_policy(policy)
+                .with_kv_subarrays(2 * subs_for_one);
+            for i in 0..4 {
+                e.submit(req(i, 16, 24, 0.0));
+            }
+            let mut done: Vec<(u64, usize)> =
+                e.run().iter().map(|c| (c.id, c.tokens_simulated)).collect();
+            done.sort();
+            (done, e.report())
+        };
+        let (whole_done, whole_rep) = run(KvPolicy::Whole);
+        let (paged_done, paged_rep) = run(KvPolicy::Paged);
+        assert_eq!(whole_done, paged_done, "token conservation across policies");
+        assert!(
+            paged_rep.mean_decode_batch > whole_rep.mean_decode_batch,
+            "paged {} !> whole {}",
+            paged_rep.mean_decode_batch,
+            whole_rep.mean_decode_batch
+        );
+    }
+
+    #[test]
+    fn preemption_recomputes_and_conserves_tokens() {
+        // A region too small for every window forces preemption under
+        // paged+lru; every request still simulates its full budget.
+        let cfg = SimConfig::paper();
+        let per_sub = cfg.hbm.subarray_bytes() / cfg.model.kv_bytes_per_token();
+        let subs = (3 * 40usize).div_ceil(per_sub);
+        let mut e = DeviceEngine::new(&cfg, 8)
+            .with_kv_policy(KvPolicy::Paged)
+            .with_kv_subarrays(subs);
+        for i in 0..6 {
+            e.submit(req(i, 8, 32, 0.0));
+        }
+        let done = e.run();
+        assert_eq!(done.len(), 6, "everything served despite preemptions");
+        for c in &done {
+            assert_eq!(c.tokens_simulated, 32, "request {} lost tokens", c.id);
+        }
+        let rep = e.report();
+        assert!(rep.preemptions > 0, "pressure must force preemption");
+        assert!(rep.recompute_tokens > 0, "recompute must be charged");
+    }
+
+    #[test]
+    fn session_reuse_skips_the_shared_prefix() {
+        // Two requests of one session, arriving far apart: the second
+        // reclaims the first's resident blocks and skips most of its
+        // prefill, so its TTFT shrinks vs a cold session.
+        let cfg = SimConfig::paper();
+        let run = |same_session: bool| {
+            let mut e = DeviceEngine::new(&cfg, 4).with_kv_policy(KvPolicy::Paged);
+            let mut a = req(0, 64, 8, 0.0);
+            let mut b = req(1, 64, 8, 1.0);
+            a.session = 1;
+            b.session = if same_session { 1 } else { 2 };
+            e.submit(a);
+            e.submit(b);
+            let done = e.run();
+            let second = done.iter().find(|c| c.id == 1).unwrap().clone();
+            (second.ttft_s(), e.report())
+        };
+        let (cold_ttft, cold_rep) = run(false);
+        let (warm_ttft, warm_rep) = run(true);
+        assert_eq!(cold_rep.reuse_hits, 0);
+        assert_eq!(warm_rep.reuse_hits, 1);
+        assert!(warm_rep.reuse_tokens > 0);
+        assert!(
+            warm_ttft < cold_ttft,
+            "reused prefix must shrink TTFT: warm {warm_ttft} !< cold {cold_ttft}"
+        );
+    }
+
+    #[test]
+    fn evict_none_preallocates_and_never_preempts() {
+        let cfg = SimConfig::paper();
+        let mut e = DeviceEngine::new(&cfg, 8)
+            .with_kv_policy(KvPolicy::Paged)
+            .with_evict(EvictPolicy::None)
+            .with_kv_subarrays(16);
+        for i in 0..4 {
+            e.submit(req(i, 16, 16, 0.0));
+        }
+        let done = e.run();
+        assert_eq!(done.len(), 4);
+        assert_eq!(e.report().preemptions, 0);
     }
 }

@@ -1,19 +1,31 @@
-//! Subarray-aware KV-cache capacity accounting for one SAL-PIM device.
+//! KV-cache capacity management for one serving device: whole-window
+//! reservations and the paged block allocator.
 //!
 //! SAL-PIM keeps the KV cache resident in DRAM next to the weights
 //! (§3.2's KV mapping streams K/V rows through the S-ALUs like weight
 //! rows). A device therefore has a *hard* KV budget: whatever subarrays
 //! are left after the model weights and the LUT-embedded subarrays are
-//! placed. The manager allocates that budget to requests in whole
-//! subarrays — a request's K/V rows must be contiguous within a subarray
-//! group for the streaming schedule to hit them with open-row accesses,
-//! so capacity is consumed at subarray granularity even when a request's
-//! token window fills one only partially.
+//! placed. Two allocation disciplines share that budget:
 //!
-//! [`KvCacheManager::try_admit`] reserves the full window (prompt +
-//! output budget) up front — the paper's device has no KV eviction path,
-//! so admission control is the only defence against mid-generation
-//! overflow. Slots free on completion via [`KvCacheManager::release`].
+//! * **Whole-window** ([`KvCacheManager`], `--kv-policy whole`) — the
+//!   historical model: [`KvCacheManager::try_admit`] reserves the full
+//!   window (prompt + output budget) up front, so admission control is
+//!   the only defence against mid-generation overflow. Simple, but every
+//!   in-flight request pins KV it has not produced yet, which caps the
+//!   decode batch and the shared-weight-stream amortization with it.
+//! * **Paged** ([`PagedKvManager`], `--kv-policy paged`) — fixed-size
+//!   blocks of [`DeviceCapacity::kv_block_tokens`] tokens (derived from
+//!   the subarray row geometry: one block is one subarray's worth of
+//!   rows). Blocks are allocated on demand at token boundaries, freed
+//!   blocks of a finished request are parked as *session residency* so a
+//!   follow-up request of the same session skips re-prefilling the
+//!   shared prefix, and under pressure the allocator evicts idle session
+//!   blocks in LRU order before the engine resorts to preempting an
+//!   active request (recompute-on-readmit; see
+//!   [`crate::serve::DeviceEngine`]).
+//!
+//! [`KvPool`] wraps both behind the engine-facing vocabulary so the
+//! scheduler is policy-agnostic.
 
 use super::backend::DeviceCapacity;
 use crate::config::SimConfig;
@@ -31,8 +43,64 @@ pub fn device_kv_subarrays(cfg: &SimConfig) -> usize {
     total.saturating_sub(lut + weight_subarrays)
 }
 
-/// A granted KV reservation (returned by [`KvCacheManager::try_admit`];
-/// hand it back with [`KvCacheManager::release`]).
+/// Which KV allocation discipline a device runs (`--kv-policy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvPolicy {
+    /// Reserve the full window (prompt + output budget) at admission.
+    Whole,
+    /// Allocate fixed-size token blocks on demand at token boundaries.
+    Paged,
+}
+
+impl KvPolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "whole" => Some(KvPolicy::Whole),
+            "paged" => Some(KvPolicy::Paged),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KvPolicy::Whole => "whole",
+            KvPolicy::Paged => "paged",
+        }
+    }
+}
+
+/// What the paged allocator may reclaim under pressure (`--evict`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictPolicy {
+    /// Nothing beyond idle session blocks: admission reserves the whole
+    /// window in blocks, so growth can never fail (no preemption path).
+    None,
+    /// Idle session-resident blocks go first (LRU order); if the pool is
+    /// still short, the engine preempts the youngest active request and
+    /// recomputes its KV on readmission.
+    Lru,
+}
+
+impl EvictPolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "none" => Some(EvictPolicy::None),
+            "lru" => Some(EvictPolicy::Lru),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EvictPolicy::None => "none",
+            EvictPolicy::Lru => "lru",
+        }
+    }
+}
+
+/// A granted whole-window KV reservation (returned by
+/// [`KvCacheManager::try_admit`]; hand it back with
+/// [`KvCacheManager::release`]).
 #[derive(Debug)]
 pub struct KvLease {
     /// Request id the lease belongs to (for diagnostics).
@@ -43,7 +111,8 @@ pub struct KvLease {
     pub subarrays: usize,
 }
 
-/// Tracks the KV subarray pool of one device.
+/// Tracks the KV subarray pool of one device under whole-window
+/// reservations.
 #[derive(Debug)]
 pub struct KvCacheManager {
     /// Bytes of K+V state per token (2 × layers × d_model × param bytes).
@@ -177,9 +246,513 @@ impl KvCacheManager {
     }
 }
 
+/// A live paged allocation: the blocks currently backing one request's
+/// KV state. Grows via [`PagedKvManager::try_grow`]; hand it back with
+/// [`PagedKvManager::release_retain`] (park for session reuse) or
+/// [`PagedKvManager::free`] (preemption — the KV is dropped).
+#[derive(Debug)]
+pub struct PagedLease {
+    /// Request id the lease belongs to (for diagnostics).
+    pub request_id: u64,
+    /// Session whose residency the blocks join on release.
+    pub session: u64,
+    /// Tokens currently covered.
+    pub tokens: usize,
+    /// Blocks currently held.
+    pub blocks: usize,
+}
+
+/// Idle blocks a finished request left behind, keyed by session.
+#[derive(Debug)]
+struct SessionResidency {
+    session: u64,
+    tokens: usize,
+    blocks: usize,
+    /// LRU stamp (monotone sequence, not wall clock — deterministic).
+    last_use: u64,
+}
+
+/// Fixed-size-block KV allocator with LRU session residency.
+///
+/// Capacity accounting is in *blocks* of `block_tokens` tokens each; the
+/// block byte size is `block_tokens × kv_bytes_per_token`, sized so one
+/// block is one subarray's worth of K/V rows on PIM (one allocator page
+/// on a GPU). The region holds `total_blocks` blocks — the same bytes as
+/// the whole-window manager's subarray region, so paged-vs-whole
+/// comparisons run at equal HBM capacity.
+#[derive(Debug)]
+pub struct PagedKvManager {
+    kv_bytes_per_token: usize,
+    /// Bytes per backend allocation unit (used to size the region).
+    alloc_unit_bytes: usize,
+    /// Allocation units backing the region (the byte budget).
+    region_units: usize,
+    block_tokens: usize,
+    total_blocks: usize,
+    free_blocks: usize,
+    /// Idle session blocks, evictable in LRU order.
+    resident: Vec<SessionResidency>,
+    lru_seq: u64,
+    admitted: usize,
+    peak_used_blocks: usize,
+    reuse_hits: usize,
+    reuse_tokens: usize,
+    sessions_evicted: usize,
+}
+
+impl PagedKvManager {
+    /// Allocator over a backend's full KV region.
+    pub fn from_capacity(cap: &DeviceCapacity) -> Self {
+        Self::from_capacity_units(cap, cap.kv_total_units)
+    }
+
+    /// Allocator over `units` backend allocation units (what-if pressure
+    /// sweeps; equal bytes to [`KvCacheManager::from_capacity_units`]).
+    pub fn from_capacity_units(cap: &DeviceCapacity, units: usize) -> Self {
+        let mut mgr = PagedKvManager {
+            kv_bytes_per_token: cap.kv_bytes_per_token,
+            alloc_unit_bytes: cap.kv_alloc_unit_bytes,
+            region_units: units,
+            block_tokens: cap.kv_block_tokens.max(1),
+            total_blocks: 0,
+            free_blocks: 0,
+            resident: Vec::new(),
+            lru_seq: 0,
+            admitted: 0,
+            peak_used_blocks: 0,
+            reuse_hits: 0,
+            reuse_tokens: 0,
+            sessions_evicted: 0,
+        };
+        mgr.resize_blocks();
+        mgr
+    }
+
+    /// Override the block size in tokens (`--kv-block`); the block count
+    /// is re-derived so the region's byte budget stays fixed.
+    pub fn with_block_tokens(mut self, tokens: usize) -> Self {
+        assert!(tokens >= 1, "a KV block holds at least one token");
+        self.block_tokens = tokens;
+        self.resize_blocks();
+        self
+    }
+
+    fn resize_blocks(&mut self) {
+        debug_assert!(self.resident.is_empty() && self.admitted == 0);
+        let region_bytes = self.region_units * self.alloc_unit_bytes;
+        let block_bytes = self.block_tokens * self.kv_bytes_per_token;
+        self.total_blocks = if block_bytes == 0 {
+            0
+        } else {
+            region_bytes / block_bytes
+        };
+        self.free_blocks = self.total_blocks;
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.total_blocks
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free_blocks
+    }
+
+    /// Blocks a `tokens`-long KV state occupies.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Token capacity if the region were filled by one giant request.
+    pub fn capacity_tokens(&self) -> usize {
+        self.total_blocks * self.block_tokens
+    }
+
+    /// Could a `tokens`-wide state ever be resident (idle device, every
+    /// session evicted)?
+    pub fn fits_ever(&self, tokens: usize) -> bool {
+        self.blocks_for(tokens) <= self.total_blocks
+    }
+
+    fn resident_blocks(&self) -> usize {
+        self.resident.iter().map(|r| r.blocks).sum()
+    }
+
+    /// Tokens of `session`'s KV currently parked for reuse.
+    pub fn session_resident_tokens(&self, session: u64) -> usize {
+        self.resident
+            .iter()
+            .find(|r| r.session == session)
+            .map(|r| r.tokens)
+            .unwrap_or(0)
+    }
+
+    fn next_seq(&mut self) -> u64 {
+        self.lru_seq += 1;
+        self.lru_seq
+    }
+
+    /// Evict idle sessions (LRU first) until `need` blocks are free.
+    /// Returns `false` if even a fully-evicted pool stays short.
+    fn evict_idle_until(&mut self, need: usize) -> bool {
+        while self.free_blocks < need {
+            let Some(lru) = self
+                .resident
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, r)| r.last_use)
+                .map(|(i, _)| i)
+            else {
+                return false;
+            };
+            let r = self.resident.swap_remove(lru);
+            self.free_blocks += r.blocks;
+            self.sessions_evicted += 1;
+        }
+        true
+    }
+
+    fn note_peak(&mut self) {
+        self.peak_used_blocks = self.peak_used_blocks.max(self.used_blocks());
+    }
+
+    /// Admit a request needing `want_tokens` of coverage. The session's
+    /// parked residency (if any) is reclaimed into the lease first:
+    /// `min(resident, max_reuse)` tokens count as an already-computed
+    /// prefix the caller may skip prefilling (the reuse hit). Other
+    /// sessions' idle blocks are evicted LRU-first if the free pool is
+    /// short. `None` defers the request (active leases hold too much).
+    pub fn try_admit(
+        &mut self,
+        request_id: u64,
+        session: u64,
+        want_tokens: usize,
+        max_reuse: usize,
+    ) -> Option<(PagedLease, usize)> {
+        let want_blocks = self.blocks_for(want_tokens);
+        if want_blocks > self.free_blocks + self.resident_blocks() {
+            return None;
+        }
+        let mut reused = 0usize;
+        if let Some(i) = self.resident.iter().position(|r| r.session == session) {
+            let r = self.resident.swap_remove(i);
+            self.free_blocks += r.blocks;
+            reused = r.tokens.min(max_reuse);
+            if reused > 0 {
+                self.reuse_hits += 1;
+                self.reuse_tokens += reused;
+            }
+        }
+        if !self.evict_idle_until(want_blocks) {
+            unreachable!("availability was checked above");
+        }
+        self.free_blocks -= want_blocks;
+        self.admitted += 1;
+        self.note_peak();
+        Some((
+            PagedLease {
+                request_id,
+                session,
+                tokens: want_tokens,
+                blocks: want_blocks,
+            },
+            reused,
+        ))
+    }
+
+    /// Grow a lease to cover `want_tokens`, allocating blocks on demand
+    /// (idle sessions evicted LRU-first). `false` means the engine must
+    /// preempt an active request (or stall) and retry.
+    pub fn try_grow(&mut self, lease: &mut PagedLease, want_tokens: usize) -> bool {
+        let want_blocks = self.blocks_for(want_tokens);
+        if want_blocks <= lease.blocks {
+            lease.tokens = lease.tokens.max(want_tokens);
+            return true;
+        }
+        let need = want_blocks - lease.blocks;
+        if need > self.free_blocks + self.resident_blocks() {
+            return false;
+        }
+        if !self.evict_idle_until(need) {
+            unreachable!("availability was checked above");
+        }
+        self.free_blocks -= need;
+        lease.blocks = want_blocks;
+        lease.tokens = want_tokens;
+        self.note_peak();
+        true
+    }
+
+    /// Finish a request, parking its blocks as session residency so a
+    /// follow-up of the same session can reuse the prefix. If the
+    /// session already has parked blocks, the larger footprint wins.
+    pub fn release_retain(&mut self, lease: PagedLease) {
+        self.admitted = self.admitted.saturating_sub(1);
+        let seq = self.next_seq();
+        if let Some(i) = self
+            .resident
+            .iter()
+            .position(|r| r.session == lease.session)
+        {
+            if self.resident[i].tokens >= lease.tokens {
+                self.free_blocks += lease.blocks;
+            } else {
+                self.free_blocks += self.resident[i].blocks;
+                self.resident[i].tokens = lease.tokens;
+                self.resident[i].blocks = lease.blocks;
+            }
+            self.resident[i].last_use = seq;
+        } else {
+            self.resident.push(SessionResidency {
+                session: lease.session,
+                tokens: lease.tokens,
+                blocks: lease.blocks,
+                last_use: seq,
+            });
+        }
+    }
+
+    /// Drop a lease without retention (preemption: the KV is lost and
+    /// must be recomputed on readmission).
+    pub fn free(&mut self, lease: PagedLease) {
+        self.admitted = self.admitted.saturating_sub(1);
+        self.free_blocks = (self.free_blocks + lease.blocks).min(self.total_blocks);
+    }
+
+    /// Live admissions.
+    pub fn admitted(&self) -> usize {
+        self.admitted
+    }
+
+    /// Blocks holding data right now (leased + parked residencies).
+    pub fn used_blocks(&self) -> usize {
+        self.total_blocks - self.free_blocks
+    }
+
+    /// Admissions that reclaimed a session prefix.
+    pub fn reuse_hits(&self) -> usize {
+        self.reuse_hits
+    }
+
+    /// Prompt tokens whose prefill was skipped via session reuse.
+    pub fn reuse_tokens(&self) -> usize {
+        self.reuse_tokens
+    }
+
+    /// Idle session residencies evicted under pressure.
+    pub fn sessions_evicted(&self) -> usize {
+        self.sessions_evicted
+    }
+
+    /// Fraction of the region holding data right now.
+    pub fn utilization(&self) -> f64 {
+        if self.total_blocks == 0 {
+            return 0.0;
+        }
+        self.used_blocks() as f64 / self.total_blocks as f64
+    }
+
+    /// High-water utilization over the manager's lifetime.
+    pub fn peak_utilization(&self) -> f64 {
+        if self.total_blocks == 0 {
+            return 0.0;
+        }
+        self.peak_used_blocks as f64 / self.total_blocks as f64
+    }
+}
+
+/// A lease from either allocation discipline.
+#[derive(Debug)]
+pub enum PoolLease {
+    Whole(KvLease),
+    Paged(PagedLease),
+}
+
+/// Engine-facing KV pool: whole-window or paged, one vocabulary.
+#[derive(Debug)]
+pub enum KvPool {
+    Whole(KvCacheManager),
+    Paged {
+        mgr: PagedKvManager,
+        evict: EvictPolicy,
+    },
+}
+
+impl KvPool {
+    /// Build the pool a device engine runs: `policy` picks the
+    /// discipline, `block_tokens` overrides the paged block size,
+    /// `units` shrinks the region (what-if pressure; both disciplines
+    /// see the same byte budget).
+    pub fn for_capacity(
+        cap: &DeviceCapacity,
+        policy: KvPolicy,
+        evict: EvictPolicy,
+        block_tokens: Option<usize>,
+        units: Option<usize>,
+    ) -> Self {
+        let units = units.unwrap_or(cap.kv_total_units);
+        match policy {
+            KvPolicy::Whole => KvPool::Whole(KvCacheManager::from_capacity_units(cap, units)),
+            KvPolicy::Paged => {
+                let mut mgr = PagedKvManager::from_capacity_units(cap, units);
+                if let Some(b) = block_tokens {
+                    mgr = mgr.with_block_tokens(b);
+                }
+                KvPool::Paged { mgr, evict }
+            }
+        }
+    }
+
+    pub fn policy(&self) -> KvPolicy {
+        match self {
+            KvPool::Whole(_) => KvPolicy::Whole,
+            KvPool::Paged { .. } => KvPolicy::Paged,
+        }
+    }
+
+    /// Could a request with this full window ever run on an idle device?
+    pub fn fits_ever(&self, window_tokens: usize) -> bool {
+        match self {
+            KvPool::Whole(m) => m.fits_ever(window_tokens),
+            KvPool::Paged { mgr, .. } => mgr.fits_ever(window_tokens),
+        }
+    }
+
+    /// Admit a fresh request. Whole reserves the full window; paged
+    /// reserves the prompt plus the first token (`--evict lru`) or the
+    /// full window (`--evict none`, which makes growth infallible).
+    /// Returns the lease and the session-reused prefix tokens.
+    pub fn try_admit(
+        &mut self,
+        request_id: u64,
+        session: u64,
+        prompt_len: usize,
+        window_tokens: usize,
+    ) -> Option<(PoolLease, usize)> {
+        match self {
+            KvPool::Whole(m) => m
+                .try_admit(request_id, window_tokens)
+                .map(|l| (PoolLease::Whole(l), 0)),
+            KvPool::Paged { mgr, evict } => {
+                let want = match evict {
+                    EvictPolicy::None => window_tokens.max(prompt_len + 1),
+                    EvictPolicy::Lru => prompt_len + 1,
+                };
+                // Reuse at most prompt_len - 1 tokens: the last prompt
+                // token always prefills so the first output token has a
+                // nonzero cost.
+                let max_reuse = prompt_len.saturating_sub(1);
+                mgr.try_admit(request_id, session, want, max_reuse)
+                    .map(|(l, reused)| (PoolLease::Paged(l), reused))
+            }
+        }
+    }
+
+    /// Re-admit a preempted request: allocate coverage for its rebuilt
+    /// KV (`tokens`), no session reuse (its blocks were dropped).
+    pub fn try_readmit(&mut self, request_id: u64, session: u64, tokens: usize) -> Option<PoolLease> {
+        match self {
+            KvPool::Whole(m) => m.try_admit(request_id, tokens).map(PoolLease::Whole),
+            KvPool::Paged { mgr, .. } => mgr
+                .try_admit(request_id, session, tokens, 0)
+                .map(|(l, _)| PoolLease::Paged(l)),
+        }
+    }
+
+    /// Make sure the lease covers `tokens` before a decode step writes
+    /// KV up to that length. Whole-window leases always do (the window
+    /// was reserved up front); paged leases grow block-by-block. `false`
+    /// means the engine must preempt a victim (or stall this request one
+    /// boundary) and retry.
+    pub fn ensure(&mut self, lease: &mut PoolLease, tokens: usize) -> bool {
+        match (self, lease) {
+            (KvPool::Whole(_), PoolLease::Whole(l)) => {
+                debug_assert!(tokens <= l.tokens, "decode past the reserved window");
+                true
+            }
+            (KvPool::Paged { mgr, .. }, PoolLease::Paged(l)) => mgr.try_grow(l, tokens),
+            _ => unreachable!("lease/pool policy mismatch"),
+        }
+    }
+
+    /// Finish a request. Paged pools park the blocks for session reuse;
+    /// whole-window pools return them to the free list.
+    pub fn release(&mut self, lease: PoolLease) {
+        match (self, lease) {
+            (KvPool::Whole(m), PoolLease::Whole(l)) => m.release(l),
+            (KvPool::Paged { mgr, .. }, PoolLease::Paged(l)) => mgr.release_retain(l),
+            _ => unreachable!("lease/pool policy mismatch"),
+        }
+    }
+
+    /// Drop a preempted request's lease (no retention).
+    pub fn free(&mut self, lease: PoolLease) {
+        match (self, lease) {
+            (KvPool::Whole(m), PoolLease::Whole(l)) => m.release(l),
+            (KvPool::Paged { mgr, .. }, PoolLease::Paged(l)) => mgr.free(l),
+            _ => unreachable!("lease/pool policy mismatch"),
+        }
+    }
+
+    /// Whether the engine may preempt active requests under pressure.
+    pub fn preemption_allowed(&self) -> bool {
+        matches!(
+            self,
+            KvPool::Paged {
+                evict: EvictPolicy::Lru,
+                ..
+            }
+        )
+    }
+
+    /// Tokens of `session`'s KV parked for reuse (0 under whole-window).
+    pub fn session_resident_tokens(&self, session: u64) -> usize {
+        match self {
+            KvPool::Whole(_) => 0,
+            KvPool::Paged { mgr, .. } => mgr.session_resident_tokens(session),
+        }
+    }
+
+    pub fn reuse_hits(&self) -> usize {
+        match self {
+            KvPool::Whole(_) => 0,
+            KvPool::Paged { mgr, .. } => mgr.reuse_hits(),
+        }
+    }
+
+    pub fn reuse_tokens(&self) -> usize {
+        match self {
+            KvPool::Whole(_) => 0,
+            KvPool::Paged { mgr, .. } => mgr.reuse_tokens(),
+        }
+    }
+
+    pub fn utilization(&self) -> f64 {
+        match self {
+            KvPool::Whole(m) => m.utilization(),
+            KvPool::Paged { mgr, .. } => mgr.utilization(),
+        }
+    }
+
+    pub fn peak_utilization(&self) -> f64 {
+        match self {
+            KvPool::Whole(m) => m.peak_utilization(),
+            KvPool::Paged { mgr, .. } => mgr.peak_utilization(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serve::backend::{ExecutionBackend, SalPimBackend};
+
+    fn paper_capacity() -> DeviceCapacity {
+        SalPimBackend::new(&SimConfig::paper()).capacity()
+    }
 
     #[test]
     fn paper_device_has_room_for_many_contexts() {
@@ -230,12 +803,7 @@ mod tests {
     #[test]
     fn capacity_constructor_matches_for_device() {
         let cfg = SimConfig::paper();
-        let cap = DeviceCapacity {
-            kv_bytes_per_token: cfg.model.kv_bytes_per_token(),
-            kv_alloc_unit_bytes: cfg.hbm.subarray_bytes(),
-            kv_total_units: device_kv_subarrays(&cfg),
-            max_seq: cfg.model.max_seq,
-        };
+        let cap = paper_capacity();
         let a = KvCacheManager::for_device(&cfg);
         let b = KvCacheManager::from_capacity(&cap);
         assert_eq!(a.total_subarrays(), b.total_subarrays());
@@ -253,5 +821,160 @@ mod tests {
         assert_eq!(kv.subarrays_for(1), 1);
         let per_sub = cfg.hbm.subarray_bytes() / cfg.model.kv_bytes_per_token();
         assert_eq!(kv.subarrays_for(per_sub + 1), 2);
+    }
+
+    #[test]
+    fn policy_tokens_parse_and_name() {
+        for p in [KvPolicy::Whole, KvPolicy::Paged] {
+            assert_eq!(KvPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(KvPolicy::parse("vLLM"), None);
+        for e in [EvictPolicy::None, EvictPolicy::Lru] {
+            assert_eq!(EvictPolicy::parse(e.name()), Some(e));
+        }
+        assert_eq!(EvictPolicy::parse("fifo"), None);
+    }
+
+    #[test]
+    fn paged_region_matches_whole_region_bytes() {
+        // Equal HBM capacity: the paged region over N units holds at
+        // least as many tokens as the subarray-granular whole region
+        // (block packing can only round *down* less).
+        let cap = paper_capacity();
+        let whole = KvCacheManager::from_capacity_units(&cap, 16);
+        let paged = PagedKvManager::from_capacity_units(&cap, 16);
+        assert!(paged.block_tokens() >= 1);
+        assert!(paged.capacity_tokens() >= whole.capacity_tokens());
+        // And the byte budgets agree to within one block.
+        let whole_bytes = 16 * cap.kv_alloc_unit_bytes;
+        let paged_bytes =
+            paged.total_blocks() * paged.block_tokens() * cap.kv_bytes_per_token;
+        assert!(paged_bytes <= whole_bytes);
+        assert!(whole_bytes - paged_bytes < paged.block_tokens() * cap.kv_bytes_per_token);
+    }
+
+    #[test]
+    fn paged_alloc_grow_free_ledger() {
+        let cap = paper_capacity();
+        let mut kv = PagedKvManager::from_capacity_units(&cap, 8);
+        let bt = kv.block_tokens();
+        let total = kv.total_blocks();
+        let (mut lease, reused) = kv.try_admit(1, 7, bt, 0).expect("one block fits");
+        assert_eq!(reused, 0);
+        assert_eq!(lease.blocks, 1);
+        assert_eq!(kv.used_blocks(), 1);
+        // Growing within the block allocates nothing.
+        assert!(kv.try_grow(&mut lease, bt));
+        assert_eq!(lease.blocks, 1);
+        // Crossing the block boundary allocates exactly one more.
+        assert!(kv.try_grow(&mut lease, bt + 1));
+        assert_eq!(lease.blocks, 2);
+        assert_eq!(kv.used_blocks(), 2);
+        // Growth past the region fails without corrupting the ledger.
+        assert!(!kv.try_grow(&mut lease, (total + 1) * bt));
+        assert_eq!(lease.blocks, 2);
+        kv.free(lease);
+        assert_eq!(kv.used_blocks(), 0);
+        assert!(kv.peak_utilization() > 0.0);
+    }
+
+    #[test]
+    fn session_residency_reuses_and_evicts_lru() {
+        let cap = paper_capacity();
+        let mut kv = PagedKvManager::from_capacity_units(&cap, 8);
+        let bt = kv.block_tokens();
+        let total = kv.total_blocks();
+
+        // Session 1 finishes a 2-block request; its blocks park.
+        let (lease, _) = kv.try_admit(1, 1, 2 * bt, 0).unwrap();
+        kv.release_retain(lease);
+        assert_eq!(kv.session_resident_tokens(1), 2 * bt);
+        assert_eq!(kv.used_blocks(), 2, "residency still holds data");
+
+        // A follow-up of session 1 reclaims the prefix.
+        let (lease, reused) = kv.try_admit(2, 1, 2 * bt + 1, 2 * bt).unwrap();
+        assert_eq!(reused, 2 * bt);
+        assert_eq!(kv.reuse_hits(), 1);
+        assert_eq!(kv.reuse_tokens(), 2 * bt);
+        assert_eq!(kv.session_resident_tokens(1), 0, "residency reclaimed");
+        kv.release_retain(lease);
+
+        // Park a second session, then demand the whole region: both idle
+        // residencies are evicted (LRU first) to satisfy the allocation.
+        let (lease2, _) = kv.try_admit(3, 2, bt, 0).unwrap();
+        kv.release_retain(lease2);
+        assert!(kv.session_resident_tokens(1) > 0);
+        assert!(kv.session_resident_tokens(2) > 0);
+        let (big, reused) = kv.try_admit(4, 9, total * bt, 0).expect("evicts idle sessions");
+        assert_eq!(reused, 0);
+        assert_eq!(kv.session_resident_tokens(1), 0);
+        assert_eq!(kv.session_resident_tokens(2), 0);
+        assert!(kv.sessions_evicted() >= 2);
+        kv.free(big);
+    }
+
+    #[test]
+    fn paged_defers_when_active_leases_hold_the_region() {
+        let cap = paper_capacity();
+        let mut kv = PagedKvManager::from_capacity_units(&cap, 4);
+        let bt = kv.block_tokens();
+        let total = kv.total_blocks();
+        let (lease, _) = kv.try_admit(1, 1, total * bt, 0).unwrap();
+        // Active leases are not evictable: a second admission defers.
+        assert!(kv.try_admit(2, 2, bt, 0).is_none());
+        kv.free(lease);
+        assert!(kv.try_admit(2, 2, bt, 0).is_some());
+    }
+
+    #[test]
+    fn pool_dispatches_both_policies() {
+        let cap = paper_capacity();
+        let mut whole =
+            KvPool::for_capacity(&cap, KvPolicy::Whole, EvictPolicy::Lru, None, Some(16));
+        let mut paged =
+            KvPool::for_capacity(&cap, KvPolicy::Paged, EvictPolicy::Lru, None, Some(16));
+        assert_eq!(whole.policy(), KvPolicy::Whole);
+        assert_eq!(paged.policy(), KvPolicy::Paged);
+        assert!(!whole.preemption_allowed());
+        assert!(paged.preemption_allowed());
+
+        // Whole reserves the window up front; paged only the prompt + 1.
+        let (mut wl, wr) = whole.try_admit(0, 0, 16, 48).unwrap();
+        let (mut pl, pr) = paged.try_admit(0, 0, 16, 48).unwrap();
+        assert_eq!((wr, pr), (0, 0));
+        assert!(whole.utilization() > paged.utilization());
+        assert!(whole.ensure(&mut wl, 48), "window pre-reserved");
+        assert!(paged.ensure(&mut pl, 48));
+        whole.release(wl);
+        paged.release(pl);
+        assert!(paged.session_resident_tokens(0) > 0, "paged parks the session");
+        assert_eq!(whole.session_resident_tokens(0), 0);
+    }
+
+    #[test]
+    fn pool_evict_none_preallocates_the_window() {
+        let cap = paper_capacity();
+        let mut pool =
+            KvPool::for_capacity(&cap, KvPolicy::Paged, EvictPolicy::None, None, Some(16));
+        assert!(!pool.preemption_allowed());
+        let (mut lease, _) = pool.try_admit(0, 0, 16, 48).unwrap();
+        // Growth within the window can never fail.
+        for t in 17..=48 {
+            assert!(pool.ensure(&mut lease, t));
+        }
+        pool.free(lease);
+    }
+
+    #[test]
+    fn block_size_override_rescales_the_region() {
+        let cap = paper_capacity();
+        let small = PagedKvManager::from_capacity_units(&cap, 8);
+        let coarse = PagedKvManager::from_capacity_units(&cap, 8)
+            .with_block_tokens(small.block_tokens() * 2);
+        assert_eq!(coarse.block_tokens(), small.block_tokens() * 2);
+        assert!(coarse.total_blocks() <= small.total_blocks() / 2 + 1);
+        // Byte budget is conserved across block sizes (within a block).
+        let b = |m: &PagedKvManager| m.total_blocks() * m.block_tokens();
+        assert!(b(&coarse) <= b(&small));
     }
 }

@@ -5,6 +5,7 @@
 //! input and [`ServeMetrics::from_completions`] yields zeroed defaults
 //! instead of panicking.
 
+use super::engine::EngineReport;
 use super::types::Completion;
 
 /// Percentile of a sample set (nearest-rank; `p` in [0, 100]).
@@ -31,6 +32,18 @@ pub struct ServeMetrics {
     pub p50_ttft_s: f64,
     pub p95_ttft_s: f64,
     pub mean_queue_s: f64,
+    /// Paged-KV engine counters, filled by
+    /// [`ServeMetrics::absorb_reports`] (zero for completion-only
+    /// aggregations and whole-window runs).
+    pub preemptions: usize,
+    /// Tokens re-prefilled on readmission after preemption.
+    pub recompute_tokens: usize,
+    /// Admissions that reclaimed a session-resident KV prefix.
+    pub reuse_hits: usize,
+    /// Prompt tokens whose prefill was skipped via session reuse.
+    pub reuse_tokens: usize,
+    /// Mean decode-batch size across devices (step-weighted).
+    pub mean_decode_batch: f64,
 }
 
 impl ServeMetrics {
@@ -46,6 +59,11 @@ impl ServeMetrics {
             p50_ttft_s: 0.0,
             p95_ttft_s: 0.0,
             mean_queue_s: 0.0,
+            preemptions: 0,
+            recompute_tokens: 0,
+            reuse_hits: 0,
+            reuse_tokens: 0,
+            mean_decode_batch: 0.0,
         }
     }
 
@@ -74,6 +92,30 @@ impl ServeMetrics {
             p50_ttft_s: percentile(&ttfts, 50.0).unwrap_or(0.0),
             p95_ttft_s: percentile(&ttfts, 95.0).unwrap_or(0.0),
             mean_queue_s: done.iter().map(|c| c.queue_s).sum::<f64>() / done.len() as f64,
+            preemptions: 0,
+            recompute_tokens: 0,
+            reuse_hits: 0,
+            reuse_tokens: 0,
+            mean_decode_batch: 0.0,
+        }
+    }
+
+    /// Fold per-device engine reports into the metrics: preemption /
+    /// recompute / reuse counters sum across devices, the mean decode
+    /// batch is weighted by each device's step count.
+    pub fn absorb_reports(&mut self, reports: &[EngineReport]) {
+        let mut steps = 0u64;
+        let mut batch_sum = 0.0f64;
+        for r in reports {
+            self.preemptions += r.preemptions;
+            self.recompute_tokens += r.recompute_tokens;
+            self.reuse_hits += r.reuse_hits;
+            self.reuse_tokens += r.reuse_tokens;
+            batch_sum += r.mean_decode_batch * r.decode_steps as f64;
+            steps += r.decode_steps;
+        }
+        if steps > 0 {
+            self.mean_decode_batch = batch_sum / steps as f64;
         }
     }
 }
@@ -96,7 +138,18 @@ impl std::fmt::Display for ServeMetrics {
             self.p50_ttft_s * 1e3,
             self.p95_ttft_s * 1e3
         )?;
-        write!(f, "mean queue:      {:.1} ms", self.mean_queue_s * 1e3)
+        write!(f, "mean queue:      {:.1} ms", self.mean_queue_s * 1e3)?;
+        if self.mean_decode_batch > 0.0 {
+            write!(f, "\nmean batch:      {:.2}", self.mean_decode_batch)?;
+        }
+        if self.preemptions > 0 || self.reuse_hits > 0 {
+            write!(
+                f,
+                "\npaging:          {} preempt ({} tok recompute) | {} reuse hit ({} tok)",
+                self.preemptions, self.recompute_tokens, self.reuse_hits, self.reuse_tokens
+            )?;
+        }
+        Ok(())
     }
 }
 
@@ -159,5 +212,32 @@ mod tests {
         let m = ServeMetrics::from_completions(&[comp(0, 0.0, 0.01, 0.1, 10)]);
         let s = format!("{m}");
         assert!(s.contains("throughput"));
+        assert!(!s.contains("paging"), "quiet when no paging activity");
+    }
+
+    #[test]
+    fn engine_reports_fold_into_the_metrics() {
+        let rep = |steps: u64, batch: f64, pre: usize, reuse: usize| EngineReport {
+            rejected: 0,
+            kv_peak_utilization: 0.5,
+            max_batch_seen: 4,
+            decode_steps: steps,
+            mean_decode_batch: batch,
+            preemptions: pre,
+            recompute_tokens: 10 * pre,
+            reuse_hits: reuse,
+            reuse_tokens: 5 * reuse,
+        };
+        let mut m = ServeMetrics::from_completions(&[comp(0, 0.0, 0.01, 0.1, 10)]);
+        m.absorb_reports(&[rep(10, 4.0, 1, 2), rep(30, 2.0, 2, 0)]);
+        assert_eq!(m.preemptions, 3);
+        assert_eq!(m.recompute_tokens, 30);
+        assert_eq!(m.reuse_hits, 2);
+        assert_eq!(m.reuse_tokens, 10);
+        // Step-weighted: (10*4 + 30*2) / 40 = 2.5.
+        assert!((m.mean_decode_batch - 2.5).abs() < 1e-12);
+        let s = format!("{m}");
+        assert!(s.contains("paging"), "{s}");
+        assert!(s.contains("mean batch"), "{s}");
     }
 }

@@ -9,9 +9,12 @@
 //!   cost models (SAL-PIM, GPU roofline, bank-level PIM, heterogeneous
 //!   GPU-prefill + PIM-decode); everything below schedules against the
 //!   trait, never a concrete simulator;
-//! * [`KvCacheManager`] — maps per-request KV state onto the backend's
-//!   capacity hints (subarrays on PIM, pages on a GPU); admission fails
-//!   when the KV region is exhausted and slots free on completion;
+//! * [`kv_cache`] — KV capacity management over the backend's hints
+//!   (subarrays on PIM, pages on a GPU): the historical whole-window
+//!   [`KvCacheManager`] and the paged [`PagedKvManager`] (fixed-size
+//!   token blocks, LRU session residency, preemption + recompute), both
+//!   behind the engine-facing [`KvPool`] (`--kv-policy whole|paged`,
+//!   `--evict lru|none`);
 //! * [`DeviceEngine`] — a continuous-batching scheduler over one
 //!   simulated device: new requests join at token boundaries, batched
 //!   decode steps are charged via [`ExecutionBackend::decode_step_s`],
@@ -45,7 +48,7 @@ pub use backend::{
 };
 pub use cluster::{Cluster, Routing};
 pub use engine::{DeviceEngine, EngineReport};
-pub use kv_cache::{KvCacheManager, KvLease};
+pub use kv_cache::{EvictPolicy, KvCacheManager, KvLease, KvPolicy, KvPool, PagedKvManager};
 pub use metrics::{percentile, ServeMetrics};
 pub use policy::{Policy, Scheduler};
 pub use types::{Completion, Request};

@@ -8,6 +8,7 @@
 
 use super::backend::BackendKind;
 use super::cluster::{Cluster, Routing};
+use super::kv_cache::{EvictPolicy, KvPolicy};
 use super::metrics::ServeMetrics;
 use super::policy::Policy;
 use super::workload::{generate, ArrivalPattern};
@@ -28,6 +29,14 @@ pub struct SweepConfig {
     /// Chunked-prefill token size, `None` for inline prefill
     /// (`--prefill-chunk`).
     pub prefill_chunk: Option<usize>,
+    /// KV allocation discipline every device runs (`--kv-policy`).
+    pub kv_policy: KvPolicy,
+    /// Paged eviction policy (`--evict`).
+    pub evict: EvictPolicy,
+    /// Paged block-size override in tokens (`--kv-block`).
+    pub kv_block: Option<usize>,
+    /// KV-region size override in allocation units (`--kv-units`).
+    pub kv_units: Option<usize>,
 }
 
 impl Default for SweepConfig {
@@ -42,6 +51,10 @@ impl Default for SweepConfig {
             n_sessions: 8,
             backend: BackendKind::SalPim,
             prefill_chunk: None,
+            kv_policy: KvPolicy::Whole,
+            evict: EvictPolicy::Lru,
+            kv_block: None,
+            kv_units: None,
         }
     }
 }
@@ -68,14 +81,17 @@ pub fn latency_vs_load(cfg: &SimConfig, sc: &SweepConfig, loads_rps: &[f64]) -> 
             let mut cluster =
                 Cluster::homogeneous(cfg, sc.backend, sc.devices, sc.max_batch, sc.routing)
                     .with_policy(sc.policy)
-                    .with_prefill_chunk(sc.prefill_chunk);
+                    .with_prefill_chunk(sc.prefill_chunk)
+                    .with_kv(sc.kv_policy, sc.evict, sc.kv_block, sc.kv_units);
             for r in reqs {
                 cluster.submit(r);
             }
             let done = cluster.run();
+            let mut metrics = ServeMetrics::from_completions(&done);
+            metrics.absorb_reports(&cluster.per_device_reports());
             SweepPoint {
                 offered_rps: rate,
-                metrics: ServeMetrics::from_completions(&done),
+                metrics,
                 rejected: cluster.rejected(),
             }
         })

@@ -1,0 +1,227 @@
+//! Paged KV-cache invariants across the serving stack: token
+//! conservation under preemption, session-reuse determinism,
+//! paged-vs-whole parity at low load, and the capacity-pressure
+//! throughput ordering the paging refactor exists to win.
+
+use sal_pim::config::SimConfig;
+use sal_pim::serve::workload::{requests_from_items, ArrivalPattern};
+use sal_pim::serve::{
+    Cluster, DeviceEngine, EvictPolicy, KvPolicy, Request, Routing, ServeMetrics,
+};
+use sal_pim::testutil::RequestMix;
+
+fn req(id: u64, session: u64, prompt: usize, out: usize, at: f64) -> Request {
+    Request {
+        id,
+        prompt_len: prompt,
+        max_new_tokens: out,
+        arrival_s: at,
+        session,
+    }
+}
+
+/// Subarrays one `tokens`-wide window pins (the whole-window unit).
+fn subarrays_for(cfg: &SimConfig, tokens: usize) -> usize {
+    (tokens * cfg.model.kv_bytes_per_token()).div_ceil(cfg.hbm.subarray_bytes())
+}
+
+#[test]
+fn tokens_are_conserved_bit_for_bit_under_preemption() {
+    // A region sized for ~2.5 full windows forces preemption with six
+    // decoding requests; every request must still simulate exactly the
+    // token count of an uncontended run.
+    let cfg = SimConfig::paper();
+    let window = 16 + 32;
+    let tight = subarrays_for(&cfg, window) * 5 / 2;
+    let run = |units: usize| {
+        let mut eng = DeviceEngine::new(&cfg, 8)
+            .with_kv_policy(KvPolicy::Paged)
+            .with_kv_subarrays(units);
+        for i in 0..6 {
+            eng.submit(req(i, i, 16, 32, 0.0));
+        }
+        let mut counts: Vec<(u64, usize)> = eng
+            .run()
+            .iter()
+            .map(|c| (c.id, c.tokens_simulated))
+            .collect();
+        counts.sort();
+        (counts, eng.report())
+    };
+    let (ample_counts, ample_rep) = run(subarrays_for(&cfg, window) * 12);
+    let (tight_counts, tight_rep) = run(tight);
+    assert_eq!(ample_rep.preemptions, 0, "ample region must not preempt");
+    assert!(tight_rep.preemptions > 0, "tight region must preempt");
+    assert!(tight_rep.recompute_tokens > 0, "recompute must be charged");
+    assert_eq!(
+        ample_counts, tight_counts,
+        "preemption must never create or destroy simulated tokens"
+    );
+}
+
+#[test]
+fn session_reuse_hits_are_deterministic() {
+    // Two identical runs of a session-affinity cluster with follow-up
+    // requests must replay reuse hits, assignments and timings exactly.
+    let cfg = SimConfig::paper();
+    let items = RequestMix::small(17).take(16);
+    let run = || {
+        let mut c = Cluster::new(&cfg, 2, 4, Routing::SessionAffinity).with_kv(
+            KvPolicy::Paged,
+            EvictPolicy::Lru,
+            None,
+            None,
+        );
+        // 4 sessions × 4 requests each, arriving slowly enough that a
+        // session's predecessor completes (and parks its blocks) before
+        // the follow-up lands: plenty of reuse traffic.
+        for r in requests_from_items(&items, ArrivalPattern::Jittered { scale_s: 0.5 }, 4) {
+            c.submit(r);
+        }
+        let done = c.run();
+        let finishes: Vec<(u64, u64)> = done
+            .iter()
+            .map(|c| (c.id, (c.finish_s * 1e12) as u64))
+            .collect();
+        let reuse: Vec<(usize, usize)> = c
+            .per_device_reports()
+            .iter()
+            .map(|r| (r.reuse_hits, r.reuse_tokens))
+            .collect();
+        (c.assignments().to_vec(), finishes, reuse)
+    };
+    let (a1, f1, r1) = run();
+    let (a2, f2, r2) = run();
+    assert_eq!(a1, a2, "assignment drift");
+    assert_eq!(f1, f2, "timing drift");
+    assert_eq!(r1, r2, "reuse-hit drift");
+    let total_hits: usize = r1.iter().map(|(h, _)| h).sum();
+    assert!(
+        total_hits > 0,
+        "slow follow-up traffic on affinity routing must land reuse hits"
+    );
+}
+
+#[test]
+fn paged_matches_whole_bit_for_bit_at_low_load() {
+    // Distinct sessions (no reuse), ample capacity, slow arrivals: the
+    // paged engine must reproduce the whole-window engine's completions
+    // exactly — paging only changes behaviour under pressure.
+    let cfg = SimConfig::paper();
+    let items = RequestMix::small(3).take(8);
+    let run = |policy: KvPolicy| {
+        let mut eng = DeviceEngine::new(&cfg, 4).with_kv_policy(policy);
+        // One session per request: reuse can never fire.
+        for (i, r) in requests_from_items(&items, ArrivalPattern::Jittered { scale_s: 0.05 }, 8)
+            .into_iter()
+            .enumerate()
+        {
+            let mut r = r;
+            r.session = 100 + i as u64;
+            eng.submit(r);
+        }
+        let mut done = eng.run();
+        done.sort_by_key(|c| c.id);
+        done
+    };
+    let whole = run(KvPolicy::Whole);
+    let paged = run(KvPolicy::Paged);
+    assert_eq!(whole.len(), paged.len());
+    for (w, p) in whole.iter().zip(&paged) {
+        assert_eq!(w.id, p.id);
+        assert_eq!(w.tokens_simulated, p.tokens_simulated);
+        assert_eq!(w.finish_s.to_bits(), p.finish_s.to_bits(), "request {}", w.id);
+        assert_eq!(w.queue_s.to_bits(), p.queue_s.to_bits(), "request {}", w.id);
+        assert_eq!(w.prefill_s.to_bits(), p.prefill_s.to_bits(), "request {}", w.id);
+    }
+}
+
+#[test]
+fn paged_beats_whole_under_capacity_pressure() {
+    // The acceptance bar: at equal HBM capacity and saturating load the
+    // paged allocator admits a strictly larger mean decode batch than
+    // whole-window reservation, and throughput does not get worse.
+    let cfg = SimConfig::paper();
+    // Decode-heavy shape (small prompt, large budget) in a region that
+    // holds ~3 whole windows: whole caps the batch at 3, paged overlaps
+    // many more because only resident tokens pin blocks.
+    let window = 16 + 96;
+    let units = subarrays_for(&cfg, window) * 3;
+    let run = |policy: KvPolicy| {
+        let mut eng = DeviceEngine::new(&cfg, 12)
+            .with_kv_policy(policy)
+            .with_kv_subarrays(units);
+        for i in 0..10 {
+            eng.submit(req(i, i, 16, 96, 0.0));
+        }
+        let done = eng.run();
+        let mut m = ServeMetrics::from_completions(&done);
+        let rep = eng.report();
+        m.absorb_reports(std::slice::from_ref(&rep));
+        (m, rep)
+    };
+    let (whole_m, whole_rep) = run(KvPolicy::Whole);
+    let (paged_m, paged_rep) = run(KvPolicy::Paged);
+    assert_eq!(
+        whole_m.total_tokens, paged_m.total_tokens,
+        "token conservation across policies"
+    );
+    assert!(
+        paged_rep.mean_decode_batch > whole_rep.mean_decode_batch,
+        "paged mean batch {} !> whole {}",
+        paged_rep.mean_decode_batch,
+        whole_rep.mean_decode_batch
+    );
+    assert!(
+        paged_m.throughput_tok_s >= whole_m.throughput_tok_s,
+        "paged throughput {} must not trail whole {} under pressure",
+        paged_m.throughput_tok_s,
+        whole_m.throughput_tok_s
+    );
+}
+
+#[test]
+fn evict_none_is_whole_window_at_block_granularity() {
+    // With eviction off, paged admission preallocates the window, so it
+    // serves everything with zero preemptions even under pressure.
+    let cfg = SimConfig::paper();
+    let window = 16 + 32;
+    let units = subarrays_for(&cfg, window) * 2;
+    let mut eng = DeviceEngine::new(&cfg, 8)
+        .with_kv_policy(KvPolicy::Paged)
+        .with_evict(EvictPolicy::None)
+        .with_kv_subarrays(units);
+    for i in 0..6 {
+        eng.submit(req(i, i, 16, 32, 0.0));
+    }
+    let done = eng.run();
+    assert_eq!(done.len(), 6);
+    let rep = eng.report();
+    assert_eq!(rep.preemptions, 0);
+    assert_eq!(rep.recompute_tokens, 0);
+}
+
+#[test]
+fn kv_block_override_still_conserves_tokens() {
+    // Coarser and finer blocks change packing, never token counts.
+    let cfg = SimConfig::paper();
+    let run = |block: Option<usize>| {
+        let mut eng = DeviceEngine::new(&cfg, 8).with_kv_policy(KvPolicy::Paged);
+        if let Some(b) = block {
+            eng = eng.with_kv_block(b);
+        }
+        for i in 0..5 {
+            eng.submit(req(i, i, 24, 16, 0.0));
+        }
+        let mut counts: Vec<(u64, usize)> = eng
+            .run()
+            .iter()
+            .map(|c| (c.id, c.tokens_simulated))
+            .collect();
+        counts.sort();
+        counts
+    };
+    let default = run(None);
+    assert_eq!(default, run(Some(1)), "single-token blocks");
+    assert_eq!(default, run(Some(64)), "coarse blocks");
+}
