@@ -271,6 +271,13 @@ pub fn commands() -> Vec<CommandSpec> {
                 FlagSpec::switch("offload", "GPU prefill offload (seq engine only)"),
                 FlagSpec::switch("sweep", "latency-vs-offered-load curve (3 loads)"),
                 FlagSpec::value("seed", "S", "42", "workload seed"),
+                FlagSpec::value(
+                    "trace",
+                    "FILE",
+                    "",
+                    "write a Chrome trace_event JSON of the request lifecycle to FILE \
+                     (engine batch|cluster, no --sweep)",
+                ),
             ]),
         },
         CommandSpec {
@@ -280,6 +287,13 @@ pub fn commands() -> Vec<CommandSpec> {
             flags: vec![
                 FlagSpec::value("scenario", "FILE", "", "scenario suite (TOML subset)"),
                 FlagSpec::value("out-dir", "DIR", ".", "directory for BENCH_<tag>.json files"),
+                FlagSpec::value(
+                    "trace",
+                    "FILE",
+                    "",
+                    "write a Chrome trace_event JSON for the suite's first traceable \
+                     serve scenario to FILE",
+                ),
                 FlagSpec::switch("json", "print the outcome as schema-versioned JSON"),
                 FlagSpec::value(
                     "out",
@@ -308,6 +322,11 @@ pub fn commands() -> Vec<CommandSpec> {
                     "PCT",
                     "10",
                     "allowed latency/throughput regression in percent before failing",
+                ),
+                FlagSpec::switch(
+                    "allow-missing",
+                    "report baseline metrics absent from NEW without failing \
+                     (default: missing metrics fail the gate)",
                 ),
                 FlagSpec::switch("json", "print the outcome as schema-versioned JSON"),
                 FlagSpec::value(
@@ -420,6 +439,8 @@ mod tests {
         }
         assert!(md.contains("`--prefill-chunk [C]`"));
         assert!(md.contains("`--kv-policy K`"));
+        assert!(md.contains("`--trace FILE`"));
+        assert!(md.contains("`--allow-missing`"));
         assert!(md.contains("`BASELINE`"), "compare positionals documented");
     }
 

@@ -27,6 +27,10 @@
 //!   descriptions executed by [`scenario::Runner`] into structured
 //!   [`scenario::Outcome`]s, rendered as tables / JSON / CSV and
 //!   accumulated into `BENCH_*.json` ([`scenario`]),
+//! * **request-lifecycle tracing and self-profiling** — typed lifecycle
+//!   events, per-request span timelines, Chrome `trace_event` export,
+//!   log-bucketed histogram metrics and wall-clock phase profiles
+//!   ([`trace`]),
 //! * reporting/CLI/test utilities ([`report`], [`cli`], [`testutil`]).
 //!
 //! See `DESIGN.md` for the architecture and the per-experiment index, and
@@ -48,5 +52,6 @@ pub mod scenario;
 pub mod serve;
 pub mod stats;
 pub mod testutil;
+pub mod trace;
 
 pub use config::SimConfig;

@@ -21,6 +21,7 @@ use sal_pim::scenario::{
 };
 use sal_pim::report::fmt_bw;
 use sal_pim::serve::{BackendKind, EvictPolicy, KvPolicy};
+use sal_pim::trace::{chrome_trace_json, PhaseProfile, TraceEvent};
 use std::path::Path;
 
 fn main() {
@@ -68,8 +69,19 @@ fn run() -> anyhow::Result<()> {
         }
         cmd => {
             let scenario = build_scenario(cmd, &args)?;
-            let outcome = Runner::new().run(&scenario)?;
-            emit(&args, &outcome)
+            if let Some(path) = args.flag("trace") {
+                anyhow::ensure!(
+                    Runner::traceable(&scenario),
+                    "--trace needs --engine batch|cluster without --sweep \
+                     (the seq coordinator and load sweeps emit no lifecycle trace)"
+                );
+                let (outcome, aux) = Runner::new().run_with(&scenario, true)?;
+                write_trace(path, &aux.events)?;
+                emit(&args, &outcome)
+            } else {
+                let outcome = Runner::new().run(&scenario)?;
+                emit(&args, &outcome)
+            }
         }
     }
 }
@@ -122,6 +134,14 @@ fn config_sel(args: &Args) -> anyhow::Result<ConfigSel> {
         sel = sel.with_p_sub(args.get("p-sub", 0usize)?);
     }
     Ok(sel)
+}
+
+/// Write the lifecycle event stream as Chrome `trace_event` JSON
+/// (loadable in `chrome://tracing` or Perfetto).
+fn write_trace(path: &str, events: &[TraceEvent]) -> anyhow::Result<()> {
+    std::fs::write(path, chrome_trace_json(events))?;
+    eprintln!("wrote {path}");
+    Ok(())
 }
 
 /// Render an outcome per the `--json` / `--out FILE` flags.
@@ -238,6 +258,7 @@ fn cmd_config(args: &Args) -> anyhow::Result<()> {
                 .iter()
                 .map(|(k, v)| (format!("cfg.{k}"), v.clone()))
                 .collect(),
+            truncated: false,
         },
     );
     out.metric("model", cfg.model.name.as_str(), None);
@@ -287,6 +308,13 @@ fn cmd_compare(args: &Args) -> anyhow::Result<()> {
             report.regressions
         );
     }
+    if !report.missing.is_empty() && !args.switch("allow-missing") {
+        anyhow::bail!(
+            "{} baseline metric(s) missing from {b_path} — a metric the gate was \
+             watching is no longer reported (pass --allow-missing to tolerate)",
+            report.missing.len()
+        );
+    }
     Ok(())
 }
 
@@ -299,9 +327,26 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let scenarios = parse_suite(&text)?;
     anyhow::ensure!(!scenarios.is_empty(), "suite `{path}` declares no scenarios");
     let runner = Runner::new();
+    let trace_path = args.flag("trace");
+    anyhow::ensure!(
+        trace_path.is_none() || scenarios.iter().any(Runner::traceable),
+        "--trace given but `{path}` has no traceable serve scenario \
+         (engine batch|cluster, no sweep)"
+    );
+    let mut traced = false;
+    let mut profiles: Vec<PhaseProfile> = Vec::new();
     let mut outcomes: Vec<(String, Outcome)> = Vec::new();
     for scenario in &scenarios {
-        let outcome = runner.run(scenario)?;
+        // The first traceable scenario wins the --trace file.
+        let want_trace = trace_path.is_some() && !traced && Runner::traceable(scenario);
+        let (outcome, aux) = runner.run_with(scenario, want_trace)?;
+        if want_trace {
+            write_trace(trace_path.unwrap_or_default(), &aux.events)?;
+            traced = true;
+        }
+        if let Some(p) = aux.profile {
+            profiles.push(p);
+        }
         if args.switch("json") {
             println!("{}", sink::to_json(&outcome));
         } else {
@@ -309,6 +354,18 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             println!();
         }
         outcomes.push((scenario.bench_tag().to_string(), outcome));
+    }
+    // The simulator's own speed, as one more BENCH outcome
+    // (`BENCH_simperf.json`) for the bench-diff gate.
+    if !profiles.is_empty() {
+        let simperf = Runner::simperf_outcome(&profiles);
+        if args.switch("json") {
+            println!("{}", sink::to_json(&simperf));
+        } else {
+            print!("{}", sink::render_text(&simperf));
+            println!();
+        }
+        outcomes.push(("simperf".to_string(), simperf));
     }
     let out_dir = args.flag("out-dir").unwrap_or(".");
     let tagged: Vec<(&str, &Outcome)> = outcomes

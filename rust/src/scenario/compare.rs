@@ -346,11 +346,17 @@ pub enum Direction {
 /// direction is unambiguous (latency/time-like vs throughput-like) can
 /// fail the gate; everything else is informational.
 pub fn direction(name: &str) -> Direction {
+    // Simulator self-profile phase timers (`phase_decode_s`…) contain
+    // substrings like `decode` that would otherwise read as model
+    // latencies; they are wall-clock diagnostics, checked first.
+    if name.starts_with("phase_") {
+        return Direction::Informational;
+    }
     let lower_better = [
         "latency", "ttft", "queue", "makespan", "iteration", "prefill", "decode", "total",
-        "gpu_baseline",
+        "gpu_baseline", "wall",
     ];
-    let higher_better = ["throughput", "speedup", "decode_rate"];
+    let higher_better = ["throughput", "speedup", "decode_rate", "per_wall"];
     // Exact-name counters/diagnostics first — several contain substrings
     // like `decode` or `total` that would otherwise read as durations
     // (`mean_decode_batch` growing is the *win* paging exists for, not a
@@ -398,6 +404,12 @@ pub struct CompareReport {
     pub rows: Vec<MetricDiff>,
     /// Outcomes present in only one of the files (by scenario/title).
     pub unmatched: usize,
+    /// Metrics present in the baseline but absent from the candidate,
+    /// as `(outcome title, metric name, baseline value)`. A missing
+    /// metric means the candidate stopped reporting something the gate
+    /// was watching — fatal by default, informational only under
+    /// `--allow-missing`.
+    pub missing: Vec<(String, String, f64)>,
     pub regressions: usize,
     pub improvements: usize,
     pub tolerance_pct: f64,
@@ -412,6 +424,7 @@ pub fn compare(a: &BenchFile, b: &BenchFile, tolerance_pct: f64) -> CompareRepor
     let mut improvements = 0usize;
     let mut used: Vec<bool> = vec![false; b.outcomes.len()];
     let mut unmatched = 0usize;
+    let mut missing: Vec<(String, String, f64)> = Vec::new();
     for oa in &a.outcomes {
         let Some(bi) = b
             .outcomes
@@ -426,6 +439,7 @@ pub fn compare(a: &BenchFile, b: &BenchFile, tolerance_pct: f64) -> CompareRepor
         let ob = &b.outcomes[bi];
         for (name, base, unit) in &oa.metrics {
             let Some((_, cand, _)) = ob.metrics.iter().find(|(n, _, _)| n == name) else {
+                missing.push((oa.title.clone(), name.clone(), *base));
                 continue;
             };
             let delta = if *base == 0.0 && *cand == 0.0 {
@@ -464,6 +478,7 @@ pub fn compare(a: &BenchFile, b: &BenchFile, tolerance_pct: f64) -> CompareRepor
     CompareReport {
         rows,
         unmatched,
+        missing,
         regressions,
         improvements,
         tolerance_pct,
@@ -486,6 +501,7 @@ pub fn report_outcome(report: &CompareReport, a_label: &str, b_label: &str) -> O
                 ("candidate".to_string(), b_label.to_string()),
                 ("tolerance_pct".to_string(), report.tolerance_pct.to_string()),
             ],
+            truncated: false,
         },
     );
     out.columns(&[
@@ -514,10 +530,21 @@ pub fn report_outcome(report: &CompareReport, a_label: &str, b_label: &str) -> O
             verdict.into(),
         ]);
     }
+    for (title, metric, base) in &report.missing {
+        out.row(vec![
+            title.clone().into(),
+            metric.clone().into(),
+            (*base).into(),
+            "-".into(),
+            0.0.into(),
+            "MISSING".into(),
+        ]);
+    }
     out.metric("compared_metrics", report.rows.len(), None);
     out.metric("regressions", report.regressions, None);
     out.metric("improvements", report.improvements, None);
     out.metric("unmatched_outcomes", report.unmatched, None);
+    out.metric("missing_metrics", report.missing.len(), None);
     out.metric("tolerance", report.tolerance_pct / 100.0, Some("frac"));
     out
 }
@@ -537,6 +564,7 @@ mod tests {
                 backend: Some("salpim".to_string()),
                 seed: Some(42),
                 params: vec![],
+                truncated: false,
             },
         );
         o.metric("throughput", throughput, Some("tok/s"));
@@ -609,6 +637,43 @@ mod tests {
         let tok = r.rows.iter().find(|d| d.metric == "total_tokens").unwrap();
         assert_eq!(tok.direction, Direction::Informational);
         assert!(!tok.regressed);
+    }
+
+    #[test]
+    fn baseline_metric_missing_from_candidate_is_reported() {
+        let base = parse_bench(&bench_doc(100.0, 0.2)).unwrap();
+        let mut cand = parse_bench(&bench_doc(100.0, 0.2)).unwrap();
+        // Candidate stops reporting p95_latency entirely.
+        cand.outcomes[0].metrics.retain(|(n, _, _)| n != "p95_latency");
+        let r = compare(&base, &cand, 10.0);
+        assert_eq!(r.missing.len(), 1, "{:?}", r.missing);
+        assert_eq!(r.missing[0].1, "p95_latency");
+        assert_eq!(r.missing[0].2, 0.2);
+        // The missing metric contributes no diff row and no regression
+        // of its own — gating is the caller's (CLI's) decision.
+        assert_eq!(r.regressions, 0);
+        assert!(r.rows.iter().all(|d| d.metric != "p95_latency"));
+        // The rendered report carries both a MISSING row and the count.
+        let out = report_outcome(&r, "a", "b");
+        assert_eq!(out.metric_f64("missing_metrics"), Some(1.0));
+        let text = sink::render_text(&out);
+        assert!(text.contains("MISSING"), "{text}");
+        // Extra candidate-only metrics are not "missing".
+        let r = compare(&cand, &base, 10.0);
+        assert!(r.missing.is_empty());
+    }
+
+    #[test]
+    fn simperf_metrics_classify_by_wall_clock_direction() {
+        // Self-profile throughput gates upward, wall time downward…
+        assert_eq!(direction("sim_tokens_per_wall_s"), Direction::HigherIsBetter);
+        assert_eq!(direction("sim_wall_s"), Direction::LowerIsBetter);
+        // …while phase timers are diagnostics even when their names
+        // contain duration-like substrings (`phase_decode_s`).
+        assert_eq!(direction("phase_decode_s"), Direction::Informational);
+        assert_eq!(direction("phase_admission_s"), Direction::Informational);
+        assert_eq!(direction("phase_preempt_s"), Direction::Informational);
+        assert_eq!(direction("sim_tokens"), Direction::Informational);
     }
 
     #[test]

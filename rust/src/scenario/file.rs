@@ -126,6 +126,10 @@ fn common_key(
             config.p_sub = Some(p_usize(line, key, value)?);
             Ok(true)
         }
+        "budget_s" => {
+            config.budget_s = Some(p_f64(line, key, value)?);
+            Ok(true)
+        }
         _ => {
             if let Some(cfg_key) = key.strip_prefix("cfg.") {
                 config
@@ -297,6 +301,9 @@ impl Scenario {
         if let Some(p_sub) = config.p_sub {
             push("p_sub", p_sub.to_string());
         }
+        if let Some(b) = config.budget_s {
+            push("budget_s", b.to_string());
+        }
         for (k, v) in &config.overrides {
             push(&format!("cfg.{k}"), v.clone());
         }
@@ -441,7 +448,11 @@ mod tests {
                     .with_prefetch(true)
                     .with_config(ConfigSel::preset("mini").with_p_sub(2)),
             ),
-            Scenario::Sweep(SweepParams::default().with_grid(vec![32], vec![1, 64])),
+            Scenario::Sweep(
+                SweepParams::default()
+                    .with_grid(vec![32], vec![1, 64])
+                    .with_config(ConfigSel::default().with_budget_s(90.5)),
+            ),
             Scenario::Breakdown(BreakdownParams::default().with_kv(256)),
             Scenario::Power(PowerParams::default().with_p_subs(vec![1, 4])),
             Scenario::Area(AreaParams::default()),

@@ -50,6 +50,10 @@ pub struct ConfigSel {
     /// `key = value` config overrides (the [`crate::config::parse`]
     /// vocabulary), applied after the preset.
     pub overrides: Vec<(String, String)>,
+    /// Per-scenario wall-clock budget in seconds: the runner stops the
+    /// scenario cleanly past it and marks the outcome truncated in
+    /// provenance instead of hanging CI. `None` = unbounded.
+    pub budget_s: Option<f64>,
 }
 
 impl Default for ConfigSel {
@@ -58,6 +62,7 @@ impl Default for ConfigSel {
             preset: "paper".to_string(),
             p_sub: None,
             overrides: Vec::new(),
+            budget_s: None,
         }
     }
 }
@@ -77,6 +82,13 @@ impl ConfigSel {
 
     pub fn with_override(mut self, key: &str, value: &str) -> Self {
         self.overrides.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    /// Cap the scenario's wall-clock execution time (`budget_s` in
+    /// suite files).
+    pub fn with_budget_s(mut self, s: f64) -> Self {
+        self.budget_s = Some(s);
         self
     }
 
@@ -537,6 +549,9 @@ mod tests {
         assert_eq!(cfg.model.name, "gpt2-mini");
         assert_eq!(cfg.parallelism.p_sub, 2);
         assert_eq!(cfg.lut.sections, 128);
+        let sel = ConfigSel::default().with_budget_s(30.0);
+        assert_eq!(sel.budget_s, Some(30.0));
+        assert_eq!(ConfigSel::default().budget_s, None);
     }
 
     #[test]

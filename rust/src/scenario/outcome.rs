@@ -108,6 +108,9 @@ pub struct Provenance {
     /// `key = value` form the suite files use — enough to re-run the
     /// exact experiment.
     pub params: Vec<(String, String)>,
+    /// True when a wall-clock budget (`budget_s`) stopped the run
+    /// before it finished — the numbers cover a partial workload.
+    pub truncated: bool,
 }
 
 /// A structured experiment result.
@@ -204,6 +207,7 @@ mod tests {
             backend: None,
             seed: Some(42),
             params: vec![("kind".to_string(), "test".to_string())],
+            truncated: false,
         }
     }
 

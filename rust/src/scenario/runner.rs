@@ -17,6 +17,23 @@ use crate::serve::sweep::{latency_vs_load, SweepConfig};
 use crate::serve::workload::{requests_from_items, ArrivalPattern};
 use crate::serve::{BackendKind, Cluster, DeviceEngine, KvPolicy, ServeMetrics};
 use crate::testutil::RequestMix;
+use crate::trace::{PhaseProfile, TraceEvent, TraceHandle};
+use std::time::{Duration, Instant};
+
+/// Side-channel results a run produces beyond its [`Outcome`]: the
+/// lifecycle event stream (when tracing was requested), the engine
+/// self-profile, and whether a wall-clock budget cut the run short.
+#[derive(Debug, Clone, Default)]
+pub struct RunAux {
+    /// Lifecycle events, in emission order; empty unless the run was
+    /// traceable and `capture_trace` was set.
+    pub events: Vec<TraceEvent>,
+    /// Wall-clock self-profile, merged across devices; `None` for
+    /// scenario kinds that don't exercise the batching engine.
+    pub profile: Option<PhaseProfile>,
+    /// True when `budget_s` stopped the run before it finished.
+    pub truncated: bool,
+}
 
 /// Executes scenarios. Stateless — each run resolves its own config.
 #[derive(Debug, Clone, Copy, Default)]
@@ -27,9 +44,35 @@ impl Runner {
         Runner
     }
 
+    /// Whether a scenario can emit a lifecycle trace: only serve runs
+    /// on the batching engines (the seq coordinator and the load sweep
+    /// have no single request timeline to record).
+    pub fn traceable(scenario: &Scenario) -> bool {
+        match scenario {
+            Scenario::Serve(p) => !p.sweep && p.engine != EngineKind::Seq,
+            _ => false,
+        }
+    }
+
     /// Run one scenario to a structured outcome.
     pub fn run(&self, scenario: &Scenario) -> Result<Outcome, ScenarioError> {
+        self.run_with(scenario, false).map(|(out, _)| out)
+    }
+
+    /// Run one scenario, also returning the side-channel [`RunAux`]
+    /// (trace events when `capture_trace` and the scenario is
+    /// [`Runner::traceable`]; self-profile; budget truncation).
+    pub fn run_with(
+        &self,
+        scenario: &Scenario,
+        capture_trace: bool,
+    ) -> Result<(Outcome, RunAux), ScenarioError> {
         let cfg = scenario.config().resolve()?;
+        let deadline = scenario
+            .config()
+            .budget_s
+            .map(|b| Instant::now() + Duration::from_secs_f64(b.max(0.0)));
+        let mut aux = RunAux::default();
         let provenance = Provenance {
             scenario: scenario.kind().to_string(),
             preset: scenario.config().preset.clone(),
@@ -43,21 +86,72 @@ impl Runner {
                 _ => None,
             },
             params: scenario.to_kv(),
+            truncated: false,
         };
-        match scenario {
-            Scenario::Simulate(p) => Ok(run_simulate(&cfg, provenance, p)),
-            Scenario::Sweep(p) => Ok(run_sweep(&cfg, provenance, p)),
-            Scenario::Breakdown(p) => Ok(run_breakdown(&cfg, provenance, p)),
-            Scenario::Power(p) => run_power(&cfg, provenance, p),
-            Scenario::Area(_) => Ok(run_area(&cfg, provenance)),
-            Scenario::Serve(p) => run_serve(&cfg, provenance, p),
+        let capture = capture_trace && Self::traceable(scenario);
+        // Single-shot kinds (simulate, breakdown, area) can't be
+        // interrupted mid-run; the budget applies between the units of
+        // the iterating kinds (grid cells, P_Sub points, sweep loads)
+        // and inside the serve engine loop.
+        let mut out = match scenario {
+            Scenario::Simulate(p) => run_simulate(&cfg, provenance, p),
+            Scenario::Sweep(p) => run_sweep(&cfg, provenance, p, deadline, &mut aux),
+            Scenario::Breakdown(p) => run_breakdown(&cfg, provenance, p),
+            Scenario::Power(p) => run_power(&cfg, provenance, p, deadline, &mut aux)?,
+            Scenario::Area(_) => run_area(&cfg, provenance),
+            Scenario::Serve(p) => run_serve(&cfg, provenance, p, deadline, capture, &mut aux)?,
+        };
+        if aux.truncated {
+            out.provenance.truncated = true;
+            out.note("wall-clock budget (budget_s) hit — metrics cover a partial workload");
         }
+        Ok((out, aux))
     }
 
     /// Run a whole suite, in order.
     pub fn run_suite(&self, scenarios: &[Scenario]) -> Result<Vec<Outcome>, ScenarioError> {
         scenarios.iter().map(|s| self.run(s)).collect()
     }
+
+    /// Fold per-run self-profiles into the `BENCH_simperf.json` outcome:
+    /// the simulator's own speed, gated by bench-diff at a wide
+    /// tolerance (wall clock is noisy) so a simulator-side slowdown
+    /// fails CI like a model regression would.
+    pub fn simperf_outcome(profiles: &[PhaseProfile]) -> Outcome {
+        let mut total = PhaseProfile::default();
+        for p in profiles {
+            total.merge(p);
+        }
+        let mut out = Outcome::new(
+            "simulator self-profile — engine wall clock by phase",
+            Provenance {
+                scenario: "simperf".to_string(),
+                preset: "-".to_string(),
+                p_sub: 0,
+                backend: None,
+                seed: None,
+                params: vec![("runs".to_string(), profiles.len().to_string())],
+                truncated: false,
+            },
+        );
+        out.metric(
+            "sim_tokens_per_wall_s",
+            total.sim_tokens_per_wall_s(),
+            Some("tok/s"),
+        );
+        out.metric("sim_wall_s", total.wall_s, Some("s"));
+        out.metric("sim_tokens", total.sim_tokens, None);
+        out.metric("phase_admission_s", total.admission_s, Some("s"));
+        out.metric("phase_growth_s", total.growth_s, Some("s"));
+        out.metric("phase_preempt_s", total.preempt_s, Some("s"));
+        out.metric("phase_decode_s", total.decode_s, Some("s"));
+        out.metric("phase_readmit_s", total.readmit_s, Some("s"));
+        out
+    }
+}
+
+fn past(deadline: Option<Instant>) -> bool {
+    deadline.is_some_and(|d| Instant::now() >= d)
 }
 
 fn run_simulate(
@@ -92,7 +186,13 @@ fn run_simulate(
     out
 }
 
-fn run_sweep(cfg: &SimConfig, provenance: Provenance, p: &super::SweepParams) -> Outcome {
+fn run_sweep(
+    cfg: &SimConfig,
+    provenance: Provenance,
+    p: &super::SweepParams,
+    deadline: Option<Instant>,
+    aux: &mut RunAux,
+) -> Outcome {
     let gpu = GpuModel::titan_rtx();
     let mut sim = GenerationSim::new(cfg);
     let mut out = Outcome::new("Fig. 11 — speedup of SAL-PIM vs GPU", provenance);
@@ -104,8 +204,12 @@ fn run_sweep(cfg: &SimConfig, provenance: Provenance, p: &super::SweepParams) ->
         ("speedup", Some("x")),
     ]);
     let mut speedups = Vec::new();
-    for &n_in in &p.ins {
+    'grid: for &n_in in &p.ins {
         for &n_out in &p.outs {
+            if past(deadline) {
+                aux.truncated = true;
+                break 'grid;
+            }
             let pim = sim.generate(n_in, n_out).seconds(cfg.timing.tck_ns);
             let g = gpu.generation_time(&cfg.model, n_in, n_out);
             speedups.push(g / pim);
@@ -156,6 +260,8 @@ fn run_power(
     cfg: &SimConfig,
     provenance: Provenance,
     p: &super::PowerParams,
+    deadline: Option<Instant>,
+    aux: &mut RunAux,
 ) -> Result<Outcome, ScenarioError> {
     let params = EnergyParams::paper();
     let mut out = Outcome::new(
@@ -172,6 +278,10 @@ fn run_power(
         ("budget_fraction", Some("frac")),
     ]);
     for &p_sub in &p.p_subs {
+        if past(deadline) {
+            aux.truncated = true;
+            break;
+        }
         if !(1..=cfg.salu.max_p_sub).contains(&p_sub) {
             return Err(ScenarioError::BadPSub {
                 p_sub,
@@ -265,6 +375,9 @@ fn run_serve(
     cfg: &SimConfig,
     provenance: Provenance,
     p: &ServeParams,
+    deadline: Option<Instant>,
+    capture_trace: bool,
+    aux: &mut RunAux,
 ) -> Result<Outcome, ScenarioError> {
     if let Some(chunk) = p.prefill_chunk {
         if chunk < 1 {
@@ -289,7 +402,7 @@ fn run_serve(
         ));
     }
     if p.sweep {
-        return run_serve_sweep(cfg, provenance, p);
+        return run_serve_sweep(cfg, provenance, p, deadline, aux);
     }
     let pattern = arrival_pattern(p)?;
     let items = RequestMix::paper(p.seed).take(p.requests);
@@ -349,6 +462,13 @@ fn run_serve(
             if let Some(u) = p.kv_units {
                 eng = eng.with_kv_subarrays(u);
             }
+            let trace = capture_trace.then(TraceHandle::new);
+            if let Some(t) = &trace {
+                eng.set_trace(t.clone());
+            }
+            if let Some(d) = deadline {
+                eng.set_deadline(d);
+            }
             for r in requests {
                 eng.submit(r);
             }
@@ -356,6 +476,11 @@ fn run_serve(
             let mut m = ServeMetrics::from_completions(&eng.run());
             let rep = eng.report();
             m.absorb_reports(std::slice::from_ref(&rep));
+            aux.truncated |= rep.truncated;
+            aux.profile = Some(rep.profile);
+            if let Some(t) = &trace {
+                aux.events = t.take_events();
+            }
             let mut out = Outcome::new(
                 &format!(
                     "serve — engine=batch backend={} policy={} batch={} chunk={} kv={} arrivals={}",
@@ -395,11 +520,23 @@ fn run_serve(
                     .with_policy(p.policy)
                     .with_prefill_chunk(p.prefill_chunk)
                     .with_kv(p.kv_policy, p.evict, p.kv_block, p.kv_units);
+            let trace = capture_trace.then(TraceHandle::new);
+            if let Some(t) = &trace {
+                cluster.set_trace(t.clone());
+            }
+            if let Some(d) = deadline {
+                cluster.set_deadline(d);
+            }
             for r in requests {
                 cluster.submit(r);
             }
             let done = cluster.run();
             let reps = cluster.per_device_reports();
+            aux.truncated |= cluster.truncated();
+            aux.profile = Some(cluster.profile());
+            if let Some(t) = &trace {
+                aux.events = t.take_events();
+            }
             let mut m = ServeMetrics::from_completions(&done);
             m.absorb_reports(&reps);
             let mut out = Outcome::new(
@@ -458,6 +595,8 @@ fn run_serve_sweep(
     cfg: &SimConfig,
     provenance: Provenance,
     p: &ServeParams,
+    deadline: Option<Instant>,
+    aux: &mut RunAux,
 ) -> Result<Outcome, ScenarioError> {
     if p.loads.is_empty() {
         return Err(ScenarioError::Unsupported(
@@ -479,7 +618,6 @@ fn run_serve_sweep(
         kv_block: p.kv_block,
         kv_units: p.kv_units,
     };
-    let pts = latency_vs_load(cfg, &sc, &p.loads);
     let mut out = Outcome::new(
         &format!(
             "latency vs offered load — {} devices x batch {}, {}, backend {}, {} requests",
@@ -499,15 +637,23 @@ fn run_serve_sweep(
         ("p95_ttft", Some("s")),
         ("rejected", None),
     ]);
-    for pt in &pts {
-        out.row(vec![
-            pt.offered_rps.into(),
-            pt.metrics.throughput_tok_s.into(),
-            pt.metrics.p50_latency_s.into(),
-            pt.metrics.p95_latency_s.into(),
-            pt.metrics.p95_ttft_s.into(),
-            pt.rejected.into(),
-        ]);
+    // One load point at a time so a wall-clock budget can stop the
+    // sweep cleanly between points (each point is a full serve run).
+    for &load in &p.loads {
+        if past(deadline) {
+            aux.truncated = true;
+            break;
+        }
+        for pt in &latency_vs_load(cfg, &sc, &[load]) {
+            out.row(vec![
+                pt.offered_rps.into(),
+                pt.metrics.throughput_tok_s.into(),
+                pt.metrics.p50_latency_s.into(),
+                pt.metrics.p95_latency_s.into(),
+                pt.metrics.p95_ttft_s.into(),
+                pt.rejected.into(),
+            ]);
+        }
     }
     Ok(out)
 }
@@ -669,6 +815,89 @@ mod tests {
                 >= whole.metric_f64("mean_decode_batch").unwrap(),
             "paged must not shrink the decode batch at equal capacity"
         );
+    }
+
+    #[test]
+    fn run_with_captures_trace_and_profile_for_batch_serve() {
+        let scenario = Scenario::Serve(
+            ServeParams::default()
+                .with_config(mini())
+                .with_engine(EngineKind::Batch)
+                .with_workload(6, 7)
+                .with_at_once(true),
+        );
+        assert!(Runner::traceable(&scenario));
+        let (out, aux) = Runner::new().run_with(&scenario, true).unwrap();
+        assert!(!aux.events.is_empty(), "trace requested but no events");
+        let prof = aux.profile.expect("batch serve publishes a profile");
+        assert!(prof.sim_tokens > 0);
+        assert!(!aux.truncated);
+        assert!(!out.provenance.truncated);
+        // Tracing must not perturb the simulated numbers.
+        let (quiet, quiet_aux) = Runner::new().run_with(&scenario, false).unwrap();
+        assert!(quiet_aux.events.is_empty());
+        assert_eq!(out.metrics, quiet.metrics);
+    }
+
+    #[test]
+    fn only_batching_serve_scenarios_are_traceable() {
+        assert!(!Runner::traceable(&Scenario::Serve(ServeParams::default())));
+        assert!(!Runner::traceable(&Scenario::Serve(
+            ServeParams::default()
+                .with_cluster(1, 4)
+                .with_sweep(vec![10.0]),
+        )));
+        assert!(Runner::traceable(&Scenario::Serve(
+            ServeParams::default().with_engine(EngineKind::Cluster),
+        )));
+        assert!(!Runner::traceable(&Scenario::Simulate(
+            SimulateParams::default(),
+        )));
+    }
+
+    #[test]
+    fn zero_budget_truncates_cleanly() {
+        let scenario = Scenario::Serve(
+            ServeParams::default()
+                .with_config(mini().with_budget_s(0.0))
+                .with_engine(EngineKind::Batch)
+                .with_workload(6, 7)
+                .with_at_once(true),
+        );
+        let (out, aux) = Runner::new().run_with(&scenario, false).unwrap();
+        assert!(aux.truncated);
+        assert!(out.provenance.truncated);
+        // Iterating kinds stop between units: an exhausted budget means
+        // an empty grid, not a hang.
+        let sweep = Scenario::Sweep(
+            SweepParams::default()
+                .with_grid(vec![8], vec![4])
+                .with_config(mini().with_budget_s(0.0)),
+        );
+        let (out, aux) = Runner::new().run_with(&sweep, false).unwrap();
+        assert!(aux.truncated && out.provenance.truncated);
+        assert_eq!(out.rows.len(), 0);
+    }
+
+    #[test]
+    fn simperf_outcome_merges_profiles() {
+        let a = PhaseProfile {
+            wall_s: 1.0,
+            sim_tokens: 100,
+            decode_s: 0.5,
+            ..PhaseProfile::default()
+        };
+        let b = PhaseProfile {
+            wall_s: 1.0,
+            sim_tokens: 50,
+            ..PhaseProfile::default()
+        };
+        let out = Runner::simperf_outcome(&[a, b]);
+        assert_eq!(out.provenance.scenario, "simperf");
+        assert_eq!(out.metric_f64("sim_tokens"), Some(150.0));
+        assert_eq!(out.metric_f64("sim_wall_s"), Some(2.0));
+        assert_eq!(out.metric_f64("sim_tokens_per_wall_s"), Some(75.0));
+        assert_eq!(out.metric_f64("phase_decode_s"), Some(0.5));
     }
 
     #[test]

@@ -169,7 +169,7 @@ pub fn to_json(outcome: &Outcome) -> String {
     format!(
         "{{\"schema_version\": {}, \"scenario\": \"{}\", \"title\": \"{}\", \
          \"provenance\": {{\"preset\": \"{}\", \"p_sub\": {}, \"backend\": {}, \
-         \"seed\": {}, \"params\": {{{}}}}}, \
+         \"seed\": {}, \"truncated\": {}, \"params\": {{{}}}}}, \
          \"metrics\": [{}], \"columns\": [{}], \"rows\": [{}], \"notes\": [{}]}}",
         outcome.schema_version,
         json_escape(&p.scenario),
@@ -178,6 +178,7 @@ pub fn to_json(outcome: &Outcome) -> String {
         p.p_sub,
         json_opt_str(&p.backend),
         p.seed.map(|s| s.to_string()).unwrap_or_else(|| "null".to_string()),
+        p.truncated,
         params.join(", "),
         metrics.join(", "),
         columns.join(", "),
@@ -283,6 +284,7 @@ mod tests {
                 backend: Some("salpim".to_string()),
                 seed: Some(42),
                 params: vec![("kind".to_string(), "sweep".to_string())],
+                truncated: false,
             },
         );
         o.metric("max_speedup", 4.72, Some("x"));
@@ -328,6 +330,7 @@ mod tests {
         assert!(j.contains("\"p_sub\": 4"));
         assert!(j.contains("\"backend\": \"salpim\""));
         assert!(j.contains("\"seed\": 42"));
+        assert!(j.contains("\"truncated\": false"));
         assert!(j.contains("\\\"quoted\\\""));
         assert!(j.contains("\\n"));
         assert!(j.contains("\"rows\": [[32, 0.0025, 4.72, 61.25]]"));

@@ -86,6 +86,12 @@ impl ExecutionBackend for HeteroBackend {
     fn capacity(&self) -> DeviceCapacity {
         self.decode.capacity()
     }
+
+    /// The handoff share of a prefill charge, exposed so tracing can
+    /// attribute the host-link transfer separately from GPU compute.
+    fn kv_handoff_s_for(&self, n_tokens: usize) -> Option<f64> {
+        Some(self.handoff_s(n_tokens))
+    }
 }
 
 #[cfg(test)]

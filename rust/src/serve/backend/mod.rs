@@ -101,6 +101,16 @@ pub trait ExecutionBackend {
 
     /// KV capacity hints for admission control.
     fn capacity(&self) -> DeviceCapacity;
+
+    /// The KV-handoff share of a prefill charge over `n_tokens` (the
+    /// host-link transfer a heterogeneous device folds into
+    /// [`ExecutionBackend::prefill_s`]). `None` — the default — means
+    /// the backend has no handoff stage; tracing uses this to attribute
+    /// the transfer on its own trace track.
+    fn kv_handoff_s_for(&self, n_tokens: usize) -> Option<f64> {
+        let _ = n_tokens;
+        None
+    }
 }
 
 /// The built-in backend families, as selected by `--backend`.

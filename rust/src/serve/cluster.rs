@@ -19,7 +19,9 @@ use super::metrics::ServeMetrics;
 use super::policy::Policy;
 use super::types::{Completion, Request};
 use crate::config::SimConfig;
+use crate::trace::{PhaseProfile, TraceHandle};
 use std::collections::HashMap;
+use std::time::Instant;
 
 /// How requests are assigned to devices.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -55,6 +57,10 @@ pub struct Cluster {
     /// Submit-time assignment trace (request id → device), for tests and
     /// routing diagnostics.
     assignments: Vec<(u64, usize)>,
+    /// Shared lifecycle-event sink; [`Cluster::run`] re-stamps the
+    /// device index before each device drains (devices run
+    /// sequentially, so one handle serves the whole cluster).
+    trace: Option<TraceHandle>,
 }
 
 impl Cluster {
@@ -93,7 +99,39 @@ impl Cluster {
             rr_next: 0,
             session_home: HashMap::new(),
             assignments: Vec::new(),
+            trace: None,
         }
+    }
+
+    /// Attach a lifecycle-event sink shared by every device (the device
+    /// stamp is refreshed as [`Cluster::run`] walks the devices).
+    pub fn set_trace(&mut self, trace: TraceHandle) {
+        for d in &mut self.devices {
+            d.set_trace(trace.clone());
+        }
+        self.trace = Some(trace);
+    }
+
+    /// Propagate a wall-clock deadline (scenario `budget_s`) to every
+    /// device; devices past it stop cleanly and report truncation.
+    pub fn set_deadline(&mut self, deadline: Instant) {
+        for d in &mut self.devices {
+            d.set_deadline(deadline);
+        }
+    }
+
+    /// True when any device's run was stopped by its deadline.
+    pub fn truncated(&self) -> bool {
+        self.devices.iter().any(|d| d.truncated())
+    }
+
+    /// Self-profiles of every device's run loop, merged.
+    pub fn profile(&self) -> PhaseProfile {
+        let mut p = PhaseProfile::default();
+        for d in &self.devices {
+            p.merge(&d.profile());
+        }
+        p
     }
 
     pub fn with_policy(mut self, policy: Policy) -> Self {
@@ -181,6 +219,9 @@ impl Cluster {
     pub fn run(&mut self) -> Vec<Completion> {
         let mut all: Vec<Completion> = Vec::new();
         for d in &mut self.devices {
+            if let Some(t) = &self.trace {
+                t.set_device(d.device_index);
+            }
             all.extend(d.run());
         }
         all.sort_by(|a, b| a.finish_s.total_cmp(&b.finish_s));

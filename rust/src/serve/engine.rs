@@ -58,7 +58,9 @@ use super::metrics::ServeMetrics;
 use super::policy::Policy;
 use super::types::{Completion, Request};
 use crate::config::SimConfig;
+use crate::trace::{PhaseProfile, TraceEventKind, TraceHandle};
 use std::collections::VecDeque;
+use std::time::Instant;
 
 /// A request currently holding a batch slot.
 struct ActiveReq {
@@ -136,6 +138,10 @@ pub struct EngineReport {
     pub reuse_hits: usize,
     /// Prompt tokens whose prefill was skipped via session reuse.
     pub reuse_tokens: usize,
+    /// Wall-clock self-profile of the engine's run loop (always on).
+    pub profile: PhaseProfile,
+    /// True when a wall-clock deadline stopped the run early.
+    pub truncated: bool,
 }
 
 /// One device running continuous batching over an [`ExecutionBackend`].
@@ -165,6 +171,13 @@ pub struct DeviceEngine {
     decode_batch_sum: u64,
     preemptions: usize,
     recompute_tokens: usize,
+    /// Lifecycle-event sink; `None` (the default) records nothing.
+    trace: Option<TraceHandle>,
+    profile: PhaseProfile,
+    /// Wall-clock deadline: the run loop stops cleanly (truncated) at
+    /// the first token boundary past it.
+    deadline: Option<Instant>,
+    truncated: bool,
 }
 
 impl DeviceEngine {
@@ -200,6 +213,10 @@ impl DeviceEngine {
             decode_batch_sum: 0,
             preemptions: 0,
             recompute_tokens: 0,
+            trace: None,
+            profile: PhaseProfile::default(),
+            deadline: None,
+            truncated: false,
         }
     }
 
@@ -216,6 +233,32 @@ impl DeviceEngine {
             self.kv_block,
             self.kv_units,
         );
+        if let Some(t) = &self.trace {
+            self.kv.set_trace(t.clone());
+        }
+    }
+
+    /// Attach a lifecycle-event sink; the paged KV pool shares it so
+    /// eviction / reuse events land in the same stream.
+    pub fn set_trace(&mut self, trace: TraceHandle) {
+        self.kv.set_trace(trace.clone());
+        self.trace = Some(trace);
+    }
+
+    /// Stop the run loop cleanly once this wall-clock deadline passes
+    /// (the scenario layer's `budget_s`); the run is marked truncated.
+    pub fn set_deadline(&mut self, deadline: Instant) {
+        self.deadline = Some(deadline);
+    }
+
+    /// True when a deadline stopped a run early.
+    pub fn truncated(&self) -> bool {
+        self.truncated
+    }
+
+    /// Wall-clock self-profile accumulated by [`DeviceEngine::run`].
+    pub fn profile(&self) -> PhaseProfile {
+        self.profile
     }
 
     /// Switch the KV allocation discipline (`--kv-policy`).
@@ -312,9 +355,44 @@ impl DeviceEngine {
         }
     }
 
+    /// Emit a trace event stamped at the current clock (no-op when
+    /// untraced), keeping the shared handle's time in sync for nested
+    /// emitters (the paged KV pool).
+    fn temit(&self, kind: TraceEventKind) {
+        if let Some(t) = &self.trace {
+            t.set_time(self.clock_s);
+            t.emit(kind);
+        }
+    }
+
+    /// Sync the shared handle's sim-time stamp to the engine clock
+    /// before calling into the KV pool (which emits at that stamp).
+    fn tsync(&self) {
+        if let Some(t) = &self.trace {
+            t.set_time(self.clock_s);
+        }
+    }
+
+    /// Attribute the KV-handoff share of a prefill charge (hetero
+    /// backends only; the handoff is linear in tokens, so per-chunk
+    /// shares are exact).
+    fn temit_handoff(&self, id: u64, tokens: usize) {
+        if tokens == 0 || self.trace.is_none() {
+            return;
+        }
+        if let Some(dt) = self.backend.kv_handoff_s_for(tokens) {
+            self.temit(TraceEventKind::KvHandoff {
+                id,
+                tokens,
+                dt_s: dt,
+            });
+        }
+    }
+
     /// Drain the queue with continuous batching; returns completions in
     /// finish order.
     pub fn run(&mut self) -> Vec<Completion> {
+        let run_start = Instant::now();
         let mut incoming = std::mem::take(&mut self.pending);
         incoming.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
         let mut incoming = incoming.into_iter().peekable();
@@ -325,10 +403,29 @@ impl DeviceEngine {
         let mut admit_seq: u64 = 0;
 
         loop {
+            // A wall-clock budget (scenario `budget_s`) stops the run
+            // cleanly at a token boundary instead of hanging CI.
+            if let Some(d) = self.deadline {
+                if Instant::now() >= d {
+                    self.truncated = true;
+                    break;
+                }
+            }
+            let t_arrive = Instant::now();
             // Pull everything that has arrived by the current clock.
             while let Some(r) = incoming.peek() {
                 if r.arrival_s <= self.clock_s {
-                    waiting.push(incoming.next().unwrap());
+                    let r = incoming.next().unwrap();
+                    if let Some(t) = &self.trace {
+                        t.emit_at(
+                            r.arrival_s,
+                            TraceEventKind::Arrival {
+                                id: r.id,
+                                session: r.session,
+                            },
+                        );
+                    }
+                    waiting.push(r);
                 } else {
                     break;
                 }
@@ -338,23 +435,39 @@ impl DeviceEngine {
                 match incoming.next() {
                     Some(r) => {
                         self.clock_s = self.clock_s.max(r.arrival_s);
+                        if let Some(t) = &self.trace {
+                            t.emit_at(
+                                r.arrival_s,
+                                TraceEventKind::Arrival {
+                                    id: r.id,
+                                    session: r.session,
+                                },
+                            );
+                        }
                         waiting.push(r);
+                        self.profile.admission_s += t_arrive.elapsed().as_secs_f64();
                         continue;
                     }
-                    None => break,
+                    None => {
+                        self.profile.admission_s += t_arrive.elapsed().as_secs_f64();
+                        break;
+                    }
                 }
             }
+            self.profile.admission_s += t_arrive.elapsed().as_secs_f64();
 
             // Readmit preempted requests first (FIFO — the longest-waiting
             // victim re-enters first). The dropped KV (prompt + tokens
             // generated so far) is *recomputed* through the backend's
             // prefill model, so the preemption's cost is paid in simulated
             // time, not hand-waved away.
+            let t_readmit = Instant::now();
             while active.len() < self.max_batch {
                 let Some(front) = self.readmit.front() else {
                     break;
                 };
                 let rebuilt = front.req.prompt_len + front.produced;
+                self.tsync();
                 match self
                     .kv
                     .try_readmit(front.req.id, front.req.session, rebuilt + 1)
@@ -365,6 +478,12 @@ impl DeviceEngine {
                         self.clock_s += dt;
                         self.recompute_tokens += rebuilt;
                         admit_seq += 1;
+                        self.temit(TraceEventKind::Readmit {
+                            id: p.req.id,
+                            recompute_tokens: rebuilt,
+                            dt_s: dt,
+                        });
+                        self.temit_handoff(p.req.id, rebuilt);
                         active.push(ActiveReq {
                             prefill_done: p.req.prompt_len,
                             req: p.req,
@@ -379,9 +498,11 @@ impl DeviceEngine {
                     None => break,
                 }
             }
+            self.profile.readmit_s += t_readmit.elapsed().as_secs_f64();
 
             // Token-boundary admission: policy-ordered while a batch slot
             // and a KV reservation are both available.
+            let t_admit = Instant::now();
             while active.len() < self.max_batch && !waiting.is_empty() {
                 let idx = self.policy.pick(&waiting);
                 let window = waiting[idx]
@@ -395,11 +516,17 @@ impl DeviceEngine {
                 let id = waiting[idx].id;
                 let session = waiting[idx].session;
                 let prompt_len = waiting[idx].prompt_len;
+                self.tsync();
                 match self.kv.try_admit(id, session, prompt_len, window) {
                     Some((lease, reused)) => {
                         let req = waiting.swap_remove(idx);
                         let admit_s = self.clock_s;
                         admit_seq += 1;
+                        self.temit(TraceEventKind::Admit {
+                            id,
+                            session,
+                            reused_tokens: reused,
+                        });
                         let mut a = ActiveReq {
                             req,
                             admit_s,
@@ -418,10 +545,19 @@ impl DeviceEngine {
                             a.prefill_done = a.req.prompt_len;
                             a.decode_start_s = self.clock_s;
                             a.produced = 1;
+                            self.profile.sim_tokens += 1;
+                            self.temit(TraceEventKind::PrefillChunk {
+                                id,
+                                from: reused,
+                                to: prompt_len,
+                                dt_s: dt,
+                            });
+                            self.temit_handoff(id, prompt_len - reused);
                         } else if !a.prefilling() {
                             // Degenerate empty prompt: nothing to chunk,
                             // the first token is immediate.
                             a.produced = 1;
+                            self.profile.sim_tokens += 1;
                         }
                         active.push(a);
                     }
@@ -443,19 +579,33 @@ impl DeviceEngine {
                     let dt = self.prefill_increment_s(from, to);
                     self.clock_s += dt;
                     a.prefill_done = to;
+                    self.temit(TraceEventKind::PrefillChunk {
+                        id: a.req.id,
+                        from,
+                        to,
+                        dt_s: dt,
+                    });
+                    self.temit_handoff(a.req.id, to - from);
                     if !a.prefilling() {
                         // Summarization complete: emits the first token.
                         a.decode_start_s = self.clock_s;
                         a.produced = 1;
+                        self.profile.sim_tokens += 1;
                     }
                 }
             }
+            self.profile.admission_s += t_admit.elapsed().as_secs_f64();
 
             // Grow every decoding lease to cover the KV the next step
             // writes. Oldest-first, so a pool shortfall preempts only
             // *strictly younger* requests — the oldest always progresses,
             // which rules out livelock. A request with no younger victim
             // stalls one boundary and keeps its blocks.
+            let t_grow = Instant::now();
+            let mut preempt_elapsed = 0.0f64;
+            // The clock does not advance while growing, so one stamp
+            // sync covers every pool call in the loop.
+            self.tsync();
             let mut stalled: Vec<u64> = Vec::new();
             let mut order: Vec<u64> = active
                 .iter()
@@ -487,15 +637,18 @@ impl DeviceEngine {
                         .map(|(j, _)| j);
                     match victim {
                         Some(j) => {
+                            let t_preempt = Instant::now();
                             let v = active.swap_remove(j);
                             self.kv.free(v.lease);
                             self.preemptions += 1;
+                            self.temit(TraceEventKind::Preempt { id: v.req.id });
                             self.readmit.push_back(Preempted {
                                 req: v.req,
                                 admit_s: v.admit_s,
                                 decode_start_s: v.decode_start_s,
                                 produced: v.produced,
                             });
+                            preempt_elapsed += t_preempt.elapsed().as_secs_f64();
                             // Retry the grow with the freed blocks.
                         }
                         None => {
@@ -505,10 +658,14 @@ impl DeviceEngine {
                     }
                 }
             }
+            self.profile.preempt_s += preempt_elapsed;
+            self.profile.growth_s +=
+                (t_grow.elapsed().as_secs_f64() - preempt_elapsed).max(0.0);
 
             // One batched decode step over every request that still
             // decodes (past prefill, not finished, KV below the window,
             // not stalled on blocks).
+            let t_decode = Instant::now();
             let parts: Vec<usize> = active
                 .iter()
                 .enumerate()
@@ -521,12 +678,18 @@ impl DeviceEngine {
                 self.clock_s += dt;
                 self.decode_steps += 1;
                 self.decode_batch_sum += kv_lens.len() as u64;
+                self.profile.sim_tokens += parts.len() as u64;
+                self.temit(TraceEventKind::DecodeStep {
+                    batch: parts.len(),
+                    dt_s: dt,
+                });
                 for &i in &parts {
                     active[i].produced += 1;
                     // One token produced: the readmission paid for itself.
                     active[i].shielded = false;
                 }
             }
+            self.profile.decode_s += t_decode.elapsed().as_secs_f64();
 
             // Retire finished requests, freeing their KV slots (paged
             // pools park the blocks as session residency for reuse).
@@ -534,6 +697,10 @@ impl DeviceEngine {
             while i < active.len() {
                 if active[i].finished(max_seq) {
                     let a = active.swap_remove(i);
+                    self.temit(TraceEventKind::Complete {
+                        id: a.req.id,
+                        tokens_simulated: a.produced,
+                    });
                     completions.push(Completion {
                         id: a.req.id,
                         prompt_len: a.req.prompt_len,
@@ -558,6 +725,7 @@ impl DeviceEngine {
                 }
             }
         }
+        self.profile.wall_s += run_start.elapsed().as_secs_f64();
         completions
     }
 
@@ -581,6 +749,8 @@ impl DeviceEngine {
             recompute_tokens: self.recompute_tokens,
             reuse_hits: self.kv.reuse_hits(),
             reuse_tokens: self.kv.reuse_tokens(),
+            profile: self.profile,
+            truncated: self.truncated,
         }
     }
 

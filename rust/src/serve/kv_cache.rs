@@ -29,6 +29,7 @@
 
 use super::backend::DeviceCapacity;
 use crate::config::SimConfig;
+use crate::trace::{TraceEventKind, TraceHandle};
 
 /// Subarrays left for KV on a SAL-PIM device: total subarrays minus the
 /// LUT-embedded subarrays minus what the model weights occupy. Shared by
@@ -298,6 +299,9 @@ pub struct PagedKvManager {
     reuse_hits: usize,
     reuse_tokens: usize,
     sessions_evicted: usize,
+    /// Shared lifecycle-event sink (the engine keeps its sim-time stamp
+    /// fresh before calling in); `None` records nothing.
+    trace: Option<TraceHandle>,
 }
 
 impl PagedKvManager {
@@ -323,9 +327,16 @@ impl PagedKvManager {
             reuse_hits: 0,
             reuse_tokens: 0,
             sessions_evicted: 0,
+            trace: None,
         };
         mgr.resize_blocks();
         mgr
+    }
+
+    /// Attach the engine's lifecycle-event sink so evictions and reuse
+    /// hits land in the same stream as scheduler events.
+    pub fn set_trace(&mut self, trace: TraceHandle) {
+        self.trace = Some(trace);
     }
 
     /// Override the block size in tokens (`--kv-block`); the block count
@@ -411,6 +422,12 @@ impl PagedKvManager {
             let r = self.resident.swap_remove(lru);
             self.free_blocks += r.blocks;
             self.sessions_evicted += 1;
+            if let Some(t) = &self.trace {
+                t.emit(TraceEventKind::EvictBlocks {
+                    session: r.session,
+                    blocks: r.blocks,
+                });
+            }
         }
         true
     }
@@ -444,6 +461,13 @@ impl PagedKvManager {
             if reused > 0 {
                 self.reuse_hits += 1;
                 self.reuse_tokens += reused;
+                if let Some(t) = &self.trace {
+                    t.emit(TraceEventKind::ReuseHit {
+                        id: request_id,
+                        session,
+                        tokens: reused,
+                    });
+                }
             }
         }
         if !self.evict_idle_until(want_blocks) {
@@ -610,6 +634,14 @@ impl KvPool {
         match self {
             KvPool::Whole(_) => KvPolicy::Whole,
             KvPool::Paged { .. } => KvPolicy::Paged,
+        }
+    }
+
+    /// Attach a lifecycle-event sink (paged pools emit evictions and
+    /// reuse hits; the whole-window pool has nothing to report).
+    pub fn set_trace(&mut self, trace: TraceHandle) {
+        if let KvPool::Paged { mgr, .. } = self {
+            mgr.set_trace(trace);
         }
     }
 

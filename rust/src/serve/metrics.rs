@@ -4,12 +4,26 @@
 //! window with zero completions, so [`percentile`] returns `None` on empty
 //! input and [`ServeMetrics::from_completions`] yields zeroed defaults
 //! instead of panicking.
+//!
+//! Percentiles are answered from log-bucketed
+//! [`crate::trace::Histogram`]s (O(1) per sample, ~1% bucket
+//! resolution) rather than sorting a flat `Vec<f64>` per window. The
+//! exact nearest-rank [`percentile`] stays as the reference
+//! implementation; a regression test pins the two within bucket error.
 
 use super::engine::EngineReport;
 use super::types::Completion;
+use crate::trace::HistogramRegistry;
 
 /// Percentile of a sample set (nearest-rank; `p` in [0, 100]).
 /// Returns `None` for an empty sample set.
+///
+/// **Small-sample semantics** (pinned, shared with the histogram path):
+/// the answer is always an observed sample, never an interpolation —
+/// `p95` of `[1, 2, 3, 4, 5]` is `5.0` (rank `round(0.95 × 4) = 4`),
+/// not the linearly interpolated `4.8`. Nearest-rank biases *up* for
+/// high percentiles at small `n`; at serving scale (hundreds of
+/// completions per window) the two estimators converge.
 pub fn percentile(samples: &[f64], p: f64) -> Option<f64> {
     if samples.is_empty() {
         return None;
@@ -71,8 +85,12 @@ impl ServeMetrics {
         if done.is_empty() {
             return Self::empty();
         }
-        let latencies: Vec<f64> = done.iter().map(|c| c.total_latency_s()).collect();
-        let ttfts: Vec<f64> = done.iter().map(|c| c.ttft_s()).collect();
+        // One O(1)-per-sample pass; no flat sample vectors to sort.
+        let mut hist = HistogramRegistry::new();
+        for c in done {
+            hist.record("latency", c.total_latency_s());
+            hist.record("ttft", c.ttft_s());
+        }
         let total_tokens: usize = done.iter().map(|c| c.tokens_out).sum();
         let makespan = done
             .iter()
@@ -87,10 +105,10 @@ impl ServeMetrics {
             } else {
                 0.0
             },
-            p50_latency_s: percentile(&latencies, 50.0).unwrap_or(0.0),
-            p95_latency_s: percentile(&latencies, 95.0).unwrap_or(0.0),
-            p50_ttft_s: percentile(&ttfts, 50.0).unwrap_or(0.0),
-            p95_ttft_s: percentile(&ttfts, 95.0).unwrap_or(0.0),
+            p50_latency_s: hist.percentile_or_zero("latency", 50.0),
+            p95_latency_s: hist.percentile_or_zero("latency", 95.0),
+            p50_ttft_s: hist.percentile_or_zero("ttft", 50.0),
+            p95_ttft_s: hist.percentile_or_zero("ttft", 95.0),
             mean_queue_s: done.iter().map(|c| c.queue_s).sum::<f64>() / done.len() as f64,
             preemptions: 0,
             recompute_tokens: 0,
@@ -185,6 +203,51 @@ mod tests {
     }
 
     #[test]
+    fn nearest_rank_small_sample_semantics_are_pinned() {
+        // Nearest-rank answers an observed sample — p95 of five values
+        // is the max, NOT the interpolated 4.8. This bias is kept (and
+        // shared by the histogram path): changing it would silently
+        // shift every BENCH_* latency percentile.
+        let v = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&v, 95.0), Some(5.0));
+        assert_eq!(percentile(&v, 80.0), Some(4.0));
+        // Two samples: p50 rounds to the upper one (round(0.5) = 1).
+        assert_eq!(percentile(&[10.0, 20.0], 50.0), Some(20.0));
+    }
+
+    #[test]
+    fn histogram_path_tracks_the_exact_reference_percentile() {
+        // The regression contract for the O(1) metrics path: on fixed
+        // inputs, the histogram percentile stays within one bucket
+        // (~1% relative) of the exact nearest-rank sort — and the two
+        // are bit-identical at the extremes.
+        let samples: Vec<f64> = (1..=257).map(|i| 0.004 * (i as f64).powf(1.3)).collect();
+        let mut h = crate::trace::Histogram::new();
+        for &s in &samples {
+            h.record(s);
+        }
+        for p in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            let exact = percentile(&samples, p).unwrap();
+            let approx = h.percentile(p).unwrap();
+            assert!(
+                (approx - exact).abs() <= 0.01 * exact,
+                "p{p}: histogram {approx} drifted from exact {exact}"
+            );
+        }
+        assert_eq!(h.percentile(0.0), percentile(&samples, 0.0));
+        assert_eq!(h.percentile(100.0), percentile(&samples, 100.0));
+        // And ServeMetrics (histogram-backed) mirrors the reference on
+        // a small window within the same bucket error.
+        let done: Vec<Completion> = (0..40)
+            .map(|i| comp(i, 0.0, 0.01, 0.05 + 0.01 * i as f64, 8))
+            .collect();
+        let m = ServeMetrics::from_completions(&done);
+        let lat: Vec<f64> = done.iter().map(|c| c.total_latency_s()).collect();
+        let exact = percentile(&lat, 95.0).unwrap();
+        assert!((m.p95_latency_s - exact).abs() <= 0.01 * exact);
+    }
+
+    #[test]
     fn metrics_aggregate() {
         let done = vec![
             comp(0, 0.0, 0.01, 0.1, 10),
@@ -227,6 +290,8 @@ mod tests {
             recompute_tokens: 10 * pre,
             reuse_hits: reuse,
             reuse_tokens: 5 * reuse,
+            profile: crate::trace::PhaseProfile::default(),
+            truncated: false,
         };
         let mut m = ServeMetrics::from_completions(&[comp(0, 0.0, 0.01, 0.1, 10)]);
         m.absorb_reports(&[rep(10, 4.0, 1, 2), rep(30, 2.0, 2, 0)]);

@@ -28,6 +28,13 @@
 //! * [`sweep`] — the latency-vs-offered-load sweep behind
 //!   `sal-pim serve --sweep` and `bench_serve_cluster`.
 //!
+//! The engine, cluster and paged KV pool emit typed lifecycle events
+//! into a shared [`crate::trace::TraceHandle`] when one is attached
+//! ([`DeviceEngine::set_trace`] / [`Cluster::set_trace`]; off by
+//! default), they accumulate a wall-clock self-profile per run
+//! ([`crate::trace::PhaseProfile`]), and [`ServeMetrics`] percentiles
+//! are answered from log-bucketed [`crate::trace::Histogram`]s.
+//!
 //! The request/completion/policy/metric types live here and are shared
 //! with the single-device coordinator (which re-exports them), so both
 //! paths consume the identical vocabulary.

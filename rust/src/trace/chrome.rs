@@ -1,0 +1,247 @@
+//! Chrome `trace_event`-format JSON export.
+//!
+//! Renders an event stream as a JSON Object Format trace document
+//! (`{"displayTimeUnit": "ms", "traceEvents": [...]}`) loadable in
+//! `chrome://tracing` or Perfetto:
+//!
+//! * one **thread track per device** (`tid` = device index) carrying
+//!   complete (`"X"`) events for prefill chunks, decode steps, KV
+//!   handoffs and readmit recomputes, plus instant (`"i"`) events for
+//!   arrivals, preemptions, evictions and reuse hits;
+//! * one **async group per request** (`cat: "request"`, `id` = request
+//!   id) spanning `[arrival, finish]`, with nested async spans for the
+//!   derived queue/prefill/decode/preempted phases
+//!   ([`super::span::derive_spans`]).
+//!
+//! Timestamps are microseconds of simulated time (`ts = t_s · 1e6`);
+//! charged events start at `t_s - dt_s`.
+
+use super::event::{TraceEvent, TraceEventKind};
+use super::span::derive_spans;
+use std::collections::BTreeSet;
+
+const US: f64 = 1e6;
+
+/// Render the event stream as a Chrome trace_event JSON document.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> String {
+    let mut rows: Vec<String> = Vec::new();
+    rows.push(
+        "{\"name\": \"process_name\", \"ph\": \"M\", \"pid\": 0, \"tid\": 0, \
+         \"args\": {\"name\": \"sal-pim simulated cluster\"}}"
+            .to_string(),
+    );
+    let devices: BTreeSet<usize> = events.iter().map(|e| e.device).collect();
+    for d in devices {
+        rows.push(format!(
+            "{{\"name\": \"thread_name\", \"ph\": \"M\", \"pid\": 0, \"tid\": {d}, \
+             \"args\": {{\"name\": \"device {d}\"}}}}"
+        ));
+    }
+    for e in events {
+        let d = e.device;
+        let name = e.kind.name();
+        match e.kind {
+            TraceEventKind::PrefillChunk { id, from, to, dt_s } => rows.push(format!(
+                "{{\"name\": \"{name}\", \"cat\": \"device\", \"ph\": \"X\", \"pid\": 0, \
+                 \"tid\": {d}, \"ts\": {:.3}, \"dur\": {:.3}, \
+                 \"args\": {{\"id\": {id}, \"from\": {from}, \"to\": {to}}}}}",
+                (e.t_s - dt_s) * US,
+                dt_s * US
+            )),
+            TraceEventKind::DecodeStep { batch, dt_s } => rows.push(format!(
+                "{{\"name\": \"{name}\", \"cat\": \"device\", \"ph\": \"X\", \"pid\": 0, \
+                 \"tid\": {d}, \"ts\": {:.3}, \"dur\": {:.3}, \"args\": {{\"batch\": {batch}}}}}",
+                (e.t_s - dt_s) * US,
+                dt_s * US
+            )),
+            TraceEventKind::Readmit {
+                id,
+                recompute_tokens,
+                dt_s,
+            } => rows.push(format!(
+                "{{\"name\": \"{name}\", \"cat\": \"device\", \"ph\": \"X\", \"pid\": 0, \
+                 \"tid\": {d}, \"ts\": {:.3}, \"dur\": {:.3}, \
+                 \"args\": {{\"id\": {id}, \"recompute_tokens\": {recompute_tokens}}}}}",
+                (e.t_s - dt_s) * US,
+                dt_s * US
+            )),
+            TraceEventKind::KvHandoff { id, tokens, dt_s } => rows.push(format!(
+                "{{\"name\": \"{name}\", \"cat\": \"device\", \"ph\": \"X\", \"pid\": 0, \
+                 \"tid\": {d}, \"ts\": {:.3}, \"dur\": {:.3}, \
+                 \"args\": {{\"id\": {id}, \"tokens\": {tokens}}}}}",
+                (e.t_s - dt_s) * US,
+                dt_s * US
+            )),
+            TraceEventKind::Arrival { id, session } => rows.push(instant(
+                name,
+                d,
+                e.t_s,
+                &format!("\"id\": {id}, \"session\": {session}"),
+            )),
+            TraceEventKind::Admit {
+                id,
+                session,
+                reused_tokens,
+            } => rows.push(instant(
+                name,
+                d,
+                e.t_s,
+                &format!(
+                    "\"id\": {id}, \"session\": {session}, \"reused_tokens\": {reused_tokens}"
+                ),
+            )),
+            TraceEventKind::Preempt { id } => {
+                rows.push(instant(name, d, e.t_s, &format!("\"id\": {id}")))
+            }
+            TraceEventKind::EvictBlocks { session, blocks } => rows.push(instant(
+                name,
+                d,
+                e.t_s,
+                &format!("\"session\": {session}, \"blocks\": {blocks}"),
+            )),
+            TraceEventKind::ReuseHit {
+                id,
+                session,
+                tokens,
+            } => rows.push(instant(
+                name,
+                d,
+                e.t_s,
+                &format!("\"id\": {id}, \"session\": {session}, \"tokens\": {tokens}"),
+            )),
+            TraceEventKind::Complete {
+                id,
+                tokens_simulated,
+            } => rows.push(instant(
+                name,
+                d,
+                e.t_s,
+                &format!("\"id\": {id}, \"tokens_simulated\": {tokens_simulated}"),
+            )),
+        }
+    }
+    // Async lifetime group + derived phase spans, one group per request.
+    for rs in derive_spans(events) {
+        let (id, d) = (rs.id, rs.device);
+        rows.push(async_mark("b", &format!("req {id}"), id, d, rs.arrival_s));
+        for s in &rs.spans {
+            rows.push(async_mark("b", s.kind.name(), id, d, s.start_s));
+            rows.push(async_mark("e", s.kind.name(), id, d, s.end_s));
+        }
+        rows.push(async_mark("e", &format!("req {id}"), id, d, rs.finish_s));
+    }
+    format!(
+        "{{\"displayTimeUnit\": \"ms\", \"traceEvents\": [\n{}\n]}}\n",
+        rows.join(",\n")
+    )
+}
+
+fn instant(name: &str, device: usize, t_s: f64, args: &str) -> String {
+    format!(
+        "{{\"name\": \"{name}\", \"cat\": \"device\", \"ph\": \"i\", \"s\": \"t\", \
+         \"pid\": 0, \"tid\": {device}, \"ts\": {:.3}, \"args\": {{{args}}}}}",
+        t_s * US
+    )
+}
+
+fn async_mark(ph: &str, name: &str, id: u64, device: usize, t_s: f64) -> String {
+    format!(
+        "{{\"name\": \"{name}\", \"cat\": \"request\", \"ph\": \"{ph}\", \"id\": {id}, \
+         \"pid\": 0, \"tid\": {device}, \"ts\": {:.3}}}",
+        t_s * US
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<TraceEvent> {
+        let id = 5;
+        vec![
+            TraceEvent {
+                t_s: 0.0,
+                device: 0,
+                kind: TraceEventKind::Arrival { id, session: 2 },
+            },
+            TraceEvent {
+                t_s: 0.1,
+                device: 0,
+                kind: TraceEventKind::Admit {
+                    id,
+                    session: 2,
+                    reused_tokens: 0,
+                },
+            },
+            TraceEvent {
+                t_s: 0.4,
+                device: 0,
+                kind: TraceEventKind::PrefillChunk {
+                    id,
+                    from: 0,
+                    to: 32,
+                    dt_s: 0.3,
+                },
+            },
+            TraceEvent {
+                t_s: 0.5,
+                device: 0,
+                kind: TraceEventKind::DecodeStep { batch: 1, dt_s: 0.1 },
+            },
+            TraceEvent {
+                t_s: 0.5,
+                device: 0,
+                kind: TraceEventKind::Complete {
+                    id,
+                    tokens_simulated: 2,
+                },
+            },
+        ]
+    }
+
+    #[test]
+    fn export_is_valid_json_with_the_expected_tracks() {
+        let doc = chrome_trace_json(&sample_events());
+        let json = crate::scenario::compare::parse_json(&doc).expect("valid JSON");
+        assert_eq!(
+            json.get("displayTimeUnit").and_then(|v| v.as_str()),
+            Some("ms")
+        );
+        let events = json
+            .get("traceEvents")
+            .and_then(|v| v.as_arr())
+            .expect("traceEvents array");
+        // Metadata + device events + async group (lifetime pair + 3
+        // derived spans × b/e).
+        assert!(events.len() >= 10, "{}", events.len());
+        let phases: Vec<&str> = events
+            .iter()
+            .filter_map(|e| e.get("ph").and_then(|v| v.as_str()))
+            .collect();
+        for ph in ["M", "X", "i", "b", "e"] {
+            assert!(phases.contains(&ph), "missing ph {ph}: {phases:?}");
+        }
+        // Async begin/end marks must balance.
+        let b = phases.iter().filter(|p| **p == "b").count();
+        let e = phases.iter().filter(|p| **p == "e").count();
+        assert_eq!(b, e);
+    }
+
+    #[test]
+    fn charged_events_start_at_t_minus_dt() {
+        let doc = chrome_trace_json(&sample_events());
+        let json = crate::scenario::compare::parse_json(&doc).unwrap();
+        let events = json.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        let prefill = events
+            .iter()
+            .find(|e| {
+                e.get("name").and_then(|v| v.as_str()) == Some("prefill")
+                    && e.get("ph").and_then(|v| v.as_str()) == Some("X")
+            })
+            .expect("prefill X event");
+        let ts = prefill.get("ts").and_then(|v| v.as_f64()).unwrap();
+        let dur = prefill.get("dur").and_then(|v| v.as_f64()).unwrap();
+        assert!((ts - 0.1 * US).abs() < 1e-6);
+        assert!((dur - 0.3 * US).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,172 @@
+//! Typed request-lifecycle events.
+//!
+//! Every event is stamped with the simulated wall clock and the device
+//! it happened on; request- and session-scoped kinds carry their ids.
+//! The stream is append-only and chronological per device (a
+//! [`crate::serve::Cluster`] runs its devices sequentially, so one
+//! request's events are always in order even when devices interleave in
+//! the recorded stream).
+
+/// One lifecycle event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    /// Simulated wall-clock seconds.
+    pub t_s: f64,
+    /// Index of the device the event happened on.
+    pub device: usize,
+    pub kind: TraceEventKind,
+}
+
+/// What happened. Durations (`dt_s`) are the simulated service time the
+/// event charged; the event is stamped at the *end* of that charge, so
+/// a charged event spans `[t_s - dt_s, t_s]`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TraceEventKind {
+    /// A request entered the device's arrival queue.
+    Arrival { id: u64, session: u64 },
+    /// Admission control granted KV; `reused_tokens` of the prompt were
+    /// reclaimed from session residency (paged KV prefix reuse).
+    Admit {
+        id: u64,
+        session: u64,
+        reused_tokens: usize,
+    },
+    /// One prefill chunk `[from, to)` of the request's prompt finished
+    /// (inline prefill emits a single chunk covering the whole prompt).
+    PrefillChunk {
+        id: u64,
+        from: usize,
+        to: usize,
+        dt_s: f64,
+    },
+    /// One batched decode step over `batch` in-flight requests.
+    DecodeStep { batch: usize, dt_s: f64 },
+    /// The request was preempted: its KV blocks were dropped and it
+    /// moved to the readmission queue.
+    Preempt { id: u64 },
+    /// Readmission after preemption: `recompute_tokens` (prompt plus
+    /// every token generated so far) were re-prefilled over `dt_s`.
+    Readmit {
+        id: u64,
+        recompute_tokens: usize,
+        dt_s: f64,
+    },
+    /// The paged allocator evicted an idle session residency under
+    /// capacity pressure.
+    EvictBlocks { session: u64, blocks: usize },
+    /// Admission reclaimed `tokens` of session-resident KV prefix, so
+    /// that much prefill was skipped.
+    ReuseHit { id: u64, session: u64, tokens: usize },
+    /// Prefill→decode KV handoff over the host link (hetero backend);
+    /// the cost is part of the prefill charge, reported here for
+    /// attribution.
+    KvHandoff { id: u64, tokens: usize, dt_s: f64 },
+    /// The request finished; `tokens_simulated` tokens were produced.
+    Complete { id: u64, tokens_simulated: usize },
+}
+
+impl TraceEventKind {
+    /// Short kind label (Chrome trace names, docs, tests).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceEventKind::Arrival { .. } => "arrival",
+            TraceEventKind::Admit { .. } => "admit",
+            TraceEventKind::PrefillChunk { .. } => "prefill",
+            TraceEventKind::DecodeStep { .. } => "decode",
+            TraceEventKind::Preempt { .. } => "preempt",
+            TraceEventKind::Readmit { .. } => "readmit",
+            TraceEventKind::EvictBlocks { .. } => "evict",
+            TraceEventKind::ReuseHit { .. } => "reuse",
+            TraceEventKind::KvHandoff { .. } => "kv_handoff",
+            TraceEventKind::Complete { .. } => "complete",
+        }
+    }
+
+    /// The request the event belongs to, when it names one
+    /// (device-level and session-level events return `None`).
+    pub fn request_id(&self) -> Option<u64> {
+        match self {
+            TraceEventKind::Arrival { id, .. }
+            | TraceEventKind::Admit { id, .. }
+            | TraceEventKind::PrefillChunk { id, .. }
+            | TraceEventKind::Preempt { id }
+            | TraceEventKind::Readmit { id, .. }
+            | TraceEventKind::ReuseHit { id, .. }
+            | TraceEventKind::KvHandoff { id, .. }
+            | TraceEventKind::Complete { id, .. } => Some(*id),
+            TraceEventKind::DecodeStep { .. } | TraceEventKind::EvictBlocks { .. } => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_and_request_ids_cover_every_kind() {
+        let kinds = [
+            TraceEventKind::Arrival { id: 1, session: 2 },
+            TraceEventKind::Admit {
+                id: 1,
+                session: 2,
+                reused_tokens: 0,
+            },
+            TraceEventKind::PrefillChunk {
+                id: 1,
+                from: 0,
+                to: 32,
+                dt_s: 0.1,
+            },
+            TraceEventKind::DecodeStep { batch: 4, dt_s: 0.01 },
+            TraceEventKind::Preempt { id: 1 },
+            TraceEventKind::Readmit {
+                id: 1,
+                recompute_tokens: 40,
+                dt_s: 0.2,
+            },
+            TraceEventKind::EvictBlocks {
+                session: 2,
+                blocks: 3,
+            },
+            TraceEventKind::ReuseHit {
+                id: 1,
+                session: 2,
+                tokens: 16,
+            },
+            TraceEventKind::KvHandoff {
+                id: 1,
+                tokens: 32,
+                dt_s: 0.001,
+            },
+            TraceEventKind::Complete {
+                id: 1,
+                tokens_simulated: 8,
+            },
+        ];
+        let names: Vec<&str> = kinds.iter().map(|k| k.name()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "arrival",
+                "admit",
+                "prefill",
+                "decode",
+                "preempt",
+                "readmit",
+                "evict",
+                "reuse",
+                "kv_handoff",
+                "complete"
+            ]
+        );
+        for k in &kinds {
+            match k {
+                TraceEventKind::DecodeStep { .. } | TraceEventKind::EvictBlocks { .. } => {
+                    assert_eq!(k.request_id(), None)
+                }
+                _ => assert_eq!(k.request_id(), Some(1)),
+            }
+        }
+    }
+}

@@ -1,0 +1,290 @@
+//! Log-bucketed histograms for O(1)-per-sample percentile metrics.
+//!
+//! [`crate::serve::ServeMetrics`] percentiles used to sort a flat
+//! `Vec<f64>` per window — O(n log n) at read time and O(n) memory at
+//! million-request scale. A [`Histogram`] instead buckets samples on a
+//! geometric grid (`growth = 1.01`, ~1% relative resolution): recording
+//! is a `BTreeMap` counter bump, and a percentile is one cumulative walk
+//! over the occupied buckets. Percentile semantics match the exact
+//! nearest-rank [`crate::serve::percentile`] up to the bucket's
+//! quantization (≤ ~0.5% relative, pinned by a regression test in
+//! `serve::metrics`).
+
+use std::collections::BTreeMap;
+
+/// Default geometric bucket growth: 1% relative resolution.
+const GROWTH: f64 = 1.01;
+
+/// A log-bucketed histogram over non-negative samples (negative and
+/// zero samples share one underflow bucket; NaN/infinite samples are
+/// dropped).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    ln_growth: f64,
+    /// Occupied buckets: index `i` covers `[growth^i, growth^(i+1))`.
+    counts: BTreeMap<i32, u64>,
+    /// Samples ≤ 0 (the underflow bucket).
+    zeros: u64,
+    count: u64,
+    min: f64,
+    max: f64,
+    sum: f64,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::with_growth(GROWTH)
+    }
+
+    /// A histogram with a custom bucket growth factor (> 1); the
+    /// relative quantization error is about `(growth - 1) / 2`.
+    pub fn with_growth(growth: f64) -> Self {
+        assert!(growth > 1.0, "bucket growth must exceed 1");
+        Histogram {
+            ln_growth: growth.ln(),
+            counts: BTreeMap::new(),
+            zeros: 0,
+            count: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            sum: 0.0,
+        }
+    }
+
+    /// Record one sample: O(log buckets), no per-sample storage.
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        if v <= 0.0 {
+            self.zeros += 1;
+        } else {
+            let idx = (v.ln() / self.ln_growth).floor() as i32;
+            *self.counts.entry(idx).or_insert(0) += 1;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn min(&self) -> Option<f64> {
+        (self.count > 0).then_some(self.min)
+    }
+
+    pub fn max(&self) -> Option<f64> {
+        (self.count > 0).then_some(self.max)
+    }
+
+    /// Exact mean (the sum is tracked outside the buckets).
+    pub fn mean(&self) -> Option<f64> {
+        (self.count > 0).then(|| self.sum / self.count as f64)
+    }
+
+    /// Nearest-rank percentile (`p` in [0, 100]): the same rank rule as
+    /// the exact [`crate::serve::percentile`], answered from the bucket
+    /// holding that rank. The bucket's representative is its geometric
+    /// midpoint, clamped into `[min, max]` so p0/p100 are exact.
+    /// Returns `None` on an empty histogram.
+    pub fn percentile(&self, p: f64) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        let rank = ((p / 100.0) * (self.count as f64 - 1.0)).round() as u64;
+        if rank == 0 {
+            return Some(self.min);
+        }
+        if rank >= self.count - 1 {
+            return Some(self.max);
+        }
+        if rank < self.zeros {
+            return Some(self.min.min(0.0));
+        }
+        let mut cum = self.zeros;
+        for (&idx, &c) in &self.counts {
+            cum += c;
+            if rank < cum {
+                let rep = ((idx as f64 + 0.5) * self.ln_growth).exp();
+                return Some(rep.max(self.min).min(self.max));
+            }
+        }
+        Some(self.max)
+    }
+
+    /// Fold another histogram (same growth) into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        assert!(
+            (self.ln_growth - other.ln_growth).abs() < 1e-12,
+            "cannot merge histograms with different bucket growth"
+        );
+        for (&idx, &c) in &other.counts {
+            *self.counts.entry(idx).or_insert(0) += c;
+        }
+        self.zeros += other.zeros;
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A named collection of histograms (insertion-ordered), the backing
+/// store for metric aggregation: `record("latency", v)` is O(1)-ish per
+/// sample regardless of how many samples a window accumulates.
+#[derive(Debug, Clone, Default)]
+pub struct HistogramRegistry {
+    entries: Vec<(String, Histogram)>,
+}
+
+impl HistogramRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a sample under `name`, creating the histogram on first
+    /// use.
+    pub fn record(&mut self, name: &str, v: f64) {
+        if let Some((_, h)) = self.entries.iter_mut().find(|(n, _)| n == name) {
+            h.record(v);
+        } else {
+            let mut h = Histogram::new();
+            h.record(v);
+            self.entries.push((name.to_string(), h));
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Histogram> {
+        self.entries
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, h)| h)
+    }
+
+    /// Convenience: percentile of a named histogram, 0.0 when the
+    /// histogram is missing or empty (metric-aggregation default).
+    pub fn percentile_or_zero(&self, name: &str, p: f64) -> f64 {
+        self.get(name)
+            .and_then(|h| h.percentile(p))
+            .unwrap_or(0.0)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Histogram)> {
+        self.entries.iter().map(|(n, h)| (n.as_str(), h))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_answers_none() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile(50.0), None);
+        assert_eq!(h.mean(), None);
+        assert_eq!(h.min(), None);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn percentiles_track_the_exact_nearest_rank_within_bucket_error() {
+        // A spread of ~3 decades, including duplicates.
+        let samples: Vec<f64> = (1..=400).map(|i| (i as f64 * 0.37).powf(1.7) + 0.01).collect();
+        let mut h = Histogram::new();
+        for &s in &samples {
+            h.record(s);
+        }
+        for p in [0.0, 10.0, 25.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            let exact = crate::serve::percentile(&samples, p).unwrap();
+            let approx = h.percentile(p).unwrap();
+            assert!(
+                (approx - exact).abs() <= 0.01 * exact.abs().max(1e-12),
+                "p{p}: approx {approx} vs exact {exact}"
+            );
+        }
+        assert_eq!(h.count(), 400);
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        assert!((h.mean().unwrap() - mean).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_samples_land_in_the_underflow_bucket() {
+        let mut h = Histogram::new();
+        for v in [0.0, 0.0, 0.0, 5.0] {
+            h.record(v);
+        }
+        assert_eq!(h.percentile(0.0), Some(0.0));
+        assert_eq!(h.percentile(100.0), Some(5.0));
+        // Rank 2 of 4 (p50 → round(1.5) = 2) is still a zero.
+        assert_eq!(h.percentile(50.0), Some(0.0));
+    }
+
+    #[test]
+    fn extremes_are_exact_and_nan_is_dropped() {
+        let mut h = Histogram::new();
+        h.record(f64::NAN);
+        h.record(3.25);
+        h.record(17.5);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.percentile(0.0), Some(3.25));
+        assert_eq!(h.percentile(100.0), Some(17.5));
+    }
+
+    #[test]
+    fn merge_is_equivalent_to_recording_everything_in_one() {
+        let (a_samples, b_samples): (Vec<f64>, Vec<f64>) = (
+            (1..50).map(|i| i as f64 * 0.3).collect(),
+            (1..80).map(|i| i as f64 * 1.7).collect(),
+        );
+        let mut merged = Histogram::new();
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for &v in &a_samples {
+            a.record(v);
+            merged.record(v);
+        }
+        for &v in &b_samples {
+            b.record(v);
+            merged.record(v);
+        }
+        a.merge(&b);
+        for p in [0.0, 50.0, 95.0, 100.0] {
+            assert_eq!(a.percentile(p), merged.percentile(p), "p{p}");
+        }
+        assert_eq!(a.count(), merged.count());
+    }
+
+    #[test]
+    fn registry_routes_samples_by_name() {
+        let mut reg = HistogramRegistry::new();
+        reg.record("latency", 1.0);
+        reg.record("latency", 3.0);
+        reg.record("ttft", 0.5);
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.get("latency").unwrap().count(), 2);
+        assert_eq!(reg.percentile_or_zero("ttft", 100.0), 0.5);
+        assert_eq!(reg.percentile_or_zero("absent", 50.0), 0.0);
+    }
+}

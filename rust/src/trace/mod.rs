@@ -1,0 +1,173 @@
+//! Request-lifecycle tracing and simulator self-profiling (L5).
+//!
+//! The serving stack's end-of-run aggregates say *that* a run was slow,
+//! never *why* — was a request queued, preempted twice, chunk-starved?
+//! This module is the observability layer underneath those aggregates:
+//!
+//! * [`event`] — typed lifecycle events ([`TraceEventKind`]: arrival,
+//!   admit, prefill chunk, decode step, preempt, readmit, evict, reuse
+//!   hit, KV handoff, complete), each stamped with sim-time and device;
+//! * [`TraceSink`] / [`Recorder`] — where events land. Tracing is
+//!   **off by default**: an engine without a [`TraceHandle`] pays one
+//!   `Option` check per emission site and allocates nothing;
+//! * [`span`] — per-request timelines derived from the stream, whose
+//!   queue/prefill/decode/preempted spans tile `[arrival, finish]`
+//!   exactly ([`RequestSpans::tiles_exactly`]);
+//! * [`chrome`] — Chrome `trace_event` JSON export (`--trace FILE` on
+//!   `sal-pim serve` / `sal-pim run`), loadable in `chrome://tracing`
+//!   or Perfetto: one track per device, async spans per request;
+//! * [`hist`] — log-bucketed [`Histogram`]s backing
+//!   [`crate::serve::ServeMetrics`] percentiles at O(1) per sample;
+//! * [`profile`] — wall-clock self-profiling per engine phase
+//!   ([`PhaseProfile`]), published by the smoke suite as
+//!   `BENCH_simperf.json` and gated by the bench-diff CI job.
+
+pub mod chrome;
+pub mod event;
+pub mod hist;
+pub mod profile;
+pub mod span;
+
+pub use chrome::chrome_trace_json;
+pub use event::{TraceEvent, TraceEventKind};
+pub use hist::{Histogram, HistogramRegistry};
+pub use profile::PhaseProfile;
+pub use span::{derive_spans, RequestSpans, Span, SpanKind};
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Where lifecycle events land.
+pub trait TraceSink {
+    fn emit(&mut self, event: TraceEvent);
+}
+
+/// The default sink: an in-memory, append-only event log.
+#[derive(Debug, Clone, Default)]
+pub struct Recorder {
+    events: Vec<TraceEvent>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Recorder::default()
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// Drain the recorded events.
+    pub fn take(&mut self) -> Vec<TraceEvent> {
+        std::mem::take(&mut self.events)
+    }
+}
+
+impl TraceSink for Recorder {
+    fn emit(&mut self, event: TraceEvent) {
+        self.events.push(event);
+    }
+}
+
+/// A cheap, cloneable handle every emitter shares.
+///
+/// The serving stack is single-threaded (a [`crate::serve::Cluster`]
+/// runs its devices sequentially), so the handle is an
+/// `Rc<RefCell<..>>` around a [`Recorder`] plus the current sim-time /
+/// device stamp. The engine keeps the stamp fresh
+/// ([`TraceHandle::set_time`] / [`TraceHandle::set_device`]) so nested
+/// emitters — the paged KV allocator emitting evictions and reuse hits
+/// mid-admission — need no clock plumbing of their own.
+#[derive(Debug, Clone, Default)]
+pub struct TraceHandle {
+    inner: Rc<RefCell<TraceCtx>>,
+}
+
+#[derive(Debug, Default)]
+struct TraceCtx {
+    recorder: Recorder,
+    t_s: f64,
+    device: usize,
+}
+
+impl TraceHandle {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Stamp subsequent events with this device index.
+    pub fn set_device(&self, device: usize) {
+        self.inner.borrow_mut().device = device;
+    }
+
+    /// Advance the sim-time stamp for subsequent [`TraceHandle::emit`]s.
+    pub fn set_time(&self, t_s: f64) {
+        self.inner.borrow_mut().t_s = t_s;
+    }
+
+    /// Emit `kind` at the current sim-time / device stamp.
+    pub fn emit(&self, kind: TraceEventKind) {
+        let mut ctx = self.inner.borrow_mut();
+        let (t_s, device) = (ctx.t_s, ctx.device);
+        ctx.recorder.emit(TraceEvent { t_s, device, kind });
+    }
+
+    /// Emit at an explicit sim-time (arrivals predate the clock).
+    pub fn emit_at(&self, t_s: f64, kind: TraceEventKind) {
+        let mut ctx = self.inner.borrow_mut();
+        let device = ctx.device;
+        ctx.recorder.emit(TraceEvent { t_s, device, kind });
+    }
+
+    /// Drain every event recorded so far.
+    pub fn take_events(&self) -> Vec<TraceEvent> {
+        self.inner.borrow_mut().recorder.take()
+    }
+
+    /// Number of events currently recorded.
+    pub fn len(&self) -> usize {
+        self.inner.borrow().recorder.events().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handle_clones_share_one_recorder() {
+        let h = TraceHandle::new();
+        let clone = h.clone();
+        h.set_device(2);
+        h.set_time(1.5);
+        clone.emit(TraceEventKind::Preempt { id: 9 });
+        h.emit_at(0.25, TraceEventKind::Arrival { id: 9, session: 1 });
+        assert_eq!(h.len(), 2);
+        let events = h.take_events();
+        assert!(clone.is_empty(), "take drains the shared recorder");
+        assert_eq!(events[0].device, 2);
+        assert_eq!(events[0].t_s, 1.5);
+        assert_eq!(events[1].t_s, 0.25);
+        assert_eq!(events[1].kind.request_id(), Some(9));
+    }
+
+    #[test]
+    fn recorder_implements_the_sink_trait() {
+        fn fill(sink: &mut dyn TraceSink) {
+            sink.emit(TraceEvent {
+                t_s: 0.0,
+                device: 0,
+                kind: TraceEventKind::DecodeStep { batch: 2, dt_s: 0.1 },
+            });
+        }
+        let mut r = Recorder::new();
+        fill(&mut r);
+        assert_eq!(r.events().len(), 1);
+        assert_eq!(r.take().len(), 1);
+        assert!(r.events().is_empty());
+    }
+}

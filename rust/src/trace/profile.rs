@@ -1,0 +1,89 @@
+//! Simulator self-profiling: wall-clock time per engine phase.
+//!
+//! Orthogonal to sim-time tracing — this measures how fast the
+//! *simulator itself* runs, so the smoke suite can publish a
+//! `BENCH_simperf.json` the bench-diff gate protects the same way it
+//! protects model metrics (at a wider tolerance; wall clock is noisy).
+//! The [`crate::serve::DeviceEngine`] accumulates one profile per run
+//! with plain `Instant` reads — always on, a few nanoseconds per loop
+//! phase, no allocation.
+
+/// Wall-clock seconds spent in each scheduler phase of
+/// [`crate::serve::DeviceEngine::run`], plus the simulated-token count
+/// that buys the headline simulated-tokens-per-wall-second figure.
+/// Phase times do not sum to `wall_s` (retirement and loop bookkeeping
+/// are uncounted).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseProfile {
+    /// Arrival intake, admission control, and prefill (inline or
+    /// chunk-advance) work.
+    pub admission_s: f64,
+    /// Per-token KV growth (block allocation at token boundaries).
+    pub growth_s: f64,
+    /// Victim selection + KV drop when growth fails under pressure.
+    pub preempt_s: f64,
+    /// Batched decode-step costing.
+    pub decode_s: f64,
+    /// Readmission of preempted requests (recompute charging).
+    pub readmit_s: f64,
+    /// Total wall clock of the engine run loop.
+    pub wall_s: f64,
+    /// Tokens whose production was simulated.
+    pub sim_tokens: u64,
+}
+
+impl PhaseProfile {
+    /// Fold another profile in (summing across devices / scenarios).
+    pub fn merge(&mut self, other: &PhaseProfile) {
+        self.admission_s += other.admission_s;
+        self.growth_s += other.growth_s;
+        self.preempt_s += other.preempt_s;
+        self.decode_s += other.decode_s;
+        self.readmit_s += other.readmit_s;
+        self.wall_s += other.wall_s;
+        self.sim_tokens += other.sim_tokens;
+    }
+
+    /// The headline: simulated tokens per wall-clock second.
+    pub fn sim_tokens_per_wall_s(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.sim_tokens as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_sums_fieldwise() {
+        let mut a = PhaseProfile {
+            admission_s: 1.0,
+            growth_s: 0.5,
+            preempt_s: 0.25,
+            decode_s: 2.0,
+            readmit_s: 0.125,
+            wall_s: 4.0,
+            sim_tokens: 100,
+        };
+        let b = PhaseProfile {
+            admission_s: 0.5,
+            wall_s: 1.0,
+            sim_tokens: 50,
+            ..PhaseProfile::default()
+        };
+        a.merge(&b);
+        assert!((a.admission_s - 1.5).abs() < 1e-12);
+        assert!((a.wall_s - 5.0).abs() < 1e-12);
+        assert_eq!(a.sim_tokens, 150);
+        assert!((a.sim_tokens_per_wall_s() - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_profile_has_zero_rate() {
+        assert_eq!(PhaseProfile::default().sim_tokens_per_wall_s(), 0.0);
+    }
+}

@@ -1,0 +1,285 @@
+//! Per-request span timelines derived from the event stream.
+//!
+//! A completed request's lifetime decomposes into `queue` (arrival →
+//! admission), `prefill` (admission → last prefill chunk), and an
+//! alternation of `decode` / `preempted` segments (a `preempted` span
+//! covers both the readmission-queue wait and the recompute charge,
+//! because decode only resumes once the recompute has been paid). The
+//! spans tile `[arrival, finish]` *exactly* — each span starts at the
+//! previous span's end by construction — which
+//! [`RequestSpans::tiles_exactly`] checks with strict float equality.
+
+use super::event::{TraceEvent, TraceEventKind};
+use std::collections::BTreeMap;
+
+/// Which lifecycle phase a span covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Waiting for admission (arrival → KV grant).
+    Queue,
+    /// Summarization (admission → last prefill chunk; zero-width when
+    /// the whole prompt was reclaimed from session residency).
+    Prefill,
+    /// Producing tokens in the decode batch.
+    Decode,
+    /// Preempted: KV dropped, waiting for readmission + recompute.
+    Preempted,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Queue => "queue",
+            SpanKind::Prefill => "prefill",
+            SpanKind::Decode => "decode",
+            SpanKind::Preempted => "preempted",
+        }
+    }
+}
+
+/// One phase of a request's lifetime, `[start_s, end_s]` in simulated
+/// seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    pub kind: SpanKind,
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+impl Span {
+    pub fn width_s(&self) -> f64 {
+        self.end_s - self.start_s
+    }
+}
+
+/// The derived timeline of one completed request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestSpans {
+    pub id: u64,
+    /// Device that served the request (the admission's device stamp).
+    pub device: usize,
+    pub arrival_s: f64,
+    pub finish_s: f64,
+    /// Queue, prefill, then alternating decode/preempted segments.
+    pub spans: Vec<Span>,
+}
+
+impl RequestSpans {
+    /// The tiling invariant: the first span starts at the arrival, the
+    /// last ends at the finish, no span has negative width, and every
+    /// span starts exactly (bit-for-bit) where the previous one ends.
+    pub fn tiles_exactly(&self) -> bool {
+        let (Some(first), Some(last)) = (self.spans.first(), self.spans.last()) else {
+            return false;
+        };
+        first.start_s == self.arrival_s
+            && last.end_s == self.finish_s
+            && self.spans.iter().all(|s| s.end_s >= s.start_s)
+            && self
+                .spans
+                .windows(2)
+                .all(|w| w[0].end_s == w[1].start_s)
+    }
+
+    /// Total width of all spans of one kind.
+    pub fn width_of(&self, kind: SpanKind) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| s.kind == kind)
+            .map(Span::width_s)
+            .sum()
+    }
+}
+
+#[derive(Default)]
+struct PerRequest {
+    arrival: Option<f64>,
+    admit: Option<f64>,
+    device: usize,
+    prefill_end: Option<f64>,
+    /// `(true, t)` = preempted at `t`; `(false, t)` = readmitted at `t`.
+    marks: Vec<(bool, f64)>,
+    finish: Option<f64>,
+}
+
+/// Derive span timelines for every request that completed inside the
+/// event stream. Requests that were rejected, or still in flight when a
+/// wall-clock budget truncated the run, have no `Complete` event and
+/// are skipped.
+pub fn derive_spans(events: &[TraceEvent]) -> Vec<RequestSpans> {
+    let mut per: BTreeMap<u64, PerRequest> = BTreeMap::new();
+    for e in events {
+        match e.kind {
+            TraceEventKind::Arrival { id, .. } => {
+                let r = per.entry(id).or_default();
+                r.arrival = Some(e.t_s);
+                r.device = e.device;
+            }
+            TraceEventKind::Admit { id, .. } => {
+                let r = per.entry(id).or_default();
+                r.admit = Some(e.t_s);
+                r.device = e.device;
+            }
+            TraceEventKind::PrefillChunk { id, .. } => {
+                // Chunks arrive in order; keep the last end time.
+                per.entry(id).or_default().prefill_end = Some(e.t_s);
+            }
+            TraceEventKind::Preempt { id } => {
+                per.entry(id).or_default().marks.push((true, e.t_s));
+            }
+            TraceEventKind::Readmit { id, .. } => {
+                per.entry(id).or_default().marks.push((false, e.t_s));
+            }
+            TraceEventKind::Complete { id, .. } => {
+                per.entry(id).or_default().finish = Some(e.t_s);
+            }
+            TraceEventKind::DecodeStep { .. }
+            | TraceEventKind::EvictBlocks { .. }
+            | TraceEventKind::ReuseHit { .. }
+            | TraceEventKind::KvHandoff { .. } => {}
+        }
+    }
+    per.into_iter()
+        .filter_map(|(id, r)| {
+            let (arrival, admit, finish) = (r.arrival?, r.admit?, r.finish?);
+            let mut spans = vec![Span {
+                kind: SpanKind::Queue,
+                start_s: arrival,
+                end_s: admit,
+            }];
+            let prefill_end = r.prefill_end.unwrap_or(admit);
+            spans.push(Span {
+                kind: SpanKind::Prefill,
+                start_s: admit,
+                end_s: prefill_end,
+            });
+            let mut cur = prefill_end;
+            for (is_preempt, t) in r.marks {
+                spans.push(Span {
+                    // A Preempt mark closes the running decode span; a
+                    // Readmit mark closes the preempted span.
+                    kind: if is_preempt {
+                        SpanKind::Decode
+                    } else {
+                        SpanKind::Preempted
+                    },
+                    start_s: cur,
+                    end_s: t,
+                });
+                cur = t;
+            }
+            spans.push(Span {
+                kind: SpanKind::Decode,
+                start_s: cur,
+                end_s: finish,
+            });
+            Some(RequestSpans {
+                id,
+                device: r.device,
+                arrival_s: arrival,
+                finish_s: finish,
+                spans,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t_s: f64, kind: TraceEventKind) -> TraceEvent {
+        TraceEvent {
+            t_s,
+            device: 3,
+            kind,
+        }
+    }
+
+    #[test]
+    fn preemption_splits_decode_into_alternating_segments() {
+        let id = 7;
+        let events = vec![
+            ev(0.0, TraceEventKind::Arrival { id, session: 1 }),
+            ev(0.5, TraceEventKind::Admit {
+                id,
+                session: 1,
+                reused_tokens: 0,
+            }),
+            ev(0.8, TraceEventKind::PrefillChunk {
+                id,
+                from: 0,
+                to: 32,
+                dt_s: 0.3,
+            }),
+            ev(1.2, TraceEventKind::Preempt { id }),
+            ev(1.9, TraceEventKind::Readmit {
+                id,
+                recompute_tokens: 40,
+                dt_s: 0.4,
+            }),
+            ev(2.5, TraceEventKind::Complete {
+                id,
+                tokens_simulated: 16,
+            }),
+        ];
+        let spans = derive_spans(&events);
+        assert_eq!(spans.len(), 1);
+        let rs = &spans[0];
+        assert_eq!(rs.id, id);
+        assert_eq!(rs.device, 3);
+        assert!(rs.tiles_exactly());
+        let kinds: Vec<SpanKind> = rs.spans.iter().map(|s| s.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                SpanKind::Queue,
+                SpanKind::Prefill,
+                SpanKind::Decode,
+                SpanKind::Preempted,
+                SpanKind::Decode
+            ]
+        );
+        assert!((rs.width_of(SpanKind::Queue) - 0.5).abs() < 1e-12);
+        assert!((rs.width_of(SpanKind::Prefill) - 0.3).abs() < 1e-12);
+        assert!((rs.width_of(SpanKind::Preempted) - 0.7).abs() < 1e-12);
+        assert!((rs.width_of(SpanKind::Decode) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn incomplete_requests_are_skipped() {
+        let events = vec![
+            ev(0.0, TraceEventKind::Arrival { id: 1, session: 0 }),
+            ev(0.1, TraceEventKind::Admit {
+                id: 1,
+                session: 0,
+                reused_tokens: 0,
+            }),
+            // No Complete — e.g. a budget-truncated run.
+            ev(0.0, TraceEventKind::Arrival { id: 2, session: 0 }),
+            // Rejected: never admitted.
+        ];
+        assert!(derive_spans(&events).is_empty());
+    }
+
+    #[test]
+    fn full_prefix_reuse_yields_a_zero_width_prefill_span() {
+        let id = 1;
+        let events = vec![
+            ev(0.0, TraceEventKind::Arrival { id, session: 0 }),
+            ev(0.2, TraceEventKind::Admit {
+                id,
+                session: 0,
+                reused_tokens: 31,
+            }),
+            ev(1.0, TraceEventKind::Complete {
+                id,
+                tokens_simulated: 4,
+            }),
+        ];
+        let spans = derive_spans(&events);
+        assert_eq!(spans.len(), 1);
+        assert!(spans[0].tiles_exactly());
+        assert_eq!(spans[0].width_of(SpanKind::Prefill), 0.0);
+    }
+}

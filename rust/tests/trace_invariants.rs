@@ -1,0 +1,234 @@
+//! Trace-subsystem invariants across the serving stack: every completed
+//! request's derived spans must tile `[arrival, finish]` exactly (even
+//! under chunked prefill + preemption + readmission), tracing must never
+//! perturb the simulated numbers, the Chrome export must be valid
+//! trace_event JSON, and wall-clock budgets must truncate runs cleanly.
+
+use sal_pim::config::SimConfig;
+use sal_pim::scenario::{
+    compare::parse_json, sink, ConfigSel, EngineKind, Runner, Scenario, ServeParams,
+};
+use sal_pim::serve::{
+    Cluster, Completion, DeviceEngine, EvictPolicy, KvPolicy, Request, Routing,
+};
+use sal_pim::trace::{
+    chrome_trace_json, derive_spans, SpanKind, TraceEvent, TraceEventKind, TraceHandle,
+};
+
+fn req(id: u64, session: u64, prompt: usize, out: usize, at: f64) -> Request {
+    Request {
+        id,
+        prompt_len: prompt,
+        max_new_tokens: out,
+        arrival_s: at,
+        session,
+    }
+}
+
+/// Subarrays one `tokens`-wide window pins (the whole-window unit).
+fn subarrays_for(cfg: &SimConfig, tokens: usize) -> usize {
+    (tokens * cfg.model.kv_bytes_per_token()).div_ceil(cfg.hbm.subarray_bytes())
+}
+
+/// A preemption-heavy traced run: chunked prefill, paged KV sized for
+/// ~2.5 of the 6 decoding windows.
+fn contended_run() -> (Vec<Completion>, Vec<TraceEvent>, usize) {
+    let cfg = SimConfig::paper();
+    let tight = subarrays_for(&cfg, 16 + 32) * 5 / 2;
+    let mut eng = DeviceEngine::new(&cfg, 8)
+        .with_kv_policy(KvPolicy::Paged)
+        .with_kv_subarrays(tight)
+        .with_prefill_chunk(Some(8));
+    let trace = TraceHandle::new();
+    eng.set_trace(trace.clone());
+    for i in 0..6 {
+        eng.submit(req(i, i, 16, 32, i as f64 * 1e-4));
+    }
+    let done = eng.run();
+    let preemptions = eng.report().preemptions;
+    (done, trace.take_events(), preemptions)
+}
+
+#[test]
+fn spans_tile_arrival_to_finish_under_preemption() {
+    let (done, events, preemptions) = contended_run();
+    assert!(preemptions > 0, "scenario must exercise preemption");
+    assert!(
+        events
+            .iter()
+            .any(|e| matches!(e.kind, TraceEventKind::Readmit { .. })),
+        "scenario must exercise readmission"
+    );
+    let spans = derive_spans(&events);
+    assert_eq!(spans.len(), done.len(), "one timeline per completion");
+    for rs in &spans {
+        assert!(rs.tiles_exactly(), "request {} spans leave gaps: {rs:?}", rs.id);
+        let c = done.iter().find(|c| c.id == rs.id).unwrap();
+        // Span widths must reproduce the completion's own accounting:
+        // queue and prefill are single spans built from the same floats,
+        // so they match bit-for-bit; the decode/preempted alternation
+        // re-sums segment widths, so it matches to accumulation error.
+        assert_eq!(rs.finish_s, c.finish_s, "req {}", rs.id);
+        assert_eq!(rs.width_of(SpanKind::Queue), c.queue_s, "req {}", rs.id);
+        assert_eq!(rs.width_of(SpanKind::Prefill), c.prefill_s, "req {}", rs.id);
+        let decode_like =
+            rs.width_of(SpanKind::Decode) + rs.width_of(SpanKind::Preempted);
+        assert!(
+            (decode_like - c.decode_s).abs() < 1e-9,
+            "req {}: decode+preempted {decode_like} vs decode_s {}",
+            rs.id,
+            c.decode_s
+        );
+    }
+    // A preempted request's timeline must actually alternate.
+    assert!(
+        spans
+            .iter()
+            .any(|rs| rs.spans.iter().any(|s| s.kind == SpanKind::Preempted)),
+        "no preempted span despite {preemptions} preemptions"
+    );
+}
+
+#[test]
+fn complete_events_conserve_simulated_tokens() {
+    let (done, events, _) = contended_run();
+    let traced: u64 = events
+        .iter()
+        .filter_map(|e| match e.kind {
+            TraceEventKind::Complete {
+                tokens_simulated, ..
+            } => Some(tokens_simulated as u64),
+            _ => None,
+        })
+        .sum();
+    let simulated: u64 = done.iter().map(|c| c.tokens_simulated as u64).sum();
+    assert_eq!(traced, simulated);
+    // Decode steps account for every token not produced by a prefill.
+    let decoded: u64 = events
+        .iter()
+        .filter_map(|e| match e.kind {
+            TraceEventKind::DecodeStep { batch, .. } => Some(batch as u64),
+            _ => None,
+        })
+        .sum();
+    let first_tokens = done.len() as u64;
+    assert_eq!(decoded + first_tokens, simulated);
+}
+
+#[test]
+fn tracing_never_perturbs_the_simulation() {
+    let run = |traced: bool| {
+        let cfg = SimConfig::paper();
+        let mut c = Cluster::new(&cfg, 2, 4, Routing::SessionAffinity).with_kv(
+            KvPolicy::Paged,
+            EvictPolicy::Lru,
+            None,
+            None,
+        );
+        let handle = traced.then(TraceHandle::new);
+        if let Some(t) = &handle {
+            c.set_trace(t.clone());
+        }
+        for i in 0..12u64 {
+            c.submit(req(i, i % 3, 12, 8, i as f64 * 0.01));
+        }
+        let bits: Vec<(u64, usize, u64, u64, u64, usize)> = c
+            .run()
+            .iter()
+            .map(|d| {
+                (
+                    d.id,
+                    d.tokens_simulated,
+                    d.queue_s.to_bits(),
+                    d.prefill_s.to_bits(),
+                    d.finish_s.to_bits(),
+                    d.device,
+                )
+            })
+            .collect();
+        (bits, handle.map(|t| t.len()).unwrap_or(0))
+    };
+    let (quiet, none) = run(false);
+    let (traced, some) = run(true);
+    assert_eq!(none, 0);
+    assert!(some > 0, "traced run recorded nothing");
+    assert_eq!(quiet, traced, "tracing changed simulated completions");
+}
+
+#[test]
+fn cluster_trace_stamps_per_device_tracks() {
+    let cfg = SimConfig::paper();
+    let mut c = Cluster::new(&cfg, 2, 4, Routing::RoundRobin);
+    let trace = TraceHandle::new();
+    c.set_trace(trace.clone());
+    for i in 0..8u64 {
+        c.submit(req(i, i, 12, 6, 0.0));
+    }
+    let done = c.run();
+    let events = trace.take_events();
+    let spans = derive_spans(&events);
+    assert_eq!(spans.len(), done.len());
+    for rs in &spans {
+        let c = done.iter().find(|c| c.id == rs.id).unwrap();
+        assert_eq!(rs.device, c.device, "req {} on the wrong track", rs.id);
+    }
+    let devices: std::collections::BTreeSet<usize> =
+        spans.iter().map(|rs| rs.device).collect();
+    assert_eq!(devices.len(), 2, "round-robin must populate both tracks");
+}
+
+#[test]
+fn chrome_export_is_valid_and_loadable() {
+    let (_, events, _) = contended_run();
+    let doc = chrome_trace_json(&events);
+    let json = parse_json(&doc).expect("chrome trace must be valid JSON");
+    assert_eq!(
+        json.get("displayTimeUnit").and_then(|v| v.as_str()),
+        Some("ms")
+    );
+    let rows = json
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .expect("traceEvents array");
+    // Async begin/end marks balance, and every complete event has a
+    // non-negative duration starting at ts >= 0.
+    let ph = |row: &sal_pim::scenario::compare::Json| {
+        row.get("ph").and_then(|v| v.as_str()).unwrap_or("").to_string()
+    };
+    let begins = rows.iter().filter(|r| ph(r) == "b").count();
+    let ends = rows.iter().filter(|r| ph(r) == "e").count();
+    assert!(begins > 0);
+    assert_eq!(begins, ends);
+    for r in rows.iter().filter(|r| ph(r) == "X") {
+        let ts = r.get("ts").and_then(|v| v.as_f64()).unwrap();
+        let dur = r.get("dur").and_then(|v| v.as_f64()).unwrap();
+        assert!(ts >= 0.0 && dur >= 0.0, "negative charge: ts={ts} dur={dur}");
+    }
+}
+
+#[test]
+fn budget_truncation_is_recorded_in_provenance_json() {
+    let scenario = Scenario::Serve(
+        ServeParams::default()
+            .with_config(ConfigSel::preset("mini").with_budget_s(0.0))
+            .with_engine(EngineKind::Batch)
+            .with_workload(6, 7)
+            .with_at_once(true),
+    );
+    let (out, aux) = Runner::new().run_with(&scenario, false).unwrap();
+    assert!(aux.truncated);
+    assert!(out.provenance.truncated);
+    let json = sink::to_json(&out);
+    assert!(json.contains("\"truncated\": true"), "{json}");
+    // An unbudgeted run of the same scenario stays untruncated.
+    let free = Scenario::Serve(
+        ServeParams::default()
+            .with_config(ConfigSel::preset("mini"))
+            .with_engine(EngineKind::Batch)
+            .with_workload(6, 7)
+            .with_at_once(true),
+    );
+    let (out, aux) = Runner::new().run_with(&free, false).unwrap();
+    assert!(!aux.truncated && !out.provenance.truncated);
+    assert!(sink::to_json(&out).contains("\"truncated\": false"));
+}
