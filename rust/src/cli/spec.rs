@@ -231,6 +231,13 @@ pub fn commands() -> Vec<CommandSpec> {
                 FlagSpec::value("requests", "N", "16", "request count"),
                 FlagSpec::value("policy", "P", "fcfs", "queue policy: fcfs|sjf|spf"),
                 FlagSpec::value("engine", "E", "seq", "engine: seq|batch|cluster"),
+                FlagSpec::value(
+                    "engine-core",
+                    "C",
+                    "event",
+                    "batching run-loop core: event (O(log n) discrete-event) | legacy \
+                     (token-boundary scan; bit-identical escape hatch)",
+                ),
                 FlagSpec::value("devices", "N", "4", "cluster size"),
                 FlagSpec::value("batch", "N", "8", "continuous-batching slots per device"),
                 FlagSpec::value("route", "R", "rr", "cluster routing: rr|ll|affinity"),
@@ -439,6 +446,7 @@ mod tests {
         }
         assert!(md.contains("`--prefill-chunk [C]`"));
         assert!(md.contains("`--kv-policy K`"));
+        assert!(md.contains("`--engine-core C`"));
         assert!(md.contains("`--trace FILE`"));
         assert!(md.contains("`--allow-missing`"));
         assert!(md.contains("`BASELINE`"), "compare positionals documented");

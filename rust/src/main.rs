@@ -20,7 +20,7 @@ use sal_pim::scenario::{
     SimulateParams, SweepParams,
 };
 use sal_pim::report::fmt_bw;
-use sal_pim::serve::{BackendKind, EvictPolicy, KvPolicy};
+use sal_pim::serve::{BackendKind, EngineCore, EvictPolicy, KvPolicy};
 use sal_pim::trace::{chrome_trace_json, PhaseProfile, TraceEvent};
 use std::path::Path;
 
@@ -181,6 +181,9 @@ fn scenario_serve(args: &Args, config: ConfigSel) -> anyhow::Result<Scenario> {
     let backend = BackendKind::parse(backend_flag).ok_or_else(|| {
         anyhow::anyhow!("unknown backend `{backend_flag}` (salpim|gpu|banklevel|hetero)")
     })?;
+    let core_flag = args.flag("engine-core").unwrap_or("event");
+    let engine_core = EngineCore::parse(core_flag)
+        .ok_or_else(|| anyhow::anyhow!("unknown engine-core `{core_flag}` (event|legacy)"))?;
     // Bare `--prefill-chunk` means the 32-token default.
     let prefill_chunk = if args.switch("prefill-chunk") {
         Some(args.get("prefill-chunk", 32usize)?)
@@ -224,7 +227,8 @@ fn scenario_serve(args: &Args, config: ConfigSel) -> anyhow::Result<Scenario> {
         .with_kv_units(kv_units)
         .with_at_once(args.switch("at-once"))
         .with_rate(rate, burst)
-        .with_offload(args.switch("offload"));
+        .with_offload(args.switch("offload"))
+        .with_engine_core(engine_core);
     params.seed = args.get("seed", 42u64)?;
     params.requests = if args.flag("requests").is_some() {
         args.get("requests", 16usize)?

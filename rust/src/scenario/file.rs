@@ -28,7 +28,7 @@ use super::{
     parse_policy, parse_route, route_token, AreaParams, BreakdownParams, ConfigSel, EngineKind,
     PowerParams, Scenario, ScenarioError, ServeParams, SimulateParams, SweepParams,
 };
-use crate::serve::{BackendKind, EvictPolicy, KvPolicy};
+use crate::serve::{BackendKind, EngineCore, EvictPolicy, KvPolicy};
 use std::fmt::Write as _;
 
 /// Strip an inline `#` comment, respecting double quotes.
@@ -241,6 +241,10 @@ pub fn from_kv(pairs: &[(usize, String, String)]) -> Result<Scenario, ScenarioEr
                         p.engine = EngineKind::parse(v)
                             .ok_or_else(|| bad(*line, key, v, "seq|batch|cluster"))?
                     }
+                    "engine_core" => {
+                        p.engine_core = EngineCore::parse(v)
+                            .ok_or_else(|| bad(*line, key, v, "event|legacy"))?
+                    }
                     "backend" => {
                         p.backend = BackendKind::parse(v)
                             .ok_or_else(|| bad(*line, key, v, "salpim|gpu|banklevel|hetero"))?
@@ -326,6 +330,7 @@ impl Scenario {
             Scenario::Area(_) => {}
             Scenario::Serve(p) => {
                 push("engine", p.engine.name().to_string());
+                push("engine_core", p.engine_core.name().to_string());
                 push("backend", p.backend.name().to_string());
                 push("policy", p.policy.name().to_string());
                 push("route", route_token(p.route).to_string());
@@ -366,8 +371,8 @@ impl Scenario {
         fn is_string_key(key: &str) -> bool {
             matches!(
                 key,
-                "kind" | "preset" | "engine" | "backend" | "policy" | "route" | "kv_policy"
-                    | "evict"
+                "kind" | "preset" | "engine" | "engine_core" | "backend" | "policy" | "route"
+                    | "kv_policy" | "evict"
             ) || key.starts_with("cfg.")
         }
         let mut out = String::from("[[scenario]]\n");
@@ -472,7 +477,8 @@ mod tests {
                     .with_kv_policy(KvPolicy::Paged)
                     .with_evict(EvictPolicy::None)
                     .with_kv_block(Some(8))
-                    .with_kv_units(Some(48)),
+                    .with_kv_units(Some(48))
+                    .with_engine_core(EngineCore::Legacy),
             ),
         ];
         let text = suite_to_toml(&scenarios);
@@ -518,6 +524,9 @@ mod tests {
         assert!(parse_suite("[[scenario]]\nkv = 64\n").is_err());
         assert!(parse_suite("[[scenario]]\nkind = \"serve\"\nrequests = many\n").is_err());
         assert!(parse_suite("[[scenario]]\nkind = \"serve\"\nengine = \"warp\"\n").is_err());
+        assert!(
+            parse_suite("[[scenario]]\nkind = \"serve\"\nengine_core = \"turbo\"\n").is_err()
+        );
         assert!(parse_suite("[[scenario]]\nkind = \"serve\"\nkv_policy = \"paging\"\n").is_err());
         assert!(parse_suite("[[scenario]]\nkind = \"serve\"\nevict = \"fifo\"\n").is_err());
         assert!(parse_suite("[[scenario]]\nkind = \"sweep\"\nins = 32\n").is_err());

@@ -23,7 +23,7 @@ pub use runner::Runner;
 
 use crate::config::parse::{apply_overrides, ConfigError};
 use crate::config::SimConfig;
-use crate::serve::{BackendKind, EvictPolicy, KvPolicy, Policy, Routing};
+use crate::serve::{BackendKind, EngineCore, EvictPolicy, KvPolicy, Policy, Routing};
 
 /// Scenario-layer failure.
 #[derive(Debug, thiserror::Error)]
@@ -338,6 +338,9 @@ pub struct ServeParams {
     pub sweep: bool,
     /// Offered loads (req/s) for sweep mode.
     pub loads: Vec<f64>,
+    /// Run-loop core for the batching engines (`--engine-core
+    /// event|legacy`); ignored by the sequential engine.
+    pub engine_core: EngineCore,
 }
 
 impl Default for ServeParams {
@@ -364,6 +367,7 @@ impl Default for ServeParams {
             offload: false,
             sweep: false,
             loads: vec![50.0, 200.0, 1000.0],
+            engine_core: EngineCore::default(),
         }
     }
 }
@@ -450,6 +454,11 @@ impl ServeParams {
     pub fn with_sweep(mut self, loads: Vec<f64>) -> Self {
         self.sweep = true;
         self.loads = loads;
+        self
+    }
+
+    pub fn with_engine_core(mut self, core: EngineCore) -> Self {
+        self.engine_core = core;
         self
     }
 }
@@ -586,7 +595,8 @@ mod tests {
             .with_evict(EvictPolicy::None)
             .with_kv_block(Some(16))
             .with_kv_units(Some(64))
-            .with_rate(Some(200.0), Some(4));
+            .with_rate(Some(200.0), Some(4))
+            .with_engine_core(EngineCore::Legacy);
         assert_eq!(s.engine, EngineKind::Cluster);
         assert_eq!(s.devices, 2);
         assert_eq!(s.rate, Some(200.0));
@@ -594,6 +604,8 @@ mod tests {
         assert_eq!(s.evict, EvictPolicy::None);
         assert_eq!(s.kv_block, Some(16));
         assert_eq!(s.kv_units, Some(64));
+        assert_eq!(s.engine_core, EngineCore::Legacy);
+        assert_eq!(ServeParams::default().engine_core, EngineCore::Event);
         let sweep = ServeParams::default().with_sweep(vec![100.0]);
         assert!(sweep.sweep);
         assert_eq!(sweep.loads, vec![100.0]);

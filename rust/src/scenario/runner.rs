@@ -453,6 +453,7 @@ fn run_serve(
             }
             let mut eng = DeviceEngine::with_backend(p.backend.build(cfg), p.max_batch)
                 .with_policy(p.policy)
+                .with_core(p.engine_core)
                 .with_prefill_chunk(p.prefill_chunk)
                 .with_kv_policy(p.kv_policy)
                 .with_evict(p.evict);
@@ -518,6 +519,7 @@ fn run_serve(
             let mut cluster =
                 Cluster::homogeneous(cfg, p.backend, p.devices, p.max_batch, p.route)
                     .with_policy(p.policy)
+                    .with_core(p.engine_core)
                     .with_prefill_chunk(p.prefill_chunk)
                     .with_kv(p.kv_policy, p.evict, p.kv_block, p.kv_units);
             let trace = capture_trace.then(TraceHandle::new);
@@ -617,6 +619,7 @@ fn run_serve_sweep(
         evict: p.evict,
         kv_block: p.kv_block,
         kv_units: p.kv_units,
+        core: p.engine_core,
     };
     let mut out = Outcome::new(
         &format!(
@@ -815,6 +818,22 @@ mod tests {
                 >= whole.metric_f64("mean_decode_batch").unwrap(),
             "paged must not shrink the decode batch at equal capacity"
         );
+    }
+
+    #[test]
+    fn engine_cores_agree_through_the_scenario_api() {
+        use crate::serve::{EngineCore, KvPolicy};
+        let base = ServeParams::default()
+            .with_config(mini())
+            .with_engine(EngineKind::Batch)
+            .with_kv_policy(KvPolicy::Paged)
+            .with_workload(8, 11)
+            .with_at_once(true);
+        let event = Runner::new().run(&Scenario::Serve(base.clone())).unwrap();
+        let legacy = Runner::new()
+            .run(&Scenario::Serve(base.with_engine_core(EngineCore::Legacy)))
+            .unwrap();
+        assert_eq!(event.metrics, legacy.metrics, "cores must be bit-identical");
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //! devices), and routing stays deterministic either way.
 
 use super::backend::BackendKind;
-use super::engine::{DeviceEngine, EngineReport};
+use super::engine::{DeviceEngine, EngineCore, EngineReport};
 use super::kv_cache::{EvictPolicy, KvPolicy};
 use super::metrics::ServeMetrics;
 use super::policy::Policy;
@@ -153,6 +153,16 @@ impl Cluster {
     ) -> Self {
         for d in &mut self.devices {
             d.apply_kv(policy, evict, block, units);
+        }
+        self
+    }
+
+    /// Pick the run-loop core for every device (see
+    /// [`DeviceEngine::with_core`]); `Legacy` is the `--engine-core`
+    /// escape hatch, bit-identical by construction.
+    pub fn with_core(mut self, core: EngineCore) -> Self {
+        for d in &mut self.devices {
+            d.core = core;
         }
         self
     }
@@ -348,6 +358,34 @@ mod tests {
         // Both devices took traffic.
         assert!(done.iter().any(|c| c.device == 0));
         assert!(done.iter().any(|c| c.device == 1));
+    }
+
+    #[test]
+    fn cluster_cores_agree_bit_for_bit() {
+        use crate::serve::kv_cache::{EvictPolicy, KvPolicy};
+        let cfg = SimConfig::paper();
+        let run = |core: EngineCore| {
+            let mut c = Cluster::new(&cfg, 2, 4, Routing::SessionAffinity)
+                .with_kv(KvPolicy::Paged, EvictPolicy::Lru, None, Some(64))
+                .with_core(core);
+            for i in 0..8 {
+                c.submit(req(i, i % 3, 0.01 * i as f64));
+            }
+            (c.run(), c.per_device_reports())
+        };
+        let (ev, ev_rep) = run(EngineCore::Event);
+        let (lg, lg_rep) = run(EngineCore::Legacy);
+        assert_eq!(ev.len(), lg.len());
+        for (a, b) in ev.iter().zip(&lg) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.device, b.device);
+            assert_eq!(a.tokens_simulated, b.tokens_simulated);
+            assert_eq!(a.finish_s.to_bits(), b.finish_s.to_bits());
+        }
+        for (a, b) in ev_rep.iter().zip(&lg_rep) {
+            assert_eq!(a.decode_steps, b.decode_steps);
+            assert_eq!(a.preemptions, b.preemptions);
+        }
     }
 
     #[test]

@@ -49,6 +49,18 @@
 //! blocks as *session residency*, so a session-affinity-routed follow-up
 //! request skips re-prefilling the shared prefix (a reuse hit).
 //!
+//! **Run-loop cores.** [`DeviceEngine::run`] dispatches on
+//! [`EngineCore`]: the default *event* core schedules the boundary from
+//! a completion min-heap (keyed by the earliest decode step a request
+//! can finish at) plus memoized admission/readmission state and a
+//! seq → batch-slot index, so a boundary with nothing to retire or
+//! admit costs O(log n) instead of walking every request; the *legacy*
+//! core is the historical O(n)-scan loop, kept as a transition escape
+//! hatch and as the reference the `engine_equivalence` property suite
+//! compares against. Both cores execute identical float operations in
+//! an identical order, so completions, reports and trace streams are
+//! bit-for-bit equal.
+//!
 //! Requests whose KV window can never fit the device are rejected rather
 //! than wedging the queue.
 
@@ -59,7 +71,8 @@ use super::policy::Policy;
 use super::types::{Completion, Request};
 use crate::config::SimConfig;
 use crate::trace::{PhaseProfile, TraceEventKind, TraceHandle};
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::time::Instant;
 
 /// A request currently holding a batch slot.
@@ -107,6 +120,51 @@ impl ActiveReq {
     }
 }
 
+/// Earliest global decode step at which `a` can satisfy
+/// [`ActiveReq::finished`]. `produced` advances at most one per decode
+/// step, so a request is never finished before its due step — the
+/// event core's completion heap pops exactly on time (a block-stalled
+/// request pops early and is re-armed at the corrected step).
+fn due_step(decode_steps: u64, a: &ActiveReq, max_seq: usize) -> u64 {
+    let target = a
+        .req
+        .max_new_tokens
+        .min(max_seq.saturating_sub(a.req.prompt_len));
+    decode_steps + target.saturating_sub(a.produced) as u64
+}
+
+/// Push onto the active set, keeping the event core's seq → slot index
+/// coherent (`fast` = event core; the legacy core skips the index).
+fn track_push(
+    active: &mut Vec<ActiveReq>,
+    slot_of: &mut HashMap<u64, usize>,
+    fast: bool,
+    a: ActiveReq,
+) {
+    if fast {
+        slot_of.insert(a.seq, active.len());
+    }
+    active.push(a);
+}
+
+/// `swap_remove` from the active set, keeping the seq → slot index
+/// coherent: the displaced tail element (if any) moves into slot `i`.
+fn track_swap_remove(
+    active: &mut Vec<ActiveReq>,
+    slot_of: &mut HashMap<u64, usize>,
+    fast: bool,
+    i: usize,
+) -> ActiveReq {
+    let a = active.swap_remove(i);
+    if fast {
+        slot_of.remove(&a.seq);
+        if let Some(moved) = active.get(i) {
+            slot_of.insert(moved.seq, i);
+        }
+    }
+    a
+}
+
 /// A preempted request waiting to re-enter the batch. Its latency
 /// anchors survive preemption so the completion's queue/prefill/decode
 /// partition still tiles `[arrival, finish]` exactly.
@@ -144,6 +202,48 @@ pub struct EngineReport {
     pub truncated: bool,
 }
 
+/// Which implementation [`DeviceEngine::run`] uses to advance simulated
+/// time (`--engine-core`).
+///
+/// Both cores execute the same token-boundary sequence — identical
+/// float operations in an identical order — so completions, reports and
+/// trace streams are **bit-for-bit identical** (pinned by the
+/// `engine_equivalence` property suite). The event core replaces the
+/// legacy per-boundary O(n) scans with an indexed discrete-event
+/// schedule: a completion min-heap keyed by the earliest decode step a
+/// request can finish at, memoized admission/readmission while the pool
+/// provably cannot accept (the failed probes are side-effect-free), a
+/// seq → batch-slot index for the growth loop, and a skipped growth
+/// phase for whole-window pools.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineCore {
+    /// Discrete-event scheduling (the default).
+    #[default]
+    Event,
+    /// The historical token-boundary scan loop — a transition escape
+    /// hatch, and the reference the equivalence tests compare against.
+    Legacy,
+}
+
+impl EngineCore {
+    /// Parse a `--engine-core` / suite-file token.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "event" => Some(EngineCore::Event),
+            "legacy" => Some(EngineCore::Legacy),
+            _ => None,
+        }
+    }
+
+    /// Canonical CLI / suite-file token.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineCore::Event => "event",
+            EngineCore::Legacy => "legacy",
+        }
+    }
+}
+
 /// One device running continuous batching over an [`ExecutionBackend`].
 pub struct DeviceEngine {
     backend: Box<dyn ExecutionBackend>,
@@ -158,11 +258,25 @@ pub struct DeviceEngine {
     /// Prefill chunk size in tokens; `None` charges whole prefills
     /// inline at admission (the legacy decode-stalling behaviour).
     pub prefill_chunk: Option<usize>,
+    /// Run-loop core [`DeviceEngine::run`] executes (`--engine-core`;
+    /// the cluster assigns it fleet-wide).
+    pub core: EngineCore,
     kv_policy: KvPolicy,
     evict: EvictPolicy,
     kv_block: Option<usize>,
     kv_units: Option<usize>,
     pending: Vec<Request>,
+    /// Running total of pending work in tokens, maintained by
+    /// [`DeviceEngine::submit`] so least-loaded routing is O(1) instead
+    /// of a queue scan per placement.
+    queued_tokens: usize,
+    /// Per-boundary scratch reused across steps (and runs) so the hot
+    /// loop never allocates: stalled seqs, grow order, decode
+    /// participants and their KV lengths.
+    scratch_stalled: Vec<u64>,
+    scratch_order: Vec<u64>,
+    scratch_parts: Vec<usize>,
+    scratch_kv_lens: Vec<usize>,
     clock_s: f64,
     rejected: Vec<Request>,
     readmit: VecDeque<Preempted>,
@@ -200,11 +314,17 @@ impl DeviceEngine {
             max_batch,
             device_index: 0,
             prefill_chunk: None,
+            core: EngineCore::Event,
             kv_policy,
             evict,
             kv_block: None,
             kv_units: None,
             pending: Vec::new(),
+            queued_tokens: 0,
+            scratch_stalled: Vec::new(),
+            scratch_order: Vec::new(),
+            scratch_parts: Vec::new(),
+            scratch_kv_lens: Vec::new(),
             clock_s: 0.0,
             rejected: Vec::new(),
             readmit: VecDeque::new(),
@@ -222,6 +342,13 @@ impl DeviceEngine {
 
     pub fn with_policy(mut self, policy: Policy) -> Self {
         self.policy = policy;
+        self
+    }
+
+    /// Select the run-loop core (`--engine-core`): [`EngineCore::Event`]
+    /// is the default, [`EngineCore::Legacy`] the escape hatch.
+    pub fn with_core(mut self, core: EngineCore) -> Self {
+        self.core = core;
         self
     }
 
@@ -332,12 +459,15 @@ impl DeviceEngine {
     }
 
     pub fn submit(&mut self, req: Request) {
+        self.queued_tokens += req.kv_tokens();
         self.pending.push(req);
     }
 
     /// Estimated outstanding work in tokens (for least-loaded routing).
+    /// Maintained incrementally by [`DeviceEngine::submit`], so routing
+    /// a request is O(1) instead of a pending-queue scan.
     pub fn queued_tokens(&self) -> usize {
-        self.pending.iter().map(|r| r.kv_tokens()).sum()
+        self.queued_tokens
     }
 
     /// Tokens of `session`'s KV currently parked for reuse on this
@@ -391,9 +521,20 @@ impl DeviceEngine {
 
     /// Drain the queue with continuous batching; returns completions in
     /// finish order.
+    ///
+    /// Dispatches on [`EngineCore`]. Both cores run the *same* boundary
+    /// sequence (arrivals → readmission → admission → chunked prefill →
+    /// KV growth/preemption → batched decode → retirement) with
+    /// identical float operations in an identical order; the event core
+    /// (`fast`) additionally skips phases it can prove are no-ops —
+    /// retirement via the completion heap, admission/readmission via
+    /// the blocked memos, growth for whole-window pools — and resolves
+    /// the growth loop's seq lookups through the slot index.
     pub fn run(&mut self) -> Vec<Completion> {
         let run_start = Instant::now();
+        let fast = self.core == EngineCore::Event;
         let mut incoming = std::mem::take(&mut self.pending);
+        self.queued_tokens = 0;
         incoming.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
         let mut incoming = incoming.into_iter().peekable();
         let mut waiting: Vec<Request> = Vec::new();
@@ -401,6 +542,31 @@ impl DeviceEngine {
         let mut completions: Vec<Completion> = Vec::new();
         let max_seq = self.capacity.max_seq;
         let mut admit_seq: u64 = 0;
+
+        // Per-boundary scratch, reused across boundaries and runs (the
+        // buffers live on the engine); taken into locals so `&mut self`
+        // method calls stay legal inside the loop.
+        let mut stalled = std::mem::take(&mut self.scratch_stalled);
+        let mut order = std::mem::take(&mut self.scratch_order);
+        let mut parts = std::mem::take(&mut self.scratch_parts);
+        let mut kv_lens = std::mem::take(&mut self.scratch_kv_lens);
+
+        // Event-core state. `slot_of` maps an admission seq to its slot
+        // in `active` (coherent across every push / swap_remove);
+        // `finish_heap` holds (earliest decode step the request can
+        // finish at, seq), so the common nothing-retires boundary costs
+        // one peek instead of an O(n) scan. The blocked memos record
+        // that the last `try_admit` / `try_readmit` failed — both are
+        // side-effect-free on failure and deterministic, so the phase
+        // stays skippable until freed capacity (retire/preempt) or a
+        // changed waiting set (arrival) invalidates the memo.
+        let mut slot_of: HashMap<u64, usize> = HashMap::new();
+        let mut finish_heap: BinaryHeap<Reverse<(u64, u64)>> = BinaryHeap::new();
+        let mut admit_blocked = false;
+        let mut readmit_blocked = false;
+        // Live prefilling count: lets the event core skip the chunk
+        // advance entirely while nothing is summarizing.
+        let mut prefilling = 0usize;
 
         loop {
             // A wall-clock budget (scenario `budget_s`) stops the run
@@ -426,6 +592,7 @@ impl DeviceEngine {
                         );
                     }
                     waiting.push(r);
+                    admit_blocked = false;
                 } else {
                     break;
                 }
@@ -445,6 +612,7 @@ impl DeviceEngine {
                             );
                         }
                         waiting.push(r);
+                        admit_blocked = false;
                         self.profile.admission_s += t_arrive.elapsed().as_secs_f64();
                         continue;
                     }
@@ -462,40 +630,54 @@ impl DeviceEngine {
             // prefill model, so the preemption's cost is paid in simulated
             // time, not hand-waved away.
             let t_readmit = Instant::now();
-            while active.len() < self.max_batch {
-                let Some(front) = self.readmit.front() else {
-                    break;
-                };
-                let rebuilt = front.req.prompt_len + front.produced;
-                self.tsync();
-                match self
-                    .kv
-                    .try_readmit(front.req.id, front.req.session, rebuilt + 1)
-                {
-                    Some(lease) => {
-                        let p = self.readmit.pop_front().unwrap();
-                        let dt = self.prefill_increment_s(0, rebuilt);
-                        self.clock_s += dt;
-                        self.recompute_tokens += rebuilt;
-                        admit_seq += 1;
-                        self.temit(TraceEventKind::Readmit {
-                            id: p.req.id,
-                            recompute_tokens: rebuilt,
-                            dt_s: dt,
-                        });
-                        self.temit_handoff(p.req.id, rebuilt);
-                        active.push(ActiveReq {
-                            prefill_done: p.req.prompt_len,
-                            req: p.req,
-                            admit_s: p.admit_s,
-                            decode_start_s: p.decode_start_s,
-                            produced: p.produced,
-                            lease,
-                            seq: admit_seq,
-                            shielded: true,
-                        });
+            if !(fast && readmit_blocked) {
+                while active.len() < self.max_batch {
+                    let Some(front) = self.readmit.front() else {
+                        break;
+                    };
+                    let rebuilt = front.req.prompt_len + front.produced;
+                    self.tsync();
+                    match self
+                        .kv
+                        .try_readmit(front.req.id, front.req.session, rebuilt + 1)
+                    {
+                        Some(lease) => {
+                            let p = self.readmit.pop_front().unwrap();
+                            let dt = self.prefill_increment_s(0, rebuilt);
+                            self.clock_s += dt;
+                            self.recompute_tokens += rebuilt;
+                            admit_seq += 1;
+                            self.temit(TraceEventKind::Readmit {
+                                id: p.req.id,
+                                recompute_tokens: rebuilt,
+                                dt_s: dt,
+                            });
+                            self.temit_handoff(p.req.id, rebuilt);
+                            let a = ActiveReq {
+                                prefill_done: p.req.prompt_len,
+                                req: p.req,
+                                admit_s: p.admit_s,
+                                decode_start_s: p.decode_start_s,
+                                produced: p.produced,
+                                lease,
+                                seq: admit_seq,
+                                shielded: true,
+                            };
+                            if fast {
+                                finish_heap.push(Reverse((
+                                    due_step(self.decode_steps, &a, max_seq),
+                                    a.seq,
+                                )));
+                            }
+                            track_push(&mut active, &mut slot_of, fast, a);
+                        }
+                        // The FIFO front stays the front and the failed
+                        // probe is pure: skippable until capacity frees.
+                        None => {
+                            readmit_blocked = true;
+                            break;
+                        }
                     }
-                    None => break,
                 }
             }
             self.profile.readmit_s += t_readmit.elapsed().as_secs_f64();
@@ -503,94 +685,122 @@ impl DeviceEngine {
             // Token-boundary admission: policy-ordered while a batch slot
             // and a KV reservation are both available.
             let t_admit = Instant::now();
-            while active.len() < self.max_batch && !waiting.is_empty() {
-                let idx = self.policy.pick(&waiting);
-                let window = waiting[idx]
-                    .kv_tokens()
-                    .max(waiting[idx].prompt_len + 1);
-                if !self.kv.fits_ever(window) {
-                    let req = waiting.swap_remove(idx);
-                    self.rejected.push(req);
-                    continue;
-                }
-                let id = waiting[idx].id;
-                let session = waiting[idx].session;
-                let prompt_len = waiting[idx].prompt_len;
-                self.tsync();
-                match self.kv.try_admit(id, session, prompt_len, window) {
-                    Some((lease, reused)) => {
+            if !(fast && admit_blocked) {
+                while active.len() < self.max_batch && !waiting.is_empty() {
+                    let idx = self.policy.pick(&waiting);
+                    let window = waiting[idx]
+                        .kv_tokens()
+                        .max(waiting[idx].prompt_len + 1);
+                    if !self.kv.fits_ever(window) {
                         let req = waiting.swap_remove(idx);
-                        let admit_s = self.clock_s;
-                        admit_seq += 1;
-                        self.temit(TraceEventKind::Admit {
-                            id,
-                            session,
-                            reused_tokens: reused,
-                        });
-                        let mut a = ActiveReq {
-                            req,
-                            admit_s,
-                            // A session-reused prefix skips its prefill.
-                            prefill_done: reused,
-                            decode_start_s: admit_s,
-                            produced: 0,
-                            lease,
-                            seq: admit_seq,
-                            shielded: false,
-                        };
-                        if self.prefill_chunk.is_none() {
-                            // The (rest of the) summarization charged inline.
-                            let dt = self.prefill_increment_s(reused, a.req.prompt_len);
-                            self.clock_s += dt;
-                            a.prefill_done = a.req.prompt_len;
-                            a.decode_start_s = self.clock_s;
-                            a.produced = 1;
-                            self.profile.sim_tokens += 1;
-                            self.temit(TraceEventKind::PrefillChunk {
-                                id,
-                                from: reused,
-                                to: prompt_len,
-                                dt_s: dt,
-                            });
-                            self.temit_handoff(id, prompt_len - reused);
-                        } else if !a.prefilling() {
-                            // Degenerate empty prompt: nothing to chunk,
-                            // the first token is immediate.
-                            a.produced = 1;
-                            self.profile.sim_tokens += 1;
-                        }
-                        active.push(a);
+                        self.rejected.push(req);
+                        continue;
                     }
-                    // KV region full right now: wait for a completion.
-                    None => break,
+                    let id = waiting[idx].id;
+                    let session = waiting[idx].session;
+                    let prompt_len = waiting[idx].prompt_len;
+                    self.tsync();
+                    match self.kv.try_admit(id, session, prompt_len, window) {
+                        Some((lease, reused)) => {
+                            let req = waiting.swap_remove(idx);
+                            let admit_s = self.clock_s;
+                            admit_seq += 1;
+                            self.temit(TraceEventKind::Admit {
+                                id,
+                                session,
+                                reused_tokens: reused,
+                            });
+                            let mut a = ActiveReq {
+                                req,
+                                admit_s,
+                                // A session-reused prefix skips its prefill.
+                                prefill_done: reused,
+                                decode_start_s: admit_s,
+                                produced: 0,
+                                lease,
+                                seq: admit_seq,
+                                shielded: false,
+                            };
+                            if self.prefill_chunk.is_none() {
+                                // The (rest of the) summarization charged inline.
+                                let dt = self.prefill_increment_s(reused, a.req.prompt_len);
+                                self.clock_s += dt;
+                                a.prefill_done = a.req.prompt_len;
+                                a.decode_start_s = self.clock_s;
+                                a.produced = 1;
+                                self.profile.sim_tokens += 1;
+                                self.temit(TraceEventKind::PrefillChunk {
+                                    id,
+                                    from: reused,
+                                    to: prompt_len,
+                                    dt_s: dt,
+                                });
+                                self.temit_handoff(id, prompt_len - reused);
+                            } else if !a.prefilling() {
+                                // Degenerate empty prompt: nothing to chunk,
+                                // the first token is immediate.
+                                a.produced = 1;
+                                self.profile.sim_tokens += 1;
+                            }
+                            if fast {
+                                if a.prefilling() {
+                                    prefilling += 1;
+                                } else {
+                                    finish_heap.push(Reverse((
+                                        due_step(self.decode_steps, &a, max_seq),
+                                        a.seq,
+                                    )));
+                                }
+                            }
+                            track_push(&mut active, &mut slot_of, fast, a);
+                        }
+                        // KV region full right now: wait for a completion.
+                        // The failed probe is pure and the policy pick is
+                        // deterministic over an unchanged waiting set, so
+                        // the whole phase is skippable until then.
+                        None => {
+                            admit_blocked = true;
+                            break;
+                        }
+                    }
                 }
             }
             self.max_batch_seen = self.max_batch_seen.max(active.len());
 
             // Advance one prefill chunk per still-prefilling request
-            // (the device time-shares chunks at token boundaries).
+            // (the device time-shares chunks at token boundaries). The
+            // event core skips the walk while nothing is summarizing.
             if let Some(chunk) = self.prefill_chunk {
-                for a in active.iter_mut() {
-                    if !a.prefilling() {
-                        continue;
-                    }
-                    let from = a.prefill_done;
-                    let to = (from + chunk).min(a.req.prompt_len);
-                    let dt = self.prefill_increment_s(from, to);
-                    self.clock_s += dt;
-                    a.prefill_done = to;
-                    self.temit(TraceEventKind::PrefillChunk {
-                        id: a.req.id,
-                        from,
-                        to,
-                        dt_s: dt,
-                    });
-                    self.temit_handoff(a.req.id, to - from);
-                    if !a.prefilling() {
-                        // Summarization complete: emits the first token.
-                        a.decode_start_s = self.clock_s;
-                        a.produced = 1;
-                        self.profile.sim_tokens += 1;
+                if !fast || prefilling > 0 {
+                    for a in active.iter_mut() {
+                        if !a.prefilling() {
+                            continue;
+                        }
+                        let from = a.prefill_done;
+                        let to = (from + chunk).min(a.req.prompt_len);
+                        let dt = self.prefill_increment_s(from, to);
+                        self.clock_s += dt;
+                        a.prefill_done = to;
+                        self.temit(TraceEventKind::PrefillChunk {
+                            id: a.req.id,
+                            from,
+                            to,
+                            dt_s: dt,
+                        });
+                        self.temit_handoff(a.req.id, to - from);
+                        if !a.prefilling() {
+                            // Summarization complete: emits the first token.
+                            a.decode_start_s = self.clock_s;
+                            a.produced = 1;
+                            self.profile.sim_tokens += 1;
+                            if fast {
+                                prefilling -= 1;
+                                finish_heap.push(Reverse((
+                                    due_step(self.decode_steps, a, max_seq),
+                                    a.seq,
+                                )));
+                            }
+                        }
                     }
                 }
             }
@@ -606,54 +816,68 @@ impl DeviceEngine {
             // The clock does not advance while growing, so one stamp
             // sync covers every pool call in the loop.
             self.tsync();
-            let mut stalled: Vec<u64> = Vec::new();
-            let mut order: Vec<u64> = active
-                .iter()
-                .filter(|a| a.decoding(max_seq))
-                .map(|a| a.seq)
-                .collect();
-            order.sort_unstable();
-            'grow: for seq in order {
-                loop {
-                    let Some(i) = active.iter().position(|a| a.seq == seq) else {
-                        continue 'grow;
-                    };
-                    let need = active[i].next_kv() + 1;
-                    if self.kv.ensure(&mut active[i].lease, need) {
-                        continue 'grow;
-                    }
-                    if !self.kv.preemption_allowed() {
-                        stalled.push(seq);
-                        continue 'grow;
-                    }
-                    // Youngest strictly-younger decoding request;
-                    // shielded (just-readmitted) requests are spared so
-                    // their recompute charge buys at least one token.
-                    let victim = active
-                        .iter()
-                        .enumerate()
-                        .filter(|(_, a)| a.seq > seq && a.decoding(max_seq) && !a.shielded)
-                        .max_by_key(|(_, a)| a.seq)
-                        .map(|(j, _)| j);
-                    match victim {
-                        Some(j) => {
-                            let t_preempt = Instant::now();
-                            let v = active.swap_remove(j);
-                            self.kv.free(v.lease);
-                            self.preemptions += 1;
-                            self.temit(TraceEventKind::Preempt { id: v.req.id });
-                            self.readmit.push_back(Preempted {
-                                req: v.req,
-                                admit_s: v.admit_s,
-                                decode_start_s: v.decode_start_s,
-                                produced: v.produced,
-                            });
-                            preempt_elapsed += t_preempt.elapsed().as_secs_f64();
-                            // Retry the grow with the freed blocks.
+            stalled.clear();
+            // Whole-window pools reserve up front: every `ensure` is a
+            // provable no-op, so the event core skips the walk outright.
+            if !fast || self.kv.needs_growth() {
+                order.clear();
+                order.extend(active.iter().filter(|a| a.decoding(max_seq)).map(|a| a.seq));
+                order.sort_unstable();
+                'grow: for &seq in &order {
+                    loop {
+                        // A seq vanishes from `active` only by being
+                        // preempted earlier in this very phase.
+                        let i = if fast {
+                            match slot_of.get(&seq) {
+                                Some(&i) => i,
+                                None => continue 'grow,
+                            }
+                        } else {
+                            match active.iter().position(|a| a.seq == seq) {
+                                Some(i) => i,
+                                None => continue 'grow,
+                            }
+                        };
+                        let need = active[i].next_kv() + 1;
+                        if self.kv.ensure(&mut active[i].lease, need) {
+                            continue 'grow;
                         }
-                        None => {
+                        if !self.kv.preemption_allowed() {
                             stalled.push(seq);
                             continue 'grow;
+                        }
+                        // Youngest strictly-younger decoding request;
+                        // shielded (just-readmitted) requests are spared so
+                        // their recompute charge buys at least one token.
+                        let victim = active
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, a)| a.seq > seq && a.decoding(max_seq) && !a.shielded)
+                            .max_by_key(|(_, a)| a.seq)
+                            .map(|(j, _)| j);
+                        match victim {
+                            Some(j) => {
+                                let t_preempt = Instant::now();
+                                let v = track_swap_remove(&mut active, &mut slot_of, fast, j);
+                                self.kv.free(v.lease);
+                                self.preemptions += 1;
+                                self.temit(TraceEventKind::Preempt { id: v.req.id });
+                                self.readmit.push_back(Preempted {
+                                    req: v.req,
+                                    admit_s: v.admit_s,
+                                    decode_start_s: v.decode_start_s,
+                                    produced: v.produced,
+                                });
+                                // Freed blocks invalidate both memos.
+                                admit_blocked = false;
+                                readmit_blocked = false;
+                                preempt_elapsed += t_preempt.elapsed().as_secs_f64();
+                                // Retry the grow with the freed blocks.
+                            }
+                            None => {
+                                stalled.push(seq);
+                                continue 'grow;
+                            }
                         }
                     }
                 }
@@ -666,14 +890,17 @@ impl DeviceEngine {
             // decodes (past prefill, not finished, KV below the window,
             // not stalled on blocks).
             let t_decode = Instant::now();
-            let parts: Vec<usize> = active
-                .iter()
-                .enumerate()
-                .filter(|(_, a)| a.decoding(max_seq) && !stalled.contains(&a.seq))
-                .map(|(i, _)| i)
-                .collect();
+            parts.clear();
+            parts.extend(
+                active
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, a)| a.decoding(max_seq) && !stalled.contains(&a.seq))
+                    .map(|(i, _)| i),
+            );
             if !parts.is_empty() {
-                let kv_lens: Vec<usize> = parts.iter().map(|&i| active[i].next_kv()).collect();
+                kv_lens.clear();
+                kv_lens.extend(parts.iter().map(|&i| active[i].next_kv()));
                 let dt = self.backend.decode_step_s(&kv_lens);
                 self.clock_s += dt;
                 self.decode_steps += 1;
@@ -693,10 +920,44 @@ impl DeviceEngine {
 
             // Retire finished requests, freeing their KV slots (paged
             // pools park the blocks as session residency for reuse).
+            // The event core consults the completion heap first: when
+            // nothing is due at this decode step the scan is skipped
+            // entirely; when something is due, the legacy scan runs
+            // verbatim so the completion order stays bit-identical.
+            let mut any_due = !fast;
+            if fast {
+                while let Some(&Reverse((due, seq))) = finish_heap.peek() {
+                    if due > self.decode_steps {
+                        break;
+                    }
+                    finish_heap.pop();
+                    // Preempted seqs leave stale entries; drop them (the
+                    // readmission pushed a fresh entry under a new seq).
+                    let Some(&i) = slot_of.get(&seq) else {
+                        continue;
+                    };
+                    if active[i].finished(max_seq) {
+                        any_due = true;
+                    } else {
+                        // Block-stalled past its due step: re-arm at the
+                        // corrected earliest-finish step.
+                        finish_heap.push(Reverse((
+                            due_step(self.decode_steps, &active[i], max_seq),
+                            seq,
+                        )));
+                    }
+                }
+            }
+            if !any_due {
+                continue;
+            }
             let mut i = 0;
             while i < active.len() {
                 if active[i].finished(max_seq) {
-                    let a = active.swap_remove(i);
+                    let a = track_swap_remove(&mut active, &mut slot_of, fast, i);
+                    // Released capacity invalidates both blocked memos.
+                    admit_blocked = false;
+                    readmit_blocked = false;
                     self.temit(TraceEventKind::Complete {
                         id: a.req.id,
                         tokens_simulated: a.produced,
@@ -725,6 +986,11 @@ impl DeviceEngine {
                 }
             }
         }
+        // Park the scratch buffers for the next run.
+        self.scratch_stalled = stalled;
+        self.scratch_order = order;
+        self.scratch_parts = parts;
+        self.scratch_kv_lens = kv_lens;
         self.profile.wall_s += run_start.elapsed().as_secs_f64();
         completions
     }
@@ -956,6 +1222,73 @@ mod tests {
             warm_ttft < cold_ttft,
             "reused prefix must shrink TTFT: warm {warm_ttft} !< cold {cold_ttft}"
         );
+    }
+
+    #[test]
+    fn engine_core_tokens_round_trip() {
+        for core in [EngineCore::Event, EngineCore::Legacy] {
+            assert_eq!(EngineCore::parse(core.name()), Some(core));
+        }
+        assert_eq!(EngineCore::parse("turbo"), None);
+        assert_eq!(EngineCore::default(), EngineCore::Event);
+    }
+
+    #[test]
+    fn queued_tokens_is_maintained_incrementally() {
+        let cfg = SimConfig::paper();
+        let mut e = DeviceEngine::new(&cfg, 4);
+        let a = req(0, 32, 8, 0.0);
+        let b = req(1, 16, 4, 0.0);
+        let want = a.kv_tokens() + b.kv_tokens();
+        e.submit(a);
+        e.submit(b);
+        assert_eq!(e.queued_tokens(), want);
+        e.run();
+        assert_eq!(e.queued_tokens(), 0, "run drains the queue");
+    }
+
+    #[test]
+    fn legacy_core_matches_event_core_bit_for_bit_under_preemption() {
+        // The full random matrix lives in tests/engine_equivalence.rs;
+        // this is the smoke-sized pin with the preemption + readmit
+        // machinery (the hardest phases to keep bit-identical) engaged.
+        let cfg = SimConfig::paper();
+        let per_sub = cfg.hbm.subarray_bytes() / cfg.model.kv_bytes_per_token();
+        let subs = (3 * 40usize).div_ceil(per_sub);
+        let run = |core: EngineCore| {
+            let mut e = DeviceEngine::new(&cfg, 8)
+                .with_core(core)
+                .with_kv_policy(KvPolicy::Paged)
+                .with_kv_subarrays(subs);
+            for i in 0..6 {
+                e.submit(req(i, 8, 32, 0.0));
+            }
+            let done = e.run();
+            let rep = e.report();
+            (
+                done,
+                rep.preemptions,
+                rep.decode_steps,
+                rep.max_batch_seen,
+                rep.recompute_tokens,
+            )
+        };
+        let (ev, ev_p, ev_s, ev_b, ev_r) = run(EngineCore::Event);
+        let (lg, lg_p, lg_s, lg_b, lg_r) = run(EngineCore::Legacy);
+        assert!(ev_p > 0, "pressure must force preemption in this pin");
+        assert_eq!(ev_p, lg_p);
+        assert_eq!(ev_s, lg_s);
+        assert_eq!(ev_b, lg_b);
+        assert_eq!(ev_r, lg_r);
+        assert_eq!(ev.len(), lg.len());
+        for (a, b) in ev.iter().zip(&lg) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens_simulated, b.tokens_simulated);
+            assert_eq!(a.queue_s.to_bits(), b.queue_s.to_bits());
+            assert_eq!(a.prefill_s.to_bits(), b.prefill_s.to_bits());
+            assert_eq!(a.decode_s.to_bits(), b.decode_s.to_bits());
+            assert_eq!(a.finish_s.to_bits(), b.finish_s.to_bits());
+        }
     }
 
     #[test]

@@ -30,6 +30,7 @@
 use super::backend::DeviceCapacity;
 use crate::config::SimConfig;
 use crate::trace::{TraceEventKind, TraceHandle};
+use std::collections::{BTreeMap, HashMap};
 
 /// Subarrays left for KV on a SAL-PIM device: total subarrays minus the
 /// LUT-embedded subarrays minus what the model weights occupy. Shared by
@@ -263,10 +264,10 @@ pub struct PagedLease {
     pub blocks: usize,
 }
 
-/// Idle blocks a finished request left behind, keyed by session.
+/// Idle blocks a finished request left behind, keyed by session (the
+/// session id is the map key in [`PagedKvManager::resident`]).
 #[derive(Debug)]
 struct SessionResidency {
-    session: u64,
     tokens: usize,
     blocks: usize,
     /// LRU stamp (monotone sequence, not wall clock — deterministic).
@@ -291,8 +292,16 @@ pub struct PagedKvManager {
     block_tokens: usize,
     total_blocks: usize,
     free_blocks: usize,
-    /// Idle session blocks, evictable in LRU order.
-    resident: Vec<SessionResidency>,
+    /// Idle session blocks, keyed by session id for O(1) residency
+    /// lookups (affinity routing probes every device per arrival).
+    resident: HashMap<u64, SessionResidency>,
+    /// LRU index: `last_use` stamp → session. Stamps are unique and
+    /// monotone, so `pop_first()` is the least-recently-used session;
+    /// kept coherent with `resident` at every insert/reclaim/evict.
+    lru: BTreeMap<u64, u64>,
+    /// Blocks currently parked across all residencies (sum of
+    /// `resident[*].blocks`, maintained incrementally).
+    resident_blocks: usize,
     lru_seq: u64,
     admitted: usize,
     peak_used_blocks: usize,
@@ -320,7 +329,9 @@ impl PagedKvManager {
             block_tokens: cap.kv_block_tokens.max(1),
             total_blocks: 0,
             free_blocks: 0,
-            resident: Vec::new(),
+            resident: HashMap::new(),
+            lru: BTreeMap::new(),
+            resident_blocks: 0,
             lru_seq: 0,
             admitted: 0,
             peak_used_blocks: 0,
@@ -389,16 +400,16 @@ impl PagedKvManager {
     }
 
     fn resident_blocks(&self) -> usize {
-        self.resident.iter().map(|r| r.blocks).sum()
+        debug_assert_eq!(
+            self.resident_blocks,
+            self.resident.values().map(|r| r.blocks).sum::<usize>()
+        );
+        self.resident_blocks
     }
 
     /// Tokens of `session`'s KV currently parked for reuse.
     pub fn session_resident_tokens(&self, session: u64) -> usize {
-        self.resident
-            .iter()
-            .find(|r| r.session == session)
-            .map(|r| r.tokens)
-            .unwrap_or(0)
+        self.resident.get(&session).map(|r| r.tokens).unwrap_or(0)
     }
 
     fn next_seq(&mut self) -> u64 {
@@ -410,21 +421,19 @@ impl PagedKvManager {
     /// Returns `false` if even a fully-evicted pool stays short.
     fn evict_idle_until(&mut self, need: usize) -> bool {
         while self.free_blocks < need {
-            let Some(lru) = self
-                .resident
-                .iter()
-                .enumerate()
-                .min_by_key(|(_, r)| r.last_use)
-                .map(|(i, _)| i)
-            else {
+            let Some((_, session)) = self.lru.pop_first() else {
                 return false;
             };
-            let r = self.resident.swap_remove(lru);
+            let r = self
+                .resident
+                .remove(&session)
+                .expect("lru index is coherent with residency map");
             self.free_blocks += r.blocks;
+            self.resident_blocks -= r.blocks;
             self.sessions_evicted += 1;
             if let Some(t) = &self.trace {
                 t.emit(TraceEventKind::EvictBlocks {
-                    session: r.session,
+                    session,
                     blocks: r.blocks,
                 });
             }
@@ -454,9 +463,10 @@ impl PagedKvManager {
             return None;
         }
         let mut reused = 0usize;
-        if let Some(i) = self.resident.iter().position(|r| r.session == session) {
-            let r = self.resident.swap_remove(i);
+        if let Some(r) = self.resident.remove(&session) {
+            self.lru.remove(&r.last_use);
             self.free_blocks += r.blocks;
+            self.resident_blocks -= r.blocks;
             reused = r.tokens.min(max_reuse);
             if reused > 0 {
                 self.reuse_hits += 1;
@@ -516,26 +526,30 @@ impl PagedKvManager {
     pub fn release_retain(&mut self, lease: PagedLease) {
         self.admitted = self.admitted.saturating_sub(1);
         let seq = self.next_seq();
-        if let Some(i) = self
-            .resident
-            .iter()
-            .position(|r| r.session == lease.session)
-        {
-            if self.resident[i].tokens >= lease.tokens {
+        if let Some(r) = self.resident.get_mut(&lease.session) {
+            if r.tokens >= lease.tokens {
                 self.free_blocks += lease.blocks;
             } else {
-                self.free_blocks += self.resident[i].blocks;
-                self.resident[i].tokens = lease.tokens;
-                self.resident[i].blocks = lease.blocks;
+                self.free_blocks += r.blocks;
+                self.resident_blocks -= r.blocks;
+                self.resident_blocks += lease.blocks;
+                r.tokens = lease.tokens;
+                r.blocks = lease.blocks;
             }
-            self.resident[i].last_use = seq;
+            self.lru.remove(&r.last_use);
+            r.last_use = seq;
+            self.lru.insert(seq, lease.session);
         } else {
-            self.resident.push(SessionResidency {
-                session: lease.session,
-                tokens: lease.tokens,
-                blocks: lease.blocks,
-                last_use: seq,
-            });
+            self.resident.insert(
+                lease.session,
+                SessionResidency {
+                    tokens: lease.tokens,
+                    blocks: lease.blocks,
+                    last_use: seq,
+                },
+            );
+            self.resident_blocks += lease.blocks;
+            self.lru.insert(seq, lease.session);
         }
     }
 
@@ -727,6 +741,16 @@ impl KvPool {
             (KvPool::Paged { mgr, .. }, PoolLease::Paged(l)) => mgr.free(l),
             _ => unreachable!("lease/pool policy mismatch"),
         }
+    }
+
+    /// Whether leases can need per-boundary growth. Whole-window pools
+    /// reserve the full window up front, so [`KvPool::ensure`] is a
+    /// guaranteed no-op and the engine's event core skips the growth
+    /// phase entirely. Paged pools grow block-by-block *and* track the
+    /// covered token count on the lease (which feeds session-reuse
+    /// accounting at release), so they must always run it.
+    pub fn needs_growth(&self) -> bool {
+        matches!(self, KvPool::Paged { .. })
     }
 
     /// Whether the engine may preempt active requests under pressure.

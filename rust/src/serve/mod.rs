@@ -54,7 +54,7 @@ pub use backend::{
     SalPimBackend,
 };
 pub use cluster::{Cluster, Routing};
-pub use engine::{DeviceEngine, EngineReport};
+pub use engine::{DeviceEngine, EngineCore, EngineReport};
 pub use kv_cache::{EvictPolicy, KvCacheManager, KvLease, KvPolicy, KvPool, PagedKvManager};
 pub use metrics::{percentile, ServeMetrics};
 pub use policy::{Policy, Scheduler};

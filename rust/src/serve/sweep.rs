@@ -8,6 +8,7 @@
 
 use super::backend::BackendKind;
 use super::cluster::{Cluster, Routing};
+use super::engine::EngineCore;
 use super::kv_cache::{EvictPolicy, KvPolicy};
 use super::metrics::ServeMetrics;
 use super::policy::Policy;
@@ -37,6 +38,8 @@ pub struct SweepConfig {
     pub kv_block: Option<usize>,
     /// KV-region size override in allocation units (`--kv-units`).
     pub kv_units: Option<usize>,
+    /// Run-loop core every device executes (`--engine-core`).
+    pub core: EngineCore,
 }
 
 impl Default for SweepConfig {
@@ -55,6 +58,7 @@ impl Default for SweepConfig {
             evict: EvictPolicy::Lru,
             kv_block: None,
             kv_units: None,
+            core: EngineCore::default(),
         }
     }
 }
@@ -82,7 +86,8 @@ pub fn latency_vs_load(cfg: &SimConfig, sc: &SweepConfig, loads_rps: &[f64]) -> 
                 Cluster::homogeneous(cfg, sc.backend, sc.devices, sc.max_batch, sc.routing)
                     .with_policy(sc.policy)
                     .with_prefill_chunk(sc.prefill_chunk)
-                    .with_kv(sc.kv_policy, sc.evict, sc.kv_block, sc.kv_units);
+                    .with_kv(sc.kv_policy, sc.evict, sc.kv_block, sc.kv_units)
+                    .with_core(sc.core);
             for r in reqs {
                 cluster.submit(r);
             }

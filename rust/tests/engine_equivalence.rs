@@ -1,0 +1,244 @@
+//! Randomized equivalence between the two run-loop cores.
+//!
+//! The discrete-event core (`EngineCore::Event`) reorganizes *when* the
+//! engine looks at scheduling work — heap-ordered completion tracking,
+//! memoized admission, skipped no-op phases — but must never change
+//! *what* happens at any token boundary. These properties pin that down:
+//! over random request mixes × backends × KV policies × prefill-chunk
+//! settings, the event core must produce bit-identical completions,
+//! identical reports and an identical trace-event stream to the legacy
+//! token-boundary scan (`--engine-core legacy`).
+
+use sal_pim::config::SimConfig;
+use sal_pim::serve::workload::{requests_from_items, ArrivalPattern};
+use sal_pim::serve::{
+    BackendKind, Cluster, Completion, DeviceEngine, EngineCore, EngineReport, EvictPolicy,
+    KvPolicy, Policy, Request, Routing,
+};
+use sal_pim::testutil::{forall, Gen, RequestMix};
+use sal_pim::trace::TraceHandle;
+
+/// One randomly drawn engine configuration plus its workload.
+struct Case {
+    backend: BackendKind,
+    policy: Policy,
+    kv_policy: KvPolicy,
+    evict: EvictPolicy,
+    chunk: Option<usize>,
+    max_batch: usize,
+    kv_units: Option<usize>,
+    requests: Vec<Request>,
+}
+
+fn draw_case(g: &mut Gen) -> Case {
+    let backend = *g.choose(&BackendKind::ALL);
+    let policy = *g.choose(&[
+        Policy::Fcfs,
+        Policy::ShortestJobFirst,
+        Policy::ShortestPromptFirst,
+    ]);
+    let kv_policy = *g.choose(&[KvPolicy::Whole, KvPolicy::Paged]);
+    let evict = *g.choose(&[EvictPolicy::Lru, EvictPolicy::None]);
+    let chunk = if g.bool() {
+        Some(g.usize_in(1, 16))
+    } else {
+        None
+    };
+    let max_batch = g.usize_in(1, 6);
+    // Sometimes squeeze the KV region to force admission stalls,
+    // evictions and (under paged + lru) preemptions.
+    let kv_units = if g.bool() {
+        Some(g.usize_in(8, 64))
+    } else {
+        None
+    };
+    let n_req = g.usize_in(1, 12);
+    let n_sessions = g.usize_in(1, 4);
+    let items = RequestMix::small(g.u64_in(0, 1 << 20)).take(n_req);
+    let pattern = if g.bool() {
+        ArrivalPattern::AtOnce
+    } else {
+        ArrivalPattern::Poisson {
+            rate_rps: g.f64_in(5.0, 500.0),
+        }
+    };
+    Case {
+        backend,
+        policy,
+        kv_policy,
+        evict,
+        chunk,
+        max_batch,
+        kv_units,
+        requests: requests_from_items(&items, pattern, n_sessions),
+    }
+}
+
+fn build_engine(cfg: &SimConfig, case: &Case, core: EngineCore) -> DeviceEngine {
+    let mut e = DeviceEngine::with_backend(case.backend.build(cfg), case.max_batch)
+        .with_core(core)
+        .with_policy(case.policy)
+        .with_kv_policy(case.kv_policy)
+        .with_evict(case.evict)
+        .with_prefill_chunk(case.chunk);
+    if let Some(units) = case.kv_units {
+        e = e.with_kv_subarrays(units);
+    }
+    e
+}
+
+/// Compare two runs field by field; float fields are compared as raw
+/// bits, so equality means *bit* equality, not approximate agreement.
+/// The wall-clock self-profile is excluded (host timing, inherently
+/// nondeterministic); everything else in the report must match.
+fn assert_runs_identical(
+    label: &str,
+    ev_done: &[Completion],
+    lg_done: &[Completion],
+    ev_rep: &EngineReport,
+    lg_rep: &EngineReport,
+) {
+    assert_eq!(ev_done.len(), lg_done.len(), "{label}: completion count");
+    for (e, l) in ev_done.iter().zip(lg_done) {
+        assert_eq!(
+            (e.id, e.prompt_len, e.tokens_out, e.tokens_simulated, e.device),
+            (l.id, l.prompt_len, l.tokens_out, l.tokens_simulated, l.device),
+            "{label}: completion fields"
+        );
+        for (name, a, b) in [
+            ("queue_s", e.queue_s, l.queue_s),
+            ("prefill_s", e.prefill_s, l.prefill_s),
+            ("decode_s", e.decode_s, l.decode_s),
+            ("finish_s", e.finish_s, l.finish_s),
+        ] {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{label}: {name} diverged on id={} ({a} vs {b})",
+                e.id
+            );
+        }
+    }
+    assert_eq!(ev_rep.rejected, lg_rep.rejected, "{label}: rejected");
+    assert_eq!(
+        ev_rep.kv_peak_utilization.to_bits(),
+        lg_rep.kv_peak_utilization.to_bits(),
+        "{label}: kv_peak_utilization"
+    );
+    assert_eq!(ev_rep.max_batch_seen, lg_rep.max_batch_seen, "{label}: max_batch_seen");
+    assert_eq!(ev_rep.decode_steps, lg_rep.decode_steps, "{label}: decode_steps");
+    assert_eq!(
+        ev_rep.mean_decode_batch.to_bits(),
+        lg_rep.mean_decode_batch.to_bits(),
+        "{label}: mean_decode_batch"
+    );
+    assert_eq!(ev_rep.preemptions, lg_rep.preemptions, "{label}: preemptions");
+    assert_eq!(ev_rep.recompute_tokens, lg_rep.recompute_tokens, "{label}: recompute_tokens");
+    assert_eq!(ev_rep.reuse_hits, lg_rep.reuse_hits, "{label}: reuse_hits");
+    assert_eq!(ev_rep.reuse_tokens, lg_rep.reuse_tokens, "{label}: reuse_tokens");
+    assert_eq!(ev_rep.truncated, lg_rep.truncated, "{label}: truncated");
+}
+
+#[test]
+fn event_core_is_bit_identical_on_random_single_device_runs() {
+    let cfg = SimConfig::paper();
+    forall(40, |g| {
+        let case = draw_case(g);
+        let label = format!(
+            "backend={} policy={:?} kv={:?}/{:?} chunk={:?} batch={} units={:?} n={}",
+            case.backend.name(),
+            case.policy,
+            case.kv_policy,
+            case.evict,
+            case.chunk,
+            case.max_batch,
+            case.kv_units,
+            case.requests.len()
+        );
+
+        let mut ev = build_engine(&cfg, &case, EngineCore::Event);
+        let mut lg = build_engine(&cfg, &case, EngineCore::Legacy);
+        let ev_trace = TraceHandle::new();
+        let lg_trace = TraceHandle::new();
+        ev.set_trace(ev_trace.clone());
+        lg.set_trace(lg_trace.clone());
+        for r in &case.requests {
+            ev.submit(r.clone());
+            lg.submit(r.clone());
+        }
+
+        let ev_done = ev.run();
+        let lg_done = lg.run();
+        assert_runs_identical(&label, &ev_done, &lg_done, &ev.report(), &lg.report());
+        let ev_rejected: Vec<u64> = ev.rejected().iter().map(|r| r.id).collect();
+        let lg_rejected: Vec<u64> = lg.rejected().iter().map(|r| r.id).collect();
+        assert_eq!(ev_rejected, lg_rejected, "{label}: rejected requests");
+        // The full lifecycle stream — arrivals, admissions, prefill
+        // chunks, decode steps, preemptions, evictions, reuse hits,
+        // completions — must match event for event.
+        assert_eq!(ev_trace.take_events(), lg_trace.take_events(), "{label}: trace streams");
+    });
+}
+
+#[test]
+fn event_core_is_bit_identical_on_random_cluster_runs() {
+    let cfg = SimConfig::paper();
+    forall(16, |g| {
+        let backend = *g.choose(&BackendKind::ALL);
+        let routing = *g.choose(&[
+            Routing::RoundRobin,
+            Routing::LeastLoaded,
+            Routing::SessionAffinity,
+        ]);
+        let n_devices = g.usize_in(1, 3);
+        let max_batch = g.usize_in(2, 6);
+        let chunk = if g.bool() {
+            Some(g.usize_in(2, 8))
+        } else {
+            None
+        };
+        let units = g.usize_in(16, 48);
+        let n_req = g.usize_in(4, 16);
+        let n_sessions = g.usize_in(1, 6);
+        let items = RequestMix::small(g.u64_in(0, 1 << 20)).take(n_req);
+        let requests = requests_from_items(
+            &items,
+            ArrivalPattern::Poisson { rate_rps: 200.0 },
+            n_sessions,
+        );
+        let label = format!(
+            "backend={} routing={routing:?} devices={n_devices} batch={max_batch} chunk={chunk:?} units={units} n={n_req}",
+            backend.name()
+        );
+
+        let build = |core: EngineCore| {
+            Cluster::homogeneous(&cfg, backend, n_devices, max_batch, routing)
+                .with_core(core)
+                .with_kv(KvPolicy::Paged, EvictPolicy::Lru, None, Some(units))
+                .with_prefill_chunk(chunk)
+        };
+        let mut ev = build(EngineCore::Event);
+        let mut lg = build(EngineCore::Legacy);
+        let ev_trace = TraceHandle::new();
+        let lg_trace = TraceHandle::new();
+        ev.set_trace(ev_trace.clone());
+        lg.set_trace(lg_trace.clone());
+        for r in &requests {
+            ev.submit(r.clone());
+            lg.submit(r.clone());
+        }
+
+        let ev_done = ev.run();
+        let lg_done = lg.run();
+        assert_eq!(ev.assignments(), lg.assignments(), "{label}: routing decisions");
+        let (ev_reps, lg_reps) = (ev.per_device_reports(), lg.per_device_reports());
+        assert_eq!(ev_reps.len(), lg_reps.len());
+        for (d, (er, lr)) in ev_reps.iter().zip(&lg_reps).enumerate() {
+            // Per-device completions, sliced out of the merged stream.
+            let ef: Vec<_> = ev_done.iter().filter(|c| c.device == d).cloned().collect();
+            let lf: Vec<_> = lg_done.iter().filter(|c| c.device == d).cloned().collect();
+            assert_runs_identical(&format!("{label} device={d}"), &ef, &lf, er, lr);
+        }
+        assert_eq!(ev_trace.take_events(), lg_trace.take_events(), "{label}: trace streams");
+    });
+}
