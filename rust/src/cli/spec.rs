@@ -225,12 +225,12 @@ pub fn commands() -> Vec<CommandSpec> {
         },
         CommandSpec {
             name: "serve",
-            summary: "serve a request mix on the sequential/batching/cluster engines",
+            summary: "serve a request mix on the sequential/batching/cluster/disagg engines",
             positionals: vec![],
             flags: with_common(vec![
                 FlagSpec::value("requests", "N", "16", "request count"),
                 FlagSpec::value("policy", "P", "fcfs", "queue policy: fcfs|sjf|spf"),
-                FlagSpec::value("engine", "E", "seq", "engine: seq|batch|cluster"),
+                FlagSpec::value("engine", "E", "seq", "engine: seq|batch|cluster|disagg"),
                 FlagSpec::value(
                     "engine-core",
                     "C",
@@ -241,6 +241,24 @@ pub fn commands() -> Vec<CommandSpec> {
                 FlagSpec::value("devices", "N", "4", "cluster size"),
                 FlagSpec::value("batch", "N", "8", "continuous-batching slots per device"),
                 FlagSpec::value("route", "R", "rr", "cluster routing: rr|ll|affinity"),
+                FlagSpec::value(
+                    "fabric",
+                    "F",
+                    "pcie",
+                    "host interconnect for KV migration/swap: pcie|nvlink|ideal",
+                ),
+                FlagSpec::value(
+                    "prefill-pool",
+                    "N",
+                    "",
+                    "disagg prefill-pool size (default: half of --devices)",
+                ),
+                FlagSpec::value(
+                    "decode-pool",
+                    "N",
+                    "",
+                    "disagg decode-pool size (default: remaining --devices)",
+                ),
                 FlagSpec::value(
                     "backend",
                     "B",
@@ -263,7 +281,9 @@ pub fn commands() -> Vec<CommandSpec> {
                     "evict",
                     "E",
                     "lru",
-                    "paged eviction: lru (idle sessions first, then preempt+recompute) | none",
+                    "paged eviction: lru aka recompute (idle sessions first, then \
+                     preempt+recompute) | swap (spill to host over the fabric, readmit \
+                     by the cheaper of swap-in and recompute) | none",
                 ),
                 FlagSpec::value("kv-block", "N", "", "paged KV block size in tokens"),
                 FlagSpec::value(
@@ -447,6 +467,9 @@ mod tests {
         assert!(md.contains("`--prefill-chunk [C]`"));
         assert!(md.contains("`--kv-policy K`"));
         assert!(md.contains("`--engine-core C`"));
+        assert!(md.contains("`--fabric F`"));
+        assert!(md.contains("`--prefill-pool N`"));
+        assert!(md.contains("`--decode-pool N`"));
         assert!(md.contains("`--trace FILE`"));
         assert!(md.contains("`--allow-missing`"));
         assert!(md.contains("`BASELINE`"), "compare positionals documented");

@@ -19,7 +19,7 @@ pub use crate::serve::{percentile, Completion, Policy, Request, Scheduler, Serve
 use crate::baseline::GpuModel;
 use crate::config::SimConfig;
 use crate::mapper::GenerationSim;
-use crate::serve::backend::{kv_handoff_s, HOST_LINK_BW};
+use crate::serve::fabric::FabricParams;
 
 /// Where the summarization stage runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -95,11 +95,8 @@ impl Coordinator {
                 // GPU prefill + one KV transfer over the host link —
                 // the same composition `serve`'s HeteroBackend charges.
                 let gpu = self.gpu.prefill_time(&self.cfg.model, prompt_len);
-                gpu + kv_handoff_s(
-                    self.cfg.model.kv_bytes_per_token(),
-                    prompt_len,
-                    HOST_LINK_BW,
-                )
+                gpu + FabricParams::pcie()
+                    .transfer_s(prompt_len * self.cfg.model.kv_bytes_per_token())
             }
         }
     }

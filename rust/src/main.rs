@@ -20,7 +20,7 @@ use sal_pim::scenario::{
     SimulateParams, SweepParams,
 };
 use sal_pim::report::fmt_bw;
-use sal_pim::serve::{BackendKind, EngineCore, EvictPolicy, KvPolicy};
+use sal_pim::serve::{BackendKind, EngineCore, EvictPolicy, FabricKind, KvPolicy};
 use sal_pim::trace::{chrome_trace_json, PhaseProfile, TraceEvent};
 use std::path::Path;
 
@@ -175,8 +175,9 @@ fn scenario_serve(args: &Args, config: ConfigSel) -> anyhow::Result<Scenario> {
     let route = parse_route(route_flag)
         .ok_or_else(|| anyhow::anyhow!("unknown route `{route_flag}` (rr|ll|affinity)"))?;
     let engine_flag = args.flag("engine").unwrap_or("seq");
-    let engine = EngineKind::parse(engine_flag)
-        .ok_or_else(|| anyhow::anyhow!("unknown engine `{engine_flag}` (seq|batch|cluster)"))?;
+    let engine = EngineKind::parse(engine_flag).ok_or_else(|| {
+        anyhow::anyhow!("unknown engine `{engine_flag}` (seq|batch|cluster|disagg)")
+    })?;
     let backend_flag = args.flag("backend").unwrap_or("salpim");
     let backend = BackendKind::parse(backend_flag).ok_or_else(|| {
         anyhow::anyhow!("unknown backend `{backend_flag}` (salpim|gpu|banklevel|hetero)")
@@ -195,7 +196,18 @@ fn scenario_serve(args: &Args, config: ConfigSel) -> anyhow::Result<Scenario> {
         .ok_or_else(|| anyhow::anyhow!("unknown kv-policy `{kv_flag}` (whole|paged)"))?;
     let evict_flag = args.flag("evict").unwrap_or("lru");
     let evict = EvictPolicy::parse(evict_flag)
-        .ok_or_else(|| anyhow::anyhow!("unknown evict policy `{evict_flag}` (lru|none)"))?;
+        .ok_or_else(|| anyhow::anyhow!("unknown evict policy `{evict_flag}` (lru|swap|none)"))?;
+    let fabric_flag = args.flag("fabric").unwrap_or("pcie");
+    let fabric = FabricKind::parse(fabric_flag)
+        .ok_or_else(|| anyhow::anyhow!("unknown fabric `{fabric_flag}` (pcie|nvlink|ideal)"))?;
+    let prefill_pool = match args.flag("prefill-pool") {
+        Some(_) => Some(args.get("prefill-pool", 0usize)?),
+        None => None,
+    };
+    let decode_pool = match args.flag("decode-pool") {
+        Some(_) => Some(args.get("decode-pool", 0usize)?),
+        None => None,
+    };
     let kv_block = match args.flag("kv-block") {
         Some(_) => Some(args.get("kv-block", 0usize)?),
         None => None,
@@ -225,6 +237,8 @@ fn scenario_serve(args: &Args, config: ConfigSel) -> anyhow::Result<Scenario> {
         .with_evict(evict)
         .with_kv_block(kv_block)
         .with_kv_units(kv_units)
+        .with_fabric(fabric)
+        .with_pools(prefill_pool, decode_pool)
         .with_at_once(args.switch("at-once"))
         .with_rate(rate, burst)
         .with_offload(args.switch("offload"))

@@ -370,6 +370,14 @@ pub fn direction(name: &str) -> Direction {
         "reuse_hits",
         "reuse_tokens",
         "rejected",
+        // Fabric traffic counters: bytes moved is a property of the
+        // topology under test, not a cost to minimize (an ideal fabric
+        // moves the same bytes in zero time).
+        "migrated_bytes",
+        "fabric_transfers",
+        "swap_outs",
+        "swap_ins",
+        "swapped_bytes",
     ];
     if informational.contains(&name) {
         return Direction::Informational;
@@ -705,6 +713,12 @@ mod tests {
         assert_eq!(direction("preemptions"), Direction::Informational);
         assert_eq!(direction("recompute_tokens"), Direction::Informational);
         assert_eq!(direction("reuse_hits"), Direction::Informational);
+        // Fabric traffic is topology, not cost — never gates.
+        assert_eq!(direction("migrated_bytes"), Direction::Informational);
+        assert_eq!(direction("fabric_transfers"), Direction::Informational);
+        assert_eq!(direction("swap_outs"), Direction::Informational);
+        assert_eq!(direction("swap_ins"), Direction::Informational);
+        assert_eq!(direction("swapped_bytes"), Direction::Informational);
         // …while `decode_rate` (tok/s) still gates in the right direction.
         assert_eq!(direction("decode_rate"), Direction::HigherIsBetter);
         assert_eq!(direction("decode"), Direction::LowerIsBetter);

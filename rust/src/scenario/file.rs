@@ -28,7 +28,7 @@ use super::{
     parse_policy, parse_route, route_token, AreaParams, BreakdownParams, ConfigSel, EngineKind,
     PowerParams, Scenario, ScenarioError, ServeParams, SimulateParams, SweepParams,
 };
-use crate::serve::{BackendKind, EngineCore, EvictPolicy, KvPolicy};
+use crate::serve::{BackendKind, EngineCore, EvictPolicy, FabricKind, KvPolicy};
 use std::fmt::Write as _;
 
 /// Strip an inline `#` comment, respecting double quotes.
@@ -239,7 +239,7 @@ pub fn from_kv(pairs: &[(usize, String, String)]) -> Result<Scenario, ScenarioEr
                 match key.as_str() {
                     "engine" => {
                         p.engine = EngineKind::parse(v)
-                            .ok_or_else(|| bad(*line, key, v, "seq|batch|cluster"))?
+                            .ok_or_else(|| bad(*line, key, v, "seq|batch|cluster|disagg"))?
                     }
                     "engine_core" => {
                         p.engine_core = EngineCore::parse(v)
@@ -269,8 +269,14 @@ pub fn from_kv(pairs: &[(usize, String, String)]) -> Result<Scenario, ScenarioEr
                     }
                     "evict" => {
                         p.evict = EvictPolicy::parse(v)
-                            .ok_or_else(|| bad(*line, key, v, "lru|none"))?
+                            .ok_or_else(|| bad(*line, key, v, "lru|swap|none"))?
                     }
+                    "fabric" => {
+                        p.fabric = FabricKind::parse(v)
+                            .ok_or_else(|| bad(*line, key, v, "pcie|nvlink|ideal"))?
+                    }
+                    "prefill_pool" => p.prefill_pool = Some(p_usize(*line, key, value)?),
+                    "decode_pool" => p.decode_pool = Some(p_usize(*line, key, value)?),
                     "kv_block" => p.kv_block = Some(p_usize(*line, key, value)?),
                     "kv_units" => p.kv_units = Some(p_usize(*line, key, value)?),
                     "at_once" => p.at_once = p_bool(*line, key, value)?,
@@ -344,6 +350,15 @@ impl Scenario {
                 }
                 push("kv_policy", p.kv_policy.name().to_string());
                 push("evict", p.evict.name().to_string());
+                if p.fabric != FabricKind::Pcie {
+                    push("fabric", p.fabric.name().to_string());
+                }
+                if let Some(n) = p.prefill_pool {
+                    push("prefill_pool", n.to_string());
+                }
+                if let Some(n) = p.decode_pool {
+                    push("decode_pool", n.to_string());
+                }
                 if let Some(b) = p.kv_block {
                     push("kv_block", b.to_string());
                 }
@@ -372,7 +387,7 @@ impl Scenario {
             matches!(
                 key,
                 "kind" | "preset" | "engine" | "engine_core" | "backend" | "policy" | "route"
-                    | "kv_policy" | "evict"
+                    | "kv_policy" | "evict" | "fabric"
             ) || key.starts_with("cfg.")
         }
         let mut out = String::from("[[scenario]]\n");
@@ -480,6 +495,14 @@ mod tests {
                     .with_kv_units(Some(48))
                     .with_engine_core(EngineCore::Legacy),
             ),
+            Scenario::Serve(
+                ServeParams::default()
+                    .with_engine(EngineKind::Disagg)
+                    .with_fabric(FabricKind::Nvlink)
+                    .with_pools(Some(2), Some(2))
+                    .with_kv_policy(KvPolicy::Paged)
+                    .with_evict(EvictPolicy::Swap),
+            ),
         ];
         let text = suite_to_toml(&scenarios);
         let parsed = parse_suite(&text).unwrap();
@@ -529,6 +552,7 @@ mod tests {
         );
         assert!(parse_suite("[[scenario]]\nkind = \"serve\"\nkv_policy = \"paging\"\n").is_err());
         assert!(parse_suite("[[scenario]]\nkind = \"serve\"\nevict = \"fifo\"\n").is_err());
+        assert!(parse_suite("[[scenario]]\nkind = \"serve\"\nfabric = \"carrier\"\n").is_err());
         assert!(parse_suite("[[scenario]]\nkind = \"sweep\"\nins = 32\n").is_err());
         assert!(parse_suite("not a kv line\n").is_err());
         assert!(parse_suite("[table]\n").is_err());

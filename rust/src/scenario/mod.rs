@@ -23,7 +23,7 @@ pub use runner::Runner;
 
 use crate::config::parse::{apply_overrides, ConfigError};
 use crate::config::SimConfig;
-use crate::serve::{BackendKind, EngineCore, EvictPolicy, KvPolicy, Policy, Routing};
+use crate::serve::{BackendKind, EngineCore, EvictPolicy, FabricKind, KvPolicy, Policy, Routing};
 
 /// Scenario-layer failure.
 #[derive(Debug, thiserror::Error)]
@@ -280,6 +280,10 @@ pub enum EngineKind {
     Batch,
     /// N batching devices behind a router.
     Cluster,
+    /// Disaggregated prefill/decode pools bridged by a modeled host
+    /// fabric with KV migration (`--prefill-pool` / `--decode-pool` /
+    /// `--fabric`).
+    Disagg,
 }
 
 impl EngineKind {
@@ -288,6 +292,7 @@ impl EngineKind {
             "seq" => Some(EngineKind::Seq),
             "batch" => Some(EngineKind::Batch),
             "cluster" => Some(EngineKind::Cluster),
+            "disagg" => Some(EngineKind::Disagg),
             _ => None,
         }
     }
@@ -297,6 +302,7 @@ impl EngineKind {
             EngineKind::Seq => "seq",
             EngineKind::Batch => "batch",
             EngineKind::Cluster => "cluster",
+            EngineKind::Disagg => "disagg",
         }
     }
 }
@@ -341,6 +347,15 @@ pub struct ServeParams {
     /// Run-loop core for the batching engines (`--engine-core
     /// event|legacy`); ignored by the sequential engine.
     pub engine_core: EngineCore,
+    /// Host-fabric link class for disaggregated serving and swap-to-host
+    /// eviction (`--fabric pcie|nvlink|ideal`).
+    pub fabric: FabricKind,
+    /// Prefill-pool size for the disagg engine (`--prefill-pool`);
+    /// `None` falls back to `devices / 2` (at least 1).
+    pub prefill_pool: Option<usize>,
+    /// Decode-pool size for the disagg engine (`--decode-pool`);
+    /// `None` falls back to the remaining devices (at least 1).
+    pub decode_pool: Option<usize>,
 }
 
 impl Default for ServeParams {
@@ -368,6 +383,9 @@ impl Default for ServeParams {
             sweep: false,
             loads: vec![50.0, 200.0, 1000.0],
             engine_core: EngineCore::default(),
+            fabric: FabricKind::default(),
+            prefill_pool: None,
+            decode_pool: None,
         }
     }
 }
@@ -460,6 +478,31 @@ impl ServeParams {
     pub fn with_engine_core(mut self, core: EngineCore) -> Self {
         self.engine_core = core;
         self
+    }
+
+    pub fn with_fabric(mut self, fabric: FabricKind) -> Self {
+        self.fabric = fabric;
+        self
+    }
+
+    /// Size the disagg engine's pools explicitly (`--prefill-pool` /
+    /// `--decode-pool`); unset sides derive from `devices`.
+    pub fn with_pools(mut self, prefill: Option<usize>, decode: Option<usize>) -> Self {
+        self.prefill_pool = prefill;
+        self.decode_pool = decode;
+        self
+    }
+
+    /// Resolved (prefill, decode) pool sizes: explicit values win, the
+    /// rest of `devices` fills the unset side, both at least 1.
+    pub fn pool_sizes(&self) -> (usize, usize) {
+        let prefill = self
+            .prefill_pool
+            .unwrap_or_else(|| (self.devices / 2).max(1));
+        let decode = self
+            .decode_pool
+            .unwrap_or_else(|| self.devices.saturating_sub(prefill).max(1));
+        (prefill.max(1), decode.max(1))
     }
 }
 
@@ -596,10 +639,14 @@ mod tests {
             .with_kv_block(Some(16))
             .with_kv_units(Some(64))
             .with_rate(Some(200.0), Some(4))
-            .with_engine_core(EngineCore::Legacy);
+            .with_engine_core(EngineCore::Legacy)
+            .with_fabric(FabricKind::Nvlink)
+            .with_pools(Some(1), Some(3));
         assert_eq!(s.engine, EngineKind::Cluster);
         assert_eq!(s.devices, 2);
         assert_eq!(s.rate, Some(200.0));
+        assert_eq!(s.fabric, FabricKind::Nvlink);
+        assert_eq!(s.pool_sizes(), (1, 3));
         assert_eq!(s.kv_policy, KvPolicy::Paged);
         assert_eq!(s.evict, EvictPolicy::None);
         assert_eq!(s.kv_block, Some(16));
@@ -647,10 +694,27 @@ mod tests {
             assert_eq!(parse_route(route_token(r)), Some(r));
             assert_eq!(parse_route(r.name()), Some(r));
         }
-        for e in [EngineKind::Seq, EngineKind::Batch, EngineKind::Cluster] {
+        for e in [
+            EngineKind::Seq,
+            EngineKind::Batch,
+            EngineKind::Cluster,
+            EngineKind::Disagg,
+        ] {
             assert_eq!(EngineKind::parse(e.name()), Some(e));
         }
         assert_eq!(parse_policy("lifo"), None);
         assert_eq!(parse_route("random"), None);
+    }
+
+    #[test]
+    fn pool_sizes_derive_from_devices_when_unset() {
+        let p = ServeParams::default().with_cluster(4, 8);
+        assert_eq!(p.pool_sizes(), (2, 2));
+        let p = ServeParams::default().with_cluster(1, 8);
+        assert_eq!(p.pool_sizes(), (1, 1), "degenerate fleet still serves");
+        let p = ServeParams::default()
+            .with_cluster(6, 8)
+            .with_pools(Some(2), None);
+        assert_eq!(p.pool_sizes(), (2, 4));
     }
 }

@@ -15,7 +15,9 @@ use crate::energy::{AreaModel, EnergyParams, PowerReport};
 use crate::mapper::GenerationSim;
 use crate::serve::sweep::{latency_vs_load, SweepConfig};
 use crate::serve::workload::{requests_from_items, ArrivalPattern};
-use crate::serve::{BackendKind, Cluster, DeviceEngine, KvPolicy, ServeMetrics};
+use crate::serve::{
+    BackendKind, Cluster, DeviceEngine, DisaggregatedCluster, Fabric, KvPolicy, ServeMetrics,
+};
 use crate::testutil::RequestMix;
 use crate::trace::{PhaseProfile, TraceEvent, TraceHandle};
 use std::time::{Duration, Instant};
@@ -343,6 +345,13 @@ fn serve_metrics(out: &mut Outcome, m: &ServeMetrics) {
     out.metric("p50_ttft", m.p50_ttft_s, Some("s"));
     out.metric("p95_ttft", m.p95_ttft_s, Some("s"));
     out.metric("mean_queue", m.mean_queue_s, Some("s"));
+    // Swap traffic only exists under `--evict swap`; keep the metric set
+    // (and thus the bench-diff gate's watched names) unchanged otherwise.
+    if m.swap_outs > 0 || m.swap_ins > 0 {
+        out.metric("swap_outs", m.swap_outs, None);
+        out.metric("swap_ins", m.swap_ins, None);
+        out.metric("swapped_bytes", m.swapped_bytes, Some("B"));
+    }
 }
 
 fn arrival_pattern(p: &ServeParams) -> Result<ArrivalPattern, ScenarioError> {
@@ -402,6 +411,12 @@ fn run_serve(
         ));
     }
     if p.sweep {
+        if p.engine == EngineKind::Disagg {
+            return Err(ScenarioError::Unsupported(
+                "the load sweep drives a homogeneous cluster; engine disagg is not sweepable"
+                    .to_string(),
+            ));
+        }
         return run_serve_sweep(cfg, provenance, p, deadline, aux);
     }
     let pattern = arrival_pattern(p)?;
@@ -463,6 +478,9 @@ fn run_serve(
             if let Some(u) = p.kv_units {
                 eng = eng.with_kv_subarrays(u);
             }
+            // Swap-to-host traffic (evict swap) is priced on this link;
+            // inert otherwise.
+            eng = eng.with_fabric(p.fabric.params());
             let trace = capture_trace.then(TraceHandle::new);
             if let Some(t) = &trace {
                 eng.set_trace(t.clone());
@@ -522,6 +540,8 @@ fn run_serve(
                     .with_core(p.engine_core)
                     .with_prefill_chunk(p.prefill_chunk)
                     .with_kv(p.kv_policy, p.evict, p.kv_block, p.kv_units);
+            // One host link shared by every device's swap traffic.
+            cluster.set_fabric(Fabric::shared(p.fabric.params()));
             let trace = capture_trace.then(TraceHandle::new);
             if let Some(t) = &trace {
                 cluster.set_trace(t.clone());
@@ -586,6 +606,89 @@ fn run_serve(
                     rep.mean_decode_batch.into(),
                     rep.preemptions.into(),
                     rep.reuse_hits.into(),
+                ]);
+            }
+            Ok(out)
+        }
+        EngineKind::Disagg => {
+            if p.offload {
+                return Err(ScenarioError::Unsupported(
+                    "offload applies to engine seq only".to_string(),
+                ));
+            }
+            let (prefill_n, decode_n) = p.pool_sizes();
+            let mut cluster = DisaggregatedCluster::new(
+                cfg,
+                prefill_n,
+                decode_n,
+                p.max_batch,
+                p.fabric.params(),
+            )
+            .with_policy(p.policy)
+            .with_core(p.engine_core)
+            .with_prefill_chunk(p.prefill_chunk)
+            .with_kv(p.kv_policy, p.evict, p.kv_block, p.kv_units);
+            let trace = capture_trace.then(TraceHandle::new);
+            if let Some(t) = &trace {
+                cluster.set_trace(t.clone());
+            }
+            if let Some(d) = deadline {
+                cluster.set_deadline(d);
+            }
+            for r in requests {
+                cluster.submit(r);
+            }
+            let done = cluster.run();
+            let reps = cluster.per_device_reports();
+            aux.truncated |= cluster.truncated();
+            aux.profile = Some(cluster.profile());
+            if let Some(t) = &trace {
+                aux.events = t.take_events();
+            }
+            let mut m = ServeMetrics::from_completions(&done);
+            m.absorb_reports(&reps);
+            let (migrated_bytes, fabric_transfers) = cluster.fabric_stats();
+            let mut out = Outcome::new(
+                &format!(
+                    "serve — engine=disagg pools={prefill_n}+{decode_n} batch={} fabric={} \
+                     kv={} evict={} arrivals={}",
+                    p.max_batch,
+                    p.fabric.name(),
+                    p.kv_policy.name(),
+                    p.evict.name(),
+                    pattern.name()
+                ),
+                provenance,
+            );
+            serve_metrics(&mut out, &m);
+            out.metric("kv_policy", p.kv_policy.name(), None);
+            out.metric("migrated_bytes", migrated_bytes, Some("B"));
+            out.metric("fabric_transfers", fabric_transfers, None);
+            out.metric("mean_decode_batch", m.mean_decode_batch, None);
+            out.metric("preemptions", m.preemptions, None);
+            out.metric("recompute_tokens", m.recompute_tokens, None);
+            out.metric("rejected", cluster.rejected(), None);
+            out.columns(&[
+                ("device", None),
+                ("pool", None),
+                ("backend", None),
+                ("kv_peak_utilization", Some("frac")),
+                ("mean_decode_batch", None),
+                ("preemptions", None),
+                ("swap_outs", None),
+                ("swap_ins", None),
+            ]);
+            let names = cluster.backend_names();
+            for (i, rep) in reps.iter().enumerate() {
+                out.row(vec![
+                    i.into(),
+                    if i < prefill_n { "prefill" } else { "decode" }.into(),
+                    names[i].clone().into(),
+                    rep.kv_peak_utilization.into(),
+                    rep.mean_decode_batch.into(),
+                    rep.preemptions.into(),
+                    rep.swap_outs.into(),
+                    rep.swap_ins.into(),
                 ]);
             }
             Ok(out)
@@ -920,6 +1023,40 @@ mod tests {
     }
 
     #[test]
+    fn serve_disagg_outcome_reports_migration_traffic() {
+        let scenario = Scenario::Serve(
+            ServeParams::default()
+                .with_config(mini())
+                .with_engine(EngineKind::Disagg)
+                .with_cluster(4, 4)
+                .with_workload(8, 3)
+                .with_at_once(true),
+        );
+        let out = Runner::new().run(&scenario).unwrap();
+        // Every request crosses the PCIe-class fabric exactly once.
+        assert!(out.metric_f64("migrated_bytes").unwrap() > 0.0);
+        assert_eq!(out.metric_f64("fabric_transfers"), Some(8.0));
+        assert_eq!(out.metric_f64("requests"), Some(8.0));
+        assert_eq!(out.rows.len(), 4, "one row per device across both pools");
+        // Disagg conserves the workload's token budget vs a single pool.
+        let single = Runner::new()
+            .run(&Scenario::Serve(
+                ServeParams::default()
+                    .with_config(mini())
+                    .with_engine(EngineKind::Batch)
+                    .with_backend(BackendKind::Hetero)
+                    .with_workload(8, 3)
+                    .with_at_once(true),
+            ))
+            .unwrap();
+        assert_eq!(
+            out.metric_f64("total_tokens"),
+            single.metric_f64("total_tokens"),
+            "token conservation across serving topologies"
+        );
+    }
+
+    #[test]
     fn unsupported_combinations_are_rejected() {
         let gpu_seq = ServeParams::default().with_backend(BackendKind::Gpu);
         assert!(matches!(
@@ -939,5 +1076,13 @@ mod tests {
         let paged_seq =
             ServeParams::default().with_kv_policy(crate::serve::KvPolicy::Paged);
         assert!(Runner::new().run(&Scenario::Serve(paged_seq)).is_err());
+        let offload_disagg = ServeParams::default()
+            .with_engine(EngineKind::Disagg)
+            .with_offload(true);
+        assert!(Runner::new().run(&Scenario::Serve(offload_disagg)).is_err());
+        let sweep_disagg = ServeParams::default()
+            .with_engine(EngineKind::Disagg)
+            .with_sweep(vec![10.0]);
+        assert!(Runner::new().run(&Scenario::Serve(sweep_disagg)).is_err());
     }
 }

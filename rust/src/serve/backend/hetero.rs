@@ -8,43 +8,43 @@
 //! prompt's K/V state is produced on the prefill device and must land in
 //! the decode device's DRAM before the first decode step.
 //!
+//! The handoff is costed by the same [`FabricParams`] link model the
+//! disaggregated cluster uses for cross-device KV migration, so
+//! intra-device handoff and inter-device migration share one cost
+//! signature (the default PCIe class has zero base latency, so the
+//! charge is exactly the historical `bytes / 16 GB/s`).
+//!
 //! The handoff is linear in tokens, so chunked prefill composes cleanly:
 //! each chunk's incremental cost carries its own KV bytes and the chunk
 //! costs telescope to the unchunked total.
 
 use super::{DeviceCapacity, ExecutionBackend};
 use crate::config::SimConfig;
-
-/// PCIe-class host link for the prefill→decode KV handoff (bytes/s).
-/// Shared with the sequential coordinator's §6.3 offload policy.
-pub const HOST_LINK_BW: f64 = 16e9;
-
-/// Seconds to move `tokens` worth of KV state over a `link_bw` bytes/s
-/// host link.
-pub fn kv_handoff_s(kv_bytes_per_token: usize, tokens: usize, link_bw: f64) -> f64 {
-    debug_assert!(link_bw > 0.0);
-    (tokens * kv_bytes_per_token) as f64 / link_bw
-}
+use crate::serve::fabric::FabricParams;
 
 /// Prefill on one device, decode on another, KV handed off in between.
 pub struct HeteroBackend {
     prefill: Box<dyn ExecutionBackend>,
     decode: Box<dyn ExecutionBackend>,
-    /// Host-link bandwidth for the KV handoff (bytes/s).
-    pub handoff_bw: f64,
+    /// Host-link class the KV handoff is charged at (uncontended; the
+    /// handoff is part of the prefill charge on this device's clock).
+    pub link: FabricParams,
 }
 
 impl HeteroBackend {
     pub fn new(
         prefill: Box<dyn ExecutionBackend>,
         decode: Box<dyn ExecutionBackend>,
-        handoff_bw: f64,
+        link: FabricParams,
     ) -> Self {
-        assert!(handoff_bw > 0.0, "handoff bandwidth must be positive");
+        assert!(
+            link.bandwidth_bytes_s > 0.0,
+            "handoff bandwidth must be positive"
+        );
         HeteroBackend {
             prefill,
             decode,
-            handoff_bw,
+            link,
         }
     }
 
@@ -54,17 +54,14 @@ impl HeteroBackend {
         Self::new(
             Box::new(super::GpuBackend::titan_rtx(&cfg.model)),
             Box::new(super::SalPimBackend::new(cfg)),
-            HOST_LINK_BW,
+            FabricParams::pcie(),
         )
     }
 
     /// KV handoff cost for an `n`-token prompt at this link.
     fn handoff_s(&self, n_tokens: usize) -> f64 {
-        kv_handoff_s(
-            self.decode.capacity().kv_bytes_per_token,
-            n_tokens,
-            self.handoff_bw,
-        )
+        self.link
+            .transfer_s(n_tokens * self.decode.capacity().kv_bytes_per_token)
     }
 }
 
@@ -108,7 +105,7 @@ mod tests {
         let mut pim = SalPimBackend::new(&cfg);
 
         let n = 128;
-        let handoff = kv_handoff_s(cfg.model.kv_bytes_per_token(), n, HOST_LINK_BW);
+        let handoff = FabricParams::pcie().transfer_s(n * cfg.model.kv_bytes_per_token());
         let want = gpu.prefill_s(n) + handoff;
         let got = het.prefill_s(n);
         assert!((got - want).abs() < 1e-15 + 1e-12 * want, "{got} != {want}");
@@ -120,10 +117,15 @@ mod tests {
     #[test]
     fn handoff_scales_with_tokens_and_bandwidth() {
         let kvt = ModelConfig::gpt2_medium().kv_bytes_per_token();
-        let one = kv_handoff_s(kvt, 1, HOST_LINK_BW);
+        let pcie = FabricParams::pcie();
+        let one = pcie.transfer_s(kvt);
         assert!(one > 0.0);
-        assert!((kv_handoff_s(kvt, 10, HOST_LINK_BW) - 10.0 * one).abs() < 1e-12);
-        assert!(kv_handoff_s(kvt, 1, 2.0 * HOST_LINK_BW) < one);
+        assert!((pcie.transfer_s(10 * kvt) - 10.0 * one).abs() < 1e-12);
+        let double = FabricParams {
+            bandwidth_bytes_s: 2.0 * pcie.bandwidth_bytes_s,
+            base_latency_s: 0.0,
+        };
+        assert!(double.transfer_s(kvt) < one);
     }
 
     #[test]
@@ -134,5 +136,21 @@ mod tests {
         let mut het = HeteroBackend::gpu_prefill_pim_decode(&cfg);
         let mut pim = SalPimBackend::new(&cfg);
         assert!(het.prefill_s(128) < pim.prefill_s(128));
+    }
+
+    #[test]
+    fn nvlink_class_handoff_is_cheaper_than_pcie_for_large_prompts() {
+        let cfg = SimConfig::paper();
+        let mut pcie = HeteroBackend::new(
+            Box::new(GpuBackend::titan_rtx(&cfg.model)),
+            Box::new(SalPimBackend::new(&cfg)),
+            FabricParams::pcie(),
+        );
+        let mut nv = HeteroBackend::new(
+            Box::new(GpuBackend::titan_rtx(&cfg.model)),
+            Box::new(SalPimBackend::new(&cfg)),
+            FabricParams::nvlink(),
+        );
+        assert!(nv.prefill_s(512) < pcie.prefill_s(512));
     }
 }

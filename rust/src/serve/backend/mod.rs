@@ -35,7 +35,7 @@ mod salpim;
 
 pub use banklevel::BankLevelBackend;
 pub use gpu::GpuBackend;
-pub use hetero::{kv_handoff_s, HeteroBackend, HOST_LINK_BW};
+pub use hetero::HeteroBackend;
 pub use salpim::SalPimBackend;
 
 use crate::config::SimConfig;

@@ -65,6 +65,7 @@
 //! than wedging the queue.
 
 use super::backend::{DeviceCapacity, ExecutionBackend, SalPimBackend};
+use super::fabric::{Fabric, FabricParams, SharedFabric};
 use super::kv_cache::{EvictPolicy, KvPolicy, KvPool, PoolLease};
 use super::metrics::ServeMetrics;
 use super::policy::Policy;
@@ -72,7 +73,7 @@ use super::types::{Completion, Request};
 use crate::config::SimConfig;
 use crate::trace::{PhaseProfile, TraceEventKind, TraceHandle};
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::{BinaryHeap, HashMap, HashSet, VecDeque};
 use std::time::Instant;
 
 /// A request currently holding a batch slot.
@@ -196,6 +197,13 @@ pub struct EngineReport {
     pub reuse_hits: usize,
     /// Prompt tokens whose prefill was skipped via session reuse.
     pub reuse_tokens: usize,
+    /// Preempted KV states spilled to the host buffer (`--evict swap`).
+    pub swap_outs: usize,
+    /// Readmissions that restored KV from the host buffer instead of
+    /// recomputing it (the fabric read was cheaper).
+    pub swap_ins: usize,
+    /// Bytes moved over the fabric by swap-outs plus swap-ins.
+    pub swapped_bytes: u64,
     /// Wall-clock self-profile of the engine's run loop (always on).
     pub profile: PhaseProfile,
     /// True when a wall-clock deadline stopped the run early.
@@ -285,6 +293,21 @@ pub struct DeviceEngine {
     decode_batch_sum: u64,
     preemptions: usize,
     recompute_tokens: usize,
+    /// Host link for swap-to-host traffic (`--evict swap`) and the KV
+    /// handoff of migrated requests. Shared with the cluster's fabric
+    /// when set; a private default-PCIe link is created on first use
+    /// otherwise.
+    fabric: Option<SharedFabric>,
+    /// Request id → tokens whose KV payload sits in the host buffer
+    /// (spilled at preemption under `EvictPolicy::Swap`).
+    swapped: HashMap<u64, usize>,
+    /// Requests submitted via [`DeviceEngine::submit_prefilled`]: their
+    /// prefill already ran elsewhere and their KV arrives by fabric
+    /// migration, so admission charges no prefill.
+    prefilled: HashSet<u64>,
+    swap_outs: usize,
+    swap_ins: usize,
+    swapped_bytes: u64,
     /// Lifecycle-event sink; `None` (the default) records nothing.
     trace: Option<TraceHandle>,
     profile: PhaseProfile,
@@ -333,6 +356,12 @@ impl DeviceEngine {
             decode_batch_sum: 0,
             preemptions: 0,
             recompute_tokens: 0,
+            fabric: None,
+            swapped: HashMap::new(),
+            prefilled: HashSet::new(),
+            swap_outs: 0,
+            swap_ins: 0,
+            swapped_bytes: 0,
             trace: None,
             profile: PhaseProfile::default(),
             deadline: None,
@@ -453,6 +482,11 @@ impl DeviceEngine {
         self.backend.name()
     }
 
+    /// The device's capacity card (KV geometry, max sequence).
+    pub fn capacity(&self) -> DeviceCapacity {
+        self.capacity
+    }
+
     /// The KV allocation discipline in force.
     pub fn kv_policy(&self) -> KvPolicy {
         self.kv_policy
@@ -461,6 +495,47 @@ impl DeviceEngine {
     pub fn submit(&mut self, req: Request) {
         self.queued_tokens += req.kv_tokens();
         self.pending.push(req);
+    }
+
+    /// Submit a request whose prefill already ran elsewhere and whose
+    /// KV arrives by fabric migration (disaggregated serving): admission
+    /// allocates KV coverage for the migrated state but charges no
+    /// prefill — the request enters the decode batch with its first
+    /// token already produced by the prefill pool.
+    pub fn submit_prefilled(&mut self, req: Request) {
+        self.prefilled.insert(req.id);
+        self.submit(req);
+    }
+
+    /// Attach a host link shared with other engines (the cluster's
+    /// fabric), so swap-to-host traffic contends with KV migrations.
+    pub fn set_fabric(&mut self, fabric: SharedFabric) {
+        self.fabric = Some(fabric);
+    }
+
+    /// Attach a private host link with the given parameters.
+    pub fn with_fabric(mut self, params: FabricParams) -> Self {
+        self.fabric = Some(Fabric::shared(params));
+        self
+    }
+
+    /// Charge a host-link transfer at the current clock, creating the
+    /// default PCIe link on first use if none was attached.
+    fn fabric_transfer(&mut self, bytes: usize) -> f64 {
+        let fab = self
+            .fabric
+            .get_or_insert_with(|| Fabric::shared(FabricParams::pcie()));
+        fab.borrow_mut().transfer(self.clock_s, bytes)
+    }
+
+    /// Cost of a host-link transfer at the current clock *without*
+    /// committing it (the swap-vs-recompute probe).
+    fn fabric_peek(&mut self, bytes: usize) -> f64 {
+        let fab = self
+            .fabric
+            .get_or_insert_with(|| Fabric::shared(FabricParams::pcie()));
+        let dt = fab.borrow().peek_transfer_s(self.clock_s, bytes);
+        dt
     }
 
     /// Estimated outstanding work in tokens (for least-loaded routing).
@@ -643,16 +718,51 @@ impl DeviceEngine {
                     {
                         Some(lease) => {
                             let p = self.readmit.pop_front().unwrap();
-                            let dt = self.prefill_increment_s(0, rebuilt);
-                            self.clock_s += dt;
-                            self.recompute_tokens += rebuilt;
+                            // Restore the dropped KV: recompute it through
+                            // the backend's prefill model, or — when the
+                            // blocks were swapped to the host buffer — read
+                            // them back over the fabric if that is cheaper.
+                            // The decision compares the two cost signatures
+                            // at this clock (fabric contention included);
+                            // ties go to recompute, deterministically.
+                            let recompute_dt = self.prefill_increment_s(0, rebuilt);
+                            let swap = match self.swapped.get(&p.req.id).copied() {
+                                Some(tokens) => {
+                                    let bytes = tokens * self.capacity.kv_bytes_per_token;
+                                    let dt = self.fabric_peek(bytes);
+                                    (dt < recompute_dt).then_some((dt, bytes, tokens))
+                                }
+                                None => None,
+                            };
+                            self.swapped.remove(&p.req.id);
+                            let (dt, recomputed) = match swap {
+                                Some((_, bytes, tokens)) => {
+                                    let dt = self.fabric_transfer(bytes);
+                                    self.swap_ins += 1;
+                                    self.swapped_bytes += bytes as u64;
+                                    self.clock_s += dt;
+                                    self.temit(TraceEventKind::SwapIn {
+                                        id: p.req.id,
+                                        tokens,
+                                        dt_s: dt,
+                                    });
+                                    (dt, 0)
+                                }
+                                None => {
+                                    self.clock_s += recompute_dt;
+                                    self.recompute_tokens += rebuilt;
+                                    (recompute_dt, rebuilt)
+                                }
+                            };
                             admit_seq += 1;
                             self.temit(TraceEventKind::Readmit {
                                 id: p.req.id,
-                                recompute_tokens: rebuilt,
+                                recompute_tokens: recomputed,
                                 dt_s: dt,
                             });
-                            self.temit_handoff(p.req.id, rebuilt);
+                            if recomputed > 0 {
+                                self.temit_handoff(p.req.id, rebuilt);
+                            }
                             let a = ActiveReq {
                                 prefill_done: p.req.prompt_len,
                                 req: p.req,
@@ -693,16 +803,30 @@ impl DeviceEngine {
                         .max(waiting[idx].prompt_len + 1);
                     if !self.kv.fits_ever(window) {
                         let req = waiting.swap_remove(idx);
+                        self.prefilled.remove(&req.id);
                         self.rejected.push(req);
                         continue;
                     }
                     let id = waiting[idx].id;
                     let session = waiting[idx].session;
                     let prompt_len = waiting[idx].prompt_len;
+                    let migrated = self.prefilled.contains(&id);
                     self.tsync();
-                    match self.kv.try_admit(id, session, prompt_len, window) {
+                    let grant = if migrated {
+                        // Migrated KV *is* the request's state: no session
+                        // reuse, just coverage for prompt + first token.
+                        self.kv
+                            .try_admit_migrated(id, session, prompt_len, window)
+                            .map(|lease| (lease, 0))
+                    } else {
+                        self.kv.try_admit(id, session, prompt_len, window)
+                    };
+                    match grant {
                         Some((lease, reused)) => {
                             let req = waiting.swap_remove(idx);
+                            if migrated {
+                                self.prefilled.remove(&id);
+                            }
                             let admit_s = self.clock_s;
                             admit_seq += 1;
                             self.temit(TraceEventKind::Admit {
@@ -721,7 +845,17 @@ impl DeviceEngine {
                                 seq: admit_seq,
                                 shielded: false,
                             };
-                            if self.prefill_chunk.is_none() {
+                            if migrated {
+                                // The prefill pool already summarized the
+                                // prompt and produced the first token; the
+                                // migrated KV lands with zero local charge
+                                // (the migration itself was charged on the
+                                // fabric by the cluster).
+                                a.prefill_done = a.req.prompt_len;
+                                // Not counted in `profile.sim_tokens`: the
+                                // prefill pool simulated (and counted) it.
+                                a.produced = 1;
+                            } else if self.prefill_chunk.is_none() {
                                 // The (rest of the) summarization charged inline.
                                 let dt = self.prefill_increment_s(reused, a.req.prompt_len);
                                 self.clock_s += dt;
@@ -862,6 +996,31 @@ impl DeviceEngine {
                                 self.kv.free(v.lease);
                                 self.preemptions += 1;
                                 self.temit(TraceEventKind::Preempt { id: v.req.id });
+                                if self.kv.swap_enabled() {
+                                    // Spill the dropped KV payload to the
+                                    // host buffer: an asynchronous DMA
+                                    // charged to the link (it contends with
+                                    // other fabric traffic), not to the
+                                    // engine clock. Readmission may read it
+                                    // back instead of recomputing.
+                                    let tokens = v.req.prompt_len + v.produced;
+                                    let bytes =
+                                        tokens * self.capacity.kv_bytes_per_token;
+                                    let dt = self.fabric_transfer(bytes);
+                                    self.swap_outs += 1;
+                                    self.swapped_bytes += bytes as u64;
+                                    self.swapped.insert(v.req.id, tokens);
+                                    if let Some(t) = &self.trace {
+                                        t.emit_at(
+                                            self.clock_s + dt,
+                                            TraceEventKind::SwapOut {
+                                                id: v.req.id,
+                                                tokens,
+                                                dt_s: dt,
+                                            },
+                                        );
+                                    }
+                                }
                                 self.readmit.push_back(Preempted {
                                     req: v.req,
                                     admit_s: v.admit_s,
@@ -1015,6 +1174,9 @@ impl DeviceEngine {
             recompute_tokens: self.recompute_tokens,
             reuse_hits: self.kv.reuse_hits(),
             reuse_tokens: self.kv.reuse_tokens(),
+            swap_outs: self.swap_outs,
+            swap_ins: self.swap_ins,
+            swapped_bytes: self.swapped_bytes,
             profile: self.profile,
             truncated: self.truncated,
         }

@@ -1,0 +1,299 @@
+//! Host-interconnect (fabric) model for disaggregated serving.
+//!
+//! SAL-PIM's end-to-end story splits prefill-specialist and
+//! decode-specialist device pools across a real host interconnect
+//! (PIM-GPT / HPIM argue the same production shape): paged KV state
+//! *moves* — prefill→decode migration, swap-to-host spill on eviction,
+//! swap-in on readmission. This module is the cost model those moves
+//! are charged against:
+//!
+//! * [`FabricParams`] — one link class: bandwidth plus a per-transfer
+//!   base latency. The *uncontended* transfer cost
+//!   ([`FabricParams::transfer_s`]) is `base + bytes / bandwidth`; the
+//!   PCIe preset reproduces PR 2's fixed `kv_handoff_s` constant
+//!   bit-for-bit (16 GB/s, zero base latency), which is what lets
+//!   [`crate::serve::backend::HeteroBackend`] rebase onto this model
+//!   with no numeric drift.
+//! * [`Fabric`] — a *shared* link with contention state. Transfers are
+//!   charged at token boundaries in simulated time: a transfer of `b`
+//!   bytes at sim-time `t` counts the `n-1` transfers already in
+//!   flight at `t` and pays `base + n · b / bandwidth` — concurrent
+//!   transfers share the link's bandwidth, so a single transfer can
+//!   only get *slower* as concurrency grows (pinned by test). The
+//!   model is one-sided on purpose: a transfer's cost is fixed at its
+//!   charge time from the in-flight set visible then; transfers
+//!   charged later never retroactively slow it. That keeps every
+//!   charge a pure function of (time, bytes, history) — deterministic
+//!   and replayable — at the cost of fluid-sharing exactness.
+//!
+//! The serving stack is single-threaded, so the shared link is an
+//! `Rc<RefCell<Fabric>>` ([`SharedFabric`]) cloned into every engine
+//! that can move KV, exactly like [`crate::trace::TraceHandle`].
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// One host-link class: bandwidth plus per-transfer base latency.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FabricParams {
+    /// Link bandwidth in bytes per second (`f64::INFINITY` for the
+    /// ideal fabric — transfers then cost exactly `base_latency_s`).
+    pub bandwidth_bytes_s: f64,
+    /// Fixed per-transfer setup cost (DMA descriptor, doorbell) in
+    /// seconds, paid once per transfer regardless of size.
+    pub base_latency_s: f64,
+}
+
+impl FabricParams {
+    /// PCIe-class host link: 16 GB/s, no base latency. Numerically
+    /// identical to the fixed `kv_handoff_s` PR 2's hetero backend
+    /// used, so rebasing onto the fabric changes no pinned result.
+    pub fn pcie() -> Self {
+        FabricParams {
+            bandwidth_bytes_s: 16e9,
+            base_latency_s: 0.0,
+        }
+    }
+
+    /// NVLink-class link: ~300 GB/s with a 1 µs setup cost.
+    pub fn nvlink() -> Self {
+        FabricParams {
+            bandwidth_bytes_s: 300e9,
+            base_latency_s: 1e-6,
+        }
+    }
+
+    /// The ideal fabric: infinite bandwidth, zero latency. Every
+    /// transfer costs exactly `0.0`, so a disaggregated run over it
+    /// must reproduce the equivalent single-pool results bit-for-bit.
+    pub fn ideal() -> Self {
+        FabricParams {
+            bandwidth_bytes_s: f64::INFINITY,
+            base_latency_s: 0.0,
+        }
+    }
+
+    /// Uncontended transfer cost: `base + bytes / bandwidth`. This is
+    /// the cost signature backends quote (hetero handoff, the
+    /// swap-vs-recompute decision rule); the contended [`Fabric`]
+    /// charge reduces to it when the link is otherwise idle.
+    pub fn transfer_s(&self, bytes: usize) -> f64 {
+        self.base_latency_s + bytes as f64 / self.bandwidth_bytes_s
+    }
+}
+
+impl Default for FabricParams {
+    fn default() -> Self {
+        FabricParams::pcie()
+    }
+}
+
+/// Named link classes, the `--fabric` / suite-TOML vocabulary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FabricKind {
+    #[default]
+    Pcie,
+    Nvlink,
+    Ideal,
+}
+
+impl FabricKind {
+    pub const ALL: [FabricKind; 3] = [FabricKind::Pcie, FabricKind::Nvlink, FabricKind::Ideal];
+
+    pub fn parse(tok: &str) -> Option<FabricKind> {
+        match tok {
+            "pcie" => Some(FabricKind::Pcie),
+            "nvlink" => Some(FabricKind::Nvlink),
+            "ideal" => Some(FabricKind::Ideal),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FabricKind::Pcie => "pcie",
+            FabricKind::Nvlink => "nvlink",
+            FabricKind::Ideal => "ideal",
+        }
+    }
+
+    pub fn params(self) -> FabricParams {
+        match self {
+            FabricKind::Pcie => FabricParams::pcie(),
+            FabricKind::Nvlink => FabricParams::nvlink(),
+            FabricKind::Ideal => FabricParams::ideal(),
+        }
+    }
+}
+
+/// A shared host link with contention state and transfer counters.
+///
+/// Time never drives this struct; callers charge transfers at their
+/// own simulated clock. Because a cluster runs its devices
+/// sequentially, clocks can rewind between engines — the in-flight
+/// ledger therefore keeps `(start, end)` intervals and counts only
+/// transfers actually overlapping the charge instant, rather than
+/// assuming monotone `now`.
+#[derive(Debug, Clone)]
+pub struct Fabric {
+    params: FabricParams,
+    /// `(start_s, end_s)` of every charged transfer. Bounded by the
+    /// number of KV moves in a run (migrations + swaps), so it is not
+    /// garbage-collected — clocks may rewind across devices.
+    inflight: Vec<(f64, f64)>,
+    migrated_bytes: u64,
+    transfers: u64,
+}
+
+/// The cloneable handle engines share (single-threaded stack).
+pub type SharedFabric = Rc<RefCell<Fabric>>;
+
+impl Fabric {
+    pub fn new(params: FabricParams) -> Self {
+        Fabric {
+            params,
+            inflight: Vec::new(),
+            migrated_bytes: 0,
+            transfers: 0,
+        }
+    }
+
+    /// A fresh link wrapped in the shared handle.
+    pub fn shared(params: FabricParams) -> SharedFabric {
+        Rc::new(RefCell::new(Fabric::new(params)))
+    }
+
+    pub fn params(&self) -> FabricParams {
+        self.params
+    }
+
+    /// Transfers in flight at `now_s` (started at or before, ending
+    /// strictly after — zero-width ideal transfers never occupy the
+    /// link).
+    pub fn concurrency_at(&self, now_s: f64) -> usize {
+        self.inflight
+            .iter()
+            .filter(|&&(s, e)| s <= now_s && e > now_s)
+            .count()
+    }
+
+    /// What a transfer of `bytes` charged at `now_s` would cost,
+    /// without committing it — the swap-vs-recompute decision reads
+    /// this, then commits only the cheaper option.
+    pub fn peek_transfer_s(&self, now_s: f64, bytes: usize) -> f64 {
+        let n = self.concurrency_at(now_s) + 1;
+        self.params.base_latency_s + n as f64 * (bytes as f64 / self.params.bandwidth_bytes_s)
+    }
+
+    /// Charge a transfer of `bytes` at `now_s`: the link's bandwidth
+    /// is shared evenly with every transfer in flight at the charge
+    /// instant. Returns the transfer's duration and records it.
+    pub fn transfer(&mut self, now_s: f64, bytes: usize) -> f64 {
+        let dt = self.peek_transfer_s(now_s, bytes);
+        self.inflight.push((now_s, now_s + dt));
+        self.migrated_bytes += bytes as u64;
+        self.transfers += 1;
+        dt
+    }
+
+    /// Total bytes moved over the link so far.
+    pub fn migrated_bytes(&self) -> u64 {
+        self.migrated_bytes
+    }
+
+    /// Number of transfers charged so far.
+    pub fn transfers(&self) -> u64 {
+        self.transfers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_parse_and_name_round_trip() {
+        for k in FabricKind::ALL {
+            assert_eq!(FabricKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(FabricKind::parse("infiniband"), None);
+        assert_eq!(FabricKind::default(), FabricKind::Pcie);
+    }
+
+    #[test]
+    fn pcie_preset_reproduces_the_legacy_handoff_constant() {
+        // PR 2's hetero backend charged (tokens * kv_bytes) / 16e9 on a
+        // bare constant; the pcie preset must be bit-identical so the
+        // rebase moves no pinned number.
+        let p = FabricParams::pcie();
+        for bytes in [0usize, 1, 4096, 163_840, 7_340_032] {
+            let legacy = bytes as f64 / 16e9;
+            assert_eq!(p.transfer_s(bytes).to_bits(), legacy.to_bits());
+        }
+    }
+
+    #[test]
+    fn ideal_fabric_transfers_cost_exactly_zero() {
+        let p = FabricParams::ideal();
+        let mut f = Fabric::new(p);
+        for bytes in [0usize, 1, 1 << 30] {
+            assert_eq!(p.transfer_s(bytes), 0.0);
+            assert_eq!(f.transfer(0.0, bytes), 0.0);
+        }
+        // Zero-width transfers never occupy the link.
+        assert_eq!(f.concurrency_at(0.0), 0);
+        assert_eq!(f.transfers(), 3);
+    }
+
+    #[test]
+    fn contention_is_monotone_in_concurrency() {
+        // The k-th concurrent transfer on a link is never faster than
+        // the (k-1)-th: more sharers can only slow a transfer down.
+        let bytes = 1 << 20;
+        let mut prev = 0.0;
+        for k in 1..=8 {
+            let mut f = Fabric::new(FabricParams::pcie());
+            for _ in 0..k - 1 {
+                f.transfer(0.0, bytes);
+            }
+            let dt = f.transfer(0.0, bytes);
+            assert!(
+                dt >= prev,
+                "transfer #{k} ({dt}) faster than #{} ({prev})",
+                k - 1
+            );
+            assert!(dt >= FabricParams::pcie().transfer_s(bytes));
+            prev = dt;
+        }
+    }
+
+    #[test]
+    fn link_drains_and_peek_matches_commit() {
+        let mut f = Fabric::new(FabricParams::pcie());
+        let bytes = 1 << 24;
+        let solo = f.transfer(0.0, bytes);
+        assert_eq!(solo.to_bits(), FabricParams::pcie().transfer_s(bytes).to_bits());
+        // Overlapping charge pays the shared-bandwidth price...
+        let peek = f.peek_transfer_s(solo / 2.0, bytes);
+        assert_eq!(f.transfer(solo / 2.0, bytes).to_bits(), peek.to_bits());
+        assert!(peek > solo);
+        // ...but once everything ended, the link is uncontended again.
+        let later = 10.0 * (solo + peek);
+        assert_eq!(f.concurrency_at(later), 0);
+        assert_eq!(
+            f.transfer(later, bytes).to_bits(),
+            FabricParams::pcie().transfer_s(bytes).to_bits()
+        );
+        assert_eq!(f.migrated_bytes(), 3 * bytes as u64);
+    }
+
+    #[test]
+    fn nonzero_base_latency_is_paid_once_per_transfer() {
+        let p = FabricParams::nvlink();
+        assert_eq!(p.transfer_s(0), p.base_latency_s);
+        let mut f = Fabric::new(p);
+        let dt = f.transfer(0.0, 300);
+        // 300 bytes at 300 GB/s is 1 ns on top of the 1 µs base.
+        assert!((dt - (1e-6 + 1e-9)).abs() < 1e-18);
+    }
+}

@@ -81,13 +81,21 @@ pub enum EvictPolicy {
     /// still short, the engine preempts the youngest active request and
     /// recomputes its KV on readmission.
     Lru,
+    /// Like [`EvictPolicy::Lru`], but a preempted request's block
+    /// payloads spill to a host buffer over the fabric, and
+    /// readmission charges the *cheaper* of swapping the KV back in
+    /// and recomputing it (see [`crate::serve::DeviceEngine`]).
+    Swap,
 }
 
 impl EvictPolicy {
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "none" => Some(EvictPolicy::None),
-            "lru" => Some(EvictPolicy::Lru),
+            // "recompute" is an alias: PR 4's preempt-and-recompute
+            // discipline, spelled by what readmission costs.
+            "lru" | "recompute" => Some(EvictPolicy::Lru),
+            "swap" => Some(EvictPolicy::Swap),
             _ => None,
         }
     }
@@ -96,6 +104,7 @@ impl EvictPolicy {
         match self {
             EvictPolicy::None => "none",
             EvictPolicy::Lru => "lru",
+            EvictPolicy::Swap => "swap",
         }
     }
 }
@@ -685,7 +694,7 @@ impl KvPool {
             KvPool::Paged { mgr, evict } => {
                 let want = match evict {
                     EvictPolicy::None => window_tokens.max(prompt_len + 1),
-                    EvictPolicy::Lru => prompt_len + 1,
+                    EvictPolicy::Lru | EvictPolicy::Swap => prompt_len + 1,
                 };
                 // Reuse at most prompt_len - 1 tokens: the last prompt
                 // token always prefills so the first output token has a
@@ -693,6 +702,31 @@ impl KvPool {
                 let max_reuse = prompt_len.saturating_sub(1);
                 mgr.try_admit(request_id, session, want, max_reuse)
                     .map(|(l, reused)| (PoolLease::Paged(l), reused))
+            }
+        }
+    }
+
+    /// Admit a request whose prefill ran on another device and whose KV
+    /// arrives by fabric migration: same coverage as [`KvPool::try_admit`]
+    /// but **no** session-residency reuse — the migrated blocks *are* the
+    /// request's state, so reclaiming a parked prefix here would skew
+    /// both the reuse accounting and the migrated-byte count.
+    pub fn try_admit_migrated(
+        &mut self,
+        request_id: u64,
+        session: u64,
+        prompt_len: usize,
+        window_tokens: usize,
+    ) -> Option<PoolLease> {
+        match self {
+            KvPool::Whole(m) => m.try_admit(request_id, window_tokens).map(PoolLease::Whole),
+            KvPool::Paged { mgr, evict } => {
+                let want = match evict {
+                    EvictPolicy::None => window_tokens.max(prompt_len + 1),
+                    EvictPolicy::Lru | EvictPolicy::Swap => prompt_len + 1,
+                };
+                mgr.try_admit(request_id, session, want, 0)
+                    .map(|(l, _)| PoolLease::Paged(l))
             }
         }
     }
@@ -758,7 +792,19 @@ impl KvPool {
         matches!(
             self,
             KvPool::Paged {
-                evict: EvictPolicy::Lru,
+                evict: EvictPolicy::Lru | EvictPolicy::Swap,
+                ..
+            }
+        )
+    }
+
+    /// Whether preempted KV spills to the host buffer instead of being
+    /// dropped outright (`--evict swap`).
+    pub fn swap_enabled(&self) -> bool {
+        matches!(
+            self,
+            KvPool::Paged {
+                evict: EvictPolicy::Swap,
                 ..
             }
         )
@@ -885,9 +931,11 @@ mod tests {
             assert_eq!(KvPolicy::parse(p.name()), Some(p));
         }
         assert_eq!(KvPolicy::parse("vLLM"), None);
-        for e in [EvictPolicy::None, EvictPolicy::Lru] {
+        for e in [EvictPolicy::None, EvictPolicy::Lru, EvictPolicy::Swap] {
             assert_eq!(EvictPolicy::parse(e.name()), Some(e));
         }
+        // PR 4's recompute-on-readmit discipline, by its cost name.
+        assert_eq!(EvictPolicy::parse("recompute"), Some(EvictPolicy::Lru));
         assert_eq!(EvictPolicy::parse("fifo"), None);
     }
 

@@ -56,6 +56,13 @@ pub struct ServeMetrics {
     pub reuse_hits: usize,
     /// Prompt tokens whose prefill was skipped via session reuse.
     pub reuse_tokens: usize,
+    /// Preempted KV states spilled to the host buffer (`--evict swap`).
+    pub swap_outs: usize,
+    /// Readmissions that restored KV over the fabric instead of
+    /// recomputing it.
+    pub swap_ins: usize,
+    /// Bytes moved over the fabric by swap-outs plus swap-ins.
+    pub swapped_bytes: u64,
     /// Mean decode-batch size across devices (step-weighted).
     pub mean_decode_batch: f64,
 }
@@ -77,6 +84,9 @@ impl ServeMetrics {
             recompute_tokens: 0,
             reuse_hits: 0,
             reuse_tokens: 0,
+            swap_outs: 0,
+            swap_ins: 0,
+            swapped_bytes: 0,
             mean_decode_batch: 0.0,
         }
     }
@@ -114,6 +124,9 @@ impl ServeMetrics {
             recompute_tokens: 0,
             reuse_hits: 0,
             reuse_tokens: 0,
+            swap_outs: 0,
+            swap_ins: 0,
+            swapped_bytes: 0,
             mean_decode_batch: 0.0,
         }
     }
@@ -129,6 +142,9 @@ impl ServeMetrics {
             self.recompute_tokens += r.recompute_tokens;
             self.reuse_hits += r.reuse_hits;
             self.reuse_tokens += r.reuse_tokens;
+            self.swap_outs += r.swap_outs;
+            self.swap_ins += r.swap_ins;
+            self.swapped_bytes += r.swapped_bytes;
             batch_sum += r.mean_decode_batch * r.decode_steps as f64;
             steps += r.decode_steps;
         }
@@ -165,6 +181,13 @@ impl std::fmt::Display for ServeMetrics {
                 f,
                 "\npaging:          {} preempt ({} tok recompute) | {} reuse hit ({} tok)",
                 self.preemptions, self.recompute_tokens, self.reuse_hits, self.reuse_tokens
+            )?;
+        }
+        if self.swap_outs > 0 || self.swap_ins > 0 {
+            write!(
+                f,
+                "\nswap:            {} out / {} in ({} B over fabric)",
+                self.swap_outs, self.swap_ins, self.swapped_bytes
             )?;
         }
         Ok(())
@@ -290,6 +313,9 @@ mod tests {
             recompute_tokens: 10 * pre,
             reuse_hits: reuse,
             reuse_tokens: 5 * reuse,
+            swap_outs: pre,
+            swap_ins: pre / 2,
+            swapped_bytes: 1024 * pre as u64,
             profile: crate::trace::PhaseProfile::default(),
             truncated: false,
         };
@@ -299,6 +325,9 @@ mod tests {
         assert_eq!(m.recompute_tokens, 30);
         assert_eq!(m.reuse_hits, 2);
         assert_eq!(m.reuse_tokens, 10);
+        assert_eq!(m.swap_outs, 3);
+        assert_eq!(m.swap_ins, 1);
+        assert_eq!(m.swapped_bytes, 3072);
         // Step-weighted: (10*4 + 30*2) / 40 = 2.5.
         assert!((m.mean_decode_batch - 2.5).abs() < 1e-12);
         let s = format!("{m}");

@@ -24,6 +24,16 @@
 //! * [`Cluster`] — N devices behind a router ([`Routing`]: round-robin,
 //!   least-loaded, session-affinity) with per-device queues; devices may
 //!   mix backend families ([`Cluster::from_engines`]);
+//! * [`fabric`] — the modeled host interconnect (PCIe/NVLink-class
+//!   [`FabricParams`]: bandwidth, base latency, fair-share contention)
+//!   that prices KV handoffs, cross-device migrations and swap-to-host
+//!   traffic in one place;
+//! * [`DisaggregatedCluster`] — a prefill pool and a decode pool
+//!   (`--engine disagg`): each request prefills on one pool, its paged
+//!   KV migrates over the fabric, and decode finishes on the other
+//!   pool; with `--evict swap`, preempted KV spills to a host buffer
+//!   over the same fabric and readmission picks the cheaper of swap-in
+//!   and recompute;
 //! * [`workload`] — open-loop Poisson / bursty arrival generation;
 //! * [`sweep`] — the latency-vs-offered-load sweep behind
 //!   `sal-pim serve --sweep` and `bench_serve_cluster`.
@@ -45,6 +55,7 @@ mod metrics;
 mod policy;
 mod types;
 pub mod backend;
+pub mod fabric;
 pub mod kv_cache;
 pub mod sweep;
 pub mod workload;
@@ -53,8 +64,9 @@ pub use backend::{
     BackendKind, BankLevelBackend, DeviceCapacity, ExecutionBackend, GpuBackend, HeteroBackend,
     SalPimBackend,
 };
-pub use cluster::{Cluster, Routing};
+pub use cluster::{Cluster, DisaggregatedCluster, Routing};
 pub use engine::{DeviceEngine, EngineCore, EngineReport};
+pub use fabric::{Fabric, FabricKind, FabricParams, SharedFabric};
 pub use kv_cache::{EvictPolicy, KvCacheManager, KvLease, KvPolicy, KvPool, PagedKvManager};
 pub use metrics::{percentile, ServeMetrics};
 pub use policy::{Policy, Scheduler};

@@ -6,8 +6,9 @@
 //!
 //! * one **thread track per device** (`tid` = device index) carrying
 //!   complete (`"X"`) events for prefill chunks, decode steps, KV
-//!   handoffs and readmit recomputes, plus instant (`"i"`) events for
-//!   arrivals, preemptions, evictions and reuse hits;
+//!   handoffs, fabric migrations, swap-outs/ins and readmit
+//!   recomputes, plus instant (`"i"`) events for arrivals,
+//!   preemptions, evictions and reuse hits;
 //! * one **async group per request** (`cat: "request"`, `id` = request
 //!   id) spanning `[arrival, finish]`, with nested async spans for the
 //!   derived queue/prefill/decode/preempted phases
@@ -65,7 +66,10 @@ pub fn chrome_trace_json(events: &[TraceEvent]) -> String {
                 (e.t_s - dt_s) * US,
                 dt_s * US
             )),
-            TraceEventKind::KvHandoff { id, tokens, dt_s } => rows.push(format!(
+            TraceEventKind::KvHandoff { id, tokens, dt_s }
+            | TraceEventKind::KvMigrate { id, tokens, dt_s }
+            | TraceEventKind::SwapOut { id, tokens, dt_s }
+            | TraceEventKind::SwapIn { id, tokens, dt_s } => rows.push(format!(
                 "{{\"name\": \"{name}\", \"cat\": \"device\", \"ph\": \"X\", \"pid\": 0, \
                  \"tid\": {d}, \"ts\": {:.3}, \"dur\": {:.3}, \
                  \"args\": {{\"id\": {id}, \"tokens\": {tokens}}}}}",

@@ -61,6 +61,18 @@ pub enum TraceEventKind {
     /// the cost is part of the prefill charge, reported here for
     /// attribution.
     KvHandoff { id: u64, tokens: usize, dt_s: f64 },
+    /// Paged KV blocks migrated across the host fabric from the
+    /// prefill-pool device to the decode device that finishes the
+    /// request (disaggregated serving); spans `[t_s - dt_s, t_s]`.
+    KvMigrate { id: u64, tokens: usize, dt_s: f64 },
+    /// A preempted request's KV block payloads were spilled to the
+    /// host buffer over the fabric (asynchronous DMA: charged to the
+    /// link, not the engine clock).
+    SwapOut { id: u64, tokens: usize, dt_s: f64 },
+    /// Readmission restored swapped-out KV from the host buffer
+    /// instead of recomputing it (the fabric read was cheaper); the
+    /// charge is part of the readmit span, reported for attribution.
+    SwapIn { id: u64, tokens: usize, dt_s: f64 },
     /// The request finished; `tokens_simulated` tokens were produced.
     Complete { id: u64, tokens_simulated: usize },
 }
@@ -78,6 +90,9 @@ impl TraceEventKind {
             TraceEventKind::EvictBlocks { .. } => "evict",
             TraceEventKind::ReuseHit { .. } => "reuse",
             TraceEventKind::KvHandoff { .. } => "kv_handoff",
+            TraceEventKind::KvMigrate { .. } => "kv_migrate",
+            TraceEventKind::SwapOut { .. } => "swap_out",
+            TraceEventKind::SwapIn { .. } => "swap_in",
             TraceEventKind::Complete { .. } => "complete",
         }
     }
@@ -93,6 +108,9 @@ impl TraceEventKind {
             | TraceEventKind::Readmit { id, .. }
             | TraceEventKind::ReuseHit { id, .. }
             | TraceEventKind::KvHandoff { id, .. }
+            | TraceEventKind::KvMigrate { id, .. }
+            | TraceEventKind::SwapOut { id, .. }
+            | TraceEventKind::SwapIn { id, .. }
             | TraceEventKind::Complete { id, .. } => Some(*id),
             TraceEventKind::DecodeStep { .. } | TraceEventKind::EvictBlocks { .. } => None,
         }
@@ -139,6 +157,21 @@ mod tests {
                 tokens: 32,
                 dt_s: 0.001,
             },
+            TraceEventKind::KvMigrate {
+                id: 1,
+                tokens: 33,
+                dt_s: 0.002,
+            },
+            TraceEventKind::SwapOut {
+                id: 1,
+                tokens: 40,
+                dt_s: 0.003,
+            },
+            TraceEventKind::SwapIn {
+                id: 1,
+                tokens: 40,
+                dt_s: 0.003,
+            },
             TraceEventKind::Complete {
                 id: 1,
                 tokens_simulated: 8,
@@ -157,6 +190,9 @@ mod tests {
                 "evict",
                 "reuse",
                 "kv_handoff",
+                "kv_migrate",
+                "swap_out",
+                "swap_in",
                 "complete"
             ]
         );

@@ -133,10 +133,18 @@ pub fn derive_spans(events: &[TraceEvent]) -> Vec<RequestSpans> {
             TraceEventKind::Complete { id, .. } => {
                 per.entry(id).or_default().finish = Some(e.t_s);
             }
+            // Attribution-only kinds: migration and decode-pool wait
+            // fold into the surrounding spans (a migrated request's
+            // decode span starts at its prefill end; a swap-in's
+            // charge is inside its Readmit span), so the tiling
+            // invariant needs no extra marks for them.
             TraceEventKind::DecodeStep { .. }
             | TraceEventKind::EvictBlocks { .. }
             | TraceEventKind::ReuseHit { .. }
-            | TraceEventKind::KvHandoff { .. } => {}
+            | TraceEventKind::KvHandoff { .. }
+            | TraceEventKind::KvMigrate { .. }
+            | TraceEventKind::SwapOut { .. }
+            | TraceEventKind::SwapIn { .. } => {}
         }
     }
     per.into_iter()

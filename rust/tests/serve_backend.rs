@@ -3,7 +3,8 @@
 //! routing over mixed backend types.
 
 use sal_pim::config::SimConfig;
-use sal_pim::serve::backend::{kv_handoff_s, HeteroBackend, HOST_LINK_BW};
+use sal_pim::serve::backend::HeteroBackend;
+use sal_pim::serve::fabric::FabricParams;
 use sal_pim::serve::workload::{requests_from_items, ArrivalPattern};
 use sal_pim::serve::{
     BackendKind, Cluster, DeviceEngine, ExecutionBackend, GpuBackend, Request, Routing,
@@ -166,7 +167,7 @@ fn hetero_backend_is_gpu_prefill_plus_pim_decode_plus_handoff() {
     let mut pim = SalPimBackend::new(&cfg);
 
     for n in [16usize, 64, 128] {
-        let handoff = kv_handoff_s(cfg.model.kv_bytes_per_token(), n, HOST_LINK_BW);
+        let handoff = FabricParams::pcie().transfer_s(n * cfg.model.kv_bytes_per_token());
         let want = gpu.prefill_s(n) + handoff;
         let got = het.prefill_s(n);
         assert!(

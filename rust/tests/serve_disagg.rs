@@ -1,0 +1,254 @@
+//! Disaggregated prefill/decode serving invariants: an ideal fabric
+//! reproduces the single-pool hetero run bit-for-bit, migration and
+//! swap-to-host never create or destroy tokens, link contention is
+//! monotone in concurrency, and readmission picks the cheaper of
+//! swap-in and recompute.
+
+use sal_pim::config::SimConfig;
+use sal_pim::serve::backend::HeteroBackend;
+use sal_pim::serve::workload::{requests_from_items, ArrivalPattern};
+use sal_pim::serve::{
+    BackendKind, Cluster, DeviceEngine, DisaggregatedCluster, EvictPolicy, Fabric,
+    FabricParams, GpuBackend, KvPolicy, Request, Routing, SalPimBackend,
+};
+use sal_pim::testutil::RequestMix;
+
+fn req(id: u64, prompt: usize, out: usize, at: f64) -> Request {
+    Request {
+        id,
+        prompt_len: prompt,
+        max_new_tokens: out,
+        arrival_s: at,
+        session: id,
+    }
+}
+
+/// Subarrays one `tokens`-wide window pins on a SAL-PIM device.
+fn subarrays_for(cfg: &SimConfig, tokens: usize) -> usize {
+    (tokens * cfg.model.kv_bytes_per_token()).div_ceil(cfg.hbm.subarray_bytes())
+}
+
+#[test]
+fn ideal_fabric_reproduces_the_single_pool_hetero_run_bit_for_bit() {
+    // Zero-latency, infinite-bandwidth migration makes the two-pool
+    // topology indistinguishable from one hetero device: GPU prefill,
+    // zero-cost KV movement, SAL-PIM decode. Arrivals are spaced past
+    // each request's service time so batching can't diverge, and every
+    // float in every completion must match bit-for-bit.
+    let cfg = SimConfig::paper();
+    let shapes = [(16usize, 8usize), (48, 16), (96, 4), (32, 32), (64, 8)];
+    let submit_all = |f: &mut dyn FnMut(Request)| {
+        for (i, &(prompt, out)) in shapes.iter().enumerate() {
+            f(req(i as u64, prompt, out, i as f64));
+        }
+    };
+
+    let mut disagg = DisaggregatedCluster::from_pools(
+        vec![DeviceEngine::with_backend(BackendKind::Gpu.build(&cfg), 8)],
+        vec![DeviceEngine::with_backend(BackendKind::SalPim.build(&cfg), 8)],
+        FabricParams::ideal(),
+    );
+    submit_all(&mut |r| {
+        disagg.submit(r);
+    });
+    let mut two_pool = disagg.run();
+    two_pool.sort_by_key(|c| c.id);
+
+    let hetero = HeteroBackend::new(
+        Box::new(GpuBackend::titan_rtx(&cfg.model)),
+        Box::new(SalPimBackend::new(&cfg)),
+        FabricParams::ideal(),
+    );
+    let mut single = Cluster::from_engines(
+        vec![DeviceEngine::with_backend(Box::new(hetero), 8)],
+        Routing::RoundRobin,
+    );
+    submit_all(&mut |r| {
+        single.submit(r);
+    });
+    let mut one_pool = single.run();
+    one_pool.sort_by_key(|c| c.id);
+
+    assert_eq!(two_pool.len(), shapes.len());
+    assert_eq!(one_pool.len(), shapes.len());
+    for (a, b) in two_pool.iter().zip(&one_pool) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens_out, b.tokens_out, "req {}", a.id);
+        assert_eq!(a.tokens_simulated, b.tokens_simulated, "req {}", a.id);
+        assert_eq!(a.queue_s.to_bits(), b.queue_s.to_bits(), "req {} queue", a.id);
+        assert_eq!(
+            a.prefill_s.to_bits(),
+            b.prefill_s.to_bits(),
+            "req {} prefill",
+            a.id
+        );
+        assert_eq!(
+            a.decode_s.to_bits(),
+            b.decode_s.to_bits(),
+            "req {} decode",
+            a.id
+        );
+        assert_eq!(
+            a.finish_s.to_bits(),
+            b.finish_s.to_bits(),
+            "req {} finish",
+            a.id
+        );
+    }
+    // The bytes still crossed the (free) link — one migration each.
+    let (bytes, transfers) = disagg.fabric_stats();
+    assert_eq!(transfers, shapes.len() as u64);
+    let want: u64 = shapes
+        .iter()
+        .map(|&(p, _)| ((p + 1) * cfg.model.kv_bytes_per_token()) as u64)
+        .sum();
+    assert_eq!(bytes, want);
+}
+
+#[test]
+fn tokens_are_conserved_under_migration_swap_and_recompute() {
+    // Randomized conservation sweep: the same drawn workload served by
+    // (a) a disaggregated cluster with swap-to-host eviction, (b) the
+    // same cluster with recompute-on-readmit, and (c) a single-pool
+    // hetero cluster must simulate the identical per-request token
+    // counts — migration and spilling move KV, never tokens.
+    let cfg = SimConfig::paper();
+    // Small-mix windows top out at 64 + 32 tokens; ~2 windows per
+    // decode device forces preemption without ever rejecting.
+    let tight = subarrays_for(&cfg, 64 + 32) * 2;
+    for seed in [3u64, 11, 29] {
+        let workload = || {
+            let items = RequestMix::small(seed).take(18);
+            requests_from_items(&items, ArrivalPattern::AtOnce, 6)
+        };
+        let disagg_run = |evict: EvictPolicy| {
+            let mut c = DisaggregatedCluster::new(&cfg, 2, 2, 8, FabricParams::pcie())
+                .with_kv(KvPolicy::Paged, evict, None, Some(tight));
+            for r in workload() {
+                c.submit(r);
+            }
+            let mut done: Vec<(u64, usize, usize)> = c
+                .run()
+                .iter()
+                .map(|d| (d.id, d.tokens_out, d.tokens_simulated))
+                .collect();
+            done.sort();
+            assert_eq!(c.rejected(), 0, "seed {seed}: the region fits every window");
+            let reports = c.per_device_reports();
+            let (bytes, _) = c.fabric_stats();
+            (done, reports, bytes)
+        };
+        let (swap, swap_reports, swap_bytes) = disagg_run(EvictPolicy::Swap);
+        let (recompute, _, _) = disagg_run(EvictPolicy::Lru);
+        assert_eq!(
+            swap, recompute,
+            "seed {seed}: swap-to-host changed simulated tokens"
+        );
+
+        let mut single = Cluster::homogeneous(&cfg, BackendKind::Hetero, 2, 8, Routing::LeastLoaded);
+        for r in workload() {
+            single.submit(r);
+        }
+        let mut baseline: Vec<(u64, usize, usize)> = single
+            .run()
+            .iter()
+            .map(|d| (d.id, d.tokens_out, d.tokens_simulated))
+            .collect();
+        baseline.sort();
+        assert_eq!(
+            swap, baseline,
+            "seed {seed}: disaggregation changed simulated tokens"
+        );
+
+        // The sweep is only meaningful if the machinery actually fired.
+        let preemptions: usize = swap_reports.iter().map(|r| r.preemptions).sum();
+        let swap_outs: usize = swap_reports.iter().map(|r| r.swap_outs).sum();
+        assert!(preemptions > 0, "seed {seed}: no capacity pressure");
+        assert!(swap_outs > 0, "seed {seed}: preemption must spill under swap");
+        assert!(swap_bytes > 0, "seed {seed}: migrations must move bytes");
+    }
+}
+
+#[test]
+fn fabric_contention_is_monotone_in_concurrency() {
+    // More concurrent transfers on a link never make any single
+    // transfer faster — for every class with finite bandwidth, at
+    // several payload sizes and background loads.
+    for params in [FabricParams::pcie(), FabricParams::nvlink()] {
+        for bytes in [1usize << 10, 1 << 20, 1 << 26] {
+            let mut last = 0.0f64;
+            for background in 0..6usize {
+                let mut link = Fabric::new(params);
+                for _ in 0..background {
+                    link.transfer(0.0, 64 << 20);
+                }
+                let dt = link.peek_transfer_s(0.0, bytes);
+                assert!(
+                    dt >= last,
+                    "{background} background transfers made a {bytes}-byte \
+                     transfer faster: {dt} < {last}"
+                );
+                // Committing charges exactly what the probe promised.
+                assert_eq!(link.transfer(0.0, bytes).to_bits(), dt.to_bits());
+                last = dt;
+            }
+        }
+    }
+    // The ideal class is immune to contention by construction.
+    let mut ideal = Fabric::new(FabricParams::ideal());
+    for _ in 0..8 {
+        assert_eq!(ideal.transfer(0.0, 1 << 30), 0.0);
+    }
+}
+
+#[test]
+fn readmission_picks_the_cheaper_of_swap_in_and_recompute() {
+    // The same preemption-heavy workload under three link classes: with
+    // recompute-only eviction nothing touches the fabric; with swap over
+    // an ideal link every readmission swaps in (zero is always cheaper
+    // than recompute); with swap over a 1 B/s link every readmission
+    // recomputes (the spill is a sunk cost, the swap-in never wins).
+    let cfg = SimConfig::paper();
+    let tight = subarrays_for(&cfg, 3 * 40);
+    let run = |evict: EvictPolicy, fabric: FabricParams| {
+        let mut e = DeviceEngine::new(&cfg, 8)
+            .with_kv_policy(KvPolicy::Paged)
+            .with_evict(evict)
+            .with_kv_subarrays(tight)
+            .with_fabric(fabric);
+        for i in 0..6 {
+            e.submit(req(i, 8, 32, 0.0));
+        }
+        let done = e.run();
+        assert_eq!(done.len(), 6);
+        for c in &done {
+            assert_eq!(c.tokens_simulated, 32, "request {} lost tokens", c.id);
+        }
+        e.report()
+    };
+
+    let lru = run(EvictPolicy::Lru, FabricParams::pcie());
+    assert!(lru.preemptions > 0, "workload must force preemption");
+    assert!(lru.recompute_tokens > 0);
+    assert_eq!((lru.swap_outs, lru.swap_ins, lru.swapped_bytes), (0, 0, 0));
+
+    let swap_fast = run(EvictPolicy::Swap, FabricParams::ideal());
+    assert!(swap_fast.swap_outs > 0, "preemption under swap must spill");
+    assert_eq!(
+        swap_fast.swap_ins, swap_fast.swap_outs,
+        "a free link swaps every readmission back in"
+    );
+    assert_eq!(swap_fast.recompute_tokens, 0);
+    assert!(swap_fast.swapped_bytes > 0);
+
+    let swap_slow = run(
+        EvictPolicy::Swap,
+        FabricParams {
+            bandwidth_bytes_s: 1.0,
+            base_latency_s: 0.0,
+        },
+    );
+    assert!(swap_slow.swap_outs > 0);
+    assert_eq!(swap_slow.swap_ins, 0, "a 1 B/s swap-in can never win");
+    assert!(swap_slow.recompute_tokens > 0);
+}

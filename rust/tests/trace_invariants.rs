@@ -9,7 +9,8 @@ use sal_pim::scenario::{
     compare::parse_json, sink, ConfigSel, EngineKind, Runner, Scenario, ServeParams,
 };
 use sal_pim::serve::{
-    Cluster, Completion, DeviceEngine, EvictPolicy, KvPolicy, Request, Routing,
+    Cluster, Completion, DeviceEngine, DisaggregatedCluster, EvictPolicy, FabricParams,
+    KvPolicy, Request, Routing,
 };
 use sal_pim::trace::{
     chrome_trace_json, derive_spans, SpanKind, TraceEvent, TraceEventKind, TraceHandle,
@@ -203,6 +204,70 @@ fn chrome_export_is_valid_and_loadable() {
         let ts = r.get("ts").and_then(|v| v.as_f64()).unwrap();
         let dur = r.get("dur").and_then(|v| v.as_f64()).unwrap();
         assert!(ts >= 0.0 && dur >= 0.0, "negative charge: ts={ts} dur={dur}");
+    }
+}
+
+#[test]
+fn disagg_spans_tile_arrival_to_finish_through_migration_and_swap() {
+    // A migrated (and possibly swapped) request still has one Arrival,
+    // one Admit, one Complete in the merged stream, its KvMigrate /
+    // SwapOut / SwapIn charges are attribution-only, and its derived
+    // spans tile [arrival, finish] exactly — the migration delay and
+    // the decode-pool wait fold into the decode span, matching the
+    // merged completion's own accounting.
+    let cfg = SimConfig::paper();
+    let tight = subarrays_for(&cfg, 16 + 32) * 5 / 2;
+    let mut c = DisaggregatedCluster::new(&cfg, 1, 1, 8, FabricParams::pcie()).with_kv(
+        KvPolicy::Paged,
+        EvictPolicy::Swap,
+        None,
+        Some(tight),
+    );
+    let trace = TraceHandle::new();
+    c.set_trace(trace.clone());
+    for i in 0..6 {
+        c.submit(req(i, i, 16, 32, i as f64 * 1e-4));
+    }
+    let done = c.run();
+    assert_eq!(done.len(), 6);
+    let events = trace.take_events();
+
+    let count = |pred: &dyn Fn(&TraceEventKind) -> bool| {
+        events.iter().filter(|e| pred(&e.kind)).count()
+    };
+    assert_eq!(
+        count(&|k| matches!(k, TraceEventKind::Arrival { .. })),
+        6,
+        "each request arrives once in the merged stream"
+    );
+    assert_eq!(count(&|k| matches!(k, TraceEventKind::Complete { .. })), 6);
+    assert_eq!(
+        count(&|k| matches!(k, TraceEventKind::KvMigrate { .. })),
+        6,
+        "every request's KV crosses the fabric exactly once"
+    );
+    let preemptions: usize = c.per_device_reports().iter().map(|r| r.preemptions).sum();
+    assert!(preemptions > 0, "the shrunken decode region must preempt");
+    assert!(
+        count(&|k| matches!(k, TraceEventKind::SwapOut { .. })) > 0,
+        "preemption under swap eviction must spill to host"
+    );
+
+    let spans = derive_spans(&events);
+    assert_eq!(spans.len(), done.len(), "one timeline per completion");
+    for rs in &spans {
+        assert!(rs.tiles_exactly(), "request {} spans leave gaps: {rs:?}", rs.id);
+        let d = done.iter().find(|d| d.id == rs.id).unwrap();
+        assert_eq!(rs.finish_s, d.finish_s, "req {}", rs.id);
+        assert_eq!(rs.width_of(SpanKind::Queue), d.queue_s, "req {}", rs.id);
+        assert_eq!(rs.width_of(SpanKind::Prefill), d.prefill_s, "req {}", rs.id);
+        let decode_like = rs.width_of(SpanKind::Decode) + rs.width_of(SpanKind::Preempted);
+        assert!(
+            (decode_like - d.decode_s).abs() < 1e-9,
+            "req {}: decode+preempted {decode_like} vs decode_s {}",
+            rs.id,
+            d.decode_s
+        );
     }
 }
 
