@@ -229,7 +229,30 @@ pub fn commands() -> Vec<CommandSpec> {
             positionals: vec![],
             flags: with_common(vec![
                 FlagSpec::value("requests", "N", "16", "request count"),
-                FlagSpec::value("policy", "P", "fcfs", "queue policy: fcfs|sjf|spf"),
+                FlagSpec::value(
+                    "policy",
+                    "P",
+                    "fcfs",
+                    "queue policy: fcfs|sjf|spf|priority (priority boosts interactive-SLO \
+                     requests, starvation-free)",
+                ),
+                FlagSpec::value(
+                    "workload",
+                    "SPEC",
+                    "",
+                    "typed workload spec: ARRIVAL[,key=value]* with arrival \
+                     at-once|jittered:S|poisson:R|bursty:R:B and keys sessions=N, \
+                     multiturn=TURNS:THINK, prefix=ROOT:GROUPS:TOKENS, \
+                     lengths=paper|small|heavy:MINP:MINO:CAP, interactive=SHARE; \
+                     supersedes the legacy --at-once/--rate/--burst/--sessions aliases",
+                ),
+                FlagSpec::value(
+                    "prefix-cache",
+                    "M",
+                    "session",
+                    "KV prefix caching: session (per-session residency) | radix \
+                     (cross-session radix-tree sharing; needs --kv-policy paged)",
+                ),
                 FlagSpec::value("engine", "E", "seq", "engine: seq|batch|cluster|disagg"),
                 FlagSpec::value(
                     "engine-core",
@@ -292,9 +315,28 @@ pub fn commands() -> Vec<CommandSpec> {
                     "",
                     "shrink the KV region to N allocation units (capacity-pressure what-ifs)",
                 ),
-                FlagSpec::value("rate", "R", "", "open-loop Poisson arrivals at R req/s"),
-                FlagSpec::value("burst", "B", "", "make Poisson arrivals bursts of B"),
-                FlagSpec::switch("at-once", "queue every request at t = 0"),
+                FlagSpec::value(
+                    "rate",
+                    "R",
+                    "",
+                    "open-loop Poisson arrivals at R req/s (legacy alias of --workload)",
+                ),
+                FlagSpec::value(
+                    "burst",
+                    "B",
+                    "",
+                    "make Poisson arrivals bursts of B (legacy alias of --workload)",
+                ),
+                FlagSpec::value(
+                    "sessions",
+                    "N",
+                    "8",
+                    "cycle requests over N sessions (legacy alias of --workload)",
+                ),
+                FlagSpec::switch(
+                    "at-once",
+                    "queue every request at t = 0 (legacy alias of --workload at-once)",
+                ),
                 FlagSpec::switch("offload", "GPU prefill offload (seq engine only)"),
                 FlagSpec::switch("sweep", "latency-vs-offered-load curve (3 loads)"),
                 FlagSpec::value("seed", "S", "42", "workload seed"),
@@ -471,6 +513,9 @@ mod tests {
         assert!(md.contains("`--prefill-pool N`"));
         assert!(md.contains("`--decode-pool N`"));
         assert!(md.contains("`--trace FILE`"));
+        assert!(md.contains("`--workload SPEC`"));
+        assert!(md.contains("`--prefix-cache M`"));
+        assert!(md.contains("`--sessions N`"));
         assert!(md.contains("`--allow-missing`"));
         assert!(md.contains("`BASELINE`"), "compare positionals documented");
     }

@@ -14,7 +14,7 @@
 //! continuous-batching cluster engine) and is re-exported here for
 //! compatibility.
 
-pub use crate::serve::{percentile, Completion, Policy, Request, Scheduler, ServeMetrics};
+pub use crate::serve::{percentile, Completion, Policy, Request, Scheduler, ServeMetrics, SloClass};
 
 use crate::baseline::GpuModel;
 use crate::config::SimConfig;
@@ -74,6 +74,8 @@ impl Coordinator {
             max_new_tokens,
             arrival_s,
             session: id,
+            slo: SloClass::Batch,
+            prefix: Vec::new(),
         });
         id
     }
@@ -166,6 +168,7 @@ impl Coordinator {
                 decode_s,
                 finish_s: finish,
                 device: 0,
+                slo: req.slo,
             });
         }
         completions
@@ -222,6 +225,8 @@ mod tests {
             max_new_tokens: 4,
             arrival_s: 0.0,
             session: 3,
+            slo: SloClass::Batch,
+            prefix: Vec::new(),
         });
         let done = c.run();
         assert_eq!(done.len(), 1);

@@ -20,7 +20,9 @@ use sal_pim::scenario::{
     SimulateParams, SweepParams,
 };
 use sal_pim::report::fmt_bw;
-use sal_pim::serve::{BackendKind, EngineCore, EvictPolicy, FabricKind, KvPolicy};
+use sal_pim::serve::{
+    BackendKind, EngineCore, EvictPolicy, FabricKind, KvPolicy, PrefixCacheMode, WorkloadSpec,
+};
 use sal_pim::trace::{chrome_trace_json, PhaseProfile, TraceEvent};
 use std::path::Path;
 
@@ -169,8 +171,9 @@ fn emit(args: &Args, outcome: &Outcome) -> anyhow::Result<()> {
 
 fn scenario_serve(args: &Args, config: ConfigSel) -> anyhow::Result<Scenario> {
     let policy_flag = args.flag("policy").unwrap_or("fcfs");
-    let policy = parse_policy(policy_flag)
-        .ok_or_else(|| anyhow::anyhow!("unknown policy `{policy_flag}` (fcfs|sjf|spf)"))?;
+    let policy = parse_policy(policy_flag).ok_or_else(|| {
+        anyhow::anyhow!("unknown policy `{policy_flag}` (fcfs|sjf|spf|priority)")
+    })?;
     let route_flag = args.flag("route").unwrap_or("rr");
     let route = parse_route(route_flag)
         .ok_or_else(|| anyhow::anyhow!("unknown route `{route_flag}` (rr|ll|affinity)"))?;
@@ -224,6 +227,18 @@ fn scenario_serve(args: &Args, config: ConfigSel) -> anyhow::Result<Scenario> {
         Some(_) => Some(args.get("burst", 4usize)?),
         None => None,
     };
+    let prefix_flag = args.flag("prefix-cache").unwrap_or("session");
+    let prefix_cache = PrefixCacheMode::parse(prefix_flag).ok_or_else(|| {
+        anyhow::anyhow!("unknown prefix-cache mode `{prefix_flag}` (session|radix)")
+    })?;
+    // `--workload SPEC` supersedes the deprecated `--at-once/--rate/
+    // --burst/--sessions` aliases (which desugar to the same specs).
+    let workload = match args.flag("workload") {
+        Some(s) => Some(
+            WorkloadSpec::parse(s).map_err(|e| anyhow::anyhow!("bad --workload spec: {e}"))?,
+        ),
+        None => None,
+    };
 
     let mut params = ServeParams::default()
         .with_config(config)
@@ -242,7 +257,12 @@ fn scenario_serve(args: &Args, config: ConfigSel) -> anyhow::Result<Scenario> {
         .with_at_once(args.switch("at-once"))
         .with_rate(rate, burst)
         .with_offload(args.switch("offload"))
-        .with_engine_core(engine_core);
+        .with_engine_core(engine_core)
+        .with_prefix_cache(prefix_cache);
+    if let Some(w) = workload {
+        params = params.with_workload_spec(w);
+    }
+    params.n_sessions = args.get("sessions", 8usize)?;
     params.seed = args.get("seed", 42u64)?;
     params.requests = if args.flag("requests").is_some() {
         args.get("requests", 16usize)?

@@ -370,6 +370,19 @@ pub fn direction(name: &str) -> Direction {
         "reuse_hits",
         "reuse_tokens",
         "rejected",
+        // SLO-class populations: how the workload split, not a cost.
+        // (The per-class percentiles — `interactive_p95_latency`,
+        // `interactive_p50_ttft`, … — gate lower-is-better through the
+        // substring rules below.)
+        "interactive_requests",
+        "batch_requests",
+        // Radix prefix-cache counters: workload properties. The hit rate
+        // is deliberately non-gating too — near-zero baselines make its
+        // relative delta meaninglessly noisy.
+        "prefix_hits",
+        "prefix_reused_tokens",
+        "prefix_nodes_evicted",
+        "prefix_cache_hit_rate",
         // Fabric traffic counters: bytes moved is a property of the
         // topology under test, not a cost to minimize (an ideal fabric
         // moves the same bytes in zero time).
@@ -722,6 +735,22 @@ mod tests {
         // …while `decode_rate` (tok/s) still gates in the right direction.
         assert_eq!(direction("decode_rate"), Direction::HigherIsBetter);
         assert_eq!(direction("decode"), Direction::LowerIsBetter);
+    }
+
+    #[test]
+    fn slo_class_and_prefix_cache_metrics_classify_correctly() {
+        // Per-class latency percentiles gate like their global cousins.
+        assert_eq!(direction("interactive_p50_latency"), Direction::LowerIsBetter);
+        assert_eq!(direction("interactive_p95_latency"), Direction::LowerIsBetter);
+        assert_eq!(direction("interactive_p50_ttft"), Direction::LowerIsBetter);
+        assert_eq!(direction("interactive_p95_ttft"), Direction::LowerIsBetter);
+        assert_eq!(direction("batch_p95_latency"), Direction::LowerIsBetter);
+        // Class populations and prefix-cache counters never gate.
+        assert_eq!(direction("interactive_requests"), Direction::Informational);
+        assert_eq!(direction("batch_requests"), Direction::Informational);
+        assert_eq!(direction("prefix_hits"), Direction::Informational);
+        assert_eq!(direction("prefix_reused_tokens"), Direction::Informational);
+        assert_eq!(direction("prefix_cache_hit_rate"), Direction::Informational);
     }
 
     #[test]

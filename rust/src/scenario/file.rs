@@ -25,10 +25,12 @@
 //! `scenario_roundtrip` test suite exercises property-style.
 
 use super::{
-    parse_policy, parse_route, route_token, AreaParams, BreakdownParams, ConfigSel, EngineKind,
-    PowerParams, Scenario, ScenarioError, ServeParams, SimulateParams, SweepParams,
+    parse_policy, parse_route, route_token, AreaParams, BreakdownParams, ConfigSel, CustomParams,
+    EngineKind, PowerParams, Scenario, ScenarioError, ServeParams, SimulateParams, SweepParams,
 };
-use crate::serve::{BackendKind, EngineCore, EvictPolicy, FabricKind, KvPolicy};
+use crate::serve::{
+    BackendKind, EngineCore, EvictPolicy, FabricKind, KvPolicy, PrefixCacheMode, WorkloadSpec,
+};
 use std::fmt::Write as _;
 
 /// Strip an inline `#` comment, respecting double quotes.
@@ -250,8 +252,8 @@ pub fn from_kv(pairs: &[(usize, String, String)]) -> Result<Scenario, ScenarioEr
                             .ok_or_else(|| bad(*line, key, v, "salpim|gpu|banklevel|hetero"))?
                     }
                     "policy" => {
-                        p.policy =
-                            parse_policy(v).ok_or_else(|| bad(*line, key, v, "fcfs|sjf|spf"))?
+                        p.policy = parse_policy(v)
+                            .ok_or_else(|| bad(*line, key, v, "fcfs|sjf|spf|priority"))?
                     }
                     "route" => {
                         p.route =
@@ -282,6 +284,17 @@ pub fn from_kv(pairs: &[(usize, String, String)]) -> Result<Scenario, ScenarioEr
                     "at_once" => p.at_once = p_bool(*line, key, value)?,
                     "rate" => p.rate = Some(p_f64(*line, key, value)?),
                     "burst" => p.burst = Some(p_usize(*line, key, value)?),
+                    "workload" => {
+                        p.workload =
+                            Some(WorkloadSpec::parse(v).map_err(|msg| ScenarioError::Parse {
+                                line: *line,
+                                msg,
+                            })?)
+                    }
+                    "prefix_cache" => {
+                        p.prefix_cache = PrefixCacheMode::parse(v)
+                            .ok_or_else(|| bad(*line, key, v, "session|radix"))?
+                    }
                     "offload" => p.offload = p_bool(*line, key, value)?,
                     "sweep" => p.sweep = p_bool(*line, key, value)?,
                     "loads" => p.loads = p_list_f64(*line, key, value)?,
@@ -290,11 +303,28 @@ pub fn from_kv(pairs: &[(usize, String, String)]) -> Result<Scenario, ScenarioEr
             }
             Ok(Scenario::Serve(p))
         }
+        "custom" => {
+            let mut p = CustomParams::default();
+            for (line, key, value) in pairs {
+                if common_key(&mut p.config, *line, key, value)? {
+                    continue;
+                }
+                let v = unquote(value);
+                if key == "label" {
+                    p.label = v.to_string();
+                } else if let Some(k) = key.strip_prefix("param.") {
+                    p.params.push((k.to_string(), v.to_string()));
+                } else {
+                    return Err(unknown_key(*line, &kind, key));
+                }
+            }
+            Ok(Scenario::Custom(p))
+        }
         other => Err(ScenarioError::Parse {
             line: first_line,
             msg: format!(
                 "unknown scenario kind `{other}` \
-                 (simulate|sweep|breakdown|power|area|serve)"
+                 (simulate|sweep|breakdown|power|area|serve|custom)"
             ),
         }),
     }
@@ -372,9 +402,23 @@ impl Scenario {
                 if let Some(b) = p.burst {
                     push("burst", b.to_string());
                 }
+                if let Some(w) = &p.workload {
+                    push("workload", w.render());
+                }
+                if p.prefix_cache != PrefixCacheMode::Session {
+                    push("prefix_cache", p.prefix_cache.name().to_string());
+                }
                 push("offload", p.offload.to_string());
                 push("sweep", p.sweep.to_string());
                 push("loads", fmt_list(&p.loads));
+            }
+            Scenario::Custom(p) => {
+                if !p.label.is_empty() {
+                    push("label", p.label.clone());
+                }
+                for (k, v) in &p.params {
+                    push(&format!("param.{k}"), v.clone());
+                }
             }
         }
         kv
@@ -387,8 +431,9 @@ impl Scenario {
             matches!(
                 key,
                 "kind" | "preset" | "engine" | "engine_core" | "backend" | "policy" | "route"
-                    | "kv_policy" | "evict" | "fabric"
+                    | "kv_policy" | "evict" | "fabric" | "workload" | "prefix_cache" | "label"
             ) || key.starts_with("cfg.")
+                || key.starts_with("param.")
         }
         let mut out = String::from("[[scenario]]\n");
         for (k, v) in self.to_kv() {
@@ -503,10 +548,67 @@ mod tests {
                     .with_kv_policy(KvPolicy::Paged)
                     .with_evict(EvictPolicy::Swap),
             ),
+            Scenario::Serve(
+                ServeParams::default()
+                    .with_engine(EngineKind::Batch)
+                    .with_policy(Policy::Priority)
+                    .with_kv_policy(KvPolicy::Paged)
+                    .with_prefix_cache(PrefixCacheMode::Radix)
+                    .with_workload_spec(
+                        WorkloadSpec::parse(
+                            "bursty:150:4,multiturn=3:2.5,prefix=128:4:64,\
+                             lengths=heavy:16:8:512,interactive=0.4",
+                        )
+                        .unwrap(),
+                    ),
+            ),
+            Scenario::Custom(
+                CustomParams::default()
+                    .with_label("ablation: wider LUT")
+                    .with_param("lut_sections", "128")
+                    .with_param("note", "hand-run on 2026-08-08"),
+            ),
         ];
         let text = suite_to_toml(&scenarios);
         let parsed = parse_suite(&text).unwrap();
         assert_eq!(parsed, scenarios);
+    }
+
+    #[test]
+    fn workload_specs_round_trip_exactly_through_suite_files() {
+        // The canonical render is the serialization form; parse must
+        // invert it byte-for-byte (floats use shortest round-trip).
+        for s in [
+            "at-once,sessions=8",
+            "jittered:0.05,sessions=8",
+            "poisson:212.5,sessions=3,interactive=0.25",
+            "bursty:8:4,multiturn=2:0.1,prefix=64:2:32,lengths=heavy:16:8:512",
+        ] {
+            let spec = WorkloadSpec::parse(s).unwrap();
+            let toml = Scenario::Serve(
+                ServeParams::default().with_workload_spec(spec.clone()),
+            )
+            .to_toml();
+            let parsed = parse_suite(&toml).unwrap();
+            let Scenario::Serve(p) = &parsed[0] else {
+                panic!("serve expected");
+            };
+            assert_eq!(p.workload.as_ref(), Some(&spec));
+            assert_eq!(p.workload.as_ref().unwrap().render(), s);
+        }
+        // Bad specs carry the workload parser's message with the line.
+        let err =
+            parse_suite("[[scenario]]\nkind = \"serve\"\nworkload = \"warp:9\"\n").unwrap_err();
+        match err {
+            ScenarioError::Parse { line, msg } => {
+                assert_eq!(line, 3);
+                assert!(msg.contains("arrival token"), "{msg}");
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(
+            parse_suite("[[scenario]]\nkind = \"serve\"\nprefix_cache = \"tree\"\n").is_err()
+        );
     }
 
     #[test]

@@ -23,7 +23,10 @@ pub use runner::Runner;
 
 use crate::config::parse::{apply_overrides, ConfigError};
 use crate::config::SimConfig;
-use crate::serve::{BackendKind, EngineCore, EvictPolicy, FabricKind, KvPolicy, Policy, Routing};
+use crate::serve::{
+    BackendKind, EngineCore, EvictPolicy, FabricKind, KvPolicy, Policy, PrefixCacheMode, Routing,
+    WorkloadSpec,
+};
 
 /// Scenario-layer failure.
 #[derive(Debug, thiserror::Error)]
@@ -356,6 +359,14 @@ pub struct ServeParams {
     /// Decode-pool size for the disagg engine (`--decode-pool`);
     /// `None` falls back to the remaining devices (at least 1).
     pub decode_pool: Option<usize>,
+    /// Typed workload description (`--workload` / `workload` key).
+    /// `None` desugars the legacy `at_once`/`rate`/`burst`/`n_sessions`
+    /// knobs through [`WorkloadSpec::from_legacy`] — bit-identical to
+    /// the historical generator.
+    pub workload: Option<WorkloadSpec>,
+    /// Cross-session KV prefix caching mode (`--prefix-cache
+    /// session|radix`; paged KV only).
+    pub prefix_cache: PrefixCacheMode,
 }
 
 impl Default for ServeParams {
@@ -386,6 +397,8 @@ impl Default for ServeParams {
             fabric: FabricKind::default(),
             prefill_pool: None,
             decode_pool: None,
+            workload: None,
+            prefix_cache: PrefixCacheMode::Session,
         }
     }
 }
@@ -485,6 +498,19 @@ impl ServeParams {
         self
     }
 
+    /// Attach a typed workload spec; overrides the legacy
+    /// `at_once`/`rate`/`burst` knobs when set. (Named `_spec` because
+    /// [`ServeParams::with_workload`] historically sets count + seed.)
+    pub fn with_workload_spec(mut self, spec: WorkloadSpec) -> Self {
+        self.workload = Some(spec);
+        self
+    }
+
+    pub fn with_prefix_cache(mut self, mode: PrefixCacheMode) -> Self {
+        self.prefix_cache = mode;
+        self
+    }
+
     /// Size the disagg engine's pools explicitly (`--prefill-pool` /
     /// `--decode-pool`); unset sides derive from `devices`.
     pub fn with_pools(mut self, prefill: Option<usize>, decode: Option<usize>) -> Self {
@@ -506,12 +532,13 @@ impl ServeParams {
     }
 }
 
-/// Parse a policy token (`fcfs|sjf|spf`).
+/// Parse a policy token (`fcfs|sjf|spf|priority`).
 pub fn parse_policy(s: &str) -> Option<Policy> {
     match s {
         "fcfs" => Some(Policy::Fcfs),
         "sjf" => Some(Policy::ShortestJobFirst),
         "spf" => Some(Policy::ShortestPromptFirst),
+        "priority" => Some(Policy::Priority),
         _ => None,
     }
 }
@@ -535,6 +562,38 @@ pub fn route_token(r: Routing) -> &'static str {
     }
 }
 
+/// Free-form escape hatch (`kind = custom` in suite files): arbitrary
+/// `param.<key> = <value>` pairs carried through the pipeline verbatim.
+/// The runner resolves the config (validating it), reports numeric
+/// parameter values as informational metrics and records every pair in
+/// provenance — so ad-hoc experiment notes ride the same BENCH/bench-diff
+/// machinery without a dedicated scenario variant.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct CustomParams {
+    pub config: ConfigSel,
+    /// Experiment label (`label` key); names the outcome.
+    pub label: String,
+    /// `param.<key>` pairs, in file order.
+    pub params: Vec<(String, String)>,
+}
+
+impl CustomParams {
+    pub fn with_config(mut self, config: ConfigSel) -> Self {
+        self.config = config;
+        self
+    }
+
+    pub fn with_label(mut self, label: &str) -> Self {
+        self.label = label.to_string();
+        self
+    }
+
+    pub fn with_param(mut self, key: &str, value: &str) -> Self {
+        self.params.push((key.to_string(), value.to_string()));
+        self
+    }
+}
+
 /// A declarative experiment.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Scenario {
@@ -544,6 +603,7 @@ pub enum Scenario {
     Power(PowerParams),
     Area(AreaParams),
     Serve(ServeParams),
+    Custom(CustomParams),
 }
 
 impl Scenario {
@@ -556,6 +616,7 @@ impl Scenario {
             Scenario::Power(_) => "power",
             Scenario::Area(_) => "area",
             Scenario::Serve(_) => "serve",
+            Scenario::Custom(_) => "custom",
         }
     }
 
@@ -569,6 +630,7 @@ impl Scenario {
             Scenario::Power(_) => "fig15",
             Scenario::Area(_) => "tab03",
             Scenario::Serve(_) => "serve",
+            Scenario::Custom(_) => "custom",
         }
     }
 
@@ -581,6 +643,7 @@ impl Scenario {
             Scenario::Power(p) => &p.config,
             Scenario::Area(p) => &p.config,
             Scenario::Serve(p) => &p.config,
+            Scenario::Custom(p) => &p.config,
         }
     }
 }
@@ -641,7 +704,9 @@ mod tests {
             .with_rate(Some(200.0), Some(4))
             .with_engine_core(EngineCore::Legacy)
             .with_fabric(FabricKind::Nvlink)
-            .with_pools(Some(1), Some(3));
+            .with_pools(Some(1), Some(3))
+            .with_prefix_cache(PrefixCacheMode::Radix)
+            .with_workload_spec(WorkloadSpec::parse("poisson:100,sessions=4").unwrap());
         assert_eq!(s.engine, EngineKind::Cluster);
         assert_eq!(s.devices, 2);
         assert_eq!(s.rate, Some(200.0));
@@ -652,7 +717,14 @@ mod tests {
         assert_eq!(s.kv_block, Some(16));
         assert_eq!(s.kv_units, Some(64));
         assert_eq!(s.engine_core, EngineCore::Legacy);
+        assert_eq!(s.prefix_cache, PrefixCacheMode::Radix);
+        assert_eq!(
+            s.workload.as_ref().unwrap().render(),
+            "poisson:100,sessions=4"
+        );
         assert_eq!(ServeParams::default().engine_core, EngineCore::Event);
+        assert_eq!(ServeParams::default().workload, None);
+        assert_eq!(ServeParams::default().prefix_cache, PrefixCacheMode::Session);
         let sweep = ServeParams::default().with_sweep(vec![100.0]);
         assert!(sweep.sweep);
         assert_eq!(sweep.loads, vec![100.0]);
@@ -667,23 +739,29 @@ mod tests {
             Scenario::Power(PowerParams::default()),
             Scenario::Area(AreaParams::default()),
             Scenario::Serve(ServeParams::default()),
+            Scenario::Custom(CustomParams::default()),
         ];
         let kinds: Vec<&str> = all.iter().map(|s| s.kind()).collect();
         assert_eq!(
             kinds,
-            vec!["simulate", "sweep", "breakdown", "power", "area", "serve"]
+            vec!["simulate", "sweep", "breakdown", "power", "area", "serve", "custom"]
         );
         let tags: Vec<&str> = all.iter().map(|s| s.bench_tag()).collect();
         assert_eq!(
             tags,
-            vec!["simulate", "fig11", "fig03", "fig15", "tab03", "serve"]
+            vec!["simulate", "fig11", "fig03", "fig15", "tab03", "serve", "custom"]
         );
         assert_eq!(all[0].config().preset, "paper");
     }
 
     #[test]
     fn token_parsers_round_trip() {
-        for p in [Policy::Fcfs, Policy::ShortestJobFirst, Policy::ShortestPromptFirst] {
+        for p in [
+            Policy::Fcfs,
+            Policy::ShortestJobFirst,
+            Policy::ShortestPromptFirst,
+            Policy::Priority,
+        ] {
             assert_eq!(parse_policy(p.name()), Some(p));
         }
         for r in [

@@ -7,18 +7,17 @@
 //! implementation mirrors the paper experiment it reproduces.
 
 use super::outcome::{Outcome, Provenance};
-use super::{EngineKind, Scenario, ScenarioError, ServeParams};
+use super::{CustomParams, EngineKind, Scenario, ScenarioError, ServeParams};
 use crate::baseline::GpuModel;
 use crate::config::SimConfig;
 use crate::coordinator::{Coordinator, PrefillTarget};
 use crate::energy::{AreaModel, EnergyParams, PowerReport};
 use crate::mapper::GenerationSim;
 use crate::serve::sweep::{latency_vs_load, SweepConfig};
-use crate::serve::workload::{requests_from_items, ArrivalPattern};
 use crate::serve::{
-    BackendKind, Cluster, DeviceEngine, DisaggregatedCluster, Fabric, KvPolicy, ServeMetrics,
+    BackendKind, Cluster, Completion, DeviceEngine, DisaggregatedCluster, Fabric, KvPolicy,
+    PrefixCacheMode, ServeMetrics, SloClass, WorkloadSpec,
 };
-use crate::testutil::RequestMix;
 use crate::trace::{PhaseProfile, TraceEvent, TraceHandle};
 use std::time::{Duration, Instant};
 
@@ -102,6 +101,7 @@ impl Runner {
             Scenario::Power(p) => run_power(&cfg, provenance, p, deadline, &mut aux)?,
             Scenario::Area(_) => run_area(&cfg, provenance),
             Scenario::Serve(p) => run_serve(&cfg, provenance, p, deadline, capture, &mut aux)?,
+            Scenario::Custom(p) => run_custom(provenance, p),
         };
         if aux.truncated {
             out.provenance.truncated = true;
@@ -354,30 +354,77 @@ fn serve_metrics(out: &mut Outcome, m: &ServeMetrics) {
     }
 }
 
-fn arrival_pattern(p: &ServeParams) -> Result<ArrivalPattern, ScenarioError> {
-    if p.at_once {
-        return Ok(ArrivalPattern::AtOnce);
+/// The effective workload spec: the typed `workload` field when set,
+/// else the legacy `at_once`/`rate`/`burst`/`n_sessions` knobs desugared
+/// through [`WorkloadSpec::from_legacy`] — same validation errors, same
+/// bytes out (pinned by test).
+fn workload_spec(p: &ServeParams) -> Result<WorkloadSpec, ScenarioError> {
+    match &p.workload {
+        Some(spec) => Ok(spec.clone()),
+        None => WorkloadSpec::from_legacy(p.at_once, p.rate, p.burst, p.n_sessions)
+            .map_err(ScenarioError::Unsupported),
     }
-    match (p.rate, p.burst) {
-        (None, None) => Ok(ArrivalPattern::Jittered { scale_s: 0.05 }),
-        (None, Some(_)) => Err(ScenarioError::Unsupported(
-            "`burst` needs `rate` (bursty arrivals are Poisson bursts)".to_string(),
-        )),
-        (Some(rate), burst) => {
-            if rate <= 0.0 {
-                return Err(ScenarioError::Unsupported(format!(
-                    "arrival rate must be positive, got {rate}"
-                )));
-            }
-            Ok(match burst {
-                Some(b) => ArrivalPattern::Bursty {
-                    rate_rps: rate,
-                    burst: b,
-                },
-                None => ArrivalPattern::Poisson { rate_rps: rate },
-            })
+}
+
+/// Per-SLO-class percentiles and radix prefix-cache stats. Both are
+/// conditional — legacy workloads (no interactive traffic, session-mode
+/// prefix cache) keep the historical metric set byte-for-byte, so
+/// bench-diff baselines stay stable.
+fn class_metrics(out: &mut Outcome, done: &[Completion], p: &ServeParams, m: &ServeMetrics) {
+    let interactive: Vec<Completion> = done
+        .iter()
+        .filter(|c| c.slo == SloClass::Interactive)
+        .cloned()
+        .collect();
+    if !interactive.is_empty() {
+        let batch: Vec<Completion> = done
+            .iter()
+            .filter(|c| c.slo == SloClass::Batch)
+            .cloned()
+            .collect();
+        let im = ServeMetrics::from_completions(&interactive);
+        out.metric("interactive_requests", interactive.len(), None);
+        out.metric("interactive_p50_latency", im.p50_latency_s, Some("s"));
+        out.metric("interactive_p95_latency", im.p95_latency_s, Some("s"));
+        out.metric("interactive_p50_ttft", im.p50_ttft_s, Some("s"));
+        out.metric("interactive_p95_ttft", im.p95_ttft_s, Some("s"));
+        out.metric("batch_requests", batch.len(), None);
+        if !batch.is_empty() {
+            let bm = ServeMetrics::from_completions(&batch);
+            out.metric("batch_p95_latency", bm.p95_latency_s, Some("s"));
         }
     }
+    if p.prefix_cache == PrefixCacheMode::Radix {
+        let prompt_tokens: usize = done.iter().map(|c| c.prompt_len).sum();
+        let rate = if prompt_tokens > 0 {
+            m.prefix_reused_tokens as f64 / prompt_tokens as f64
+        } else {
+            0.0
+        };
+        out.metric("prefix_hits", m.prefix_hits, None);
+        out.metric("prefix_reused_tokens", m.prefix_reused_tokens, None);
+        out.metric("prefix_cache_hit_rate", rate, Some("frac"));
+    }
+}
+
+/// The [`Scenario::Custom`] escape hatch: no simulation, just the
+/// resolved config validation (done by the caller) plus the free-form
+/// parameters — numeric values become informational metrics, every pair
+/// rides in provenance.
+fn run_custom(provenance: Provenance, p: &CustomParams) -> Outcome {
+    let title = if p.label.is_empty() {
+        "custom — ad-hoc experiment record".to_string()
+    } else {
+        format!("custom — {}", p.label)
+    };
+    let mut out = Outcome::new(&title, provenance);
+    out.metric("params", p.params.len(), None);
+    for (k, v) in &p.params {
+        if let Ok(x) = v.parse::<f64>() {
+            out.metric(k, x, None);
+        }
+    }
+    out
 }
 
 fn run_serve(
@@ -410,6 +457,11 @@ fn run_serve(
                 .to_string(),
         ));
     }
+    if p.prefix_cache == PrefixCacheMode::Radix && p.kv_policy != KvPolicy::Paged {
+        return Err(ScenarioError::Unsupported(
+            "prefix_cache radix shares KV blocks; it needs kv_policy paged".to_string(),
+        ));
+    }
     if p.sweep {
         if p.engine == EngineKind::Disagg {
             return Err(ScenarioError::Unsupported(
@@ -417,11 +469,17 @@ fn run_serve(
                     .to_string(),
             ));
         }
+        if p.workload.is_some() || p.prefix_cache != PrefixCacheMode::Session {
+            return Err(ScenarioError::Unsupported(
+                "the load sweep drives its own Poisson arrivals; workload specs and the \
+                 radix prefix cache apply to single serve runs"
+                    .to_string(),
+            ));
+        }
         return run_serve_sweep(cfg, provenance, p, deadline, aux);
     }
-    let pattern = arrival_pattern(p)?;
-    let items = RequestMix::paper(p.seed).take(p.requests);
-    let requests = requests_from_items(&items, pattern, p.n_sessions);
+    let spec = workload_spec(p)?;
+    let requests = spec.generate(p.seed, p.requests);
 
     match p.engine {
         EngineKind::Seq => {
@@ -445,17 +503,19 @@ fn run_serve(
             for r in requests {
                 coord.submit_request(r);
             }
-            let m = ServeMetrics::from_completions(&coord.run());
+            let done = coord.run();
+            let m = ServeMetrics::from_completions(&done);
             let mut out = Outcome::new(
                 &format!(
                     "serve — engine=seq policy={} offload={} arrivals={}",
                     p.policy.name(),
                     p.offload,
-                    pattern.name()
+                    spec.arrival_name()
                 ),
                 provenance,
             );
             serve_metrics(&mut out, &m);
+            class_metrics(&mut out, &done, p, &m);
             Ok(out)
         }
         EngineKind::Batch => {
@@ -471,7 +531,8 @@ fn run_serve(
                 .with_core(p.engine_core)
                 .with_prefill_chunk(p.prefill_chunk)
                 .with_kv_policy(p.kv_policy)
-                .with_evict(p.evict);
+                .with_evict(p.evict)
+                .with_prefix_cache(p.prefix_cache);
             if let Some(b) = p.kv_block {
                 eng = eng.with_kv_block(b);
             }
@@ -492,7 +553,8 @@ fn run_serve(
                 eng.submit(r);
             }
             let backend_name = eng.backend_name();
-            let mut m = ServeMetrics::from_completions(&eng.run());
+            let done = eng.run();
+            let mut m = ServeMetrics::from_completions(&done);
             let rep = eng.report();
             m.absorb_reports(std::slice::from_ref(&rep));
             aux.truncated |= rep.truncated;
@@ -511,11 +573,12 @@ fn run_serve(
                         None => "inline".to_string(),
                     },
                     p.kv_policy.name(),
-                    pattern.name()
+                    spec.arrival_name()
                 ),
                 provenance,
             );
             serve_metrics(&mut out, &m);
+            class_metrics(&mut out, &done, p, &m);
             out.metric("kv_policy", p.kv_policy.name(), None);
             out.metric("kv_peak_utilization", rep.kv_peak_utilization, Some("frac"));
             out.metric("max_batch_seen", rep.max_batch_seen, None);
@@ -539,7 +602,7 @@ fn run_serve(
                     .with_policy(p.policy)
                     .with_core(p.engine_core)
                     .with_prefill_chunk(p.prefill_chunk)
-                    .with_kv(p.kv_policy, p.evict, p.kv_block, p.kv_units);
+                    .with_kv(p.kv_policy, p.evict, p.prefix_cache, p.kv_block, p.kv_units);
             // One host link shared by every device's swap traffic.
             cluster.set_fabric(Fabric::shared(p.fabric.params()));
             let trace = capture_trace.then(TraceHandle::new);
@@ -570,11 +633,12 @@ fn run_serve(
                     p.max_batch,
                     p.route.name(),
                     p.kv_policy.name(),
-                    pattern.name()
+                    spec.arrival_name()
                 ),
                 provenance,
             );
             serve_metrics(&mut out, &m);
+            class_metrics(&mut out, &done, p, &m);
             out.metric("kv_policy", p.kv_policy.name(), None);
             out.metric("mean_decode_batch", m.mean_decode_batch, None);
             out.metric("preemptions", m.preemptions, None);
@@ -627,7 +691,7 @@ fn run_serve(
             .with_policy(p.policy)
             .with_core(p.engine_core)
             .with_prefill_chunk(p.prefill_chunk)
-            .with_kv(p.kv_policy, p.evict, p.kv_block, p.kv_units);
+            .with_kv(p.kv_policy, p.evict, p.prefix_cache, p.kv_block, p.kv_units);
             let trace = capture_trace.then(TraceHandle::new);
             if let Some(t) = &trace {
                 cluster.set_trace(t.clone());
@@ -656,11 +720,12 @@ fn run_serve(
                     p.fabric.name(),
                     p.kv_policy.name(),
                     p.evict.name(),
-                    pattern.name()
+                    spec.arrival_name()
                 ),
                 provenance,
             );
             serve_metrics(&mut out, &m);
+            class_metrics(&mut out, &done, p, &m);
             out.metric("kv_policy", p.kv_policy.name(), None);
             out.metric("migrated_bytes", migrated_bytes, Some("B"));
             out.metric("fabric_transfers", fabric_transfers, None);
@@ -1084,5 +1149,84 @@ mod tests {
             .with_engine(EngineKind::Disagg)
             .with_sweep(vec![10.0]);
         assert!(Runner::new().run(&Scenario::Serve(sweep_disagg)).is_err());
+        let radix_whole = ServeParams::default()
+            .with_engine(EngineKind::Batch)
+            .with_prefix_cache(PrefixCacheMode::Radix);
+        assert!(Runner::new().run(&Scenario::Serve(radix_whole)).is_err());
+        let sweep_spec = ServeParams::default()
+            .with_cluster(1, 4)
+            .with_sweep(vec![10.0])
+            .with_workload_spec(WorkloadSpec::parse("at-once").unwrap());
+        assert!(Runner::new().run(&Scenario::Serve(sweep_spec)).is_err());
+    }
+
+    #[test]
+    fn legacy_flags_and_their_spec_desugaring_are_bit_identical() {
+        // The deprecated `--rate/--burst` cluster and the equivalent
+        // `--workload` string must produce byte-identical outcomes.
+        let legacy = ServeParams::default()
+            .with_config(mini())
+            .with_engine(EngineKind::Batch)
+            .with_workload(8, 11)
+            .with_rate(Some(200.0), Some(4));
+        let typed = legacy
+            .clone()
+            .with_workload_spec(WorkloadSpec::parse("bursty:200:4,sessions=8").unwrap());
+        let a = Runner::new().run(&Scenario::Serve(legacy)).unwrap();
+        let b = Runner::new().run(&Scenario::Serve(typed)).unwrap();
+        assert_eq!(a.metrics, b.metrics, "desugaring must not change a byte");
+    }
+
+    #[test]
+    fn radix_prefix_cache_reports_hit_rate_through_the_scenario_api() {
+        use crate::serve::KvPolicy;
+        let spec =
+            WorkloadSpec::parse("poisson:20,multiturn=2:0.1,prefix=64:1:32,interactive=1")
+                .unwrap();
+        let base = ServeParams::default()
+            .with_config(mini())
+            .with_engine(EngineKind::Batch)
+            .with_kv_policy(KvPolicy::Paged)
+            .with_workload(4, 11)
+            .with_workload_spec(spec);
+        let session = Runner::new().run(&Scenario::Serve(base.clone())).unwrap();
+        let radix = Runner::new()
+            .run(&Scenario::Serve(
+                base.with_prefix_cache(PrefixCacheMode::Radix),
+            ))
+            .unwrap();
+        // Session mode keeps the legacy metric set; radix adds the
+        // prefix-cache stats and actually shares the common chain.
+        assert_eq!(session.metric_f64("prefix_hits"), None);
+        assert!(radix.metric_f64("prefix_hits").unwrap() > 0.0);
+        assert!(radix.metric_f64("prefix_cache_hit_rate").unwrap() > 0.0);
+        // SLO classes surface per-class percentiles (all-interactive
+        // traffic here).
+        assert!(radix.metric_f64("interactive_p95_ttft").is_some());
+        assert_eq!(
+            radix.metric_f64("interactive_requests"),
+            radix.metric_f64("requests"),
+        );
+        // Sharing must not change the simulated token budget.
+        assert_eq!(
+            session.metric_f64("total_tokens"),
+            radix.metric_f64("total_tokens"),
+            "token conservation across prefix-cache modes"
+        );
+    }
+
+    #[test]
+    fn custom_scenarios_report_numeric_params_as_metrics() {
+        let c = CustomParams::default()
+            .with_config(mini())
+            .with_label("ablation notes")
+            .with_param("alpha", "1.5")
+            .with_param("corpus", "wikitext");
+        let out = Runner::new().run(&Scenario::Custom(c)).unwrap();
+        assert_eq!(out.provenance.scenario, "custom");
+        assert_eq!(out.metric_f64("params"), Some(2.0));
+        assert_eq!(out.metric_f64("alpha"), Some(1.5));
+        assert_eq!(out.metric_f64("corpus"), None, "non-numeric stays provenance-only");
+        assert!(!Runner::traceable(&Scenario::Custom(CustomParams::default())));
     }
 }

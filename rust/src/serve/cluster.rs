@@ -15,7 +15,7 @@
 use super::backend::BackendKind;
 use super::engine::{DeviceEngine, EngineCore, EngineReport};
 use super::fabric::{Fabric, FabricParams, SharedFabric};
-use super::kv_cache::{EvictPolicy, KvPolicy};
+use super::kv_cache::{EvictPolicy, KvPolicy, PrefixCacheMode};
 use super::metrics::ServeMetrics;
 use super::policy::Policy;
 use super::types::{Completion, Request};
@@ -143,17 +143,19 @@ impl Cluster {
     }
 
     /// Apply one KV configuration to every device: allocation policy,
-    /// eviction policy, paged block-size override and a KV-region size
-    /// override in allocation units (see the [`DeviceEngine`] builders).
+    /// eviction policy, prefix-cache mode, paged block-size override and
+    /// a KV-region size override in allocation units (see the
+    /// [`DeviceEngine`] builders).
     pub fn with_kv(
         mut self,
         policy: KvPolicy,
         evict: EvictPolicy,
+        prefix: PrefixCacheMode,
         block: Option<usize>,
         units: Option<usize>,
     ) -> Self {
         for d in &mut self.devices {
-            d.apply_kv(policy, evict, block, units);
+            d.apply_kv(policy, evict, prefix, block, units);
         }
         self
     }
@@ -390,11 +392,12 @@ impl DisaggregatedCluster {
         mut self,
         policy: KvPolicy,
         evict: EvictPolicy,
+        prefix: PrefixCacheMode,
         block: Option<usize>,
         units: Option<usize>,
     ) -> Self {
         for d in &mut self.decode {
-            d.apply_kv(policy, evict, block, units);
+            d.apply_kv(policy, evict, prefix, block, units);
         }
         self
     }
@@ -547,6 +550,8 @@ impl DisaggregatedCluster {
                 max_new_tokens: orig.max_new_tokens,
                 arrival_s: arrival2,
                 session: orig.session,
+                slo: orig.slo,
+                prefix: orig.prefix,
             });
             first.insert(c.id, (c, dt));
         }
@@ -580,6 +585,7 @@ impl DisaggregatedCluster {
                     + (s2.queue_s + s2.prefill_s + s2.decode_s),
                 finish_s: s2.finish_s,
                 device: s2.device,
+                slo: s2.slo,
             });
         }
         all.sort_by(|a, b| a.finish_s.total_cmp(&b.finish_s));
@@ -644,6 +650,8 @@ mod tests {
             max_new_tokens: 8,
             arrival_s: at,
             session,
+            slo: crate::serve::types::SloClass::Batch,
+            prefix: Vec::new(),
         }
     }
 
@@ -683,6 +691,7 @@ mod tests {
         let mut c = Cluster::new(&cfg, 2, 4, Routing::RoundRobin).with_kv(
             KvPolicy::Paged,
             EvictPolicy::Lru,
+            PrefixCacheMode::Session,
             None,
             Some(64),
         );
@@ -734,7 +743,13 @@ mod tests {
         let cfg = SimConfig::paper();
         let run = |core: EngineCore| {
             let mut c = Cluster::new(&cfg, 2, 4, Routing::SessionAffinity)
-                .with_kv(KvPolicy::Paged, EvictPolicy::Lru, None, Some(64))
+                .with_kv(
+                    KvPolicy::Paged,
+                    EvictPolicy::Lru,
+                    PrefixCacheMode::Session,
+                    None,
+                    Some(64),
+                )
                 .with_core(core);
             for i in 0..8 {
                 c.submit(req(i, i % 3, 0.01 * i as f64));

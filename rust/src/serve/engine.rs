@@ -66,10 +66,10 @@
 
 use super::backend::{DeviceCapacity, ExecutionBackend, SalPimBackend};
 use super::fabric::{Fabric, FabricParams, SharedFabric};
-use super::kv_cache::{EvictPolicy, KvPolicy, KvPool, PoolLease};
+use super::kv_cache::{EvictPolicy, KvPolicy, KvPool, PoolLease, PrefixCacheMode};
 use super::metrics::ServeMetrics;
 use super::policy::Policy;
-use super::types::{Completion, Request};
+use super::types::{Completion, Request, SloClass};
 use crate::config::SimConfig;
 use crate::trace::{PhaseProfile, TraceEventKind, TraceHandle};
 use std::cmp::Reverse;
@@ -197,6 +197,14 @@ pub struct EngineReport {
     pub reuse_hits: usize,
     /// Prompt tokens whose prefill was skipped via session reuse.
     pub reuse_tokens: usize,
+    /// Admissions that reused a radix prefix-tree chain (cross-session;
+    /// 0 outside `--prefix-cache radix`).
+    pub prefix_hits: usize,
+    /// Prompt tokens whose prefill the radix tree skipped (disjoint
+    /// from `reuse_tokens`, which counts session-residency reuse).
+    pub prefix_reused_tokens: usize,
+    /// Prefix-tree nodes evicted under pressure.
+    pub prefix_nodes_evicted: usize,
     /// Preempted KV states spilled to the host buffer (`--evict swap`).
     pub swap_outs: usize,
     /// Readmissions that restored KV from the host buffer instead of
@@ -271,6 +279,7 @@ pub struct DeviceEngine {
     pub core: EngineCore,
     kv_policy: KvPolicy,
     evict: EvictPolicy,
+    prefix_cache: PrefixCacheMode,
     kv_block: Option<usize>,
     kv_units: Option<usize>,
     pending: Vec<Request>,
@@ -329,10 +338,11 @@ impl DeviceEngine {
         let capacity = backend.capacity();
         let kv_policy = KvPolicy::Whole;
         let evict = EvictPolicy::Lru;
+        let prefix_cache = PrefixCacheMode::Session;
         DeviceEngine {
             backend,
             capacity,
-            kv: KvPool::for_capacity(&capacity, kv_policy, evict, None, None),
+            kv: KvPool::for_capacity(&capacity, kv_policy, evict, prefix_cache, None, None),
             policy: Policy::Fcfs,
             max_batch,
             device_index: 0,
@@ -340,6 +350,7 @@ impl DeviceEngine {
             core: EngineCore::Event,
             kv_policy,
             evict,
+            prefix_cache,
             kv_block: None,
             kv_units: None,
             pending: Vec::new(),
@@ -386,6 +397,7 @@ impl DeviceEngine {
             &self.capacity,
             self.kv_policy,
             self.evict,
+            self.prefix_cache,
             self.kv_block,
             self.kv_units,
         );
@@ -431,6 +443,15 @@ impl DeviceEngine {
         self
     }
 
+    /// Select the cross-session sharing discipline (`--prefix-cache`):
+    /// [`PrefixCacheMode::Radix`] lets requests carrying a prefix path
+    /// share tree-node-owned blocks across sessions.
+    pub fn with_prefix_cache(mut self, mode: PrefixCacheMode) -> Self {
+        self.prefix_cache = mode;
+        self.rebuild_pool();
+        self
+    }
+
     /// Override the paged block size in tokens (`--kv-block`).
     pub fn with_kv_block(mut self, tokens: usize) -> Self {
         assert!(tokens >= 1, "a KV block holds at least one token");
@@ -454,11 +475,13 @@ impl DeviceEngine {
         &mut self,
         policy: KvPolicy,
         evict: EvictPolicy,
+        prefix: PrefixCacheMode,
         block: Option<usize>,
         units: Option<usize>,
     ) {
         self.kv_policy = policy;
         self.evict = evict;
+        self.prefix_cache = prefix;
         self.kv_block = block;
         if units.is_some() {
             self.kv_units = units;
@@ -819,7 +842,8 @@ impl DeviceEngine {
                             .try_admit_migrated(id, session, prompt_len, window)
                             .map(|lease| (lease, 0))
                     } else {
-                        self.kv.try_admit(id, session, prompt_len, window)
+                        self.kv
+                            .try_admit(id, session, prompt_len, window, &waiting[idx].prefix)
                     };
                     match grant {
                         Some((lease, reused)) => {
@@ -904,9 +928,25 @@ impl DeviceEngine {
             // Advance one prefill chunk per still-prefilling request
             // (the device time-shares chunks at token boundaries). The
             // event core skips the walk while nothing is summarizing.
+            // Under the priority policy, interactive requests' chunks
+            // run before batch requests' chunks (prefill-chunk
+            // priority: their first token lands earlier at the same
+            // total simulated cost); otherwise a single pass preserves
+            // the historical slot order bit-for-bit.
             if let Some(chunk) = self.prefill_chunk {
                 if !fast || prefilling > 0 {
+                    let passes: &[Option<SloClass>] = if self.policy == Policy::Priority {
+                        &[Some(SloClass::Interactive), Some(SloClass::Batch)]
+                    } else {
+                        &[None]
+                    };
+                    for pass in passes {
                     for a in active.iter_mut() {
+                        if let Some(class) = pass {
+                            if a.req.slo != *class {
+                                continue;
+                            }
+                        }
                         if !a.prefilling() {
                             continue;
                         }
@@ -935,6 +975,7 @@ impl DeviceEngine {
                                 )));
                             }
                         }
+                    }
                     }
                 }
             }
@@ -1138,6 +1179,7 @@ impl DeviceEngine {
                         decode_s: self.clock_s - a.decode_start_s,
                         finish_s: self.clock_s,
                         device: self.device_index,
+                        slo: a.req.slo,
                     });
                     self.kv.release(a.lease);
                 } else {
@@ -1174,6 +1216,9 @@ impl DeviceEngine {
             recompute_tokens: self.recompute_tokens,
             reuse_hits: self.kv.reuse_hits(),
             reuse_tokens: self.kv.reuse_tokens(),
+            prefix_hits: self.kv.prefix_hits(),
+            prefix_reused_tokens: self.kv.prefix_reused_tokens(),
+            prefix_nodes_evicted: self.kv.prefix_nodes_evicted(),
             swap_outs: self.swap_outs,
             swap_ins: self.swap_ins,
             swapped_bytes: self.swapped_bytes,
@@ -1201,6 +1246,8 @@ mod tests {
             max_new_tokens: out,
             arrival_s: at,
             session: id,
+            slo: SloClass::Batch,
+            prefix: Vec::new(),
         }
     }
 
@@ -1451,6 +1498,70 @@ mod tests {
             assert_eq!(a.decode_s.to_bits(), b.decode_s.to_bits());
             assert_eq!(a.finish_s.to_bits(), b.finish_s.to_bits());
         }
+    }
+
+    #[test]
+    fn radix_prefix_cache_beats_session_reuse_across_sessions() {
+        // Ten distinct sessions share a system prompt. Session
+        // residency cannot help (each session is cold); the radix tree
+        // prefills the shared prefix once and reuses it nine times.
+        use crate::serve::types::PrefixSeg;
+        let cfg = SimConfig::paper();
+        let run = |mode: PrefixCacheMode| {
+            let mut e = DeviceEngine::new(&cfg, 4)
+                .with_kv_policy(KvPolicy::Paged)
+                .with_prefix_cache(mode);
+            for i in 0..10u64 {
+                let mut r = req(i, 96, 4, i as f64 * 0.5);
+                r.session = 100 + i;
+                r.prefix = vec![PrefixSeg { id: 1, tokens: 64 }];
+                e.submit(r);
+            }
+            let done = e.run();
+            assert_eq!(done.len(), 10);
+            (done, e.report())
+        };
+        let (sess_done, sess_rep) = run(PrefixCacheMode::Session);
+        let (radix_done, radix_rep) = run(PrefixCacheMode::Radix);
+        assert_eq!(sess_rep.prefix_hits, 0);
+        assert_eq!(radix_rep.prefix_hits, 9, "nine warm admissions");
+        assert_eq!(radix_rep.prefix_reused_tokens, 9 * 64);
+        // Token conservation: reuse skips *prefill work*, never output.
+        for (a, b) in sess_done.iter().zip(&radix_done) {
+            assert_eq!(a.tokens_simulated, b.tokens_simulated);
+        }
+        // And the skipped prefill shows up as wall-clock time.
+        let span = |d: &[Completion]| {
+            d.iter().map(|c| c.finish_s).fold(0.0f64, f64::max)
+        };
+        assert!(
+            span(&radix_done) < span(&sess_done),
+            "radix {} !< session {}",
+            span(&radix_done),
+            span(&sess_done)
+        );
+    }
+
+    #[test]
+    fn priority_policy_cuts_interactive_ttft() {
+        // A burst of batch work arrives just before an interactive
+        // request; under FCFS the interactive one waits its turn, under
+        // the priority policy it jumps the queue.
+        let cfg = SimConfig::paper();
+        let run = |policy: Policy| {
+            let mut e = DeviceEngine::new(&cfg, 1).with_policy(policy);
+            for i in 0..4u64 {
+                e.submit(req(i, 64, 16, 0.0));
+            }
+            let mut hot = req(9, 32, 8, 0.01);
+            hot.slo = SloClass::Interactive;
+            e.submit(hot);
+            let done = e.run();
+            done.iter().find(|c| c.id == 9).unwrap().ttft_s()
+        };
+        let fcfs = run(Policy::Fcfs);
+        let prio = run(Policy::Priority);
+        assert!(prio < fcfs, "priority {prio} !< fcfs {fcfs}");
     }
 
     #[test]

@@ -24,10 +24,22 @@
 //!   active request (recompute-on-readmit; see
 //!   [`crate::serve::DeviceEngine`]).
 //!
+//! On top of the paged discipline sits the cross-session **radix
+//! prefix cache** (`--prefix-cache radix`): requests carrying a
+//! [`PrefixSeg`] path (root system prompt → group template) share
+//! *tree-node-owned* blocks. Nodes own their blocks (block-aligned per
+//! node — a documented idealization of sub-block sharing), live leases
+//! hold references along their path, and eviction walks unreferenced
+//! leaves first (references propagate rootward, so a node with zero
+//! references has no live lease anywhere beneath it — eviction can
+//! never free a block a live request depends on). The default
+//! [`PrefixCacheMode::Session`] keeps PR 4 behavior bit-identical.
+//!
 //! [`KvPool`] wraps both behind the engine-facing vocabulary so the
 //! scheduler is policy-agnostic.
 
 use super::backend::DeviceCapacity;
+use super::types::PrefixSeg;
 use crate::config::SimConfig;
 use crate::trace::{TraceEventKind, TraceHandle};
 use std::collections::{BTreeMap, HashMap};
@@ -105,6 +117,38 @@ impl EvictPolicy {
             EvictPolicy::None => "none",
             EvictPolicy::Lru => "lru",
             EvictPolicy::Swap => "swap",
+        }
+    }
+}
+
+/// How the paged pool shares already-computed KV across requests
+/// (`--prefix-cache`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PrefixCacheMode {
+    /// PR 4's per-session residency only — the default; pre-radix runs
+    /// stay bit-identical.
+    #[default]
+    Session,
+    /// Cross-session radix-tree prefix caching: tree nodes own the
+    /// shared-prefix blocks, sessions hold references, eviction walks
+    /// unreferenced leaves first. Session residency still covers each
+    /// session's private conversation suffix.
+    Radix,
+}
+
+impl PrefixCacheMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "session" => Some(PrefixCacheMode::Session),
+            "radix" => Some(PrefixCacheMode::Radix),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PrefixCacheMode::Session => "session",
+            PrefixCacheMode::Radix => "radix",
         }
     }
 }
@@ -267,10 +311,16 @@ pub struct PagedLease {
     pub request_id: u64,
     /// Session whose residency the blocks join on release.
     pub session: u64,
-    /// Tokens currently covered.
+    /// Tokens currently covered (shared prefix + private suffix).
     pub tokens: usize,
-    /// Blocks currently held.
+    /// Private blocks held by the lease. Excludes blocks owned by
+    /// referenced prefix-tree nodes — those belong to the tree.
     pub blocks: usize,
+    /// Tokens covered by the referenced prefix-tree nodes (0 outside
+    /// radix mode).
+    pub prefix_tokens: usize,
+    /// Prefix-node ids the lease holds references on, root first.
+    pub path: Vec<u64>,
 }
 
 /// Idle blocks a finished request left behind, keyed by session (the
@@ -280,6 +330,28 @@ struct SessionResidency {
     tokens: usize,
     blocks: usize,
     /// LRU stamp (monotone sequence, not wall clock — deterministic).
+    last_use: u64,
+}
+
+/// One node of the cross-session prefix tree. Every node in the map is
+/// populated (its blocks hold computed KV): creation and population
+/// happen atomically inside the admission that first prefills the
+/// node's tokens, and eviction removes the node entirely.
+#[derive(Debug)]
+struct PrefixNode {
+    /// Tokens this node itself covers (not cumulative along the path).
+    tokens: usize,
+    /// Blocks the node owns (block-aligned per node).
+    blocks: usize,
+    /// Parent node id (0 = tree root's parent, i.e. none).
+    parent: u64,
+    /// Live leases whose path includes this node. References are taken
+    /// along the *whole* path, so `refs == 0` implies no live lease
+    /// references any descendant either.
+    refs: usize,
+    /// Children currently in the tree (for leaf-first eviction).
+    children: usize,
+    /// LRU stamp, refreshed by every admission traversing the node.
     last_use: u64,
 }
 
@@ -317,6 +389,18 @@ pub struct PagedKvManager {
     reuse_hits: usize,
     reuse_tokens: usize,
     sessions_evicted: usize,
+    /// Cross-session sharing discipline (`Session` = PR 4 behavior).
+    prefix_mode: PrefixCacheMode,
+    /// The radix prefix tree, keyed by node id (empty outside radix
+    /// mode — and then every counter below stays 0, keeping the legacy
+    /// arithmetic bit-identical).
+    prefix_nodes: HashMap<u64, PrefixNode>,
+    /// Blocks owned by tree nodes no live lease references (the
+    /// evictable share of the tree), maintained incrementally.
+    unpinned_prefix_blocks: usize,
+    prefix_hits: usize,
+    prefix_reused_tokens: usize,
+    prefix_nodes_evicted: usize,
     /// Shared lifecycle-event sink (the engine keeps its sim-time stamp
     /// fresh before calling in); `None` records nothing.
     trace: Option<TraceHandle>,
@@ -347,10 +431,22 @@ impl PagedKvManager {
             reuse_hits: 0,
             reuse_tokens: 0,
             sessions_evicted: 0,
+            prefix_mode: PrefixCacheMode::Session,
+            prefix_nodes: HashMap::new(),
+            unpinned_prefix_blocks: 0,
+            prefix_hits: 0,
+            prefix_reused_tokens: 0,
+            prefix_nodes_evicted: 0,
             trace: None,
         };
         mgr.resize_blocks();
         mgr
+    }
+
+    /// Select the cross-session sharing discipline (`--prefix-cache`).
+    pub fn with_prefix_mode(mut self, mode: PrefixCacheMode) -> Self {
+        self.prefix_mode = mode;
+        self
     }
 
     /// Attach the engine's lifecycle-event sink so evictions and reuse
@@ -450,6 +546,66 @@ impl PagedKvManager {
         true
     }
 
+    /// Evict unreferenced prefix-tree leaves (LRU first, ties by node
+    /// id for determinism) until `need` blocks are free. A node is a
+    /// victim only with zero references *and* zero children — and
+    /// since references are taken along whole paths, an unreferenced
+    /// node has no referenced descendants: eviction can never free a
+    /// block a live lease depends on.
+    fn evict_prefix_until(&mut self, need: usize) -> bool {
+        while self.free_blocks < need {
+            let victim = self
+                .prefix_nodes
+                .iter()
+                .filter(|(_, n)| n.refs == 0 && n.children == 0)
+                .min_by_key(|(id, n)| (n.last_use, **id))
+                .map(|(id, _)| *id);
+            let Some(id) = victim else {
+                return false;
+            };
+            let n = self
+                .prefix_nodes
+                .remove(&id)
+                .expect("victim was just found in the tree");
+            self.free_blocks += n.blocks;
+            self.unpinned_prefix_blocks -= n.blocks;
+            if let Some(p) = self.prefix_nodes.get_mut(&n.parent) {
+                p.children -= 1;
+            }
+            self.prefix_nodes_evicted += 1;
+        }
+        true
+    }
+
+    /// Reclaim idle capacity — session residencies first (LRU), then
+    /// unreferenced prefix leaves. With an empty tree this is exactly
+    /// the historical [`PagedKvManager::evict_idle_until`].
+    fn evict_until(&mut self, need: usize) -> bool {
+        self.evict_idle_until(need) || self.evict_prefix_until(need)
+    }
+
+    fn add_node_ref(&mut self, id: u64) {
+        let n = self
+            .prefix_nodes
+            .get_mut(&id)
+            .expect("referenced node exists");
+        n.refs += 1;
+        if n.refs == 1 {
+            self.unpinned_prefix_blocks -= n.blocks;
+        }
+    }
+
+    fn drop_node_ref(&mut self, id: u64) {
+        let n = self
+            .prefix_nodes
+            .get_mut(&id)
+            .expect("released lease held a reference");
+        n.refs -= 1;
+        if n.refs == 0 {
+            self.unpinned_prefix_blocks += n.blocks;
+        }
+    }
+
     fn note_peak(&mut self) {
         self.peak_used_blocks = self.peak_used_blocks.max(self.used_blocks());
     }
@@ -460,15 +616,71 @@ impl PagedKvManager {
     /// prefix the caller may skip prefilling (the reuse hit). Other
     /// sessions' idle blocks are evicted LRU-first if the free pool is
     /// short. `None` defers the request (active leases hold too much).
+    ///
+    /// Under [`PrefixCacheMode::Radix`], a request carrying a `prefix`
+    /// path is admitted through the prefix tree instead: already
+    /// populated path nodes count as reuse (across *any* session) and
+    /// missing ones are populated by this request's prefill; the lease
+    /// then covers only the private suffix and holds references along
+    /// the path. The failure probe stays pure — `None` is decided
+    /// before any state mutates (required by the event core's
+    /// admission memoization).
     pub fn try_admit(
         &mut self,
         request_id: u64,
         session: u64,
         want_tokens: usize,
         max_reuse: usize,
+        prefix: &[PrefixSeg],
     ) -> Option<(PagedLease, usize)> {
+        if self.prefix_mode == PrefixCacheMode::Radix && !prefix.is_empty() {
+            // Pure planning pass: what the path costs and what it frees.
+            let mut prefix_alloc = 0usize; // tokens the path will cover
+            let mut new_node_blocks = 0usize; // blocks for missing nodes
+            let mut path_unpinned = 0usize; // evictable blocks we will pin
+            for seg in prefix {
+                match self.prefix_nodes.get(&seg.id) {
+                    Some(n) => {
+                        prefix_alloc += n.tokens;
+                        if n.refs == 0 {
+                            path_unpinned += n.blocks;
+                        }
+                    }
+                    None => {
+                        prefix_alloc += seg.tokens;
+                        new_node_blocks += self.blocks_for(seg.tokens);
+                    }
+                }
+            }
+            let private_blocks = self.blocks_for(want_tokens.saturating_sub(prefix_alloc));
+            let need_total = private_blocks + new_node_blocks;
+            if need_total <= self.total_blocks {
+                // Path nodes we are about to pin stop being evictable,
+                // so they cannot count toward availability.
+                let reclaimable = self.free_blocks
+                    + self.resident_blocks()
+                    + (self.unpinned_prefix_blocks - path_unpinned);
+                if need_total > reclaimable {
+                    return None;
+                }
+                return Some(self.admit_radix(
+                    request_id,
+                    session,
+                    want_tokens,
+                    max_reuse,
+                    prefix,
+                    private_blocks,
+                ));
+            }
+            // Per-node block rounding made the shared path plus the
+            // private suffix exceed the whole region even though the
+            // unshared request fits: serve it unshared below rather
+            // than defer forever.
+        }
         let want_blocks = self.blocks_for(want_tokens);
-        if want_blocks > self.free_blocks + self.resident_blocks() {
+        if want_blocks
+            > self.free_blocks + self.resident_blocks() + self.unpinned_prefix_blocks
+        {
             return None;
         }
         let mut reused = 0usize;
@@ -489,7 +701,7 @@ impl PagedKvManager {
                 }
             }
         }
-        if !self.evict_idle_until(want_blocks) {
+        if !self.evict_until(want_blocks) {
             unreachable!("availability was checked above");
         }
         self.free_blocks -= want_blocks;
@@ -501,25 +713,153 @@ impl PagedKvManager {
                 session,
                 tokens: want_tokens,
                 blocks: want_blocks,
+                prefix_tokens: 0,
+                path: Vec::new(),
             },
             reused,
         ))
     }
 
+    /// Radix-mode admission: availability was already proven by
+    /// [`PagedKvManager::try_admit`]'s pure planning pass.
+    fn admit_radix(
+        &mut self,
+        request_id: u64,
+        session: u64,
+        want_tokens: usize,
+        max_reuse: usize,
+        prefix: &[PrefixSeg],
+        private_blocks: usize,
+    ) -> (PagedLease, usize) {
+        // The reusable prefix is the *leading* chain of already
+        // populated nodes (population is root-first and eviction
+        // leaf-first, so the populated set along a path is always a
+        // leading chain; the guard below only defends the invariant).
+        let mut chain_tokens = 0usize;
+        let mut prefix_alloc = 0usize;
+        let mut new_node_blocks = 0usize;
+        for seg in prefix {
+            match self.prefix_nodes.get(&seg.id) {
+                Some(n) => {
+                    if chain_tokens == prefix_alloc {
+                        chain_tokens += n.tokens;
+                    }
+                    prefix_alloc += n.tokens;
+                }
+                None => {
+                    prefix_alloc += seg.tokens;
+                    new_node_blocks += self.blocks_for(seg.tokens);
+                }
+            }
+        }
+        // Pin the existing path nodes *before* eviction runs so
+        // pressure from this very admission can never take them.
+        let stamp = self.next_seq();
+        for seg in prefix {
+            if let Some(n) = self.prefix_nodes.get_mut(&seg.id) {
+                n.refs += 1;
+                n.last_use = stamp;
+                if n.refs == 1 {
+                    let b = n.blocks;
+                    self.unpinned_prefix_blocks -= b;
+                }
+            }
+        }
+        // Reclaim the session's own parked suffix (it is contiguous
+        // with the shared prefix only when the whole path was already
+        // populated — otherwise its KV sits beyond a gap this request
+        // must re-prefill anyway, so it cannot count as reuse).
+        let mut session_tokens = 0usize;
+        if let Some(r) = self.resident.remove(&session) {
+            self.lru.remove(&r.last_use);
+            self.free_blocks += r.blocks;
+            self.resident_blocks -= r.blocks;
+            session_tokens = r.tokens;
+        }
+        if !self.evict_until(private_blocks + new_node_blocks) {
+            unreachable!("availability was checked by the planning pass");
+        }
+        // Populate missing nodes root-first; each is born referenced.
+        let mut parent = 0u64;
+        for seg in prefix {
+            if self.prefix_nodes.contains_key(&seg.id) {
+                parent = seg.id;
+                continue;
+            }
+            let blocks = self.blocks_for(seg.tokens);
+            self.free_blocks -= blocks;
+            self.prefix_nodes.insert(
+                seg.id,
+                PrefixNode {
+                    tokens: seg.tokens,
+                    blocks,
+                    parent,
+                    refs: 1,
+                    children: 0,
+                    last_use: stamp,
+                },
+            );
+            if let Some(p) = self.prefix_nodes.get_mut(&parent) {
+                p.children += 1;
+            }
+            parent = seg.id;
+        }
+        self.free_blocks -= private_blocks;
+        self.admitted += 1;
+        self.note_peak();
+        let chain_reuse = chain_tokens.min(max_reuse);
+        let mut reused = chain_reuse;
+        if chain_tokens == prefix_alloc && session_tokens > 0 {
+            reused = (chain_tokens + session_tokens).min(max_reuse);
+        }
+        if chain_reuse > 0 {
+            self.prefix_hits += 1;
+            self.prefix_reused_tokens += chain_reuse;
+        }
+        let session_part = reused - chain_reuse;
+        if session_part > 0 {
+            self.reuse_hits += 1;
+            self.reuse_tokens += session_part;
+        }
+        if reused > 0 {
+            if let Some(t) = &self.trace {
+                t.emit(TraceEventKind::ReuseHit {
+                    id: request_id,
+                    session,
+                    tokens: reused,
+                });
+            }
+        }
+        (
+            PagedLease {
+                request_id,
+                session,
+                tokens: want_tokens,
+                blocks: private_blocks,
+                prefix_tokens: prefix_alloc,
+                path: prefix.iter().map(|s| s.id).collect(),
+            },
+            reused,
+        )
+    }
+
     /// Grow a lease to cover `want_tokens`, allocating blocks on demand
-    /// (idle sessions evicted LRU-first). `false` means the engine must
-    /// preempt an active request (or stall) and retry.
+    /// (idle sessions evicted LRU-first, then unreferenced prefix
+    /// leaves). Tokens covered by the lease's referenced prefix nodes
+    /// never need new blocks — the tree already holds them. `false`
+    /// means the engine must preempt an active request (or stall) and
+    /// retry.
     pub fn try_grow(&mut self, lease: &mut PagedLease, want_tokens: usize) -> bool {
-        let want_blocks = self.blocks_for(want_tokens);
+        let want_blocks = self.blocks_for(want_tokens.saturating_sub(lease.prefix_tokens));
         if want_blocks <= lease.blocks {
             lease.tokens = lease.tokens.max(want_tokens);
             return true;
         }
         let need = want_blocks - lease.blocks;
-        if need > self.free_blocks + self.resident_blocks() {
+        if need > self.free_blocks + self.resident_blocks() + self.unpinned_prefix_blocks {
             return false;
         }
-        if !self.evict_idle_until(need) {
+        if !self.evict_until(need) {
             unreachable!("availability was checked above");
         }
         self.free_blocks -= need;
@@ -532,17 +872,27 @@ impl PagedKvManager {
     /// Finish a request, parking its blocks as session residency so a
     /// follow-up of the same session can reuse the prefix. If the
     /// session already has parked blocks, the larger footprint wins.
+    /// Prefix-path references are dropped first; only the *private*
+    /// suffix (tokens beyond the referenced path) parks — the shared
+    /// prefix stays with the tree.
     pub fn release_retain(&mut self, lease: PagedLease) {
         self.admitted = self.admitted.saturating_sub(1);
+        for id in &lease.path {
+            self.drop_node_ref(*id);
+        }
+        if lease.blocks == 0 {
+            return;
+        }
+        let private_tokens = lease.tokens.saturating_sub(lease.prefix_tokens);
         let seq = self.next_seq();
         if let Some(r) = self.resident.get_mut(&lease.session) {
-            if r.tokens >= lease.tokens {
+            if r.tokens >= private_tokens {
                 self.free_blocks += lease.blocks;
             } else {
                 self.free_blocks += r.blocks;
                 self.resident_blocks -= r.blocks;
                 self.resident_blocks += lease.blocks;
-                r.tokens = lease.tokens;
+                r.tokens = private_tokens;
                 r.blocks = lease.blocks;
             }
             self.lru.remove(&r.last_use);
@@ -552,7 +902,7 @@ impl PagedKvManager {
             self.resident.insert(
                 lease.session,
                 SessionResidency {
-                    tokens: lease.tokens,
+                    tokens: private_tokens,
                     blocks: lease.blocks,
                     last_use: seq,
                 },
@@ -563,9 +913,13 @@ impl PagedKvManager {
     }
 
     /// Drop a lease without retention (preemption: the KV is lost and
-    /// must be recomputed on readmission).
+    /// must be recomputed on readmission). Prefix nodes are *not* lost
+    /// — only the lease's references are dropped.
     pub fn free(&mut self, lease: PagedLease) {
         self.admitted = self.admitted.saturating_sub(1);
+        for id in &lease.path {
+            self.drop_node_ref(*id);
+        }
         self.free_blocks = (self.free_blocks + lease.blocks).min(self.total_blocks);
     }
 
@@ -592,6 +946,27 @@ impl PagedKvManager {
     /// Idle session residencies evicted under pressure.
     pub fn sessions_evicted(&self) -> usize {
         self.sessions_evicted
+    }
+
+    /// Admissions that reused a populated prefix-tree chain.
+    pub fn prefix_hits(&self) -> usize {
+        self.prefix_hits
+    }
+
+    /// Prompt tokens whose prefill was skipped via the prefix tree
+    /// (cross-session; disjoint from [`PagedKvManager::reuse_tokens`]).
+    pub fn prefix_reused_tokens(&self) -> usize {
+        self.prefix_reused_tokens
+    }
+
+    /// Prefix-tree nodes evicted under pressure.
+    pub fn prefix_nodes_evicted(&self) -> usize {
+        self.prefix_nodes_evicted
+    }
+
+    /// Nodes currently populated in the prefix tree.
+    pub fn prefix_nodes_live(&self) -> usize {
+        self.prefix_nodes.len()
     }
 
     /// Fraction of the region holding data right now.
@@ -637,6 +1012,7 @@ impl KvPool {
         cap: &DeviceCapacity,
         policy: KvPolicy,
         evict: EvictPolicy,
+        prefix: PrefixCacheMode,
         block_tokens: Option<usize>,
         units: Option<usize>,
     ) -> Self {
@@ -644,7 +1020,8 @@ impl KvPool {
         match policy {
             KvPolicy::Whole => KvPool::Whole(KvCacheManager::from_capacity_units(cap, units)),
             KvPolicy::Paged => {
-                let mut mgr = PagedKvManager::from_capacity_units(cap, units);
+                let mut mgr =
+                    PagedKvManager::from_capacity_units(cap, units).with_prefix_mode(prefix);
                 if let Some(b) = block_tokens {
                     mgr = mgr.with_block_tokens(b);
                 }
@@ -679,13 +1056,16 @@ impl KvPool {
     /// Admit a fresh request. Whole reserves the full window; paged
     /// reserves the prompt plus the first token (`--evict lru`) or the
     /// full window (`--evict none`, which makes growth infallible).
-    /// Returns the lease and the session-reused prefix tokens.
+    /// `prefix` is the request's shared-prefix path (consumed only in
+    /// radix mode). Returns the lease and the reused prefix tokens
+    /// (session residency and/or radix chain).
     pub fn try_admit(
         &mut self,
         request_id: u64,
         session: u64,
         prompt_len: usize,
         window_tokens: usize,
+        prefix: &[PrefixSeg],
     ) -> Option<(PoolLease, usize)> {
         match self {
             KvPool::Whole(m) => m
@@ -700,7 +1080,7 @@ impl KvPool {
                 // token always prefills so the first output token has a
                 // nonzero cost.
                 let max_reuse = prompt_len.saturating_sub(1);
-                mgr.try_admit(request_id, session, want, max_reuse)
+                mgr.try_admit(request_id, session, want, max_reuse, prefix)
                     .map(|(l, reused)| (PoolLease::Paged(l), reused))
             }
         }
@@ -725,7 +1105,7 @@ impl KvPool {
                     EvictPolicy::None => window_tokens.max(prompt_len + 1),
                     EvictPolicy::Lru | EvictPolicy::Swap => prompt_len + 1,
                 };
-                mgr.try_admit(request_id, session, want, 0)
+                mgr.try_admit(request_id, session, want, 0, &[])
                     .map(|(l, _)| PoolLease::Paged(l))
             }
         }
@@ -737,7 +1117,7 @@ impl KvPool {
         match self {
             KvPool::Whole(m) => m.try_admit(request_id, tokens).map(PoolLease::Whole),
             KvPool::Paged { mgr, .. } => mgr
-                .try_admit(request_id, session, tokens, 0)
+                .try_admit(request_id, session, tokens, 0, &[])
                 .map(|(l, _)| PoolLease::Paged(l)),
         }
     }
@@ -829,6 +1209,30 @@ impl KvPool {
         match self {
             KvPool::Whole(_) => 0,
             KvPool::Paged { mgr, .. } => mgr.reuse_tokens(),
+        }
+    }
+
+    /// Admissions that reused a radix prefix chain (0 outside radix mode).
+    pub fn prefix_hits(&self) -> usize {
+        match self {
+            KvPool::Whole(_) => 0,
+            KvPool::Paged { mgr, .. } => mgr.prefix_hits(),
+        }
+    }
+
+    /// Prompt tokens whose prefill the radix tree skipped.
+    pub fn prefix_reused_tokens(&self) -> usize {
+        match self {
+            KvPool::Whole(_) => 0,
+            KvPool::Paged { mgr, .. } => mgr.prefix_reused_tokens(),
+        }
+    }
+
+    /// Prefix-tree nodes evicted under pressure.
+    pub fn prefix_nodes_evicted(&self) -> usize {
+        match self {
+            KvPool::Whole(_) => 0,
+            KvPool::Paged { mgr, .. } => mgr.prefix_nodes_evicted(),
         }
     }
 
@@ -963,7 +1367,7 @@ mod tests {
         let mut kv = PagedKvManager::from_capacity_units(&cap, 8);
         let bt = kv.block_tokens();
         let total = kv.total_blocks();
-        let (mut lease, reused) = kv.try_admit(1, 7, bt, 0).expect("one block fits");
+        let (mut lease, reused) = kv.try_admit(1, 7, bt, 0, &[]).expect("one block fits");
         assert_eq!(reused, 0);
         assert_eq!(lease.blocks, 1);
         assert_eq!(kv.used_blocks(), 1);
@@ -990,13 +1394,13 @@ mod tests {
         let total = kv.total_blocks();
 
         // Session 1 finishes a 2-block request; its blocks park.
-        let (lease, _) = kv.try_admit(1, 1, 2 * bt, 0).unwrap();
+        let (lease, _) = kv.try_admit(1, 1, 2 * bt, 0, &[]).unwrap();
         kv.release_retain(lease);
         assert_eq!(kv.session_resident_tokens(1), 2 * bt);
         assert_eq!(kv.used_blocks(), 2, "residency still holds data");
 
         // A follow-up of session 1 reclaims the prefix.
-        let (lease, reused) = kv.try_admit(2, 1, 2 * bt + 1, 2 * bt).unwrap();
+        let (lease, reused) = kv.try_admit(2, 1, 2 * bt + 1, 2 * bt, &[]).unwrap();
         assert_eq!(reused, 2 * bt);
         assert_eq!(kv.reuse_hits(), 1);
         assert_eq!(kv.reuse_tokens(), 2 * bt);
@@ -1005,11 +1409,13 @@ mod tests {
 
         // Park a second session, then demand the whole region: both idle
         // residencies are evicted (LRU first) to satisfy the allocation.
-        let (lease2, _) = kv.try_admit(3, 2, bt, 0).unwrap();
+        let (lease2, _) = kv.try_admit(3, 2, bt, 0, &[]).unwrap();
         kv.release_retain(lease2);
         assert!(kv.session_resident_tokens(1) > 0);
         assert!(kv.session_resident_tokens(2) > 0);
-        let (big, reused) = kv.try_admit(4, 9, total * bt, 0).expect("evicts idle sessions");
+        let (big, reused) = kv
+            .try_admit(4, 9, total * bt, 0, &[])
+            .expect("evicts idle sessions");
         assert_eq!(reused, 0);
         assert_eq!(kv.session_resident_tokens(1), 0);
         assert_eq!(kv.session_resident_tokens(2), 0);
@@ -1023,28 +1429,40 @@ mod tests {
         let mut kv = PagedKvManager::from_capacity_units(&cap, 4);
         let bt = kv.block_tokens();
         let total = kv.total_blocks();
-        let (lease, _) = kv.try_admit(1, 1, total * bt, 0).unwrap();
+        let (lease, _) = kv.try_admit(1, 1, total * bt, 0, &[]).unwrap();
         // Active leases are not evictable: a second admission defers.
-        assert!(kv.try_admit(2, 2, bt, 0).is_none());
+        assert!(kv.try_admit(2, 2, bt, 0, &[]).is_none());
         kv.free(lease);
-        assert!(kv.try_admit(2, 2, bt, 0).is_some());
+        assert!(kv.try_admit(2, 2, bt, 0, &[]).is_some());
     }
 
     #[test]
     fn pool_dispatches_both_policies() {
         let cap = paper_capacity();
-        let mut whole =
-            KvPool::for_capacity(&cap, KvPolicy::Whole, EvictPolicy::Lru, None, Some(16));
-        let mut paged =
-            KvPool::for_capacity(&cap, KvPolicy::Paged, EvictPolicy::Lru, None, Some(16));
+        let mut whole = KvPool::for_capacity(
+            &cap,
+            KvPolicy::Whole,
+            EvictPolicy::Lru,
+            PrefixCacheMode::Session,
+            None,
+            Some(16),
+        );
+        let mut paged = KvPool::for_capacity(
+            &cap,
+            KvPolicy::Paged,
+            EvictPolicy::Lru,
+            PrefixCacheMode::Session,
+            None,
+            Some(16),
+        );
         assert_eq!(whole.policy(), KvPolicy::Whole);
         assert_eq!(paged.policy(), KvPolicy::Paged);
         assert!(!whole.preemption_allowed());
         assert!(paged.preemption_allowed());
 
         // Whole reserves the window up front; paged only the prompt + 1.
-        let (mut wl, wr) = whole.try_admit(0, 0, 16, 48).unwrap();
-        let (mut pl, pr) = paged.try_admit(0, 0, 16, 48).unwrap();
+        let (mut wl, wr) = whole.try_admit(0, 0, 16, 48, &[]).unwrap();
+        let (mut pl, pr) = paged.try_admit(0, 0, 16, 48, &[]).unwrap();
         assert_eq!((wr, pr), (0, 0));
         assert!(whole.utilization() > paged.utilization());
         assert!(whole.ensure(&mut wl, 48), "window pre-reserved");
@@ -1058,15 +1476,138 @@ mod tests {
     #[test]
     fn pool_evict_none_preallocates_the_window() {
         let cap = paper_capacity();
-        let mut pool =
-            KvPool::for_capacity(&cap, KvPolicy::Paged, EvictPolicy::None, None, Some(16));
+        let mut pool = KvPool::for_capacity(
+            &cap,
+            KvPolicy::Paged,
+            EvictPolicy::None,
+            PrefixCacheMode::Session,
+            None,
+            Some(16),
+        );
         assert!(!pool.preemption_allowed());
-        let (mut lease, _) = pool.try_admit(0, 0, 16, 48).unwrap();
+        let (mut lease, _) = pool.try_admit(0, 0, 16, 48, &[]).unwrap();
         // Growth within the window can never fail.
         for t in 17..=48 {
             assert!(pool.ensure(&mut lease, t));
         }
         pool.free(lease);
+    }
+
+    #[test]
+    fn radix_shares_prefix_across_sessions() {
+        let cap = paper_capacity();
+        let mut kv = PagedKvManager::from_capacity_units(&cap, 8)
+            .with_prefix_mode(PrefixCacheMode::Radix);
+        let bt = kv.block_tokens();
+        let root = [PrefixSeg { id: 1, tokens: bt }];
+        // Session 1 populates the root node (nothing to reuse yet).
+        let (l1, reused) = kv.try_admit(1, 1, 2 * bt, 2 * bt - 1, &root).unwrap();
+        assert_eq!(reused, 0);
+        assert_eq!(l1.prefix_tokens, bt);
+        assert_eq!(l1.blocks, 1, "private suffix only; the tree owns the root");
+        assert_eq!(kv.prefix_nodes_live(), 1);
+        // A *different* session reuses the shared root: the prefix is
+        // never prefilled twice.
+        let (l2, reused) = kv.try_admit(2, 2, 2 * bt, 2 * bt - 1, &root).unwrap();
+        assert_eq!(reused, bt);
+        assert_eq!(kv.prefix_hits(), 1);
+        assert_eq!(kv.prefix_reused_tokens(), bt);
+        assert_eq!(kv.reuse_tokens(), 0, "cross-session reuse is radix, not residency");
+        kv.release_retain(l1);
+        kv.release_retain(l2);
+        // Residency parks only the private suffix; the root stays with
+        // the tree.
+        assert_eq!(kv.session_resident_tokens(1), bt);
+        assert_eq!(kv.prefix_nodes_live(), 1);
+    }
+
+    #[test]
+    fn radix_eviction_is_leaf_first_and_never_takes_referenced_nodes() {
+        let cap = paper_capacity();
+        let mut kv = PagedKvManager::from_capacity_units(&cap, 8)
+            .with_prefix_mode(PrefixCacheMode::Radix);
+        let bt = kv.block_tokens();
+        let total = kv.total_blocks();
+        let path = [
+            PrefixSeg { id: 1, tokens: bt },
+            PrefixSeg { id: 2, tokens: bt },
+        ];
+        let (lease, _) = kv.try_admit(1, 1, 3 * bt, 0, &path).unwrap();
+        assert_eq!(kv.prefix_nodes_live(), 2);
+        // The live lease pins the path: a region-sized demand defers
+        // rather than freeing referenced prefix blocks.
+        assert!(kv.try_admit(2, 2, total * bt, 0, &[]).is_none());
+        kv.free(lease);
+        // Unreferenced now. A demand one block short of the region only
+        // needs one eviction — the leaf goes, the root survives.
+        let (mid, _) = kv.try_admit(2, 2, (total - 1) * bt, 0, &[]).unwrap();
+        assert_eq!(kv.prefix_nodes_evicted(), 1, "leaf evicted before root");
+        assert_eq!(kv.prefix_nodes_live(), 1);
+        kv.free(mid);
+        let (back, reused) = kv.try_admit(3, 3, 2 * bt, 2 * bt - 1, &[path[0]]).unwrap();
+        assert_eq!(reused, bt, "root survived leaf-first eviction");
+        kv.free(back);
+    }
+
+    #[test]
+    fn radix_composes_prefix_and_session_suffix_reuse() {
+        let cap = paper_capacity();
+        let mut kv = PagedKvManager::from_capacity_units(&cap, 8)
+            .with_prefix_mode(PrefixCacheMode::Radix);
+        let bt = kv.block_tokens();
+        let root = [PrefixSeg { id: 1, tokens: bt }];
+        // Turn 1 populates the root and parks a 2-block private suffix.
+        let (l1, _) = kv.try_admit(1, 1, 3 * bt, 3 * bt - 1, &root).unwrap();
+        kv.release_retain(l1);
+        assert_eq!(kv.session_resident_tokens(1), 2 * bt);
+        // Turn 2 of the same session reuses the radix chain *plus* its
+        // own parked suffix (contiguous: the whole path was populated).
+        let (l2, reused) = kv.try_admit(2, 1, 4 * bt, 4 * bt - 1, &root).unwrap();
+        assert_eq!(reused, 3 * bt);
+        assert_eq!(kv.prefix_reused_tokens(), bt);
+        assert_eq!(kv.reuse_tokens(), 2 * bt);
+        kv.release_retain(l2);
+    }
+
+    #[test]
+    fn session_mode_ignores_prefix_paths() {
+        // Default mode: a prefix-carrying request admits exactly like a
+        // plain one (bit-compat with pre-radix behavior).
+        let cap = paper_capacity();
+        let mut kv = PagedKvManager::from_capacity_units(&cap, 8);
+        let bt = kv.block_tokens();
+        let root = [PrefixSeg { id: 1, tokens: bt }];
+        let (lease, reused) = kv.try_admit(1, 1, 2 * bt, 2 * bt - 1, &root).unwrap();
+        assert_eq!(reused, 0);
+        assert_eq!(lease.prefix_tokens, 0);
+        assert!(lease.path.is_empty());
+        assert_eq!(lease.blocks, 2);
+        assert_eq!(kv.prefix_nodes_live(), 0);
+        kv.release_retain(lease);
+        assert_eq!(kv.session_resident_tokens(1), 2 * bt);
+    }
+
+    #[test]
+    fn radix_alignment_overflow_falls_back_to_unshared() {
+        // A path whose per-node block rounding exceeds the region must
+        // not defer forever: the request is served unshared instead.
+        let cap = paper_capacity();
+        let mut kv = PagedKvManager::from_capacity_units(&cap, 8)
+            .with_prefix_mode(PrefixCacheMode::Radix)
+            .with_block_tokens(4);
+        let bt = kv.block_tokens();
+        let total = kv.total_blocks();
+        // The node straddles a block boundary (bt + 1 tokens → 2 blocks),
+        // so sharing a region-sized request needs total + 1 blocks even
+        // though the unshared request needs exactly total.
+        let path = [PrefixSeg { id: 1, tokens: bt + 1 }];
+        let (lease, reused) = kv
+            .try_admit(1, 1, total * bt, total * bt - 1, &path)
+            .expect("unshared fallback");
+        assert_eq!(reused, 0);
+        assert!(lease.path.is_empty(), "served unshared");
+        assert_eq!(kv.prefix_nodes_live(), 0);
+        kv.free(lease);
     }
 
     #[test]

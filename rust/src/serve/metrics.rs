@@ -56,6 +56,10 @@ pub struct ServeMetrics {
     pub reuse_hits: usize,
     /// Prompt tokens whose prefill was skipped via session reuse.
     pub reuse_tokens: usize,
+    /// Admissions that reused a radix prefix-tree chain (cross-session).
+    pub prefix_hits: usize,
+    /// Prompt tokens whose prefill the radix tree skipped.
+    pub prefix_reused_tokens: usize,
     /// Preempted KV states spilled to the host buffer (`--evict swap`).
     pub swap_outs: usize,
     /// Readmissions that restored KV over the fabric instead of
@@ -84,6 +88,8 @@ impl ServeMetrics {
             recompute_tokens: 0,
             reuse_hits: 0,
             reuse_tokens: 0,
+            prefix_hits: 0,
+            prefix_reused_tokens: 0,
             swap_outs: 0,
             swap_ins: 0,
             swapped_bytes: 0,
@@ -124,6 +130,8 @@ impl ServeMetrics {
             recompute_tokens: 0,
             reuse_hits: 0,
             reuse_tokens: 0,
+            prefix_hits: 0,
+            prefix_reused_tokens: 0,
             swap_outs: 0,
             swap_ins: 0,
             swapped_bytes: 0,
@@ -142,6 +150,8 @@ impl ServeMetrics {
             self.recompute_tokens += r.recompute_tokens;
             self.reuse_hits += r.reuse_hits;
             self.reuse_tokens += r.reuse_tokens;
+            self.prefix_hits += r.prefix_hits;
+            self.prefix_reused_tokens += r.prefix_reused_tokens;
             self.swap_outs += r.swap_outs;
             self.swap_ins += r.swap_ins;
             self.swapped_bytes += r.swapped_bytes;
@@ -183,6 +193,13 @@ impl std::fmt::Display for ServeMetrics {
                 self.preemptions, self.recompute_tokens, self.reuse_hits, self.reuse_tokens
             )?;
         }
+        if self.prefix_hits > 0 {
+            write!(
+                f,
+                "\nprefix cache:    {} hit ({} tok shared across sessions)",
+                self.prefix_hits, self.prefix_reused_tokens
+            )?;
+        }
         if self.swap_outs > 0 || self.swap_ins > 0 {
             write!(
                 f,
@@ -209,6 +226,7 @@ mod tests {
             decode_s: decode,
             finish_s: queue + prefill + decode,
             device: 0,
+            slo: crate::serve::types::SloClass::Batch,
         }
     }
 
@@ -313,6 +331,9 @@ mod tests {
             recompute_tokens: 10 * pre,
             reuse_hits: reuse,
             reuse_tokens: 5 * reuse,
+            prefix_hits: reuse,
+            prefix_reused_tokens: 7 * reuse,
+            prefix_nodes_evicted: 0,
             swap_outs: pre,
             swap_ins: pre / 2,
             swapped_bytes: 1024 * pre as u64,
@@ -325,6 +346,8 @@ mod tests {
         assert_eq!(m.recompute_tokens, 30);
         assert_eq!(m.reuse_hits, 2);
         assert_eq!(m.reuse_tokens, 10);
+        assert_eq!(m.prefix_hits, 2);
+        assert_eq!(m.prefix_reused_tokens, 14);
         assert_eq!(m.swap_outs, 3);
         assert_eq!(m.swap_ins, 1);
         assert_eq!(m.swapped_bytes, 3072);

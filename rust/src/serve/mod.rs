@@ -67,7 +67,10 @@ pub use backend::{
 pub use cluster::{Cluster, DisaggregatedCluster, Routing};
 pub use engine::{DeviceEngine, EngineCore, EngineReport};
 pub use fabric::{Fabric, FabricKind, FabricParams, SharedFabric};
-pub use kv_cache::{EvictPolicy, KvCacheManager, KvLease, KvPolicy, KvPool, PagedKvManager};
+pub use kv_cache::{
+    EvictPolicy, KvCacheManager, KvLease, KvPolicy, KvPool, PagedKvManager, PrefixCacheMode,
+};
 pub use metrics::{percentile, ServeMetrics};
-pub use policy::{Policy, Scheduler};
-pub use types::{Completion, Request};
+pub use policy::{Policy, Scheduler, INTERACTIVE_BOOST_S};
+pub use types::{Completion, PrefixSeg, Request, SloClass};
+pub use workload::{ArrivalPattern, LengthModel, PrefixSpec, SessionModel, WorkloadSpec};

@@ -1,7 +1,15 @@
 //! Scheduling policies for serving queues (shared by the sequential
 //! coordinator and the continuous-batching engine).
 
-use super::types::Request;
+use super::types::{Request, SloClass};
+
+/// How far an interactive request's arrival is pulled forward under
+/// [`Policy::Priority`]. A *constant* boost over arrival times keeps
+/// the pick pure (no clock input — required by the event core's
+/// admission memoization) and starvation-free: a batch request that
+/// has waited longer than the boost outranks every newer interactive
+/// arrival, so nothing waits unboundedly.
+pub const INTERACTIVE_BOOST_S: f64 = 5.0;
 
 /// Which waiting request runs next.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -12,6 +20,19 @@ pub enum Policy {
     ShortestJobFirst,
     /// Shortest prompt first (minimizes time-to-first-token variance).
     ShortestPromptFirst,
+    /// SLO-aware FCFS: interactive requests are picked as if they had
+    /// arrived [`INTERACTIVE_BOOST_S`] earlier (bounded queue-jumping,
+    /// so batch traffic cannot starve).
+    Priority,
+}
+
+/// Arrival time after the SLO boost — the sort key for
+/// [`Policy::Priority`].
+fn effective_arrival(r: &Request) -> f64 {
+    match r.slo {
+        SloClass::Interactive => r.arrival_s - INTERACTIVE_BOOST_S,
+        SloClass::Batch => r.arrival_s,
+    }
 }
 
 impl Policy {
@@ -37,6 +58,12 @@ impl Policy {
                 .min_by_key(|(_, r)| r.prompt_len)
                 .map(|(i, _)| i)
                 .unwrap(),
+            Policy::Priority => waiting
+                .iter()
+                .enumerate()
+                .min_by(|a, b| effective_arrival(a.1).total_cmp(&effective_arrival(b.1)))
+                .map(|(i, _)| i)
+                .unwrap(),
         }
     }
 
@@ -45,6 +72,17 @@ impl Policy {
             Policy::Fcfs => "fcfs",
             Policy::ShortestJobFirst => "sjf",
             Policy::ShortestPromptFirst => "spf",
+            Policy::Priority => "priority",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s {
+            "fcfs" => Some(Policy::Fcfs),
+            "sjf" => Some(Policy::ShortestJobFirst),
+            "spf" => Some(Policy::ShortestPromptFirst),
+            "priority" | "slo" => Some(Policy::Priority),
+            _ => None,
         }
     }
 }
@@ -69,6 +107,9 @@ impl Scheduler {
                 reqs.sort_by_key(|r| r.prompt_len + r.max_new_tokens)
             }
             Policy::ShortestPromptFirst => reqs.sort_by_key(|r| r.prompt_len),
+            Policy::Priority => {
+                reqs.sort_by(|a, b| effective_arrival(a).total_cmp(&effective_arrival(b)))
+            }
         }
         reqs
     }
@@ -78,6 +119,8 @@ impl Scheduler {
 mod tests {
     use super::*;
 
+    use crate::serve::types::SloClass;
+
     fn req(id: u64, prompt: usize, out: usize, at: f64) -> Request {
         Request {
             id,
@@ -85,6 +128,8 @@ mod tests {
             max_new_tokens: out,
             arrival_s: at,
             session: id,
+            slo: SloClass::Batch,
+            prefix: Vec::new(),
         }
     }
 
@@ -104,6 +149,44 @@ mod tests {
     fn spf_picks_shortest_prompt() {
         let w = vec![req(0, 10, 100, 0.0), req(1, 64, 1, 0.0)];
         assert_eq!(Policy::ShortestPromptFirst.pick(&w), 0);
+    }
+
+    #[test]
+    fn priority_boosts_interactive_but_not_unboundedly() {
+        let mut old_batch = req(0, 8, 8, 0.0);
+        old_batch.slo = SloClass::Batch;
+        let mut fresh_interactive = req(1, 8, 8, 3.0);
+        fresh_interactive.slo = SloClass::Interactive;
+        // Interactive jumps a batch request that arrived within the
+        // boost window…
+        let w = vec![old_batch.clone(), fresh_interactive.clone()];
+        assert_eq!(Policy::Priority.pick(&w), 1);
+        // …but never one that has already waited longer than the boost
+        // (starvation-freedom).
+        let mut late_interactive = fresh_interactive.clone();
+        late_interactive.arrival_s = INTERACTIVE_BOOST_S + 0.1;
+        let w = vec![old_batch, late_interactive];
+        assert_eq!(Policy::Priority.pick(&w), 0);
+    }
+
+    #[test]
+    fn priority_without_interactive_traffic_is_fcfs() {
+        let w = vec![req(0, 10, 10, 5.0), req(1, 1, 1, 1.0), req(2, 4, 4, 3.0)];
+        assert_eq!(Policy::Priority.pick(&w), Policy::Fcfs.pick(&w));
+    }
+
+    #[test]
+    fn policy_parse_round_trips() {
+        for p in [
+            Policy::Fcfs,
+            Policy::ShortestJobFirst,
+            Policy::ShortestPromptFirst,
+            Policy::Priority,
+        ] {
+            assert_eq!(Policy::parse(p.name()), Some(p));
+        }
+        assert_eq!(Policy::parse("slo"), Some(Policy::Priority));
+        assert_eq!(Policy::parse("edf"), None);
     }
 
     #[test]

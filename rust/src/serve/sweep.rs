@@ -9,7 +9,7 @@
 use super::backend::BackendKind;
 use super::cluster::{Cluster, Routing};
 use super::engine::EngineCore;
-use super::kv_cache::{EvictPolicy, KvPolicy};
+use super::kv_cache::{EvictPolicy, KvPolicy, PrefixCacheMode};
 use super::metrics::ServeMetrics;
 use super::policy::Policy;
 use super::workload::{generate, ArrivalPattern};
@@ -86,7 +86,13 @@ pub fn latency_vs_load(cfg: &SimConfig, sc: &SweepConfig, loads_rps: &[f64]) -> 
                 Cluster::homogeneous(cfg, sc.backend, sc.devices, sc.max_batch, sc.routing)
                     .with_policy(sc.policy)
                     .with_prefill_chunk(sc.prefill_chunk)
-                    .with_kv(sc.kv_policy, sc.evict, sc.kv_block, sc.kv_units)
+                    .with_kv(
+                        sc.kv_policy,
+                        sc.evict,
+                        PrefixCacheMode::Session,
+                        sc.kv_block,
+                        sc.kv_units,
+                    )
                     .with_core(sc.core);
             for r in reqs {
                 cluster.submit(r);

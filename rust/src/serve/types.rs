@@ -4,6 +4,48 @@
 //! single-device sequential coordinator and the cluster engine speak the
 //! same types (the coordinator re-exports them for compatibility).
 
+/// Service-level objective class of a request. Interactive traffic
+/// (chat turns a human is waiting on) may jump the admission queue and
+/// gets prefill-chunk priority under [`super::Policy::Priority`];
+/// batch traffic (offline summarization, evals) absorbs the slack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SloClass {
+    Interactive,
+    /// Throughput-oriented background work (the historical default:
+    /// every pre-SLO workload is batch-class, keeping old runs
+    /// bit-identical).
+    #[default]
+    Batch,
+}
+
+impl SloClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Batch => "batch",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SloClass> {
+        match s {
+            "interactive" => Some(SloClass::Interactive),
+            "batch" => Some(SloClass::Batch),
+            _ => None,
+        }
+    }
+}
+
+/// One node of a request's shared-prefix path: `id` names the prefix
+/// tree node (stable across sessions — all requests carrying the same
+/// id share those tokens), `tokens` is the node's own token count
+/// (not cumulative). A request's full shared prefix is the sum over
+/// its `prefix` path, always ≤ `prompt_len`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixSeg {
+    pub id: u64,
+    pub tokens: usize,
+}
+
 /// A generation request.
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -15,6 +57,11 @@ pub struct Request {
     /// Session the request belongs to (drives session-affinity routing;
     /// requests of one session share KV locality on a device).
     pub session: u64,
+    /// SLO class (interactive may jump queues; batch is default).
+    pub slo: SloClass,
+    /// Shared-prefix path, root first (empty = no cross-session
+    /// sharing). Consumed by the radix prefix cache.
+    pub prefix: Vec<PrefixSeg>,
 }
 
 impl Request {
@@ -22,6 +69,14 @@ impl Request {
     /// (prompt plus full output budget).
     pub fn kv_tokens(&self) -> usize {
         self.prompt_len + self.max_new_tokens
+    }
+
+    /// Total shared-prefix tokens (sum over the prefix path), clamped
+    /// to the prompt so a malformed spec can never claim reuse beyond
+    /// what the request actually prefills.
+    pub fn prefix_tokens(&self) -> usize {
+        let t: usize = self.prefix.iter().map(|s| s.tokens).sum();
+        t.min(self.prompt_len)
     }
 }
 
@@ -47,6 +102,8 @@ pub struct Completion {
     pub finish_s: f64,
     /// Index of the device that served the request (0 for single-device).
     pub device: usize,
+    /// SLO class the request carried (drives per-class percentiles).
+    pub slo: SloClass,
 }
 
 impl Completion {
@@ -72,8 +129,39 @@ mod tests {
             max_new_tokens: 16,
             arrival_s: 0.0,
             session: 0,
+            slo: SloClass::Batch,
+            prefix: Vec::new(),
         };
         assert_eq!(r.kv_tokens(), 48);
+        assert_eq!(r.prefix_tokens(), 0);
+    }
+
+    #[test]
+    fn prefix_tokens_sum_and_clamp_to_the_prompt() {
+        let mut r = Request {
+            id: 0,
+            prompt_len: 32,
+            max_new_tokens: 16,
+            arrival_s: 0.0,
+            session: 0,
+            slo: SloClass::Interactive,
+            prefix: vec![
+                PrefixSeg { id: 1, tokens: 16 },
+                PrefixSeg { id: 2, tokens: 8 },
+            ],
+        };
+        assert_eq!(r.prefix_tokens(), 24);
+        r.prefix.push(PrefixSeg { id: 3, tokens: 64 });
+        assert_eq!(r.prefix_tokens(), 32, "clamped to prompt_len");
+    }
+
+    #[test]
+    fn slo_class_round_trips_and_defaults_to_batch() {
+        assert_eq!(SloClass::default(), SloClass::Batch);
+        for c in [SloClass::Interactive, SloClass::Batch] {
+            assert_eq!(SloClass::parse(c.name()), Some(c));
+        }
+        assert_eq!(SloClass::parse("gold"), None);
     }
 
     #[test]
@@ -88,6 +176,7 @@ mod tests {
             decode_s: 0.7,
             finish_s: 1.0,
             device: 0,
+            slo: SloClass::Batch,
         };
         assert!((c.total_latency_s() - 1.0).abs() < 1e-12);
         assert!((c.ttft_s() - 0.3).abs() < 1e-12);

@@ -1,12 +1,35 @@
-//! Open-loop workload generation for serving experiments.
+//! Workload generation for serving experiments.
 //!
-//! Arrival processes are derived from the same deterministic
-//! [`RequestMix`] stream the example and CLI consume, so a (seed, n,
-//! pattern) triple fully determines the workload — routing and batching
-//! comparisons replay it exactly.
+//! Two layers live here:
+//!
+//! * the historical open-loop layer — [`ArrivalPattern`] plus
+//!   [`requests_from_items`] / [`generate`] / [`generate_small`] — kept
+//!   bit-identical (seeded tests pin it) because every pre-production
+//!   scenario and the bench trajectory replay it exactly;
+//! * [`WorkloadSpec`], the typed production workload description:
+//!   arrival process × session model × length distribution × SLO mix.
+//!   The legacy `--rate/--burst/--at-once/--sessions` flags desugar to
+//!   a spec via [`WorkloadSpec::from_legacy`] and generate the same
+//!   requests bit-for-bit (pinned by test), so the old flags are pure
+//!   aliases.
+//!
+//! A spec renders to / parses from a compact string
+//! (`poisson:8,multiturn=3:2,prefix=512:16:128,interactive=0.25`) with
+//! an exact round-trip — the same string is the `--workload` CLI value
+//! and the `workload` TOML key, so suite files round-trip by
+//! construction.
+//!
+//! The multi-turn generator is *open-loop*: turn t+1 arrives an
+//! exponential think-time after turn t's **arrival**, not its
+//! completion (a closed loop would couple the workload to scheduler
+//! quality and break replayability across engines). Prompts grow
+//! turn-over-turn (previous context + previous output + the new user
+//! message), and every session's first turn carries the shared-prefix
+//! path (root system prompt + its group's template) that the radix
+//! prefix cache deduplicates across sessions.
 
-use super::types::Request;
-use crate::testutil::{MixItem, RequestMix};
+use super::types::{PrefixSeg, Request, SloClass};
+use crate::testutil::{MixItem, RequestMix, SplitMix64};
 
 /// How request arrivals are spaced.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -31,6 +54,48 @@ impl ArrivalPattern {
             ArrivalPattern::Jittered { .. } => "jittered",
             ArrivalPattern::Poisson { .. } => "poisson",
             ArrivalPattern::Bursty { .. } => "bursty",
+        }
+    }
+
+    /// Canonical spec-string token (`at-once`, `jittered:0.05`,
+    /// `poisson:8`, `bursty:8:4`).
+    fn render(&self) -> String {
+        match self {
+            ArrivalPattern::AtOnce => "at-once".to_string(),
+            ArrivalPattern::Jittered { scale_s } => format!("jittered:{scale_s}"),
+            ArrivalPattern::Poisson { rate_rps } => format!("poisson:{rate_rps}"),
+            ArrivalPattern::Bursty { rate_rps, burst } => format!("bursty:{rate_rps}:{burst}"),
+        }
+    }
+
+    fn parse(tok: &str) -> Result<ArrivalPattern, String> {
+        let mut parts = tok.split(':');
+        let head = parts.next().unwrap_or("");
+        let rest: Vec<&str> = parts.collect();
+        let bad = || format!("bad arrival token `{tok}` (at-once|jittered:S|poisson:R|bursty:R:B)");
+        match (head, rest.len()) {
+            ("at-once", 0) => Ok(ArrivalPattern::AtOnce),
+            ("jittered", 1) => Ok(ArrivalPattern::Jittered {
+                scale_s: rest[0].parse().map_err(|_| bad())?,
+            }),
+            ("poisson", 1) => {
+                let rate_rps: f64 = rest[0].parse().map_err(|_| bad())?;
+                if rate_rps <= 0.0 {
+                    return Err(format!("arrival rate must be positive, got {rate_rps}"));
+                }
+                Ok(ArrivalPattern::Poisson { rate_rps })
+            }
+            ("bursty", 2) => {
+                let rate_rps: f64 = rest[0].parse().map_err(|_| bad())?;
+                if rate_rps <= 0.0 {
+                    return Err(format!("arrival rate must be positive, got {rate_rps}"));
+                }
+                Ok(ArrivalPattern::Bursty {
+                    rate_rps,
+                    burst: rest[1].parse().map_err(|_| bad())?,
+                })
+            }
+            _ => Err(bad()),
         }
     }
 }
@@ -73,6 +138,8 @@ pub fn requests_from_items(
                 max_new_tokens: item.max_new_tokens,
                 arrival_s: at,
                 session: (i % n_sessions) as u64,
+                slo: SloClass::Batch,
+                prefix: Vec::new(),
             }
         })
         .collect()
@@ -93,6 +160,587 @@ pub fn generate_small(
 ) -> Vec<Request> {
     let items = RequestMix::small(seed).take(n);
     requests_from_items(&items, pattern, n_sessions)
+}
+
+/// Prompt/output length distribution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LengthModel {
+    /// The historical paper mix (prompt 16–128, output 8–128).
+    Paper,
+    /// The trimmed test mix (prompt 16–64, output 8–32).
+    Small,
+    /// Heavy-tailed (Pareto, tail index α = 1.5): most requests are
+    /// near the minimum, a few are huge — the agentic/chat regime.
+    /// Lengths are clamped to `cap` so one draw can't exceed a
+    /// device's sequence budget.
+    Heavy {
+        min_prompt: usize,
+        min_out: usize,
+        cap: usize,
+    },
+}
+
+/// Pareto(min, α=1.5) draw from a uniform, clamped to `[min, cap]`.
+fn pareto(u: f64, min: usize, cap: usize) -> usize {
+    let x = min as f64 * (1.0 - u).powf(-1.0 / 1.5);
+    (x as usize).clamp(min, cap.max(min))
+}
+
+impl LengthModel {
+    fn render(&self) -> String {
+        match self {
+            LengthModel::Paper => "paper".to_string(),
+            LengthModel::Small => "small".to_string(),
+            LengthModel::Heavy {
+                min_prompt,
+                min_out,
+                cap,
+            } => format!("heavy:{min_prompt}:{min_out}:{cap}"),
+        }
+    }
+
+    fn parse(tok: &str) -> Result<LengthModel, String> {
+        let parts: Vec<&str> = tok.split(':').collect();
+        let bad = || format!("bad lengths token `{tok}` (paper|small|heavy:MINP:MINO:CAP)");
+        match parts.as_slice() {
+            ["paper"] => Ok(LengthModel::Paper),
+            ["small"] => Ok(LengthModel::Small),
+            ["heavy", p, o, c] => {
+                let min_prompt: usize = p.parse().map_err(|_| bad())?;
+                let min_out: usize = o.parse().map_err(|_| bad())?;
+                let cap: usize = c.parse().map_err(|_| bad())?;
+                if min_prompt == 0 || min_out == 0 || cap < min_prompt || cap < min_out {
+                    return Err(format!(
+                        "heavy lengths need 0 < min ≤ cap, got {min_prompt}/{min_out}/{cap}"
+                    ));
+                }
+                Ok(LengthModel::Heavy {
+                    min_prompt,
+                    min_out,
+                    cap,
+                })
+            }
+            _ => Err(bad()),
+        }
+    }
+
+    /// `n` shapes from this model's seeded stream. Paper/Small delegate
+    /// to [`RequestMix`] so legacy equivalence holds by construction.
+    fn take(&self, seed: u64, n: usize) -> Vec<MixItem> {
+        match self {
+            LengthModel::Paper => RequestMix::paper(seed).take(n),
+            LengthModel::Small => RequestMix::small(seed).take(n),
+            LengthModel::Heavy {
+                min_prompt,
+                min_out,
+                cap,
+            } => {
+                // Three draws per item, mirroring RequestMix's shape.
+                let mut rng = SplitMix64::new(seed);
+                (0..n)
+                    .map(|_| {
+                        let prompt_len = pareto(rng.f64_unit(), *min_prompt, *cap);
+                        let max_new_tokens = pareto(rng.f64_unit(), *min_out, *cap);
+                        let jitter = rng.f64_unit();
+                        MixItem {
+                            prompt_len,
+                            max_new_tokens,
+                            jitter,
+                        }
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+/// The shared-prefix tree shape: one root (the system prompt all
+/// sessions share) and `groups` second-level nodes (per-tenant /
+/// per-template prompts); session `s` hangs under group `s % groups`.
+/// Node ids are stable: root = 1, group g = 2 + g (0 is reserved for
+/// "no node").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixSpec {
+    pub root_tokens: usize,
+    pub groups: usize,
+    pub group_tokens: usize,
+}
+
+impl PrefixSpec {
+    pub const fn none() -> PrefixSpec {
+        PrefixSpec {
+            root_tokens: 0,
+            groups: 0,
+            group_tokens: 0,
+        }
+    }
+
+    /// The prefix path for a session, root first.
+    fn path_for(&self, session: u64) -> Vec<PrefixSeg> {
+        let mut p = Vec::new();
+        if self.root_tokens > 0 {
+            p.push(PrefixSeg {
+                id: 1,
+                tokens: self.root_tokens,
+            });
+        }
+        if self.groups > 0 && self.group_tokens > 0 {
+            p.push(PrefixSeg {
+                id: 2 + session % self.groups as u64,
+                tokens: self.group_tokens,
+            });
+        }
+        p
+    }
+
+    fn total_tokens(&self) -> usize {
+        self.root_tokens + if self.groups > 0 { self.group_tokens } else { 0 }
+    }
+}
+
+/// How requests group into sessions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SessionModel {
+    /// The historical model: `n` independent single-turn requests whose
+    /// session ids cycle over `n_sessions` (affinity routing only).
+    Cycle { n_sessions: usize },
+    /// Multi-turn chat/agent sessions: the generator's `n` counts
+    /// *sessions*; each runs `Geometric(mean_turns)` turns (clamped to
+    /// [`MAX_TURNS`]) spaced by exponential think-time with mean
+    /// `think_s`, prompts grow with the accumulated conversation, and
+    /// every turn carries the session's shared-prefix path.
+    MultiTurn {
+        mean_turns: f64,
+        think_s: f64,
+        prefix: PrefixSpec,
+    },
+}
+
+/// Upper clamp on the geometric turns draw — bounds one session's
+/// contribution to the workload (and the prompt growth that compounds
+/// with it).
+pub const MAX_TURNS: usize = 64;
+
+/// Seed salt for the control stream (session starts, SLO coin flips,
+/// turn counts) so it never collides with the length stream — the
+/// length stream must stay draw-for-draw identical to the legacy path.
+const CTL_SALT: u64 = 0x574B_4C44_5F43_544C; // "WKLD_CTL"
+
+/// A complete, typed workload description: arrival process × session
+/// model × length distribution × SLO mix. Replaces the scattered
+/// `--rate/--burst/--at-once/--sessions` flags (which now desugar to a
+/// spec via [`WorkloadSpec::from_legacy`], bit-identically).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpec {
+    pub arrival: ArrivalPattern,
+    pub sessions: SessionModel,
+    pub lengths: LengthModel,
+    /// Fraction of traffic in the interactive SLO class ([0, 1]; the
+    /// coin is per-request under `Cycle`, per-session under
+    /// `MultiTurn` — a human either is or isn't on the other end).
+    pub interactive_share: f64,
+}
+
+impl Default for WorkloadSpec {
+    /// The legacy default workload: jittered singles over 8 sessions
+    /// (what bare `sal-pim serve` always ran).
+    fn default() -> Self {
+        WorkloadSpec {
+            arrival: ArrivalPattern::Jittered { scale_s: 0.05 },
+            sessions: SessionModel::Cycle { n_sessions: 8 },
+            lengths: LengthModel::Paper,
+            interactive_share: 0.0,
+        }
+    }
+}
+
+impl WorkloadSpec {
+    pub fn at_once() -> Self {
+        WorkloadSpec {
+            arrival: ArrivalPattern::AtOnce,
+            ..WorkloadSpec::default()
+        }
+    }
+
+    pub fn poisson(rate_rps: f64) -> Self {
+        WorkloadSpec {
+            arrival: ArrivalPattern::Poisson { rate_rps },
+            ..WorkloadSpec::default()
+        }
+    }
+
+    pub fn bursty(rate_rps: f64, burst: usize) -> Self {
+        WorkloadSpec {
+            arrival: ArrivalPattern::Bursty { rate_rps, burst },
+            ..WorkloadSpec::default()
+        }
+    }
+
+    pub fn with_sessions(mut self, n_sessions: usize) -> Self {
+        self.sessions = SessionModel::Cycle { n_sessions };
+        self
+    }
+
+    pub fn with_multi_turn(mut self, mean_turns: f64, think_s: f64) -> Self {
+        let prefix = match self.sessions {
+            SessionModel::MultiTurn { prefix, .. } => prefix,
+            SessionModel::Cycle { .. } => PrefixSpec::none(),
+        };
+        self.sessions = SessionModel::MultiTurn {
+            mean_turns,
+            think_s,
+            prefix,
+        };
+        self
+    }
+
+    /// Attach a shared-prefix tree (switches to multi-turn with 1 mean
+    /// turn if the session model was `Cycle`).
+    pub fn with_prefix(mut self, root_tokens: usize, groups: usize, group_tokens: usize) -> Self {
+        let spec = PrefixSpec {
+            root_tokens,
+            groups,
+            group_tokens,
+        };
+        self.sessions = match self.sessions {
+            SessionModel::MultiTurn {
+                mean_turns,
+                think_s,
+                ..
+            } => SessionModel::MultiTurn {
+                mean_turns,
+                think_s,
+                prefix: spec,
+            },
+            SessionModel::Cycle { .. } => SessionModel::MultiTurn {
+                mean_turns: 1.0,
+                think_s: 0.0,
+                prefix: spec,
+            },
+        };
+        self
+    }
+
+    pub fn with_lengths(mut self, lengths: LengthModel) -> Self {
+        self.lengths = lengths;
+        self
+    }
+
+    pub fn with_interactive(mut self, share: f64) -> Self {
+        self.interactive_share = share;
+        self
+    }
+
+    /// Desugar the legacy flag cluster. Reproduces the historical
+    /// validation exactly: `burst` without `rate` and non-positive
+    /// rates are the same errors the old path raised, and the
+    /// resulting spec generates bit-identical requests (pinned by
+    /// test).
+    pub fn from_legacy(
+        at_once: bool,
+        rate: Option<f64>,
+        burst: Option<usize>,
+        n_sessions: usize,
+    ) -> Result<WorkloadSpec, String> {
+        let arrival = if at_once {
+            ArrivalPattern::AtOnce
+        } else {
+            match (rate, burst) {
+                (None, None) => ArrivalPattern::Jittered { scale_s: 0.05 },
+                (None, Some(_)) => {
+                    return Err(
+                        "`burst` needs `rate` (bursty arrivals are Poisson bursts)".to_string()
+                    )
+                }
+                (Some(rate), burst) => {
+                    if rate <= 0.0 {
+                        return Err(format!("arrival rate must be positive, got {rate}"));
+                    }
+                    match burst {
+                        Some(b) => ArrivalPattern::Bursty {
+                            rate_rps: rate,
+                            burst: b,
+                        },
+                        None => ArrivalPattern::Poisson { rate_rps: rate },
+                    }
+                }
+            }
+        };
+        Ok(WorkloadSpec {
+            arrival,
+            sessions: SessionModel::Cycle { n_sessions },
+            lengths: LengthModel::Paper,
+            interactive_share: 0.0,
+        })
+    }
+
+    /// Human label for run titles (the arrival process dominates).
+    pub fn arrival_name(&self) -> &'static str {
+        self.arrival.name()
+    }
+
+    /// Canonical spec string; [`WorkloadSpec::parse`] inverts it
+    /// exactly (floats use Rust's shortest round-trip formatting).
+    pub fn render(&self) -> String {
+        let mut s = self.arrival.render();
+        match &self.sessions {
+            SessionModel::Cycle { n_sessions } => s.push_str(&format!(",sessions={n_sessions}")),
+            SessionModel::MultiTurn {
+                mean_turns,
+                think_s,
+                prefix,
+            } => {
+                s.push_str(&format!(",multiturn={mean_turns}:{think_s}"));
+                if *prefix != PrefixSpec::none() {
+                    s.push_str(&format!(
+                        ",prefix={}:{}:{}",
+                        prefix.root_tokens, prefix.groups, prefix.group_tokens
+                    ));
+                }
+            }
+        }
+        if self.lengths != LengthModel::Paper {
+            s.push_str(&format!(",lengths={}", self.lengths.render()));
+        }
+        if self.interactive_share != 0.0 {
+            s.push_str(&format!(",interactive={}", self.interactive_share));
+        }
+        s
+    }
+
+    /// Parse a spec string (`ARRIVAL[,key=value]*`). Unknown keys are
+    /// hard errors, mirroring the suite-file parser's strictness.
+    pub fn parse(s: &str) -> Result<WorkloadSpec, String> {
+        let mut toks = s.split(',');
+        let arrival = ArrivalPattern::parse(toks.next().unwrap_or("").trim())?;
+        let mut spec = WorkloadSpec {
+            arrival,
+            ..WorkloadSpec::default()
+        };
+        let mut sessions: Option<SessionModel> = None;
+        let mut prefix: Option<PrefixSpec> = None;
+        for tok in toks {
+            let tok = tok.trim();
+            let (key, val) = tok
+                .split_once('=')
+                .ok_or_else(|| format!("bad workload token `{tok}` (expected key=value)"))?;
+            match key {
+                "sessions" => {
+                    let n: usize = val
+                        .parse()
+                        .map_err(|_| format!("bad sessions count `{val}`"))?;
+                    if n == 0 {
+                        return Err("sessions must be at least 1".to_string());
+                    }
+                    sessions = Some(SessionModel::Cycle { n_sessions: n });
+                }
+                "multiturn" => {
+                    let (t, th) = val.split_once(':').ok_or_else(|| {
+                        format!("bad multiturn token `{val}` (expected TURNS:THINK_S)")
+                    })?;
+                    let mean_turns: f64 = t
+                        .parse()
+                        .map_err(|_| format!("bad mean turns `{t}`"))?;
+                    let think_s: f64 = th
+                        .parse()
+                        .map_err(|_| format!("bad think time `{th}`"))?;
+                    if mean_turns < 1.0 || think_s < 0.0 {
+                        return Err(format!(
+                            "multiturn needs mean_turns ≥ 1 and think_s ≥ 0, got {t}:{th}"
+                        ));
+                    }
+                    sessions = Some(SessionModel::MultiTurn {
+                        mean_turns,
+                        think_s,
+                        prefix: PrefixSpec::none(),
+                    });
+                }
+                "prefix" => {
+                    let parts: Vec<&str> = val.split(':').collect();
+                    let [r, g, t] = parts.as_slice() else {
+                        return Err(format!(
+                            "bad prefix token `{val}` (expected ROOT:GROUPS:TOKENS)"
+                        ));
+                    };
+                    let p = PrefixSpec {
+                        root_tokens: r.parse().map_err(|_| format!("bad prefix root `{r}`"))?,
+                        groups: g.parse().map_err(|_| format!("bad prefix groups `{g}`"))?,
+                        group_tokens: t
+                            .parse()
+                            .map_err(|_| format!("bad prefix tokens `{t}`"))?,
+                    };
+                    if p.group_tokens > 0 && p.groups == 0 {
+                        return Err("prefix group tokens need groups ≥ 1".to_string());
+                    }
+                    prefix = Some(p);
+                }
+                "lengths" => spec.lengths = LengthModel::parse(val)?,
+                "interactive" => {
+                    let share: f64 = val
+                        .parse()
+                        .map_err(|_| format!("bad interactive share `{val}`"))?;
+                    if !(0.0..=1.0).contains(&share) {
+                        return Err(format!(
+                            "interactive share must be in [0, 1], got {share}"
+                        ));
+                    }
+                    spec.interactive_share = share;
+                }
+                _ => return Err(format!("unknown workload key `{key}`")),
+            }
+        }
+        if let Some(s) = sessions {
+            spec.sessions = s;
+        }
+        if let Some(p) = prefix {
+            match &mut spec.sessions {
+                SessionModel::MultiTurn { prefix, .. } => *prefix = p,
+                SessionModel::Cycle { .. } => {
+                    return Err("prefix needs the multiturn session model".to_string())
+                }
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Generate the workload. Under `Cycle`, `n` counts requests (the
+    /// historical meaning); under `MultiTurn`, `n` counts sessions and
+    /// each contributes ≥ 1 turn. Fully determined by `(seed, n,
+    /// self)`.
+    pub fn generate(&self, seed: u64, n: usize) -> Vec<Request> {
+        match self.sessions {
+            SessionModel::Cycle { n_sessions } => {
+                let items = self.lengths.take(seed, n);
+                let mut reqs = requests_from_items(&items, self.arrival, n_sessions);
+                // The SLO coin uses a salted side stream so a zero
+                // share leaves the legacy byte stream untouched.
+                if self.interactive_share > 0.0 {
+                    let mut ctl = SplitMix64::new(seed ^ CTL_SALT);
+                    for r in &mut reqs {
+                        if ctl.f64_unit() < self.interactive_share {
+                            r.slo = SloClass::Interactive;
+                        }
+                    }
+                }
+                reqs
+            }
+            SessionModel::MultiTurn {
+                mean_turns,
+                think_s,
+                prefix,
+            } => self.generate_multi_turn(seed, n, mean_turns, think_s, prefix),
+        }
+    }
+
+    /// Session loop. Control draws per session, in order: arrival
+    /// uniform, SLO uniform, turns uniform (always all three, so the
+    /// stream stays aligned across arrival patterns). Lengths come
+    /// from the length stream, one item per turn; the item's jitter
+    /// doubles as the think-time uniform for turns ≥ 2.
+    fn generate_multi_turn(
+        &self,
+        seed: u64,
+        n_sessions: usize,
+        mean_turns: f64,
+        think_s: f64,
+        prefix: PrefixSpec,
+    ) -> Vec<Request> {
+        let mut ctl = SplitMix64::new(seed ^ CTL_SALT);
+        let mut out: Vec<(f64, u64, usize, Request)> = Vec::with_capacity(n_sessions * 2);
+        let mut session_start = 0.0f64;
+        // Control draws (session starts, SLO coins, turn counts) come
+        // first so the single contiguous length stream can then be
+        // taken at exactly `total_turns` items.
+        let mut turns = Vec::with_capacity(n_sessions);
+        let mut arrivals = Vec::with_capacity(n_sessions);
+        let mut slos = Vec::with_capacity(n_sessions);
+        for s in 0..n_sessions {
+            let arrival_u = ctl.f64_unit();
+            let slo_u = ctl.f64_unit();
+            let turns_u = ctl.f64_unit();
+            match self.arrival {
+                ArrivalPattern::AtOnce => {}
+                ArrivalPattern::Jittered { scale_s } => session_start += arrival_u * scale_s,
+                ArrivalPattern::Poisson { rate_rps } => {
+                    session_start += exp_gap(arrival_u, rate_rps)
+                }
+                ArrivalPattern::Bursty { rate_rps, burst } => {
+                    let burst = burst.max(1);
+                    if s % burst == 0 {
+                        session_start += exp_gap(arrival_u, rate_rps) * burst as f64;
+                    }
+                }
+            }
+            arrivals.push(session_start);
+            slos.push(if slo_u < self.interactive_share {
+                SloClass::Interactive
+            } else {
+                SloClass::Batch
+            });
+            turns.push(geometric_turns(turns_u, mean_turns));
+        }
+        let total_turns: usize = turns.iter().sum();
+        let item_stream = self.lengths.take(seed, total_turns);
+        let mut next_item = 0usize;
+        for s in 0..n_sessions {
+            let path = prefix.path_for(s as u64);
+            let prefix_total = prefix.total_tokens();
+            let mut at = arrivals[s];
+            let mut context = 0usize; // accumulated conversation tokens
+            for turn in 0..turns[s] {
+                let item = item_stream[next_item];
+                next_item += 1;
+                if turn > 0 && think_s > 0.0 {
+                    at += -(1.0 - item.jitter).ln() * think_s;
+                }
+                let prompt_len = if turn == 0 {
+                    prefix_total + item.prompt_len
+                } else {
+                    context + item.prompt_len
+                };
+                context = prompt_len + item.max_new_tokens;
+                out.push((
+                    at,
+                    s as u64,
+                    turn,
+                    Request {
+                        id: 0, // assigned after the arrival sort
+                        prompt_len,
+                        max_new_tokens: item.max_new_tokens,
+                        arrival_s: at,
+                        session: s as u64,
+                        slo: slos[s],
+                        prefix: path.clone(),
+                    },
+                ));
+            }
+        }
+        // Global arrival order (ties broken by session, then turn) so
+        // ids are the admission order every engine sees.
+        out.sort_by(|a, b| {
+            a.0.total_cmp(&b.0)
+                .then(a.1.cmp(&b.1))
+                .then(a.2.cmp(&b.2))
+        });
+        out.into_iter()
+            .enumerate()
+            .map(|(i, (_, _, _, mut r))| {
+                r.id = i as u64;
+                r
+            })
+            .collect()
+    }
+}
+
+/// Geometric turn count with the given mean, support ≥ 1, clamped to
+/// [`MAX_TURNS`].
+fn geometric_turns(u: f64, mean_turns: f64) -> usize {
+    if mean_turns <= 1.0 {
+        return 1;
+    }
+    let p = 1.0 / mean_turns;
+    let k = 1 + ((1.0 - u).ln() / (1.0 - p).ln()).floor() as usize;
+    k.clamp(1, MAX_TURNS)
 }
 
 #[cfg(test)]
@@ -147,5 +795,202 @@ mod tests {
             assert_eq!(x.prompt_len, y.prompt_len);
             assert_eq!(x.arrival_s, y.arrival_s);
         }
+    }
+
+    #[test]
+    fn legacy_flags_desugar_bit_identically() {
+        // Every legacy flag shape must generate the exact byte stream
+        // the old ArrivalPattern path produced.
+        let cases: Vec<(bool, Option<f64>, Option<usize>, ArrivalPattern)> = vec![
+            (true, None, None, ArrivalPattern::AtOnce),
+            (true, Some(8.0), Some(4), ArrivalPattern::AtOnce),
+            (false, None, None, ArrivalPattern::Jittered { scale_s: 0.05 }),
+            (
+                false,
+                Some(25.0),
+                None,
+                ArrivalPattern::Poisson { rate_rps: 25.0 },
+            ),
+            (
+                false,
+                Some(25.0),
+                Some(4),
+                ArrivalPattern::Bursty {
+                    rate_rps: 25.0,
+                    burst: 4,
+                },
+            ),
+        ];
+        for (at_once, rate, burst, pattern) in cases {
+            let spec = WorkloadSpec::from_legacy(at_once, rate, burst, 4).unwrap();
+            let new = spec.generate(42, 24);
+            let old = generate(42, 24, pattern, 4);
+            assert_eq!(new.len(), old.len());
+            for (a, b) in new.iter().zip(&old) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.prompt_len, b.prompt_len);
+                assert_eq!(a.max_new_tokens, b.max_new_tokens);
+                assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits());
+                assert_eq!(a.session, b.session);
+                assert_eq!(a.slo, SloClass::Batch);
+                assert!(a.prefix.is_empty());
+            }
+        }
+        // And the two historical error shapes survive the desugar.
+        assert!(WorkloadSpec::from_legacy(false, None, Some(4), 1).is_err());
+        assert!(WorkloadSpec::from_legacy(false, Some(0.0), None, 1).is_err());
+    }
+
+    #[test]
+    fn spec_strings_round_trip_exactly() {
+        let specs = vec![
+            WorkloadSpec::default(),
+            WorkloadSpec::at_once().with_sessions(64),
+            WorkloadSpec::poisson(12.5).with_interactive(0.25),
+            WorkloadSpec::bursty(100.0, 8)
+                .with_multi_turn(3.0, 2.5)
+                .with_prefix(512, 16, 128)
+                .with_lengths(LengthModel::Heavy {
+                    min_prompt: 32,
+                    min_out: 16,
+                    cap: 512,
+                })
+                .with_interactive(0.4),
+            WorkloadSpec::poisson(8.0).with_multi_turn(4.0, 0.5),
+        ];
+        for s in specs {
+            let rendered = s.render();
+            let back = WorkloadSpec::parse(&rendered)
+                .unwrap_or_else(|e| panic!("parse({rendered}) failed: {e}"));
+            assert_eq!(back, s, "round-trip through `{rendered}`");
+            assert_eq!(back.render(), rendered, "canonical form is a fixpoint");
+        }
+    }
+
+    #[test]
+    fn spec_parse_rejects_malformed_input() {
+        for bad in [
+            "warp-speed",
+            "poisson:0",
+            "poisson:-3",
+            "poisson:8,interactive=1.5",
+            "poisson:8,sessions=0",
+            "poisson:8,prefix=512:16:128", // prefix without multiturn
+            "poisson:8,multiturn=0.5:1",
+            "poisson:8,lengths=heavy:0:8:64",
+            "poisson:8,frobnicate=1",
+            "bursty:8",
+        ] {
+            assert!(WorkloadSpec::parse(bad).is_err(), "`{bad}` must not parse");
+        }
+    }
+
+    #[test]
+    fn multi_turn_sessions_grow_and_stay_ordered() {
+        let spec = WorkloadSpec::poisson(10.0)
+            .with_multi_turn(3.0, 2.0)
+            .with_prefix(256, 4, 64);
+        let reqs = spec.generate(7, 32);
+        assert!(reqs.len() >= 32, "every session contributes ≥ 1 turn");
+        // Ids are the global arrival order.
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+            assert_eq!(w[1].id, w[0].id + 1);
+        }
+        // Per session: arrivals strictly ordered by turn, prompts grow
+        // with the accumulated conversation, class/prefix constant.
+        for s in 0..32u64 {
+            let turns: Vec<&Request> = reqs.iter().filter(|r| r.session == s).collect();
+            assert!(!turns.is_empty());
+            let mut by_arrival = turns.clone();
+            by_arrival.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+            for w in by_arrival.windows(2) {
+                // Next turn's prompt must contain the previous turn's
+                // whole conversation.
+                assert!(w[1].prompt_len > w[0].prompt_len + w[0].max_new_tokens - 1);
+                assert_eq!(w[1].slo, w[0].slo);
+                assert_eq!(w[1].prefix, w[0].prefix);
+            }
+            // First turn starts at prefix + user message.
+            assert!(by_arrival[0].prompt_len > by_arrival[0].prefix_tokens());
+            assert_eq!(by_arrival[0].prefix_tokens(), 256 + 64);
+            assert_eq!(by_arrival[0].prefix[0], PrefixSeg { id: 1, tokens: 256 });
+            assert_eq!(by_arrival[0].prefix[1].id, 2 + s % 4);
+        }
+    }
+
+    #[test]
+    fn multi_turn_generation_is_deterministic_and_token_conserving() {
+        let spec = WorkloadSpec::poisson(20.0)
+            .with_multi_turn(2.5, 1.0)
+            .with_prefix(128, 8, 32)
+            .with_interactive(0.3)
+            .with_lengths(LengthModel::Heavy {
+                min_prompt: 16,
+                min_out: 8,
+                cap: 256,
+            });
+        let a = spec.generate(11, 40);
+        let b = spec.generate(11, 40);
+        assert_eq!(a.len(), b.len());
+        let tok = |v: &[Request]| -> usize { v.iter().map(|r| r.kv_tokens()).sum() };
+        assert_eq!(tok(&a), tok(&b), "token totals are seed-determined");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+            assert_eq!(x.prompt_len, y.prompt_len);
+            assert_eq!(x.slo, y.slo);
+        }
+        // A different seed moves the totals (the streams are live).
+        assert_ne!(tok(&a), tok(&spec.generate(12, 40)));
+    }
+
+    #[test]
+    fn interactive_share_is_respected_in_expectation() {
+        let spec = WorkloadSpec::at_once().with_sessions(8).with_interactive(0.5);
+        let reqs = spec.generate(3, 400);
+        let interactive = reqs
+            .iter()
+            .filter(|r| r.slo == SloClass::Interactive)
+            .count();
+        assert!(
+            (120..=280).contains(&interactive),
+            "share 0.5 of 400 drew {interactive}"
+        );
+        // Zero share leaves everything batch (and the request stream
+        // bit-identical to legacy — checked elsewhere).
+        let none = WorkloadSpec::at_once().with_sessions(8).generate(3, 50);
+        assert!(none.iter().all(|r| r.slo == SloClass::Batch));
+    }
+
+    #[test]
+    fn heavy_lengths_are_heavy_tailed_but_capped() {
+        let spec = WorkloadSpec::at_once()
+            .with_sessions(1)
+            .with_lengths(LengthModel::Heavy {
+                min_prompt: 32,
+                min_out: 8,
+                cap: 1024,
+            });
+        let reqs = spec.generate(5, 500);
+        assert!(reqs.iter().all(|r| (32..=1024).contains(&r.prompt_len)));
+        assert!(reqs.iter().all(|r| (8..=1024).contains(&r.max_new_tokens)));
+        let over_4x = reqs.iter().filter(|r| r.prompt_len > 128).count();
+        assert!(over_4x > 0, "a Pareto tail must produce >4× draws");
+        let median_band = reqs.iter().filter(|r| r.prompt_len <= 64).count();
+        assert!(
+            median_band > reqs.len() / 2,
+            "most draws sit near the minimum"
+        );
+    }
+
+    #[test]
+    fn geometric_turns_clamp_and_average() {
+        assert_eq!(geometric_turns(0.999999, 1.0), 1);
+        assert_eq!(geometric_turns(0.9999999999, 8.0), MAX_TURNS);
+        let mut rng = SplitMix64::new(1);
+        let n = 4000;
+        let total: usize = (0..n).map(|_| geometric_turns(rng.f64_unit(), 3.0)).sum();
+        let mean = total as f64 / n as f64;
+        assert!((2.6..=3.4).contains(&mean), "mean turns ≈ 3, got {mean}");
     }
 }

@@ -136,6 +136,11 @@ fn assert_runs_identical(
     assert_eq!(ev_rep.recompute_tokens, lg_rep.recompute_tokens, "{label}: recompute_tokens");
     assert_eq!(ev_rep.reuse_hits, lg_rep.reuse_hits, "{label}: reuse_hits");
     assert_eq!(ev_rep.reuse_tokens, lg_rep.reuse_tokens, "{label}: reuse_tokens");
+    assert_eq!(ev_rep.prefix_hits, lg_rep.prefix_hits, "{label}: prefix_hits");
+    assert_eq!(
+        ev_rep.prefix_reused_tokens, lg_rep.prefix_reused_tokens,
+        "{label}: prefix_reused_tokens"
+    );
     assert_eq!(ev_rep.truncated, lg_rep.truncated, "{label}: truncated");
 }
 
@@ -214,7 +219,13 @@ fn event_core_is_bit_identical_on_random_cluster_runs() {
         let build = |core: EngineCore| {
             Cluster::homogeneous(&cfg, backend, n_devices, max_batch, routing)
                 .with_core(core)
-                .with_kv(KvPolicy::Paged, EvictPolicy::Lru, None, Some(units))
+                .with_kv(
+                    KvPolicy::Paged,
+                    EvictPolicy::Lru,
+                    sal_pim::serve::PrefixCacheMode::Session,
+                    None,
+                    Some(units),
+                )
                 .with_prefill_chunk(chunk)
         };
         let mut ev = build(EngineCore::Event);

@@ -15,7 +15,7 @@ use sal_pim::scenario::{
     sink, BreakdownParams, ConfigSel, EngineKind, PowerParams, Runner, Scenario, ServeParams,
     SimulateParams, SweepParams, SCHEMA_VERSION,
 };
-use sal_pim::serve::{BackendKind, Policy, Routing};
+use sal_pim::serve::{BackendKind, Policy, Routing, WorkloadSpec};
 use sal_pim::testutil::SplitMix64;
 
 fn rand_config(rng: &mut SplitMix64) -> ConfigSel {
@@ -36,7 +36,7 @@ fn rand_config(rng: &mut SplitMix64) -> ConfigSel {
 /// A random scenario; always serializable, not necessarily runnable.
 fn rand_scenario(rng: &mut SplitMix64) -> Scenario {
     let config = rand_config(rng);
-    match rng.below(6) {
+    match rng.below(7) {
         0 => Scenario::Simulate(
             SimulateParams::default()
                 .with_config(config)
@@ -63,6 +63,13 @@ fn rand_scenario(rng: &mut SplitMix64) -> Scenario {
                 .with_p_subs(vec![1, [2, 4][rng.below(2) as usize]]),
         ),
         4 => Scenario::Area(sal_pim::scenario::AreaParams::default().with_config(config)),
+        5 => Scenario::Custom(
+            sal_pim::scenario::CustomParams::default()
+                .with_config(config)
+                .with_label(["lut ablation", "paper fig. 13 sanity"][rng.below(2) as usize])
+                .with_param("alpha", ["0.5", "0.9"][rng.below(2) as usize])
+                .with_param("n_subarrays", &format!("{}", 1 + rng.below(9))),
+        ),
         _ => {
             let engines = [EngineKind::Seq, EngineKind::Batch, EngineKind::Cluster];
             let engine = engines[rng.below(3) as usize];
@@ -109,6 +116,16 @@ fn rand_scenario(rng: &mut SplitMix64) -> Scenario {
             }
             if rng.below(4) == 0 {
                 p = p.with_sweep(vec![20.0, 20.0 + rng.below(2000) as f64]);
+            } else if rng.below(3) == 0 {
+                // A typed workload spec supersedes the legacy arrival
+                // flags (and is mutually exclusive with a load sweep).
+                let specs = [
+                    "poisson:120,multiturn=3:1.5",
+                    "at-once,sessions=3,interactive=0.5",
+                    "bursty:90:3,prefix=32:2:16,lengths=heavy:8:4:128",
+                ];
+                let spec = WorkloadSpec::parse(specs[rng.below(3) as usize]).unwrap();
+                p = p.with_workload_spec(spec);
             }
             Scenario::Serve(p)
         }

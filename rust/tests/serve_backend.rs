@@ -8,7 +8,7 @@ use sal_pim::serve::fabric::FabricParams;
 use sal_pim::serve::workload::{requests_from_items, ArrivalPattern};
 use sal_pim::serve::{
     BackendKind, Cluster, DeviceEngine, ExecutionBackend, GpuBackend, Request, Routing,
-    SalPimBackend, ServeMetrics,
+    SalPimBackend, ServeMetrics, SloClass,
 };
 use sal_pim::testutil::RequestMix;
 
@@ -19,6 +19,8 @@ fn req(id: u64, prompt: usize, out: usize, at: f64) -> Request {
         max_new_tokens: out,
         arrival_s: at,
         session: id,
+        slo: SloClass::Batch,
+        prefix: Vec::new(),
     }
 }
 

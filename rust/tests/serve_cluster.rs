@@ -186,6 +186,8 @@ fn kv_exhaustion_throttles_but_serves_everything() {
             max_new_tokens: 16,
             arrival_s: 0.0,
             session: i,
+            slo: sal_pim::serve::SloClass::Batch,
+            prefix: Vec::new(),
         });
     }
     let done = eng.run();

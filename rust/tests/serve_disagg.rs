@@ -9,7 +9,8 @@ use sal_pim::serve::backend::HeteroBackend;
 use sal_pim::serve::workload::{requests_from_items, ArrivalPattern};
 use sal_pim::serve::{
     BackendKind, Cluster, DeviceEngine, DisaggregatedCluster, EvictPolicy, Fabric,
-    FabricParams, GpuBackend, KvPolicy, Request, Routing, SalPimBackend,
+    FabricParams, GpuBackend, KvPolicy, PrefixCacheMode, Request, Routing, SalPimBackend,
+    SloClass,
 };
 use sal_pim::testutil::RequestMix;
 
@@ -20,6 +21,8 @@ fn req(id: u64, prompt: usize, out: usize, at: f64) -> Request {
         max_new_tokens: out,
         arrival_s: at,
         session: id,
+        slo: SloClass::Batch,
+        prefix: Vec::new(),
     }
 }
 
@@ -123,7 +126,7 @@ fn tokens_are_conserved_under_migration_swap_and_recompute() {
         };
         let disagg_run = |evict: EvictPolicy| {
             let mut c = DisaggregatedCluster::new(&cfg, 2, 2, 8, FabricParams::pcie())
-                .with_kv(KvPolicy::Paged, evict, None, Some(tight));
+                .with_kv(KvPolicy::Paged, evict, PrefixCacheMode::Session, None, Some(tight));
             for r in workload() {
                 c.submit(r);
             }

@@ -6,7 +6,8 @@
 use sal_pim::config::SimConfig;
 use sal_pim::serve::workload::{requests_from_items, ArrivalPattern};
 use sal_pim::serve::{
-    Cluster, DeviceEngine, EvictPolicy, KvPolicy, Request, Routing, ServeMetrics,
+    Cluster, DeviceEngine, EvictPolicy, KvPolicy, PrefixCacheMode, Request, Routing,
+    ServeMetrics, SloClass,
 };
 use sal_pim::testutil::RequestMix;
 
@@ -17,6 +18,8 @@ fn req(id: u64, session: u64, prompt: usize, out: usize, at: f64) -> Request {
         max_new_tokens: out,
         arrival_s: at,
         session,
+        slo: SloClass::Batch,
+        prefix: Vec::new(),
     }
 }
 
@@ -69,6 +72,7 @@ fn session_reuse_hits_are_deterministic() {
         let mut c = Cluster::new(&cfg, 2, 4, Routing::SessionAffinity).with_kv(
             KvPolicy::Paged,
             EvictPolicy::Lru,
+            PrefixCacheMode::Session,
             None,
             None,
         );

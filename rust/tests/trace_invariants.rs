@@ -10,7 +10,7 @@ use sal_pim::scenario::{
 };
 use sal_pim::serve::{
     Cluster, Completion, DeviceEngine, DisaggregatedCluster, EvictPolicy, FabricParams,
-    KvPolicy, Request, Routing,
+    KvPolicy, PrefixCacheMode, Request, Routing, SloClass,
 };
 use sal_pim::trace::{
     chrome_trace_json, derive_spans, SpanKind, TraceEvent, TraceEventKind, TraceHandle,
@@ -23,6 +23,8 @@ fn req(id: u64, session: u64, prompt: usize, out: usize, at: f64) -> Request {
         max_new_tokens: out,
         arrival_s: at,
         session,
+        slo: SloClass::Batch,
+        prefix: Vec::new(),
     }
 }
 
@@ -123,6 +125,7 @@ fn tracing_never_perturbs_the_simulation() {
         let mut c = Cluster::new(&cfg, 2, 4, Routing::SessionAffinity).with_kv(
             KvPolicy::Paged,
             EvictPolicy::Lru,
+            PrefixCacheMode::Session,
             None,
             None,
         );
@@ -220,6 +223,7 @@ fn disagg_spans_tile_arrival_to_finish_through_migration_and_swap() {
     let mut c = DisaggregatedCluster::new(&cfg, 1, 1, 8, FabricParams::pcie()).with_kv(
         KvPolicy::Paged,
         EvictPolicy::Swap,
+        PrefixCacheMode::Session,
         None,
         Some(tight),
     );
