@@ -283,10 +283,23 @@ pub fn commands() -> Vec<CommandSpec> {
                     "disagg decode-pool size (default: remaining --devices)",
                 ),
                 FlagSpec::value(
+                    "schedule",
+                    "SPEC",
+                    "",
+                    "typed schedule spec: POLICY[,key=value]* with policy \
+                     static:<salpim|gpu|banklevel|hetero> (one backend everywhere) | \
+                     phase (re-place each request's next phase across a gpu+pim pool \
+                     split at every token boundary; engine cluster, pools sized by \
+                     --prefill-pool/--decode-pool) and keys hysteresis=N, \
+                     objective=latency|energy, power_cap=W (needs objective=energy); \
+                     supersedes the legacy --backend alias",
+                ),
+                FlagSpec::value(
                     "backend",
                     "B",
                     "salpim",
-                    "execution backend: salpim|gpu|banklevel|hetero",
+                    "execution backend: salpim|gpu|banklevel|hetero (legacy alias of \
+                     --schedule static:<B>)",
                 ),
                 FlagSpec::optional_value(
                     "prefill-chunk",
@@ -514,6 +527,8 @@ mod tests {
         assert!(md.contains("`--decode-pool N`"));
         assert!(md.contains("`--trace FILE`"));
         assert!(md.contains("`--workload SPEC`"));
+        assert!(md.contains("`--schedule SPEC`"));
+        assert!(md.contains("legacy alias of --schedule static:<B>"));
         assert!(md.contains("`--prefix-cache M`"));
         assert!(md.contains("`--sessions N`"));
         assert!(md.contains("`--allow-missing`"));

@@ -42,6 +42,30 @@ impl EnergyParams {
             calu_w: 2.749e-3,
         }
     }
+
+    /// Table 3 logic power of one device (W): unit powers × unit counts
+    /// × active fraction, "assuming the ALUs are always operating"
+    /// (§6.2). [`PowerReport::from_stats`] charges its logic energy at
+    /// exactly this rate.
+    pub fn logic_power_w(&self, cfg: &SimConfig) -> f64 {
+        let area = AreaModel::new(cfg);
+        let channels = cfg.hbm.channels() as f64;
+        let active_salus = area.salus_per_channel as f64
+            * (cfg.parallelism.p_sub as f64 / cfg.salu.max_p_sub as f64);
+        channels
+            * (active_salus * self.salu_w
+                + area.bank_units_per_channel as f64 * self.bank_unit_w
+                + self.calu_w)
+    }
+
+    /// Busy power of one SAL-PIM device (W): Fig. 15's always-on
+    /// components — logic plus the refresh share of the HBM budget.
+    /// The data-movement terms are workload-shaped and charged per run
+    /// by [`PowerReport`]; this is the steady rate the phase router's
+    /// energy objective prices a busy PIM device at.
+    pub fn pim_device_power_w(&self, cfg: &SimConfig) -> f64 {
+        self.logic_power_w(cfg) + self.refresh_fraction * self.power_budget_w
+    }
 }
 
 /// Power accounting for one simulated run.
@@ -83,15 +107,7 @@ impl PowerReport {
 
         // Logic: Table 3 powers × unit counts × busy time (conservative:
         // the §6.2 "assumes the ALUs are always operating").
-        let area = AreaModel::new(cfg);
-        let channels = cfg.hbm.channels() as f64;
-        let active_salus = area.salus_per_channel as f64
-            * (cfg.parallelism.p_sub as f64 / cfg.salu.max_p_sub as f64);
-        let logic_w = channels
-            * (active_salus * params.salu_w
-                + area.bank_units_per_channel as f64 * params.bank_unit_w
-                + params.calu_w);
-        let logic_j = logic_w * seconds;
+        let logic_j = params.logic_power_w(cfg) * seconds;
 
         let refresh_j = params.refresh_fraction * params.power_budget_w * seconds;
 
@@ -166,6 +182,22 @@ mod tests {
         assert!(r.act_j > 0.0 && r.movement_j > 0.0 && r.logic_j > 0.0);
         let refresh_w = r.refresh_j / r.seconds;
         assert!((refresh_w - 0.26 * 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn logic_energy_charges_at_the_logic_power_rate() {
+        // The extracted per-device rate and the report's logic energy
+        // must agree bit-for-bit (the phase router prices busy PIM
+        // devices at this rate).
+        let cfg = SimConfig::paper().with_p_sub(2);
+        let params = EnergyParams::paper();
+        let r = run_power(2);
+        let expect = params.logic_power_w(&cfg) * r.seconds;
+        assert_eq!(r.logic_j.to_bits(), expect.to_bits());
+        let dev = params.pim_device_power_w(&cfg);
+        let refresh_w = params.refresh_fraction * params.power_budget_w;
+        assert!((dev - (params.logic_power_w(&cfg) + refresh_w)).abs() < 1e-12);
+        assert!(dev > refresh_w);
     }
 
     #[test]

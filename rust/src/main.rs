@@ -21,7 +21,8 @@ use sal_pim::scenario::{
 };
 use sal_pim::report::fmt_bw;
 use sal_pim::serve::{
-    BackendKind, EngineCore, EvictPolicy, FabricKind, KvPolicy, PrefixCacheMode, WorkloadSpec,
+    BackendKind, EngineCore, EvictPolicy, FabricKind, KvPolicy, PrefixCacheMode, SchedSpec,
+    WorkloadSpec,
 };
 use sal_pim::trace::{chrome_trace_json, PhaseProfile, TraceEvent};
 use std::path::Path;
@@ -182,9 +183,8 @@ fn scenario_serve(args: &Args, config: ConfigSel) -> anyhow::Result<Scenario> {
         anyhow::anyhow!("unknown engine `{engine_flag}` (seq|batch|cluster|disagg)")
     })?;
     let backend_flag = args.flag("backend").unwrap_or("salpim");
-    let backend = BackendKind::parse(backend_flag).ok_or_else(|| {
-        anyhow::anyhow!("unknown backend `{backend_flag}` (salpim|gpu|banklevel|hetero)")
-    })?;
+    let backend =
+        BackendKind::parse(backend_flag).map_err(|e| anyhow::anyhow!("bad --backend: {e}"))?;
     let core_flag = args.flag("engine-core").unwrap_or("event");
     let engine_core = EngineCore::parse(core_flag)
         .ok_or_else(|| anyhow::anyhow!("unknown engine-core `{core_flag}` (event|legacy)"))?;
@@ -239,6 +239,14 @@ fn scenario_serve(args: &Args, config: ConfigSel) -> anyhow::Result<Scenario> {
         ),
         None => None,
     };
+    // `--schedule SPEC` supersedes the `--backend` alias (which desugars
+    // to `static:<backend>` inside the runner).
+    let schedule = match args.flag("schedule") {
+        Some(s) => {
+            Some(SchedSpec::parse(s).map_err(|e| anyhow::anyhow!("bad --schedule spec: {e}"))?)
+        }
+        None => None,
+    };
 
     let mut params = ServeParams::default()
         .with_config(config)
@@ -261,6 +269,9 @@ fn scenario_serve(args: &Args, config: ConfigSel) -> anyhow::Result<Scenario> {
         .with_prefix_cache(prefix_cache);
     if let Some(w) = workload {
         params = params.with_workload_spec(w);
+    }
+    if let Some(s) = schedule {
+        params = params.with_schedule(s);
     }
     params.n_sessions = args.get("sessions", 8usize)?;
     params.seed = args.get("seed", 42u64)?;

@@ -395,6 +395,18 @@ pub fn direction(name: &str) -> Direction {
     if informational.contains(&name) {
         return Direction::Informational;
     }
+    // Phase-scheduling metrics, pinned by exact name: oracle proximity
+    // gates upward, modeled energy/power gate downward, and the router's
+    // migration count is a placement property (the energy term already
+    // prices each migration), so it never gates.
+    match name {
+        "pct_of_oracle" => return Direction::HigherIsBetter,
+        "energy_j" | "avg_power_w" => return Direction::LowerIsBetter,
+        "router_migrations" | "best_static_pct_of_oracle" | "oracle_candidates" => {
+            return Direction::Informational
+        }
+        _ => {}
+    }
     if higher_better.iter().any(|k| name.contains(k)) {
         return Direction::HigherIsBetter;
     }
@@ -735,6 +747,21 @@ mod tests {
         // …while `decode_rate` (tok/s) still gates in the right direction.
         assert_eq!(direction("decode_rate"), Direction::HigherIsBetter);
         assert_eq!(direction("decode"), Direction::LowerIsBetter);
+    }
+
+    #[test]
+    fn phase_scheduling_metrics_classify_by_exact_name() {
+        // Closer to the oracle is better; modeled energy/power must not
+        // creep up; migration counts are placement shape, not cost.
+        assert_eq!(direction("pct_of_oracle"), Direction::HigherIsBetter);
+        assert_eq!(direction("energy_j"), Direction::LowerIsBetter);
+        assert_eq!(direction("avg_power_w"), Direction::LowerIsBetter);
+        assert_eq!(direction("router_migrations"), Direction::Informational);
+        assert_eq!(
+            direction("best_static_pct_of_oracle"),
+            Direction::Informational
+        );
+        assert_eq!(direction("oracle_candidates"), Direction::Informational);
     }
 
     #[test]

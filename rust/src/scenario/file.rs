@@ -29,7 +29,8 @@ use super::{
     EngineKind, PowerParams, Scenario, ScenarioError, ServeParams, SimulateParams, SweepParams,
 };
 use crate::serve::{
-    BackendKind, EngineCore, EvictPolicy, FabricKind, KvPolicy, PrefixCacheMode, WorkloadSpec,
+    BackendKind, EngineCore, EvictPolicy, FabricKind, KvPolicy, PrefixCacheMode, SchedSpec,
+    WorkloadSpec,
 };
 use std::fmt::Write as _;
 
@@ -248,8 +249,13 @@ pub fn from_kv(pairs: &[(usize, String, String)]) -> Result<Scenario, ScenarioEr
                             .ok_or_else(|| bad(*line, key, v, "event|legacy"))?
                     }
                     "backend" => {
-                        p.backend = BackendKind::parse(v)
-                            .ok_or_else(|| bad(*line, key, v, "salpim|gpu|banklevel|hetero"))?
+                        // BackendKind::parse's error already names the
+                        // vocabulary and suggests a fix; carry it whole.
+                        p.backend =
+                            BackendKind::parse(v).map_err(|msg| ScenarioError::Parse {
+                                line: *line,
+                                msg,
+                            })?
                     }
                     "policy" => {
                         p.policy = parse_policy(v)
@@ -287,6 +293,13 @@ pub fn from_kv(pairs: &[(usize, String, String)]) -> Result<Scenario, ScenarioEr
                     "workload" => {
                         p.workload =
                             Some(WorkloadSpec::parse(v).map_err(|msg| ScenarioError::Parse {
+                                line: *line,
+                                msg,
+                            })?)
+                    }
+                    "schedule" => {
+                        p.schedule =
+                            Some(SchedSpec::parse(v).map_err(|msg| ScenarioError::Parse {
                                 line: *line,
                                 msg,
                             })?)
@@ -405,6 +418,9 @@ impl Scenario {
                 if let Some(w) = &p.workload {
                     push("workload", w.render());
                 }
+                if let Some(s) = &p.schedule {
+                    push("schedule", s.render());
+                }
                 if p.prefix_cache != PrefixCacheMode::Session {
                     push("prefix_cache", p.prefix_cache.name().to_string());
                 }
@@ -431,7 +447,8 @@ impl Scenario {
             matches!(
                 key,
                 "kind" | "preset" | "engine" | "engine_core" | "backend" | "policy" | "route"
-                    | "kv_policy" | "evict" | "fabric" | "workload" | "prefix_cache" | "label"
+                    | "kv_policy" | "evict" | "fabric" | "workload" | "schedule" | "prefix_cache"
+                    | "label"
             ) || key.starts_with("cfg.")
                 || key.starts_with("param.")
         }
@@ -562,6 +579,15 @@ mod tests {
                         .unwrap(),
                     ),
             ),
+            Scenario::Serve(
+                ServeParams::default()
+                    .with_engine(EngineKind::Cluster)
+                    .with_pools(Some(2), Some(2))
+                    .with_schedule(
+                        SchedSpec::parse("phase,hysteresis=3,objective=energy,power_cap=55")
+                            .unwrap(),
+                    ),
+            ),
             Scenario::Custom(
                 CustomParams::default()
                     .with_label("ablation: wider LUT")
@@ -609,6 +635,47 @@ mod tests {
         assert!(
             parse_suite("[[scenario]]\nkind = \"serve\"\nprefix_cache = \"tree\"\n").is_err()
         );
+    }
+
+    #[test]
+    fn schedule_specs_round_trip_exactly_through_suite_files() {
+        for s in [
+            "static:gpu",
+            "static:salpim,hysteresis=4",
+            "phase",
+            "phase,hysteresis=1,objective=energy,power_cap=60",
+        ] {
+            let spec = SchedSpec::parse(s).unwrap();
+            let toml = Scenario::Serve(ServeParams::default().with_schedule(spec.clone()))
+                .to_toml();
+            let parsed = parse_suite(&toml).unwrap();
+            let Scenario::Serve(p) = &parsed[0] else {
+                panic!("serve expected");
+            };
+            assert_eq!(p.schedule.as_ref(), Some(&spec));
+            assert_eq!(p.schedule.as_ref().unwrap().render(), s);
+        }
+        // Bad specs carry the schedule parser's message with the line.
+        let bad_schedule = "[[scenario]]\nkind = \"serve\"\nschedule = \"fase\"\n";
+        let err = parse_suite(bad_schedule).unwrap_err();
+        match err {
+            ScenarioError::Parse { line, msg } => {
+                assert_eq!(line, 3);
+                assert!(msg.contains("did you mean phase"), "{msg}");
+            }
+            other => panic!("{other:?}"),
+        }
+        // Backend typos surface the parser's vocabulary + suggestion.
+        let bad_backend = "[[scenario]]\nkind = \"serve\"\nbackend = \"salpin\"\n";
+        let err = parse_suite(bad_backend).unwrap_err();
+        match err {
+            ScenarioError::Parse { line, msg } => {
+                assert_eq!(line, 3);
+                assert!(msg.contains("salpim|gpu|banklevel|hetero"), "{msg}");
+                assert!(msg.contains("did you mean salpim"), "{msg}");
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

@@ -25,7 +25,7 @@ use crate::config::parse::{apply_overrides, ConfigError};
 use crate::config::SimConfig;
 use crate::serve::{
     BackendKind, EngineCore, EvictPolicy, FabricKind, KvPolicy, Policy, PrefixCacheMode, Routing,
-    WorkloadSpec,
+    SchedSpec, WorkloadSpec,
 };
 
 /// Scenario-layer failure.
@@ -367,6 +367,12 @@ pub struct ServeParams {
     /// Cross-session KV prefix caching mode (`--prefix-cache
     /// session|radix`; paged KV only).
     pub prefix_cache: PrefixCacheMode,
+    /// Typed schedule description (`--schedule` / `schedule` key).
+    /// `None` desugars the legacy `backend` choice through
+    /// [`SchedSpec::from_legacy`] — `static:<backend>`, bit-identical
+    /// to the historical single-backend runs. `phase` heads route
+    /// dynamically through [`crate::serve::PhaseSim`].
+    pub schedule: Option<SchedSpec>,
 }
 
 impl Default for ServeParams {
@@ -399,6 +405,7 @@ impl Default for ServeParams {
             decode_pool: None,
             workload: None,
             prefix_cache: PrefixCacheMode::Session,
+            schedule: None,
         }
     }
 }
@@ -508,6 +515,14 @@ impl ServeParams {
 
     pub fn with_prefix_cache(mut self, mode: PrefixCacheMode) -> Self {
         self.prefix_cache = mode;
+        self
+    }
+
+    /// Attach a typed schedule spec; overrides the legacy `backend`
+    /// choice when set (the `--backend` flag is a documented alias for
+    /// `--schedule static:<backend>`).
+    pub fn with_schedule(mut self, spec: SchedSpec) -> Self {
+        self.schedule = Some(spec);
         self
     }
 
@@ -706,7 +721,8 @@ mod tests {
             .with_fabric(FabricKind::Nvlink)
             .with_pools(Some(1), Some(3))
             .with_prefix_cache(PrefixCacheMode::Radix)
-            .with_workload_spec(WorkloadSpec::parse("poisson:100,sessions=4").unwrap());
+            .with_workload_spec(WorkloadSpec::parse("poisson:100,sessions=4").unwrap())
+            .with_schedule(SchedSpec::parse("phase,hysteresis=1").unwrap());
         assert_eq!(s.engine, EngineKind::Cluster);
         assert_eq!(s.devices, 2);
         assert_eq!(s.rate, Some(200.0));
@@ -722,8 +738,10 @@ mod tests {
             s.workload.as_ref().unwrap().render(),
             "poisson:100,sessions=4"
         );
+        assert_eq!(s.schedule.as_ref().unwrap().render(), "phase,hysteresis=1");
         assert_eq!(ServeParams::default().engine_core, EngineCore::Event);
         assert_eq!(ServeParams::default().workload, None);
+        assert_eq!(ServeParams::default().schedule, None);
         assert_eq!(ServeParams::default().prefix_cache, PrefixCacheMode::Session);
         let sweep = ServeParams::default().with_sweep(vec![100.0]);
         assert!(sweep.sweep);

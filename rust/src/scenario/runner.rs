@@ -15,8 +15,9 @@ use crate::energy::{AreaModel, EnergyParams, PowerReport};
 use crate::mapper::GenerationSim;
 use crate::serve::sweep::{latency_vs_load, SweepConfig};
 use crate::serve::{
-    BackendKind, Cluster, Completion, DeviceEngine, DisaggregatedCluster, Fabric, KvPolicy,
-    PrefixCacheMode, ServeMetrics, SloClass, WorkloadSpec,
+    oracle, pct_of_oracle, BackendKind, Cluster, Completion, DeviceEngine, DisaggregatedCluster,
+    Fabric, KvPolicy, PhaseSim, PhaseTopology, PrefixCacheMode, SchedPolicy, SchedSpec,
+    ServeMetrics, SloClass, WorkloadSpec,
 };
 use crate::trace::{PhaseProfile, TraceEvent, TraceHandle};
 use std::time::{Duration, Instant};
@@ -79,7 +80,13 @@ impl Runner {
             preset: scenario.config().preset.clone(),
             p_sub: cfg.parallelism.p_sub,
             backend: match scenario {
-                Scenario::Serve(p) => Some(p.backend.name().to_string()),
+                // The resolved schedule, not the raw flag: `--schedule
+                // static:<b>` records `<b>` exactly as `--backend <b>`
+                // would, and phase runs record the router itself.
+                Scenario::Serve(p) => Some(match sched_spec(p).policy {
+                    SchedPolicy::Static(b) => b.name().to_string(),
+                    SchedPolicy::Phase => "phase".to_string(),
+                }),
                 _ => None,
             },
             seed: match scenario {
@@ -366,6 +373,18 @@ fn workload_spec(p: &ServeParams) -> Result<WorkloadSpec, ScenarioError> {
     }
 }
 
+/// The effective schedule spec: the typed `schedule` field when set,
+/// else the legacy `backend` knob desugared through
+/// [`SchedSpec::from_legacy`] — the one place `--backend <b>` becomes
+/// `static:<b>`, so the two spellings stay bit-identical (pinned by
+/// test).
+fn sched_spec(p: &ServeParams) -> SchedSpec {
+    match &p.schedule {
+        Some(spec) => spec.clone(),
+        None => SchedSpec::from_legacy(p.backend),
+    }
+}
+
 /// Per-SLO-class percentiles and radix prefix-cache stats. Both are
 /// conditional — legacy workloads (no interactive traffic, session-mode
 /// prefix cache) keep the historical metric set byte-for-byte, so
@@ -462,6 +481,23 @@ fn run_serve(
             "prefix_cache radix shares KV blocks; it needs kv_policy paged".to_string(),
         ));
     }
+    // One place the schedule surface desugars: `--backend <b>` is
+    // `static:<b>`, so every arm below runs off the resolved backend and
+    // the two spellings stay bit-identical.
+    let sched = sched_spec(p);
+    let backend = match sched.policy {
+        SchedPolicy::Static(b) => b,
+        SchedPolicy::Phase => {
+            if p.sweep {
+                return Err(ScenarioError::Unsupported(
+                    "the load sweep drives static schedules over its own arrivals; \
+                     --schedule phase routes one recorded trace (drop --sweep)"
+                        .to_string(),
+                ));
+            }
+            return run_serve_phase(cfg, provenance, p, &sched);
+        }
+    };
     if p.sweep {
         if p.engine == EngineKind::Disagg {
             return Err(ScenarioError::Unsupported(
@@ -476,18 +512,18 @@ fn run_serve(
                     .to_string(),
             ));
         }
-        return run_serve_sweep(cfg, provenance, p, deadline, aux);
+        return run_serve_sweep(cfg, provenance, p, backend, deadline, aux);
     }
     let spec = workload_spec(p)?;
     let requests = spec.generate(p.seed, p.requests);
 
     match p.engine {
         EngineKind::Seq => {
-            if p.backend != BackendKind::SalPim {
+            if backend != BackendKind::SalPim {
                 return Err(ScenarioError::Unsupported(format!(
                     "engine seq is the paper-faithful PIM coordinator; pick batch|cluster \
                      for backend {} (or offload for GPU prefill)",
-                    p.backend.name()
+                    backend.name()
                 )));
             }
             if p.prefill_chunk.is_some() {
@@ -526,7 +562,7 @@ fn run_serve(
                         .to_string(),
                 ));
             }
-            let mut eng = DeviceEngine::with_backend(p.backend.build(cfg), p.max_batch)
+            let mut eng = DeviceEngine::with_backend(backend.build(cfg), p.max_batch)
                 .with_policy(p.policy)
                 .with_core(p.engine_core)
                 .with_prefill_chunk(p.prefill_chunk)
@@ -598,7 +634,7 @@ fn run_serve(
                 ));
             }
             let mut cluster =
-                Cluster::homogeneous(cfg, p.backend, p.devices, p.max_batch, p.route)
+                Cluster::homogeneous(cfg, backend, p.devices, p.max_batch, p.route)
                     .with_policy(p.policy)
                     .with_core(p.engine_core)
                     .with_prefill_chunk(p.prefill_chunk)
@@ -628,7 +664,7 @@ fn run_serve(
                 &format!(
                     "serve — engine=cluster backend={} devices={} batch={} route={} kv={} \
                      arrivals={}",
-                    p.backend.name(),
+                    backend.name(),
                     p.devices,
                     p.max_batch,
                     p.route.name(),
@@ -761,10 +797,96 @@ fn run_serve(
     }
 }
 
+/// `--schedule phase`: the dynamic phase-aware router over a split
+/// GPU-class + PIM-class pool, scored against the offline-optimal
+/// [`oracle`] baseline. The pool split reuses the disagg sizing knobs
+/// (`--prefill-pool` names the GPU-class side, `--decode-pool` the
+/// PIM-class side; unset sides derive from `--devices`).
+fn run_serve_phase(
+    cfg: &SimConfig,
+    provenance: Provenance,
+    p: &ServeParams,
+    sched: &SchedSpec,
+) -> Result<Outcome, ScenarioError> {
+    if p.engine != EngineKind::Cluster {
+        return Err(ScenarioError::Unsupported(format!(
+            "--schedule phase routes phases across a split gpu+pim pool; pick engine \
+             cluster (engine {} drives a single homogeneous pool)",
+            p.engine.name()
+        )));
+    }
+    if p.offload {
+        return Err(ScenarioError::Unsupported(
+            "offload applies to engine seq only".to_string(),
+        ));
+    }
+    if p.kv_policy != KvPolicy::Whole || p.kv_block.is_some() || p.kv_units.is_some() {
+        return Err(ScenarioError::Unsupported(
+            "the phase router models whole-window KV residency; drop kv_policy paged \
+             (or run a static schedule for paged KV)"
+                .to_string(),
+        ));
+    }
+    let (gpu_n, pim_n) = p.pool_sizes();
+    if gpu_n + pim_n > p.devices {
+        return Err(ScenarioError::Unsupported(format!(
+            "--schedule phase needs a heterogeneous pool split within --devices: \
+             gpu {gpu_n} + pim {pim_n} exceeds {} (raise --devices or shrink \
+             --prefill-pool/--decode-pool)",
+            p.devices
+        )));
+    }
+    let mut topo = PhaseTopology::new(gpu_n, pim_n, p.max_batch);
+    topo.fabric = p.fabric.params();
+    topo.policy = p.policy;
+    topo.prefill_chunk = p.prefill_chunk;
+    let spec = workload_spec(p)?;
+    let requests = spec.generate(p.seed, p.requests);
+    let mut sim = PhaseSim::new(cfg, sched.clone(), topo);
+    let outcome = sim.run(&requests);
+    let m = ServeMetrics::from_completions(&outcome.completions);
+    let rep = oracle(cfg, sched, &topo, &requests, &[outcome.objective]);
+    let mut out = Outcome::new(
+        &format!(
+            "serve — schedule={} pools=gpu:{gpu_n}+pim:{pim_n} batch={} fabric={} arrivals={}",
+            sched.render(),
+            p.max_batch,
+            p.fabric.name(),
+            spec.arrival_name()
+        ),
+        provenance,
+    );
+    serve_metrics(&mut out, &m);
+    class_metrics(&mut out, &outcome.completions, p, &m);
+    out.metric("router_migrations", outcome.router_migrations, None);
+    out.metric("migrated_bytes", outcome.migrated_bytes, Some("B"));
+    out.metric("energy_j", outcome.energy_j, Some("J"));
+    out.metric("avg_power_w", outcome.avg_power_w, Some("W"));
+    out.metric(
+        "pct_of_oracle",
+        pct_of_oracle(outcome.objective, rep.objective),
+        Some("%"),
+    );
+    out.metric(
+        "best_static_pct_of_oracle",
+        pct_of_oracle(rep.best_static_objective, rep.objective),
+        Some("%"),
+    );
+    out.metric("oracle_candidates", rep.candidates, None);
+    if !rep.exhaustive {
+        out.note(
+            "oracle searched the four uniform placements only (trace too long for the \
+             exhaustive 4^n per-request search)",
+        );
+    }
+    Ok(out)
+}
+
 fn run_serve_sweep(
     cfg: &SimConfig,
     provenance: Provenance,
     p: &ServeParams,
+    backend: BackendKind,
     deadline: Option<Instant>,
     aux: &mut RunAux,
 ) -> Result<Outcome, ScenarioError> {
@@ -781,7 +903,7 @@ fn run_serve_sweep(
         requests: p.requests,
         seed: p.seed,
         n_sessions: p.n_sessions,
-        backend: p.backend,
+        backend,
         prefill_chunk: p.prefill_chunk,
         kv_policy: p.kv_policy,
         evict: p.evict,
@@ -1175,6 +1297,119 @@ mod tests {
         let a = Runner::new().run(&Scenario::Serve(legacy)).unwrap();
         let b = Runner::new().run(&Scenario::Serve(typed)).unwrap();
         assert_eq!(a.metrics, b.metrics, "desugaring must not change a byte");
+    }
+
+    #[test]
+    fn static_schedule_specs_are_bit_identical_to_legacy_backend_flags() {
+        // `--schedule static:<b>` must desugar onto exactly the code
+        // path `--backend <b>` takes — same engine, same numbers, same
+        // provenance backend — for every engine that takes a backend.
+        for engine in [EngineKind::Batch, EngineKind::Cluster] {
+            let legacy = ServeParams::default()
+                .with_config(mini())
+                .with_engine(engine)
+                .with_backend(BackendKind::Gpu)
+                .with_workload(6, 11)
+                .with_at_once(true);
+            // The spec run leaves the legacy `backend` field at its
+            // default, so only the schedule can be steering it.
+            let spec = ServeParams::default()
+                .with_config(mini())
+                .with_engine(engine)
+                .with_workload(6, 11)
+                .with_at_once(true)
+                .with_schedule(SchedSpec::parse("static:gpu").unwrap());
+            let a = Runner::new().run(&Scenario::Serve(legacy)).unwrap();
+            let b = Runner::new().run(&Scenario::Serve(spec)).unwrap();
+            assert_eq!(a.metrics, b.metrics, "desugaring must not change a byte");
+            assert_eq!(a.provenance.backend.as_deref(), Some("gpu"));
+            assert_eq!(b.provenance.backend.as_deref(), Some("gpu"));
+        }
+    }
+
+    #[test]
+    fn phase_schedule_reports_oracle_and_router_metrics() {
+        let scenario = Scenario::Serve(
+            ServeParams::default()
+                .with_config(mini())
+                .with_engine(EngineKind::Cluster)
+                .with_cluster(2, 4)
+                .with_workload(4, 11)
+                .with_at_once(true)
+                .with_schedule(SchedSpec::parse("phase,hysteresis=1").unwrap()),
+        );
+        let out = Runner::new().run(&scenario).unwrap();
+        assert_eq!(out.provenance.backend.as_deref(), Some("phase"));
+        assert_eq!(out.metric_f64("requests"), Some(4.0));
+        let pct = out.metric_f64("pct_of_oracle").unwrap();
+        assert!(pct > 0.0 && pct <= 100.0 + 1e-9, "pct_of_oracle {pct}");
+        let static_pct = out.metric_f64("best_static_pct_of_oracle").unwrap();
+        assert!(static_pct > 0.0 && static_pct <= 100.0 + 1e-9);
+        // 4 requests brute-force: 4 uniforms + 4^4 placements + this run.
+        assert_eq!(out.metric_f64("oracle_candidates"), Some(261.0));
+        assert!(out.metric_f64("energy_j").unwrap() > 0.0);
+        assert!(out.metric_f64("avg_power_w").unwrap() > 0.0);
+        assert!(out.metric_f64("router_migrations").is_some());
+        // Token budget must match a static run of the same workload.
+        let static_run = Runner::new()
+            .run(&Scenario::Serve(
+                ServeParams::default()
+                    .with_config(mini())
+                    .with_engine(EngineKind::Cluster)
+                    .with_cluster(2, 4)
+                    .with_workload(4, 11)
+                    .with_at_once(true),
+            ))
+            .unwrap();
+        assert_eq!(
+            out.metric_f64("total_tokens"),
+            static_run.metric_f64("total_tokens"),
+            "token conservation across schedules"
+        );
+    }
+
+    #[test]
+    fn phase_schedule_rejections_are_actionable() {
+        let phase = SchedSpec::parse("phase").unwrap();
+        let batch = ServeParams::default()
+            .with_config(mini())
+            .with_engine(EngineKind::Batch)
+            .with_schedule(phase.clone());
+        match Runner::new().run(&Scenario::Serve(batch)) {
+            Err(ScenarioError::Unsupported(msg)) => {
+                assert!(msg.contains("engine cluster"), "{msg}")
+            }
+            other => panic!("expected Unsupported, got {other:?}"),
+        }
+        let sweep = ServeParams::default()
+            .with_config(mini())
+            .with_engine(EngineKind::Cluster)
+            .with_sweep(vec![10.0])
+            .with_schedule(phase.clone());
+        assert!(Runner::new().run(&Scenario::Serve(sweep)).is_err());
+        let paged = ServeParams::default()
+            .with_config(mini())
+            .with_engine(EngineKind::Cluster)
+            .with_kv_policy(crate::serve::KvPolicy::Paged)
+            .with_schedule(phase.clone());
+        match Runner::new().run(&Scenario::Serve(paged)) {
+            Err(ScenarioError::Unsupported(msg)) => {
+                assert!(msg.contains("whole-window"), "{msg}")
+            }
+            other => panic!("expected Unsupported, got {other:?}"),
+        }
+        // One device can't host a two-sided pool split.
+        let tiny = ServeParams::default()
+            .with_config(mini())
+            .with_engine(EngineKind::Cluster)
+            .with_cluster(1, 4)
+            .with_schedule(phase);
+        match Runner::new().run(&Scenario::Serve(tiny)) {
+            Err(ScenarioError::Unsupported(msg)) => {
+                assert!(msg.contains("--devices"), "{msg}")
+            }
+            other => panic!("expected Unsupported, got {other:?}"),
+        }
     }
 
     #[test]

@@ -134,14 +134,32 @@ impl BackendKind {
         BackendKind::Hetero,
     ];
 
-    /// Parse a `--backend` value.
-    pub fn parse(s: &str) -> Option<Self> {
+    /// Every spelling [`BackendKind::parse`] accepts (canonical names
+    /// first) — the vocabulary quoted in its error and mined for
+    /// did-you-mean suggestions.
+    pub const ACCEPTED: [&'static str; 7] = [
+        "salpim",
+        "gpu",
+        "banklevel",
+        "hetero",
+        "sal-pim",
+        "pim",
+        "bank-level",
+    ];
+
+    /// Parse a `--backend` / `static:<backend>` value. The error names
+    /// the accepted backends and suggests the nearest one, so a typo
+    /// surfaces actionably instead of `Option`-silently.
+    pub fn parse(s: &str) -> Result<Self, String> {
         match s {
-            "salpim" | "sal-pim" | "pim" => Some(BackendKind::SalPim),
-            "gpu" => Some(BackendKind::Gpu),
-            "banklevel" | "bank-level" => Some(BackendKind::BankLevel),
-            "hetero" => Some(BackendKind::Hetero),
-            _ => None,
+            "salpim" | "sal-pim" | "pim" => Ok(BackendKind::SalPim),
+            "gpu" => Ok(BackendKind::Gpu),
+            "banklevel" | "bank-level" => Ok(BackendKind::BankLevel),
+            "hetero" => Ok(BackendKind::Hetero),
+            _ => Err(format!(
+                "unknown backend `{s}` (salpim|gpu|banklevel|hetero){}",
+                crate::cli::suggest(s, Self::ACCEPTED.into_iter(), "")
+            )),
         }
     }
 
@@ -172,10 +190,20 @@ mod tests {
     #[test]
     fn kind_parses_and_names_round_trip() {
         for kind in BackendKind::ALL {
-            assert_eq!(BackendKind::parse(kind.name()), Some(kind));
+            assert_eq!(BackendKind::parse(kind.name()), Ok(kind));
         }
-        assert_eq!(BackendKind::parse("pim"), Some(BackendKind::SalPim));
-        assert_eq!(BackendKind::parse("cuda"), None);
+        assert_eq!(BackendKind::parse("pim"), Ok(BackendKind::SalPim));
+        for alias in BackendKind::ACCEPTED {
+            assert!(BackendKind::parse(alias).is_ok(), "{alias}");
+        }
+    }
+
+    #[test]
+    fn parse_errors_name_the_accepted_backends_and_suggest() {
+        let err = BackendKind::parse("cuda").unwrap_err();
+        assert!(err.contains("salpim|gpu|banklevel|hetero"), "{err}");
+        let typo = BackendKind::parse("salpin").unwrap_err();
+        assert!(typo.contains("did you mean salpim"), "{typo}");
     }
 
     #[test]

@@ -134,6 +134,24 @@ fn due_step(decode_steps: u64, a: &ActiveReq, max_seq: usize) -> u64 {
     decode_steps + target.saturating_sub(a.produced) as u64
 }
 
+/// Incremental cost of summarizing prompt tokens `[from, to)` on a
+/// backend — the chunked-prefill charging rule every scheduler shares.
+/// Monotone `prefill_s` makes the chunks telescope to the unchunked
+/// total; the phase router ([`crate::serve::sched`]) prices its chunks
+/// through this same function so static and dynamic runs charge
+/// prefill identically.
+pub(crate) fn prefill_increment_s(
+    backend: &mut dyn ExecutionBackend,
+    from: usize,
+    to: usize,
+) -> f64 {
+    if from == 0 {
+        backend.prefill_s(to)
+    } else {
+        (backend.prefill_s(to) - backend.prefill_s(from)).max(0.0)
+    }
+}
+
 /// Push onto the active set, keeping the event core's seq → slot index
 /// coherent (`fast` = event core; the legacy core skips the index).
 fn track_push(
@@ -576,11 +594,7 @@ impl DeviceEngine {
 
     /// Incremental cost of summarizing prompt tokens `[from, to)`.
     fn prefill_increment_s(&mut self, from: usize, to: usize) -> f64 {
-        if from == 0 {
-            self.backend.prefill_s(to)
-        } else {
-            (self.backend.prefill_s(to) - self.backend.prefill_s(from)).max(0.0)
-        }
+        prefill_increment_s(self.backend.as_mut(), from, to)
     }
 
     /// Emit a trace event stamped at the current clock (no-op when

@@ -34,6 +34,12 @@
 //!   pool; with `--evict swap`, preempted KV spills to a host buffer
 //!   over the same fabric and readmission picks the cheaper of swap-in
 //!   and recompute;
+//! * [`sched`] — the typed [`SchedSpec`] schedule grammar
+//!   (`--schedule "POLICY[,key=value]*"`; the legacy `--backend` flag
+//!   desugars onto `static:<backend>`), the dynamic phase-aware
+//!   [`PhaseSim`] router that re-places each request's next phase at
+//!   every token boundary, and the offline-optimal [`oracle`] baseline
+//!   behind the `pct_of_oracle` metric;
 //! * [`workload`] — open-loop Poisson / bursty arrival generation;
 //! * [`sweep`] — the latency-vs-offered-load sweep behind
 //!   `sal-pim serve --sweep` and `bench_serve_cluster`.
@@ -57,6 +63,7 @@ mod types;
 pub mod backend;
 pub mod fabric;
 pub mod kv_cache;
+pub mod sched;
 pub mod sweep;
 pub mod workload;
 
@@ -72,5 +79,9 @@ pub use kv_cache::{
 };
 pub use metrics::{percentile, ServeMetrics};
 pub use policy::{Policy, Scheduler, INTERACTIVE_BOOST_S};
+pub use sched::{
+    oracle, pct_of_oracle, Loc, Objective, OracleReport, PhaseOutcome, PhaseSim, PhaseTopology,
+    SchedPolicy, SchedSpec,
+};
 pub use types::{Completion, PrefixSeg, Request, SloClass};
 pub use workload::{ArrivalPattern, LengthModel, PrefixSpec, SessionModel, WorkloadSpec};

@@ -186,6 +186,37 @@ fn event_core_is_bit_identical_on_random_single_device_runs() {
 }
 
 #[test]
+fn static_schedule_specs_are_core_invariant_and_match_legacy_flags() {
+    // The typed `static:<b>` schedule must hit exactly the code path the
+    // legacy `--backend <b>` flag takes, on BOTH run-loop cores — four
+    // backends × two cores, every metric bit-identical.
+    use sal_pim::scenario::{ConfigSel, EngineKind, Runner, Scenario, ServeParams};
+    use sal_pim::serve::SchedSpec;
+    for backend in BackendKind::ALL {
+        for core in [EngineCore::Event, EngineCore::Legacy] {
+            let base = ServeParams::default()
+                .with_config(ConfigSel::preset("mini"))
+                .with_engine(EngineKind::Batch)
+                .with_engine_core(core)
+                .with_workload(8, 17)
+                .with_at_once(true);
+            let legacy = base.clone().with_backend(backend);
+            let spec = base.with_schedule(
+                SchedSpec::parse(&format!("static:{}", backend.name())).unwrap(),
+            );
+            let a = Runner::new().run(&Scenario::Serve(legacy)).unwrap();
+            let b = Runner::new().run(&Scenario::Serve(spec)).unwrap();
+            assert_eq!(
+                a.metrics,
+                b.metrics,
+                "backend={} core={core:?}",
+                backend.name()
+            );
+        }
+    }
+}
+
+#[test]
 fn event_core_is_bit_identical_on_random_cluster_runs() {
     let cfg = SimConfig::paper();
     forall(16, |g| {
